@@ -1,0 +1,80 @@
+//! End-to-end driver (E6): the full three-layer stack on a real workload.
+//!
+//! Loads the AOT artifacts (JAX/Pallas kernels lowered to HLO, executed
+//! through the PJRT CPU client), factorizes a 1024x512 matrix across 8
+//! simulated MPI ranks with the fault-tolerant algorithm, injects two
+//! failures, recovers, and verifies the result — proving L1 (Pallas
+//! kernels), L2 (JAX graph) and L3 (rust coordinator) compose.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_caqr
+//! ```
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::coordinator::run_caqr_matrix;
+use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::linalg::Matrix;
+use ftcaqr::runtime::Engine;
+use ftcaqr::trace::Trace;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig {
+        rows: 1024,
+        cols: 512,
+        block: 32,
+        procs: 8,
+        algorithm: Algorithm::FaultTolerant,
+        ..Default::default()
+    };
+    println!("== E6: end-to-end FT-CAQR over the PJRT runtime ==");
+    println!(
+        "matrix {}x{}  b={}  P={}  backend=xla (AOT JAX/Pallas artifacts)\n",
+        cfg.rows, cfg.cols, cfg.block, cfg.procs
+    );
+
+    let engine = Engine::start("artifacts")?;
+    println!(
+        "loaded manifest: {} artifacts (profile '{}', jax {})",
+        engine.manifest().artifacts.len(),
+        engine.manifest().profile,
+        engine.manifest().jax_version
+    );
+    let backend = Backend::xla(engine.clone());
+
+    let a = Matrix::randn(cfg.rows, cfg.cols, 2026);
+    let fault = FaultPlan::new(FaultSpec::Schedule {
+        kills: vec![
+            ScheduledKill { rank: 3, site: FailSite { panel: 2, step: 0, phase: Phase::Update } },
+            ScheduledKill { rank: 6, site: FailSite { panel: 7, step: 1, phase: Phase::Tsqr } },
+        ],
+    });
+    let trace = Trace::new();
+    let t0 = std::time::Instant::now();
+    let out = run_caqr_matrix(cfg.clone(), a, backend, fault, trace.clone())?;
+    let wall = t0.elapsed();
+
+    let (execs, compiles, exec_s, compile_s) = engine.stats().snapshot();
+    println!("\nresults:");
+    println!("  failures injected   : {}", out.report.failures);
+    println!("  recoveries          : {}", out.report.recoveries);
+    println!("  recovery fetches    : {}", trace.of_kind("recovery_fetch").len());
+    println!("  exchanges           : {}", out.report.exchanges);
+    println!("  bytes moved         : {:.2} MiB", out.report.bytes as f64 / (1 << 20) as f64);
+    println!("  model flops         : {:.2} GF", out.backend_flops as f64 / 1e9);
+    println!("  critical path       : {:.1} us (dual-channel model)", out.report.critical_path * 1e6);
+    println!("  store peak          : {:.2} MiB", out.store_peak_bytes as f64 / (1 << 20) as f64);
+    println!("  wallclock           : {wall:?}");
+    println!("  pjrt executions     : {execs} ({exec_s:.3}s exec, {compiles} compiles {compile_s:.3}s)");
+    println!("  throughput          : {:.2} GFLOP/s host", out.backend_flops as f64 / 1e9 / wall.as_secs_f64());
+
+    let res = out.residual.expect("verify on");
+    println!("  gram residual       : {res:.3e}");
+    println!("  lower defect        : {:.3e}", out.lower_defect);
+    assert_eq!(out.report.failures, 2);
+    assert_eq!(out.report.recoveries, 2);
+    assert!(res < 1e-3, "residual too large");
+    println!("\nVERIFIED: all three layers compose; 2 failures recovered from");
+    println!("single-buddy state; factorization correct.");
+    Ok(())
+}

@@ -1,0 +1,218 @@
+"""AOT lowering: jit each (op, shape) to HLO *text* + a JSON manifest.
+
+This is the only place Python touches the build: ``make artifacts`` runs it
+once, the Rust coordinator then loads ``artifacts/manifest.json`` and the
+``*.hlo.txt`` files through the PJRT CPU client and never imports Python
+again.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape strategy: artifacts are static-shaped; the Rust runtime zero-pads a
+request up to the smallest artifact that fits (exact for Householder QR and
+for trailing updates -- see DESIGN.md "Shape strategy"). The default
+profile below enumerates the shape ladder used by the examples, tests and
+benches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import hh_update
+
+# VMEM budget we assert per-program for the Pallas kernels (16 MiB, the
+# per-core VMEM of current TPUs). interpret=True doesn't enforce this; the
+# manifest check is the documented stand-in for real-TPU compilation.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def _ladder(b: int, n_max: int):
+    """Column ladder {b, 2b, 4b, ...} up to n_max."""
+    out, n = [], b
+    while n <= n_max:
+        out.append(n)
+        n *= 2
+    return out
+
+
+def default_profile():
+    """(op, params) list covering examples/, tests/ and benches/."""
+    entries = []
+    panel = [(64, 8), (64, 16), (128, 16), (128, 32), (256, 32)]
+    for m, b in panel:
+        entries.append(("panel_qr", {"m": m, "b": b}))
+    for b in (8, 16, 32):
+        entries.append(("tsqr_merge", {"b": b}))
+    ladders = {8: _ladder(8, 64), 16: _ladder(16, 256), 32: _ladder(32, 512)}
+    for m, b in panel:
+        for n in ladders[b]:
+            entries.append(("leaf_apply", {"m": m, "b": b, "n": n}))
+    for b, ns in ladders.items():
+        for n in ns:
+            entries.append(("tree_update", {"b": b, "n": n}))
+            entries.append(("recover", {"b": b, "n": n}))
+    return entries
+
+
+def smoke_profile():
+    """Tiny set for fast CI of the aot path itself."""
+    return [
+        ("panel_qr", {"m": 16, "b": 4}),
+        ("tsqr_merge", {"b": 4}),
+        ("leaf_apply", {"m": 16, "b": 4, "n": 8}),
+        ("tree_update", {"b": 4, "n": 8}),
+        ("recover", {"b": 4, "n": 8}),
+    ]
+
+
+PROFILES = {"default": default_profile, "smoke": smoke_profile}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(op: str, params: dict) -> str:
+    tag = "_".join(f"{k}{v}" for k, v in sorted(params.items()))
+    return f"{op}_{tag}"
+
+
+def check_vmem(op: str, params: dict) -> int | None:
+    """Per-program VMEM estimate for the Pallas-backed ops (bytes)."""
+    nt = min(params.get("n", 0), hh_update.DEFAULT_TILE) or None
+    if op == "leaf_apply":
+        v = hh_update.vmem_bytes_leaf(params["m"], params["b"], nt)
+    elif op in ("tree_update", "recover"):
+        v = hh_update.vmem_bytes_tree(params["b"], nt)
+    else:
+        return None
+    assert v <= VMEM_BUDGET, f"{op} {params}: VMEM estimate {v} > budget"
+    return v
+
+
+def lower_one(op: str, params: dict, out_dir: str) -> dict:
+    fn, builder = model.OPS[op]
+    specs = builder(**params)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    name = artifact_name(op, params)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_shapes = [
+        list(s.shape) for s in jax.tree_util.tree_leaves(lowered.out_info)
+    ]
+    entry = {
+        "op": op,
+        "params": params,
+        "file": os.path.basename(path),
+        "inputs": [list(s.shape) for s in specs],
+        "outputs": out_shapes,
+        "dtype": "f32",
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "lower_seconds": round(time.time() - t0, 3),
+    }
+    vmem = check_vmem(op, params)
+    if vmem is not None:
+        entry["vmem_bytes_per_program"] = vmem
+    return entry
+
+
+def build(out_dir: str, profile: str = "default", force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    entries = PROFILES[profile]()
+    # Incremental: if the manifest exists and covers the same profile with
+    # all files present, `make artifacts` is a no-op.
+    if not force and os.path.exists(manifest_path):
+        try:
+            old = json.load(open(manifest_path))
+            want = {artifact_name(op, p) for op, p in entries}
+            have = {artifact_name(e["op"], e["params"]) for e in old["artifacts"]}
+            files_ok = all(
+                os.path.exists(os.path.join(out_dir, e["file"]))
+                for e in old["artifacts"]
+            )
+            if want <= have and files_ok and old.get("profile") == profile:
+                # keep the rust-readable twin in sync
+                if not os.path.exists(os.path.join(out_dir, "manifest.txt")):
+                    write_text_manifest(out_dir, old)
+                print(f"artifacts up-to-date ({len(old['artifacts'])} entries)")
+                return old
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    arts = []
+    for i, (op, params) in enumerate(entries):
+        e = lower_one(op, params, out_dir)
+        arts.append(e)
+        print(
+            f"[{i + 1}/{len(entries)}] {e['file']}"
+            f" ({e['lower_seconds']}s)",
+            flush=True,
+        )
+    manifest = {
+        "version": 1,
+        "profile": profile,
+        "jax_version": jax.__version__,
+        "tile": hh_update.DEFAULT_TILE,
+        "artifacts": arts,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    write_text_manifest(out_dir, manifest)
+    print(f"wrote {manifest_path}: {len(arts)} artifacts")
+    return manifest
+
+
+def write_text_manifest(out_dir: str, manifest: dict) -> None:
+    """Plain-text manifest for the offline Rust loader (no JSON parser in
+    the image's crate set). One line per artifact:
+
+        artifact|<op>|<file>|k=v,k=v|RxC;RxC|RxC;RxC
+    """
+    lines = [
+        f"# ftcaqr manifest v{manifest['version']}",
+        f"profile={manifest['profile']}",
+        f"jax={manifest['jax_version']}",
+        f"tile={manifest['tile']}",
+    ]
+    for e in manifest["artifacts"]:
+        params = ",".join(f"{k}={v}" for k, v in sorted(e["params"].items()))
+        ins = ";".join("x".join(str(d) for d in s) for s in e["inputs"])
+        outs = ";".join("x".join(str(d) for d in s) for s in e["outputs"])
+        lines.append(f"artifact|{e['op']}|{e['file']}|{params}|{ins}|{outs}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--profile", default="default", choices=sorted(PROFILES))
+    ap.add_argument("--force", action="store_true", help="rebuild everything")
+    args = ap.parse_args(argv)
+    build(args.out, args.profile, args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

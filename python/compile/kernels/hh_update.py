@@ -1,0 +1,175 @@
+"""L1 Pallas kernel: blocked Householder application (the flops hot-spot).
+
+CAQR's dominant cost is applying compact-WY reflectors to the trailing
+matrix: per panel it is O(m * n * b) flops versus O(m * b^2) for the panel
+factorization itself. This module implements that application as a Pallas
+kernel, tiled along the trailing-matrix columns so each tile's working set
+fits VMEM.
+
+TPU mapping (DESIGN.md "Hardware adaptation"):
+  * grid = (ceil(n / nt),): one program per column tile of C.
+  * Y (m, b) and T (b, b) are small and column-tile-invariant, so their
+    BlockSpecs pin them in VMEM across the whole grid (index_map -> (0, 0)).
+  * Each program runs a chain of three MXU matmuls entirely in VMEM:
+        P = Y^T C_tile        (b, nt)
+        W = T^T P             (b, nt)
+        out = C_tile - Y W    (m, nt)
+  * VMEM footprint per program: (m*b + b*b + 2*m*nt + 2*b*nt) * 4 bytes;
+    the aot manifest asserts this stays under the 16 MiB budget per shape.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs on the Rust CPU client (and validates the numerics that a
+real-TPU build would produce).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["leaf_apply_pallas", "tree_update_pallas", "recover_pallas"]
+
+# Default column-tile width. 128 matches the MXU lane width; shapes smaller
+# than this fall back to a single tile.
+DEFAULT_TILE = 128
+
+
+def _leaf_kernel(y_ref, t_ref, c_ref, out_ref):
+    """out = C - Y (T^T (Y^T C)) for one column tile of C."""
+    y = y_ref[...]
+    t = t_ref[...]
+    c = c_ref[...]
+    p = jnp.dot(y.T, c)  # (b, nt)   MXU
+    w = jnp.dot(t.T, p)  # (b, nt)   MXU
+    out_ref[...] = c - jnp.dot(y, w)  # (m, nt)   MXU
+
+
+def _pick_tile(n: int, tile: int | None) -> int:
+    tile = tile or DEFAULT_TILE
+    if n <= tile:
+        return n
+    # Require an exact tiling; the aot manifest only emits n that are
+    # multiples of the tile (the Rust side zero-pads up to that).
+    while n % tile != 0:
+        tile //= 2
+    return max(tile, 1)
+
+
+def leaf_apply_pallas(y, t, c, *, tile: int | None = None):
+    """C_hat = (I - Y T Y^T)^T C, column-tiled Pallas kernel.
+
+    Args:
+      y: (m, b) unit-lower Householder vectors.
+      t: (b, b) upper-triangular T factor.
+      c: (m, n) trailing block; n must be a multiple of the chosen tile.
+    """
+    m, b = y.shape
+    n = c.shape[1]
+    nt = _pick_tile(n, tile)
+    grid = (n // nt,)
+    return pl.pallas_call(
+        _leaf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, b), lambda i: (0, 0)),  # Y resident
+            pl.BlockSpec((b, b), lambda i: (0, 0)),  # T resident
+            pl.BlockSpec((m, nt), lambda i: (0, i)),  # C column tiles
+        ],
+        out_specs=pl.BlockSpec((m, nt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(y, t, c)
+
+
+def _tree_kernel(y1_ref, t_ref, c0_ref, c1_ref, w_ref, o0_ref, o1_ref):
+    """One pairwise tree-update step for one column tile.
+
+    Structured reflector Q = I - [I; Y1] T [I; Y1]^T:
+      W  = T^T (C0 + Y1^T C1)
+      O0 = C0 - W
+      O1 = C1 - Y1 W
+    W is emitted as a first-class output: it is the redundancy payload the
+    fault-tolerant protocol keeps for recovery (paper III-C).
+    """
+    y1 = y1_ref[...]
+    t = t_ref[...]
+    c0 = c0_ref[...]
+    c1 = c1_ref[...]
+    s = c0 + jnp.dot(y1.T, c1)  # (b, nt)  MXU
+    w = jnp.dot(t.T, s)  # (b, nt)  MXU
+    w_ref[...] = w
+    o0_ref[...] = c0 - w
+    o1_ref[...] = c1 - jnp.dot(y1, w)  # MXU
+
+
+def tree_update_pallas(c0, c1, y1, t, *, tile: int | None = None):
+    """Pairwise trailing-update step (paper Algorithm 1/2 compute core).
+
+    Args:
+      c0: (b, n) top buddy's C' rows.
+      c1: (b, n) bottom buddy's C' rows.
+      y1: (b, b) bottom part of the merge reflectors.
+      t:  (b, b) T factor of the merge.
+    Returns (w, c0_hat, c1_hat), each (b, n).
+    """
+    b, n = c0.shape
+    nt = _pick_tile(n, tile)
+    grid = (n // nt,)
+    shp = jax.ShapeDtypeStruct((b, n), c0.dtype)
+    return pl.pallas_call(
+        _tree_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, b), lambda i: (0, 0)),  # Y1 resident
+            pl.BlockSpec((b, b), lambda i: (0, 0)),  # T resident
+            pl.BlockSpec((b, nt), lambda i: (0, i)),
+            pl.BlockSpec((b, nt), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, nt), lambda i: (0, i)),
+            pl.BlockSpec((b, nt), lambda i: (0, i)),
+            pl.BlockSpec((b, nt), lambda i: (0, i)),
+        ],
+        out_shape=[shp, shp, shp],
+        interpret=True,
+    )(y1, t, c0, c1)
+
+
+def _recover_kernel(y_ref, c_ref, w_ref, out_ref):
+    """out = C - Y W : the single-buddy recovery recompute (paper III-C)."""
+    out_ref[...] = c_ref[...] - jnp.dot(y_ref[...], w_ref[...])
+
+
+def recover_pallas(c, y, w, *, tile: int | None = None):
+    """Recompute a failed rank's update from buddy data: C_hat = C - Y W."""
+    b, n = c.shape
+    nt = _pick_tile(n, tile)
+    grid = (n // nt,)
+    return pl.pallas_call(
+        _recover_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, b), lambda i: (0, 0)),  # Y resident
+            pl.BlockSpec((b, nt), lambda i: (0, i)),
+            pl.BlockSpec((b, nt), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, nt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), c.dtype),
+        interpret=True,
+    )(y, c, w)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes_leaf(m: int, b: int, nt: int, itemsize: int = 4) -> int:
+    """Per-program VMEM estimate for the leaf kernel (see module docstring)."""
+    return (m * b + b * b + 2 * m * nt + 2 * b * nt) * itemsize
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes_tree(b: int, nt: int, itemsize: int = 4) -> int:
+    """Per-program VMEM estimate for the tree-update kernel."""
+    return (2 * b * b + 7 * b * nt) * itemsize

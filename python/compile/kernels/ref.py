@@ -1,0 +1,192 @@
+"""Pure-jnp reference oracles for every kernel and model-level op.
+
+These are the ground truth the Pallas kernels (and, transitively, the HLO
+artifacts the Rust coordinator executes) are validated against in pytest.
+Everything here is written for clarity, not speed.
+
+Conventions (LAPACK compact-WY):
+  * ``Y`` is unit-lower-trapezoidal (m, b): the implicit 1.0 on the diagonal
+    is stored explicitly so the Rust side never re-materializes it.
+  * ``T`` is upper-triangular (b, b) with ``Q = I - Y T Y^T``.
+  * ``R`` is upper-triangular; we do NOT enforce a positive diagonal (the
+    factorization is unique only up to column signs, so tests compare
+    ``R^T R`` or sign-normalized factors).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "householder_qr",
+    "tsqr_merge",
+    "leaf_apply",
+    "tree_update",
+    "recover",
+    "tsqr",
+    "blocked_qr",
+]
+
+
+def _house(x: jnp.ndarray, j):
+    """Householder vector for column ``x`` with rows ``< j`` masked out.
+
+    Returns ``(v, tau, beta)`` with ``v`` unit at position ``j`` (v[j] == 1
+    whenever tau != 0) and ``(I - tau v v^T) x = beta e_j``.
+    Handles the x == 0 edge case with tau = 0 (H = I).
+    """
+    m = x.shape[0]
+    rows = jnp.arange(m)
+    mask = rows >= j
+    x = jnp.where(mask, x, 0.0)
+    x0 = jnp.sum(jnp.where(rows == j, x, 0.0))
+    normx = jnp.sqrt(jnp.sum(x * x))
+    sign = jnp.where(x0 >= 0.0, 1.0, -1.0)
+    beta = -sign * normx  # new diagonal entry
+    v0 = x0 - beta  # v[j] before normalization
+    # Unnormalized v = x - beta e_j; tau_unnorm = 2 / (v^T v).
+    v = jnp.where(rows == j, v0, x)
+    vtv = jnp.sum(v * v)
+    nonzero = vtv > 0.0
+    # Normalize so v[j] == 1: v_unit = v / v0, tau = 2 v0^2 / vtv.
+    safe_v0 = jnp.where(jnp.abs(v0) > 0.0, v0, 1.0)
+    ok = nonzero & (jnp.abs(v0) > 0.0)
+    v_unit = jnp.where(ok, v / safe_v0, 0.0)
+    v_unit = jnp.where(rows == j, jnp.where(ok, 1.0, 0.0), v_unit)
+    tau = jnp.where(ok, 2.0 * v0 * v0 / vtv, 0.0)
+    beta = jnp.where(nonzero, beta, x0)
+    return v_unit, tau, beta
+
+
+def householder_qr(a: jnp.ndarray):
+    """Blocked Householder QR of an (m, b) panel.
+
+    Returns ``(y, t, r)``:
+      * ``y``: (m, b) unit-lower-trapezoidal Householder vectors,
+      * ``t``: (b, b) upper-triangular with ``Q = I - Y T Y^T``,
+      * ``r``: (b, b) upper-triangular factor (top b rows of the reduced A).
+
+    Zero-row padding is exact: appended zero rows yield zero rows in ``y``
+    and leave ``r`` unchanged.
+    """
+    m, b = a.shape
+
+    def body(j, carry):
+        a, y, taus = carry
+        v, tau, _beta = _house(a[:, j], j)
+        # Apply H = I - tau v v^T to the whole panel (columns < j have zeros
+        # below the diagonal already and v has zeros above row j, so they
+        # are untouched -- applying to all columns keeps shapes static).
+        w = tau * (v @ a)  # (b,)
+        a = a - jnp.outer(v, w)
+        y = y.at[:, j].set(v)
+        taus = taus.at[j].set(tau)
+        return a, y, taus
+
+    a_out, y, taus = jax.lax.fori_loop(
+        0, b, body, (a, jnp.zeros_like(a), jnp.zeros((b,), a.dtype))
+    )
+    r = jnp.triu(a_out[:b, :])
+
+    # Accumulate T: T[:j, j] = -tau_j * T[:j, :j] @ (Y^T y_j); T[j, j] = tau_j
+    yty = y.T @ y  # (b, b); column j rows :j give Y[:, :j]^T y_j
+
+    def t_body(j, t):
+        col = -taus[j] * (t @ jnp.where(jnp.arange(b) < j, yty[:, j], 0.0))
+        col = jnp.where(jnp.arange(b) == j, taus[j], col)
+        col = jnp.where(jnp.arange(b) <= j, col, 0.0)
+        return t.at[:, j].set(col)
+
+    t = jax.lax.fori_loop(0, b, t_body, jnp.zeros((b, b), a.dtype))
+    return y, t, r
+
+
+def tsqr_merge(r0: jnp.ndarray, r1: jnp.ndarray):
+    """QR of the stacked pair ``[r0; r1]`` (each (b, b) upper-triangular).
+
+    Returns ``(y0, y1, t, r)`` where the merged Q = I - [Y0; Y1] T [Y0; Y1]^T.
+    When ``r0``/``r1`` are exactly upper-triangular, ``y0 == I`` structurally
+    (the paper's ``[I; Y1]`` form); we return it anyway so the Rust side can
+    stay fully general (e.g. padded/perturbed inputs).
+    """
+    b = r0.shape[0]
+    stacked = jnp.concatenate([r0, r1], axis=0)
+    y, t, r = householder_qr(stacked)
+    return y[:b], y[b:], t, r
+
+
+def leaf_apply(y: jnp.ndarray, t: jnp.ndarray, c: jnp.ndarray):
+    """Apply the local Q^T to a trailing block: C <- (I - Y T Y^T)^T C.
+
+    (I - Y T Y^T)^T = I - Y T^T Y^T, so:
+      W = T^T (Y^T C);  C_hat = C - Y W.
+    """
+    w = t.T @ (y.T @ c)
+    return c - y @ w
+
+
+def tree_update(c0: jnp.ndarray, c1: jnp.ndarray, y1: jnp.ndarray, t: jnp.ndarray):
+    """One pairwise step of the trailing-matrix update tree (paper Alg 1/2).
+
+    Uses the structured merge Q = I - [I; Y1] T [I; Y1]^T:
+      W      = T^T (C0 + Y1^T C1)
+      C0_hat = C0 - W
+      C1_hat = C1 - Y1 W
+    Returns ``(w, c0_hat, c1_hat)``. ``w`` is returned because it is exactly
+    the payload the fault-tolerant recovery protocol stores (paper III-C).
+    """
+    w = t.T @ (c0 + y1.T @ c1)
+    return w, c0 - w, c1 - y1 @ w
+
+
+def recover(c: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray):
+    """Recompute a failed process's update from buddy data (paper III-C):
+    ``C_hat = C - Y W``. For the top ('even') member of a pair Y == I.
+    """
+    return c - y @ w
+
+
+# ---------------------------------------------------------------------------
+# Whole-algorithm references (used by pytest to validate the composition the
+# Rust coordinator performs, and to cross-check the Rust oracle itself).
+# ---------------------------------------------------------------------------
+
+
+def tsqr(blocks):
+    """Reference TSQR over a list of (m_i, b) blocks -> R (b, b).
+
+    Binary tree over the list; lengths that are not powers of two are
+    handled by promoting the odd block unchanged (same as the Rust tree).
+    """
+    rs = [householder_qr(blk)[2] for blk in blocks]
+    while len(rs) > 1:
+        nxt = []
+        for i in range(0, len(rs) - 1, 2):
+            _, _, _, r = tsqr_merge(rs[i], rs[i + 1])
+            nxt.append(r)
+        if len(rs) % 2 == 1:
+            nxt.append(rs[-1])
+        rs = nxt
+    return rs[0]
+
+
+def blocked_qr(a: jnp.ndarray, b: int):
+    """Reference right-looking blocked QR of (m, n) ``a`` with panel width b.
+
+    Returns R (n, n). Used to validate the distributed CAQR composition
+    end-to-end (compare R^T R against the coordinator's output).
+    """
+    m, n = a.shape
+    r_out = jnp.zeros((n, n), a.dtype)
+    work = a
+    for k in range(0, n, b):
+        bw = min(b, n - k)
+        panel = work[k:, k : k + bw]
+        y, t, r = householder_qr(panel)
+        r_out = r_out.at[k : k + bw, k : k + bw].set(r[:bw, :bw])
+        if k + bw < n:
+            trail = leaf_apply(y, t, work[k:, k + bw :])
+            work = work.at[k:, k + bw :].set(trail)
+            r_out = r_out.at[k : k + bw, k + bw :].set(trail[:bw, :])
+    return r_out

@@ -1,0 +1,88 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+Five operations make up the whole distributed algorithm; each is a jitted
+function that ``aot.py`` lowers to one HLO-text artifact per static shape.
+The Rust coordinator composes them across simulated MPI ranks:
+
+  panel_qr    (m, b)        -> (Y, T, R)       local leaf factorization
+  tsqr_merge  (b, b)x2      -> (Y0, Y1, T, R)  TSQR tree merge step
+  leaf_apply  (m,b),(b,b),(m,n) -> C_hat       apply local Q^T to trailing
+  tree_update (b,n)x2,(b,b)x2   -> (W, C0_hat, C1_hat)  pairwise tree step
+  recover     (b,n),(b,b),(b,n) -> C_hat       single-buddy recovery
+
+The flops-heavy ops (leaf_apply, tree_update, recover) go through the
+Pallas kernels in ``kernels/hh_update.py``; the panel factorization is a
+pure-jnp Householder loop (it is O(m b^2), not the hot-spot, and a
+sequential scalar loop gains nothing from Pallas on the MXU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hh_update, ref
+
+__all__ = [
+    "panel_qr",
+    "tsqr_merge",
+    "leaf_apply",
+    "tree_update",
+    "recover",
+    "OPS",
+]
+
+
+def panel_qr(a):
+    """Local panel factorization: (m, b) -> (Y (m,b), T (b,b), R (b,b))."""
+    return ref.householder_qr(a)
+
+
+def tsqr_merge(r0, r1):
+    """TSQR merge: QR of [r0; r1] -> (Y0 (b,b), Y1 (b,b), T (b,b), R (b,b)).
+
+    Y0 is returned even though it is structurally I for exactly-triangular
+    inputs -- the artifact stays correct for padded / perturbed inputs and
+    the Rust side can assert the structure instead of assuming it.
+    """
+    return ref.tsqr_merge(r0, r1)
+
+
+def leaf_apply(y, t, c):
+    """Trailing-block application of the local reflectors (Pallas)."""
+    return hh_update.leaf_apply_pallas(y, t, c)
+
+
+def tree_update(c0, c1, y1, t):
+    """Pairwise trailing-update tree step (Pallas): returns (W, C0h, C1h)."""
+    return hh_update.tree_update_pallas(c0, c1, y1, t)
+
+
+def recover(c, y, w):
+    """Single-buddy recovery recompute (Pallas): C_hat = C - Y W."""
+    return hh_update.recover_pallas(c, y, w)
+
+
+def _spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Registry consumed by aot.py: op name -> (callable, example-args builder).
+# Each builder takes the shape params relevant to that op and returns the
+# ShapeDtypeStructs to lower with.
+OPS = {
+    "panel_qr": (panel_qr, lambda m, b: (_spec(m, b),)),
+    "tsqr_merge": (tsqr_merge, lambda b: (_spec(b, b), _spec(b, b))),
+    "leaf_apply": (
+        leaf_apply,
+        lambda m, b, n: (_spec(m, b), _spec(b, b), _spec(m, n)),
+    ),
+    "tree_update": (
+        tree_update,
+        lambda b, n: (_spec(b, n), _spec(b, n), _spec(b, b), _spec(b, b)),
+    ),
+    "recover": (
+        recover,
+        lambda b, n: (_spec(b, n), _spec(b, b), _spec(b, n)),
+    ),
+}

@@ -1,0 +1,237 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Every kernel is swept over shapes with hypothesis and checked against
+``kernels.ref`` with assert_allclose; algebraic identities (Q orthogonal,
+A = QR reconstruction) are checked directly as well.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import hh_update, ref
+
+jax.config.update("jax_enable_x64", False)
+
+RTOL = 2e-4
+ATOL = 2e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def upper(rng, b):
+    return jnp.triu(rand(rng, b, b))
+
+
+# ---------------------------------------------------------------------------
+# Householder QR oracle self-consistency (the oracle everything trusts).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,b", [(8, 4), (16, 4), (32, 8), (64, 16), (128, 32)])
+def test_householder_qr_reconstructs(m, b):
+    rng = np.random.default_rng(m * 1000 + b)
+    a = rand(rng, m, b)
+    y, t, r = ref.householder_qr(a)
+    # Q = I - Y T Y^T ; A should equal Q @ [R; 0]
+    q = jnp.eye(m) - y @ t @ y.T
+    r_full = jnp.zeros((m, b)).at[:b].set(r)
+    assert_allclose(np.asarray(q @ r_full), np.asarray(a), rtol=1e-3, atol=1e-4)
+    # orthogonality
+    assert_allclose(np.asarray(q @ q.T), np.eye(m), rtol=1e-3, atol=1e-4)
+    # unit-lower structure of Y
+    yl = np.asarray(y)
+    assert_allclose(np.triu(yl[:b], 1), 0.0, atol=1e-6)
+    assert_allclose(np.diag(yl[:b]), 1.0, atol=1e-6)
+    # R upper-triangular
+    assert_allclose(np.tril(np.asarray(r), -1), 0.0, atol=1e-6)
+
+
+def test_householder_qr_zero_row_padding_exact():
+    """Zero-row padding must leave R untouched and Y zero in padded rows."""
+    rng = np.random.default_rng(7)
+    a = rand(rng, 24, 8)
+    pad = jnp.zeros((16, 8), jnp.float32)
+    y1, t1, r1 = ref.householder_qr(a)
+    y2, t2, r2 = ref.householder_qr(jnp.concatenate([a, pad]))
+    assert_allclose(np.asarray(r2), np.asarray(r1), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(t2), np.asarray(t1), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(y2[:24]), np.asarray(y1), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(y2[24:]), 0.0, atol=1e-6)
+
+
+def test_householder_qr_zero_matrix():
+    y, t, r = ref.householder_qr(jnp.zeros((8, 4), jnp.float32))
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert_allclose(np.asarray(r), 0.0, atol=0)
+    assert_allclose(np.asarray(t), 0.0, atol=0)
+
+
+def test_tsqr_merge_y0_is_identity_for_triangular_inputs():
+    """Paper III-C assumes the merge reflector is [I; Y1]; verify it."""
+    rng = np.random.default_rng(3)
+    r0, r1 = upper(rng, 8), upper(rng, 8)
+    y0, y1, t, r = ref.tsqr_merge(r0, r1)
+    assert_allclose(np.asarray(y0), np.eye(8), atol=1e-6)
+
+
+@pytest.mark.parametrize("b", [2, 4, 8, 16])
+def test_tsqr_merge_matches_stacked_qr(b):
+    rng = np.random.default_rng(b)
+    r0, r1 = upper(rng, b), upper(rng, b)
+    y0, y1, t, r = ref.tsqr_merge(r0, r1)
+    stacked = jnp.concatenate([r0, r1])
+    # R^T R invariant (Cholesky of the Gram matrix is unique up to signs)
+    assert_allclose(
+        np.asarray(r.T @ r),
+        np.asarray(stacked.T @ stacked),
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracle.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,b,n", [(16, 4, 8), (32, 8, 16), (64, 16, 64), (128, 32, 256), (64, 16, 128)]
+)
+def test_leaf_apply_pallas_matches_ref(m, b, n):
+    rng = np.random.default_rng(m + b + n)
+    a = rand(rng, m, b)
+    y, t, _ = ref.householder_qr(a)
+    c = rand(rng, m, n)
+    got = hh_update.leaf_apply_pallas(y, t, c)
+    want = ref.leaf_apply(y, t, c)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,n", [(4, 8), (8, 32), (16, 128), (32, 256), (32, 512)])
+def test_tree_update_pallas_matches_ref(b, n):
+    rng = np.random.default_rng(b * n)
+    r0, r1 = upper(rng, b), upper(rng, b)
+    _, y1, t, _ = ref.tsqr_merge(r0, r1)
+    c0, c1 = rand(rng, b, n), rand(rng, b, n)
+    w, o0, o1 = hh_update.tree_update_pallas(c0, c1, y1, t)
+    we, e0, e1 = ref.tree_update(c0, c1, y1, t)
+    assert_allclose(np.asarray(w), np.asarray(we), rtol=RTOL, atol=ATOL)
+    assert_allclose(np.asarray(o0), np.asarray(e0), rtol=RTOL, atol=ATOL)
+    assert_allclose(np.asarray(o1), np.asarray(e1), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,n", [(4, 8), (16, 64), (32, 512)])
+def test_recover_pallas_matches_ref(b, n):
+    rng = np.random.default_rng(b + n)
+    c, w = rand(rng, b, n), rand(rng, b, n)
+    y = rand(rng, b, b)
+    got = hh_update.recover_pallas(c, y, w)
+    assert_allclose(
+        np.asarray(got), np.asarray(ref.recover(c, y, w)), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_tree_update_equals_full_stacked_apply():
+    """The distributed pair step must equal applying the merged Q^T to the
+    stacked [C0; C1] — the algebra Algorithm 1/2 relies on."""
+    rng = np.random.default_rng(11)
+    b, n = 8, 32
+    r0, r1 = upper(rng, b), upper(rng, b)
+    y0, y1, t, _ = ref.tsqr_merge(r0, r1)
+    c0, c1 = rand(rng, b, n), rand(rng, b, n)
+    _, o0, o1 = ref.tree_update(c0, c1, y1, t)
+    y = jnp.concatenate([y0, y1])
+    full = ref.leaf_apply(y, t, jnp.concatenate([c0, c1]))
+    assert_allclose(np.asarray(o0), np.asarray(full[:b]), rtol=1e-3, atol=1e-4)
+    assert_allclose(np.asarray(o1), np.asarray(full[b:]), rtol=1e-3, atol=1e-4)
+
+
+def test_recovery_identity():
+    """Paper III-C: C1_hat recomputed from (C1, Y1, W) equals the original
+    computation — the single-buddy recovery invariant."""
+    rng = np.random.default_rng(13)
+    b, n = 16, 64
+    r0, r1 = upper(rng, b), upper(rng, b)
+    _, y1, t, _ = ref.tsqr_merge(r0, r1)
+    c0, c1 = rand(rng, b, n), rand(rng, b, n)
+    w, o0, o1 = ref.tree_update(c0, c1, y1, t)
+    # bottom buddy recovery
+    rec1 = hh_update.recover_pallas(c1, y1, w)
+    assert_allclose(np.asarray(rec1), np.asarray(o1), rtol=RTOL, atol=ATOL)
+    # top buddy recovery (Y = I)
+    rec0 = hh_update.recover_pallas(c0, jnp.eye(b), w)
+    assert_allclose(np.asarray(rec0), np.asarray(o0), rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, seeds, tiles.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_log=st.integers(1, 4),
+    n_mult=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hyp_tree_update(b_log, n_mult, seed):
+    b = 2**b_log
+    n = b * n_mult
+    rng = np.random.default_rng(seed)
+    r0, r1 = upper(rng, b), upper(rng, b)
+    _, y1, t, _ = ref.tsqr_merge(r0, r1)
+    c0, c1 = rand(rng, b, n), rand(rng, b, n)
+    w, o0, o1 = hh_update.tree_update_pallas(c0, c1, y1, t)
+    we, e0, e1 = ref.tree_update(c0, c1, y1, t)
+    assert_allclose(np.asarray(w), np.asarray(we), rtol=1e-3, atol=1e-4)
+    assert_allclose(np.asarray(o0), np.asarray(e0), rtol=1e-3, atol=1e-4)
+    assert_allclose(np.asarray(o1), np.asarray(e1), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_mult=st.integers(1, 8),
+    b_log=st.integers(1, 4),
+    n_mult=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hyp_leaf_apply(m_mult, b_log, n_mult, seed):
+    b = 2**b_log
+    m = b * m_mult
+    n = b * n_mult
+    rng = np.random.default_rng(seed)
+    y, t, _ = ref.householder_qr(rand(rng, m, b))
+    c = rand(rng, m, n)
+    got = hh_update.leaf_apply_pallas(y, t, c)
+    want = ref.leaf_apply(y, t, c)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m_log=st.integers(2, 6), b_log=st.integers(1, 4), seed=st.integers(0, 9999))
+def test_hyp_householder_qr_gram_invariant(m_log, b_log, seed):
+    """R^T R == A^T A for any panel (the sign-free QR correctness check)."""
+    m, b = 2**m_log, 2**b_log
+    if b > m:
+        b = m
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, b)
+    _, _, r = ref.householder_qr(a)
+    assert_allclose(
+        np.asarray(r.T @ r), np.asarray(a.T @ a), rtol=5e-3, atol=5e-4
+    )
+
+
+def test_vmem_estimates_within_budget():
+    from compile.aot import VMEM_BUDGET, check_vmem, default_profile
+
+    for op, params in default_profile():
+        v = check_vmem(op, params)
+        if v is not None:
+            assert v <= VMEM_BUDGET

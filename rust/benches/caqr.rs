@@ -1,0 +1,76 @@
+//! E6 bench: end-to-end CAQR throughput — native vs XLA backends, plain
+//! vs FT, with scaling over P. This is the headline table.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::coordinator::caqr::run_caqr;
+use ftcaqr::fault::FaultPlan;
+use ftcaqr::runtime::Engine;
+use ftcaqr::trace::Trace;
+
+fn bench_backend(name: &str, be: impl Fn() -> Arc<Backend>) {
+    println!(
+        "{:>8} {:>5} {:>11} | {:>12} {:>12} {:>14}",
+        "backend", "P", "matrix", "wall (ms)", "cp (us)", "host GFLOP/s"
+    );
+    for (procs, rows, cols) in [(4usize, 512usize, 128usize), (8, 1024, 256), (8, 1024, 512)] {
+        for alg in [Algorithm::Plain, Algorithm::FaultTolerant] {
+            let cfg = RunConfig {
+                rows,
+                cols,
+                block: 32,
+                procs,
+                algorithm: alg,
+                verify: false,
+                ..Default::default()
+            };
+            let backend = be();
+            let t0 = std::time::Instant::now();
+            let out = run_caqr(cfg, backend, FaultPlan::none(), Trace::disabled()).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "{:>8} {procs:>5} {:>11} | {:>12.2} {:>12.3} {:>14.2}",
+                format!("{name}/{alg:?}").chars().take(8).collect::<String>(),
+                format!("{rows}x{cols}"),
+                wall * 1e3,
+                out.report.critical_path * 1e6,
+                out.backend_flops as f64 / 1e9 / wall,
+            );
+        }
+    }
+}
+
+fn main() {
+    common::header("E6: end-to-end CAQR (native backend)");
+    bench_backend("nat", Backend::native);
+
+    if common::artifacts_present() {
+        common::header("E6: end-to-end CAQR (XLA backend, AOT JAX/Pallas artifacts)");
+        let engine = Engine::start(
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        bench_backend("xla", move || Backend::xla(engine.clone()));
+    } else {
+        println!("(artifacts/ missing — skipping XLA rows; run `make artifacts`)");
+    }
+
+    common::header("E6b: repeat-run stability (native, FT, P=8, 1024x256)");
+    let (med, mean, sd) = common::time_case(2, 7, || {
+        let cfg = RunConfig {
+            rows: 1024,
+            cols: 256,
+            block: 32,
+            procs: 8,
+            verify: false,
+            ..Default::default()
+        };
+        let _ = run_caqr(cfg, Backend::native(), FaultPlan::none(), Trace::disabled()).unwrap();
+    });
+    common::row("caqr/ft/P8/1024x256", med, mean, sd, "");
+}

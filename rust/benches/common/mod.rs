@@ -1,0 +1,60 @@
+//! Minimal criterion-style bench harness (offline build: no criterion).
+//! Each bench target is a `harness = false` binary that prints a table of
+//! median / mean / stddev wallclock per case, plus the simulated-metric
+//! columns the paper's experiments report.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly and return (median, mean, stddev) seconds.
+pub fn time_case<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / samples.len() as f64;
+    (median, mean, var.sqrt())
+}
+
+/// Pretty-print seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+pub fn row(label: &str, med: f64, mean: f64, sd: f64, extra: &str) {
+    println!(
+        "{label:<44} median {:>10}  mean {:>10}  sd {:>9}  {extra}",
+        fmt_time(med),
+        fmt_time(mean),
+        fmt_time(sd)
+    );
+}
+
+/// Guard for XLA-dependent benches.
+pub fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.txt")
+        .exists()
+}
+
+#[allow(dead_code)]
+pub fn noop(_: Duration) {}

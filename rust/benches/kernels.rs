@@ -1,0 +1,105 @@
+//! Kernel-level bench (§Perf L1/L2): per-op latency of the AOT JAX/Pallas
+//! artifacts through PJRT vs the native oracle, plus engine
+//! compile-vs-exec accounting. This is the profile that drives the
+//! performance pass.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+
+use ftcaqr::backend::Backend;
+use ftcaqr::linalg::{self, Matrix};
+use ftcaqr::runtime::Engine;
+
+fn main() {
+    common::header("kernel micro-bench: native oracle");
+    let a128 = Matrix::randn(128, 32, 1);
+    let (med, mean, sd) = common::time_case(3, 15, || {
+        let _ = linalg::householder_qr(&a128);
+    });
+    common::row("native/panel_qr/128x32", med, mean, sd, "");
+    let f = linalg::householder_qr(&a128);
+    let c = Matrix::randn(128, 512, 2);
+    let (med, mean, sd) = common::time_case(3, 15, || {
+        let _ = linalg::leaf_apply(&f.y, &f.t, &c);
+    });
+    let flops = ftcaqr::backend::flops::leaf_apply(128, 32, 512) as f64;
+    common::row(
+        "native/leaf_apply/128x32x512",
+        med,
+        mean,
+        sd,
+        &format!("{:.2} GFLOP/s", flops / med / 1e9),
+    );
+    let r0 = Matrix::randn(32, 32, 3).triu();
+    let r1 = Matrix::randn(32, 32, 4).triu();
+    let (med, mean, sd) = common::time_case(3, 15, || {
+        let _ = linalg::tsqr_merge(&r0, &r1);
+    });
+    common::row("native/tsqr_merge/b32", med, mean, sd, "");
+
+    if !common::artifacts_present() {
+        println!("\n(artifacts/ missing — skipping XLA kernel rows)");
+        return;
+    }
+    common::header("kernel micro-bench: XLA artifacts (PJRT CPU, interpret-mode Pallas)");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::start(&dir).unwrap();
+    let xla = Backend::xla(engine.clone());
+
+    // Warm the cache first so compile time is excluded from the rows.
+    let _ = xla.panel_qr(&a128).unwrap();
+    let _ = xla.leaf_apply(&f.y, &f.t, &c).unwrap();
+    let _ = xla.tsqr_merge(&r0, &r1).unwrap();
+    let st = linalg::tree_update(
+        &Matrix::randn(32, 512, 5),
+        &Matrix::randn(32, 512, 6),
+        &r1,
+        &f.t.crop_to(32, 32),
+    );
+
+    let (med, mean, sd) = common::time_case(2, 10, || {
+        let _ = xla.panel_qr(&a128).unwrap();
+    });
+    common::row("xla/panel_qr/128x32", med, mean, sd, "");
+    let (med, mean, sd) = common::time_case(2, 10, || {
+        let _ = xla.leaf_apply(&f.y, &f.t, &c).unwrap();
+    });
+    common::row(
+        "xla/leaf_apply/128x32x512",
+        med,
+        mean,
+        sd,
+        &format!("{:.2} GFLOP/s", flops / med / 1e9),
+    );
+    let (med, mean, sd) = common::time_case(2, 10, || {
+        let _ = xla.tsqr_merge(&r0, &r1).unwrap();
+    });
+    common::row("xla/tsqr_merge/b32", med, mean, sd, "");
+    let c0 = Matrix::randn(32, 512, 7);
+    let c1 = Matrix::randn(32, 512, 8);
+    let (med, mean, sd) = common::time_case(2, 10, || {
+        let _ = xla.tree_update(&c0, &c1, &r1, &st.w.crop_to(32, 32)).unwrap();
+    });
+    common::row("xla/tree_update/b32xn512", med, mean, sd, "");
+
+    // Raw engine exec (no pad/crop) to isolate runtime overhead.
+    let want = BTreeMap::from([("b", 32usize), ("n", 512usize)]);
+    let entry = engine.manifest().select("tree_update", &want).unwrap().clone();
+    let y1 = r1.clone();
+    let t32 = st.w.crop_to(32, 32);
+    let (med, mean, sd) = common::time_case(2, 10, || {
+        let _ = engine
+            .exec(&entry, vec![c0.clone(), c1.clone(), y1.clone(), t32.clone()])
+            .unwrap();
+    });
+    common::row("xla/raw_exec/tree_update", med, mean, sd, "");
+
+    let (execs, compiles, exec_s, compile_s) = engine.stats().snapshot();
+    println!(
+        "\nengine totals: {execs} execs ({:.3} ms avg), {compiles} compiles ({:.1} ms avg)",
+        exec_s / execs.max(1) as f64 * 1e3,
+        compile_s / compiles.max(1) as f64 * 1e3
+    );
+}

@@ -1,0 +1,110 @@
+//! E3 bench: recovery cost vs failure position and process count
+//! (paper §III-C). Reports the critical-path penalty of one failure,
+//! the number of single-buddy fetches, and recovery traffic.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::RunConfig;
+use ftcaqr::coordinator::run_caqr_matrix;
+use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::linalg::Matrix;
+use ftcaqr::trace::Trace;
+
+fn main() {
+    common::header("E3: recovery cost vs failure panel (P=8, 1024x256, b=32)");
+    let cfg = RunConfig { rows: 1024, cols: 256, block: 32, procs: 8, ..Default::default() };
+    let a = Matrix::randn(cfg.rows, cfg.cols, 7);
+    let clean = run_caqr_matrix(
+        cfg.clone(),
+        a.clone(),
+        Backend::native(),
+        FaultPlan::none(),
+        Trace::disabled(),
+    )
+    .unwrap();
+    println!("failure-free cp: {:.3} us\n", clean.report.critical_path * 1e6);
+    println!(
+        "{:>11} {:>12} {:>11} {:>9} {:>13} {:>10}",
+        "fail panel", "cp (us)", "overhead", "fetches", "extra bytes", "identical"
+    );
+    for panel in 0..cfg.panels() {
+        let trace = Trace::new();
+        let fault = FaultPlan::new(FaultSpec::Schedule {
+            kills: vec![ScheduledKill {
+                rank: 5,
+                site: FailSite { panel, step: 0, phase: Phase::Update },
+            }],
+        });
+        let out =
+            run_caqr_matrix(cfg.clone(), a.clone(), Backend::native(), fault, trace.clone())
+                .unwrap();
+        if out.report.failures == 0 {
+            continue; // site unreachable for this rank/panel
+        }
+        println!(
+            "{panel:>11} {:>12.3} {:>10.2}% {:>9} {:>13} {:>10}",
+            out.report.critical_path * 1e6,
+            (out.report.critical_path / clean.report.critical_path - 1.0) * 100.0,
+            trace.of_kind("recovery_fetch").len(),
+            out.report.bytes as i64 - clean.report.bytes as i64,
+            out.r == clean.r,
+        );
+    }
+
+    common::header("E3b: recovery cost vs process count (failure at mid-panel)");
+    println!(
+        "{:>5} {:>14} {:>14} {:>10} {:>9}",
+        "P", "clean cp us", "failed cp us", "overhead", "fetches"
+    );
+    for procs in [4usize, 8, 16] {
+        let cfg = RunConfig {
+            rows: procs * 128,
+            cols: 256,
+            block: 32,
+            procs,
+            ..Default::default()
+        };
+        let a = Matrix::randn(cfg.rows, cfg.cols, 11);
+        let clean = run_caqr_matrix(
+            cfg.clone(),
+            a.clone(),
+            Backend::native(),
+            FaultPlan::none(),
+            Trace::disabled(),
+        )
+        .unwrap();
+        let trace = Trace::new();
+        let fault = FaultPlan::new(FaultSpec::Schedule {
+            kills: vec![ScheduledKill {
+                rank: procs / 2,
+                site: FailSite { panel: 4, step: 0, phase: Phase::Update },
+            }],
+        });
+        let out =
+            run_caqr_matrix(cfg, a, Backend::native(), fault, trace.clone()).unwrap();
+        println!(
+            "{procs:>5} {:>14.3} {:>14.3} {:>9.2}% {:>9}",
+            clean.report.critical_path * 1e6,
+            out.report.critical_path * 1e6,
+            (out.report.critical_path / clean.report.critical_path - 1.0) * 100.0,
+            trace.of_kind("recovery_fetch").len(),
+        );
+    }
+
+    common::header("recovery wallclock (one failure, native)");
+    let (med, mean, sd) = common::time_case(1, 5, || {
+        let cfg =
+            RunConfig { rows: 1024, cols: 256, block: 32, procs: 8, ..Default::default() };
+        let a = Matrix::randn(cfg.rows, cfg.cols, 7);
+        let fault = FaultPlan::new(FaultSpec::Schedule {
+            kills: vec![ScheduledKill {
+                rank: 5,
+                site: FailSite { panel: 4, step: 0, phase: Phase::Update },
+            }],
+        });
+        let _ = run_caqr_matrix(cfg, a, Backend::native(), fault, Trace::disabled()).unwrap();
+    });
+    common::row("recovery/P8/1024x256/panel4", med, mean, sd, "");
+}

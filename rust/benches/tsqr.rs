@@ -1,0 +1,50 @@
+//! E1 bench: TSQR — plain reduction vs FT all-exchange (paper §III-B,
+//! Fig 2). Regenerates the redundancy series and the overhead columns.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ftcaqr::backend::Backend;
+use ftcaqr::coordinator::{run_tsqr, TsqrMode};
+use ftcaqr::linalg::Matrix;
+use ftcaqr::sim::CostModel;
+
+fn main() {
+    common::header("E1 / Fig 2: TSQR plain vs fault-tolerant");
+    println!(
+        "{:>6} {:>6} {:>8} | {:>12} {:>12} {:>9} | {:>10} {:>10} | {:>20}",
+        "procs", "m_loc", "b", "cp plain us", "cp ft us", "ratio", "msgs", "exchs", "redundancy(step)"
+    );
+    for procs in [2usize, 4, 8, 16, 32] {
+        for b in [8usize, 16, 32] {
+            let m_local = 64.max(b);
+            let a = Matrix::randn(procs * m_local, b, 99);
+            let be = Backend::native();
+            let p =
+                run_tsqr(&a, procs, TsqrMode::Plain, be.clone(), CostModel::default()).unwrap();
+            let f = run_tsqr(&a, procs, TsqrMode::FaultTolerant, be, CostModel::default())
+                .unwrap();
+            println!(
+                "{procs:>6} {m_local:>6} {b:>8} | {:>12.3} {:>12.3} {:>9.3} | {:>10} {:>10} | {:>20}",
+                p.report.critical_path * 1e6,
+                f.report.critical_path * 1e6,
+                f.report.critical_path / p.report.critical_path,
+                p.report.messages,
+                f.report.exchanges,
+                format!("{:?}", f.redundancy),
+            );
+        }
+    }
+
+    common::header("TSQR wallclock (native backend)");
+    for procs in [4usize, 8, 16] {
+        let a = Matrix::randn(procs * 128, 32, 5);
+        for (name, mode) in [("plain", TsqrMode::Plain), ("ft", TsqrMode::FaultTolerant)] {
+            let (med, mean, sd) = common::time_case(1, 5, || {
+                let be = Backend::native();
+                let _ = run_tsqr(&a, procs, mode, be, CostModel::default()).unwrap();
+            });
+            common::row(&format!("tsqr/{name}/P{procs}/m128/b32"), med, mean, sd, "");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! E2 + E4 bench: trailing-matrix update — Algorithm 1 (plain) vs
+//! Algorithm 2 (FT). Critical path (dual- and single-channel), message
+//! pattern, bytes, and the energy proxy (flops, paper C4).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::coordinator::run_caqr_simple;
+use ftcaqr::sim::CostModel;
+
+fn cfg(procs: usize, cols: usize, alg: Algorithm, cost: CostModel) -> RunConfig {
+    RunConfig {
+        rows: procs * 128,
+        cols,
+        block: 32,
+        procs,
+        algorithm: alg,
+        cost,
+        verify: false,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    common::header("E2: update-tree overhead, Alg 2 (FT) vs Alg 1 (plain), dual-channel");
+    println!(
+        "{:>5} {:>6} | {:>12} {:>12} {:>8} | {:>8} {:>8} | {:>12} {:>12} | {:>9}",
+        "P", "cols", "cp plain us", "cp ft us", "ratio", "msgs", "exchs", "bytes plain", "bytes ft", "flop f/p"
+    );
+    for procs in [2usize, 4, 8, 16, 32] {
+        for cols in [128usize, 256, 512] {
+            if cols > procs * 128 {
+                continue;
+            }
+            let p = run_caqr_simple(cfg(procs, cols, Algorithm::Plain, CostModel::default()))
+                .unwrap();
+            let f = run_caqr_simple(cfg(
+                procs,
+                cols,
+                Algorithm::FaultTolerant,
+                CostModel::default(),
+            ))
+            .unwrap();
+            println!(
+                "{procs:>5} {cols:>6} | {:>12.3} {:>12.3} {:>8.3} | {:>8} {:>8} | {:>12} {:>12} | {:>9.3}",
+                p.report.critical_path * 1e6,
+                f.report.critical_path * 1e6,
+                f.report.critical_path / p.report.critical_path,
+                p.report.messages,
+                f.report.exchanges,
+                p.report.bytes,
+                f.report.bytes,
+                f.backend_flops as f64 / p.backend_flops as f64,
+            );
+        }
+    }
+
+    common::header("E2b: same, single-channel links (overlap assumption removed)");
+    println!("{:>5} {:>6} | {:>12} {:>12} {:>8}", "P", "cols", "cp plain us", "cp ft us", "ratio");
+    for procs in [4usize, 8, 16] {
+        let cols = 256;
+        let p = run_caqr_simple(cfg(procs, cols, Algorithm::Plain, CostModel::single_channel()))
+            .unwrap();
+        let f = run_caqr_simple(cfg(
+            procs,
+            cols,
+            Algorithm::FaultTolerant,
+            CostModel::single_channel(),
+        ))
+        .unwrap();
+        println!(
+            "{procs:>5} {cols:>6} | {:>12.3} {:>12.3} {:>8.3}",
+            p.report.critical_path * 1e6,
+            f.report.critical_path * 1e6,
+            f.report.critical_path / p.report.critical_path,
+        );
+    }
+
+    common::header("E4: energy proxy — flops by algorithm (both buddies compute in FT)");
+    println!("{:>5} {:>6} | {:>14} {:>14} {:>9}", "P", "cols", "flops plain", "flops ft", "overhead");
+    for procs in [4usize, 8, 16] {
+        for cols in [128usize, 256] {
+            let p = run_caqr_simple(cfg(procs, cols, Algorithm::Plain, CostModel::default()))
+                .unwrap();
+            let f = run_caqr_simple(cfg(
+                procs,
+                cols,
+                Algorithm::FaultTolerant,
+                CostModel::default(),
+            ))
+            .unwrap();
+            println!(
+                "{procs:>5} {cols:>6} | {:>14} {:>14} {:>8.1}%",
+                p.backend_flops,
+                f.backend_flops,
+                (f.backend_flops as f64 / p.backend_flops as f64 - 1.0) * 100.0
+            );
+        }
+    }
+
+    common::header("update wallclock (native)");
+    for alg in [Algorithm::Plain, Algorithm::FaultTolerant] {
+        let c = cfg(8, 256, alg, CostModel::default());
+        let (med, mean, sd) =
+            common::time_case(1, 5, || drop(run_caqr_simple(c.clone()).unwrap()));
+        common::row(&format!("caqr/{alg:?}/P8/1024x256"), med, mean, sd, "");
+    }
+}

@@ -1,0 +1,273 @@
+//! Compute backends: the five numeric ops behind one interface.
+//!
+//! * [`NativeBackend`] — the pure-Rust [`crate::linalg`] oracle. Fast to
+//!   spin up; used by the large simulation sweeps and property tests.
+//! * [`XlaBackend`] — executes the AOT HLO artifacts through the PJRT
+//!   engine, zero-padding each request up to the manifest's shape ladder
+//!   (exact; see DESIGN.md "Shape strategy"). This is the production
+//!   path: the numerics a real deployment would run are the JAX/Pallas
+//!   kernels, not the Rust oracle.
+//!
+//! [`Backend`] is an enum rather than a trait object so the coordinator's
+//! async call-sites need no `async_trait` machinery.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::linalg::{self, Matrix, PanelFactors, TreeStep};
+use crate::runtime::EngineHandle;
+
+/// Merge factors returned by [`Backend::tsqr_merge`].
+#[derive(Clone, Debug)]
+pub struct MergeFactors {
+    /// Top reflector block (structurally `I` for triangular inputs).
+    pub y0: Matrix,
+    /// Bottom reflector block — the `Y₁` of the paper's Algorithm 1/2.
+    pub y1: Matrix,
+    pub t: Matrix,
+    pub r: Matrix,
+}
+
+/// Pure-Rust backend (the linalg oracle) with flop accounting.
+#[derive(Default)]
+pub struct NativeBackend {
+    flops: AtomicU64,
+}
+
+/// PJRT-backed backend: pads to the artifact ladder, executes, crops.
+pub struct XlaBackend {
+    engine: EngineHandle,
+    flops: AtomicU64,
+}
+
+/// The compute interface used by every coordinator rank.
+pub enum Backend {
+    Native(NativeBackend),
+    Xla(XlaBackend),
+}
+
+/// Flop-count models (count multiply-adds as 2 flops), used for the
+/// paper's energy-overhead experiment (E4) and the §Perf roofline notes.
+pub mod flops {
+    /// Householder panel QR of (m, b): ~2mb² + accumulation of T (~mb²).
+    pub fn panel_qr(m: usize, b: usize) -> u64 {
+        (3 * m * b * b) as u64
+    }
+    /// Merge of two (b, b) triangles: QR of (2b, b).
+    pub fn tsqr_merge(b: usize) -> u64 {
+        panel_qr(2 * b, b)
+    }
+    /// W = Tᵀ(YᵀC); Ĉ = C − YW over (m,b)x(m,n): 4mnb + 2nb².
+    pub fn leaf_apply(m: usize, b: usize, n: usize) -> u64 {
+        (4 * m * n * b + 2 * n * b * b) as u64
+    }
+    /// Pair step over (b, n) halves: 6nb² + O(nb).
+    pub fn tree_update(b: usize, n: usize) -> u64 {
+        (6 * n * b * b + 2 * n * b) as u64
+    }
+    /// Recovery recompute Ĉ = C − YW: 2nb².
+    pub fn recover(b: usize, n: usize) -> u64 {
+        (2 * n * b * b) as u64
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl XlaBackend {
+    pub fn new(engine: EngineHandle) -> Self {
+        Self { engine, flops: AtomicU64::new(0) }
+    }
+
+    pub fn engine(&self) -> &EngineHandle {
+        &self.engine
+    }
+}
+
+impl Backend {
+    /// Convenience constructors.
+    pub fn native() -> Arc<Backend> {
+        Arc::new(Backend::Native(NativeBackend::new()))
+    }
+
+    pub fn xla(engine: EngineHandle) -> Arc<Backend> {
+        Arc::new(Backend::Xla(XlaBackend::new(engine)))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native(_) => "native",
+            Backend::Xla(_) => "xla",
+        }
+    }
+
+    /// Cumulative flops issued through this backend.
+    pub fn flops(&self) -> u64 {
+        match self {
+            Backend::Native(b) => b.flops.load(Ordering::Relaxed),
+            Backend::Xla(b) => b.flops.load(Ordering::Relaxed),
+        }
+    }
+
+    fn add_flops(&self, f: u64) {
+        match self {
+            Backend::Native(b) => b.flops.fetch_add(f, Ordering::Relaxed),
+            Backend::Xla(b) => b.flops.fetch_add(f, Ordering::Relaxed),
+        };
+    }
+
+    /// Local panel factorization `(m, b) → (Y, T, R)`.
+    pub fn panel_qr(&self, a: &Matrix) -> Result<PanelFactors> {
+        let (m, b) = a.shape();
+        self.add_flops(flops::panel_qr(m, b));
+        match self {
+            Backend::Native(_) => Ok(linalg::householder_qr(a)),
+            Backend::Xla(x) => {
+                let want = BTreeMap::from([("m", m), ("b", b)]);
+                let entry = x.engine.manifest().select("panel_qr", &want)?.clone();
+                let (pm, pb) = (entry.params["m"], entry.params["b"]);
+                let out = x.engine.exec(&entry, vec![a.pad_to(pm, pb)])?;
+                let [y, t, r]: [Matrix; 3] = out
+                    .try_into()
+                    .map_err(|_| anyhow::anyhow!("panel_qr arity"))?;
+                Ok(PanelFactors { y: y.crop_to(m, b), t, r })
+            }
+        }
+    }
+
+    /// TSQR merge step on a pair of `(b, b)` triangles.
+    pub fn tsqr_merge(&self, r0: &Matrix, r1: &Matrix) -> Result<MergeFactors> {
+        let b = r0.rows();
+        self.add_flops(flops::tsqr_merge(b));
+        match self {
+            Backend::Native(_) => {
+                let (y0, y1, t, r) = linalg::tsqr_merge(r0, r1);
+                Ok(MergeFactors { y0, y1, t, r })
+            }
+            Backend::Xla(x) => {
+                let want = BTreeMap::from([("b", b)]);
+                let entry = x.engine.manifest().select("tsqr_merge", &want)?.clone();
+                let out = x.engine.exec(&entry, vec![r0.clone(), r1.clone()])?;
+                let [y0, y1, t, r]: [Matrix; 4] = out
+                    .try_into()
+                    .map_err(|_| anyhow::anyhow!("tsqr_merge arity"))?;
+                Ok(MergeFactors { y0, y1, t, r })
+            }
+        }
+    }
+
+    /// Apply local `Qᵀ` to the trailing block.
+    pub fn leaf_apply(&self, y: &Matrix, t: &Matrix, c: &Matrix) -> Result<Matrix> {
+        let (m, b) = y.shape();
+        let n = c.cols();
+        self.add_flops(flops::leaf_apply(m, b, n));
+        match self {
+            Backend::Native(_) => Ok(linalg::leaf_apply(y, t, c)),
+            Backend::Xla(x) => {
+                let want = BTreeMap::from([("m", m), ("b", b), ("n", n)]);
+                let entry = x.engine.manifest().select("leaf_apply", &want)?.clone();
+                let (pm, pn) = (entry.params["m"], entry.params["n"]);
+                let out = x
+                    .engine
+                    .exec(&entry, vec![y.pad_to(pm, b), t.clone(), c.pad_to(pm, pn)])
+                    ?;
+                let [ch]: [Matrix; 1] =
+                    out.try_into().map_err(|_| anyhow::anyhow!("leaf_apply arity"))?;
+                Ok(ch.crop_to(m, n))
+            }
+        }
+    }
+
+    /// One pairwise trailing-update tree step (paper Alg 1/2).
+    pub fn tree_update(
+        &self,
+        c0: &Matrix,
+        c1: &Matrix,
+        y1: &Matrix,
+        t: &Matrix,
+    ) -> Result<TreeStep> {
+        let (b, n) = c0.shape();
+        self.add_flops(flops::tree_update(b, n));
+        match self {
+            Backend::Native(_) => Ok(linalg::tree_update(c0, c1, y1, t)),
+            Backend::Xla(x) => {
+                let want = BTreeMap::from([("b", b), ("n", n)]);
+                let entry = x.engine.manifest().select("tree_update", &want)?.clone();
+                let pn = entry.params["n"];
+                let out = x
+                    .engine
+                    .exec(
+                        &entry,
+                        vec![c0.pad_to(b, pn), c1.pad_to(b, pn), y1.clone(), t.clone()],
+                    )
+                    ?;
+                let [w, o0, o1]: [Matrix; 3] =
+                    out.try_into().map_err(|_| anyhow::anyhow!("tree_update arity"))?;
+                Ok(TreeStep {
+                    w: w.crop_to(b, n),
+                    c0: o0.crop_to(b, n),
+                    c1: o1.crop_to(b, n),
+                })
+            }
+        }
+    }
+
+    /// Single-buddy recovery recompute `Ĉ = C − Y W` (paper III-C).
+    pub fn recover(&self, c: &Matrix, y: &Matrix, w: &Matrix) -> Result<Matrix> {
+        let (b, n) = c.shape();
+        self.add_flops(flops::recover(b, n));
+        match self {
+            Backend::Native(_) => Ok(linalg::recover_block(c, y, w)),
+            Backend::Xla(x) => {
+                let want = BTreeMap::from([("b", b), ("n", n)]);
+                let entry = x.engine.manifest().select("recover", &want)?.clone();
+                let pn = entry.params["n"];
+                let out = x
+                    .engine
+                    .exec(
+                        &entry,
+                        vec![c.pad_to(b, pn), y.clone(), w.pad_to(b, pn)],
+                    )
+                    ?;
+                let [ch]: [Matrix; 1] =
+                    out.try_into().map_err(|_| anyhow::anyhow!("recover arity"))?;
+                Ok(ch.crop_to(b, n))
+            }
+        }
+    }
+}
+
+/// Trait alias kept for documentation: anything that can serve the five
+/// ops. (The concrete dispatch goes through [`Backend`].)
+pub trait ComputeBackend {}
+impl ComputeBackend for Backend {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+
+    #[test]
+    fn native_backend_matches_linalg() {
+        let be = Backend::native();
+        let a = Matrix::randn(32, 8, 1);
+        let f = be.panel_qr(&a).unwrap();
+        let g = linalg::householder_qr(&a);
+        assert_eq!(f.r, g.r);
+        assert_eq!(be.name(), "native");
+        assert!(be.flops() > 0);
+    }
+
+    #[test]
+    fn flop_model_monotone() {
+        assert!(flops::leaf_apply(128, 32, 512) > flops::leaf_apply(64, 32, 512));
+        assert!(flops::tree_update(32, 512) > flops::tree_update(16, 512));
+        assert!(flops::tsqr_merge(32) > flops::tsqr_merge(16));
+    }
+}

@@ -1,0 +1,117 @@
+//! Diskless-checkpointing comparator (paper §II, experiment E7).
+//!
+//! The classic alternative to the paper's ABFT scheme: every `interval`
+//! panels each rank copies its full local state into a partner's memory
+//! (Plank et al.'s diskless checkpointing). On failure, the replacement
+//! restores the last checkpoint and *all* ranks roll back and re-execute
+//! the panels since — a global-rollback cost the ABFT scheme avoids.
+//!
+//! The traffic side is measured for real (the CAQR driver's
+//! `checkpoint_every` knob injects the copies into the run); this module
+//! adds the analytic rollback model used to convert measured per-panel
+//! times into recovery costs, plus memory-overhead accounting to compare
+//! against [`crate::coordinator::RecoveryStore`] retention.
+
+/// Cost model for checkpoint/rollback recovery.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointModel {
+    /// Checkpoint interval in panels.
+    pub interval: usize,
+    /// Bytes of one rank's local state (one checkpoint copy).
+    pub state_bytes: usize,
+    /// Simulated seconds per panel (measured from a run).
+    pub seconds_per_panel: f64,
+    /// Link parameters for the restore transfer.
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+/// Predicted recovery cost after a failure at `fail_panel`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RollbackCost {
+    /// Panel index of the restored checkpoint.
+    pub restored_panel: usize,
+    /// Panels that must be re-executed (by every rank).
+    pub replay_panels: usize,
+    /// Restore transfer time (read the checkpoint back).
+    pub restore_seconds: f64,
+    /// Re-execution time.
+    pub replay_seconds: f64,
+    /// Total recovery time.
+    pub total_seconds: f64,
+}
+
+impl CheckpointModel {
+    /// Rollback cost for a failure detected during panel `fail_panel`.
+    pub fn rollback(&self, fail_panel: usize) -> RollbackCost {
+        assert!(self.interval > 0, "checkpoint interval must be positive");
+        // Checkpoints are taken after panels interval-1, 2*interval-1, ...
+        let completed = fail_panel; // panels fully done before the failure
+        let restored_panel = (completed / self.interval) * self.interval;
+        let replay_panels = fail_panel - restored_panel;
+        let restore_seconds = self.alpha + self.state_bytes as f64 * self.beta;
+        let replay_seconds = replay_panels as f64 * self.seconds_per_panel;
+        RollbackCost {
+            restored_panel,
+            replay_panels,
+            restore_seconds,
+            replay_seconds,
+            total_seconds: restore_seconds + replay_seconds,
+        }
+    }
+
+    /// Steady-state memory overhead per rank: one full state copy.
+    pub fn memory_overhead_bytes(&self) -> usize {
+        self.state_bytes
+    }
+
+    /// Failure-free overhead per panel (amortized checkpoint transfer,
+    /// dual-channel exchange with the partner).
+    pub fn overhead_per_panel_seconds(&self) -> f64 {
+        (self.alpha + self.state_bytes as f64 * self.beta) / self.interval as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CheckpointModel {
+        CheckpointModel {
+            interval: 4,
+            state_bytes: 1 << 20,
+            seconds_per_panel: 0.01,
+            alpha: 1e-6,
+            beta: 1e-10,
+        }
+    }
+
+    #[test]
+    fn rollback_panel_math() {
+        let m = model();
+        let c = m.rollback(6);
+        assert_eq!(c.restored_panel, 4);
+        assert_eq!(c.replay_panels, 2);
+        assert!((c.replay_seconds - 0.02).abs() < 1e-12);
+        // Failure right after a checkpoint: nothing to replay.
+        let c2 = m.rollback(4);
+        assert_eq!(c2.replay_panels, 0);
+        // Worst case: interval-1 panels lost.
+        let c3 = m.rollback(7);
+        assert_eq!(c3.replay_panels, 3);
+    }
+
+    #[test]
+    fn shorter_interval_cheaper_recovery_higher_overhead() {
+        let long = model();
+        let short = CheckpointModel { interval: 1, ..model() };
+        assert!(short.rollback(6).total_seconds <= long.rollback(6).total_seconds);
+        assert!(short.overhead_per_panel_seconds() > long.overhead_per_panel_seconds());
+    }
+
+    #[test]
+    #[should_panic(expected = "interval must be positive")]
+    fn zero_interval_panics() {
+        CheckpointModel { interval: 0, ..model() }.rollback(1);
+    }
+}

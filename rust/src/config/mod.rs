@@ -1,0 +1,289 @@
+//! Run configuration: one typed struct, loadable from a simple
+//! `key = value` config file and overridable from the CLI. Everything an
+//! experiment varies lives here so benches/examples are driven by data,
+//! not code edits.
+//!
+//! (Offline build: no serde/toml — the config format is a flat
+//! `key = value` file with `#` comments, which covers every knob.)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::fault::FaultSpec;
+use crate::ft::Semantics;
+use crate::sim::CostModel;
+
+/// Which trailing-update algorithm the coordinator runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Algorithm {
+    /// Paper Algorithm 1 — baseline CAQR, no redundancy.
+    Plain,
+    /// Paper Algorithm 2 + FT-TSQR — the fault-tolerant variant.
+    #[default]
+    FaultTolerant,
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "plain" | "alg1" => Ok(Self::Plain),
+            "ft" | "fault-tolerant" | "alg2" => Ok(Self::FaultTolerant),
+            other => Err(format!("unknown algorithm '{other}'")),
+        }
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Algorithm::Plain => "plain",
+            Algorithm::FaultTolerant => "ft",
+        })
+    }
+}
+
+/// Compute-backend selection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendKind {
+    /// Pure-Rust linalg (fast startup; used by big sweeps).
+    Native,
+    /// PJRT + AOT artifacts (the production numerics path).
+    Xla { artifact_dir: PathBuf },
+}
+
+impl Default for BackendKind {
+    fn default() -> Self {
+        BackendKind::Native
+    }
+}
+
+/// Full run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Global matrix rows (M).
+    pub rows: usize,
+    /// Global matrix cols (N).
+    pub cols: usize,
+    /// Panel width (b).
+    pub block: usize,
+    /// Number of simulated processes (P); each owns rows/P block rows.
+    pub procs: usize,
+    pub algorithm: Algorithm,
+    pub semantics: Semantics,
+    pub backend: BackendKind,
+    pub cost: CostModel,
+    pub fault: FaultSpec,
+    /// Diskless-checkpoint interval in panels (0 = off) — the §II
+    /// comparator baseline, experiment E7.
+    pub checkpoint_every: usize,
+    /// RNG seed for the input matrix.
+    pub seed: u64,
+    /// Verify the factorization against the Gram identity after the run.
+    pub verify: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            rows: 256,
+            cols: 64,
+            block: 16,
+            procs: 4,
+            algorithm: Algorithm::default(),
+            semantics: Semantics::default(),
+            backend: BackendKind::default(),
+            cost: CostModel::default(),
+            fault: FaultSpec::default(),
+            checkpoint_every: 0,
+            seed: 0,
+            verify: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Rows owned by each rank.
+    pub fn local_rows(&self) -> usize {
+        self.rows / self.procs
+    }
+
+    /// Number of panels in the CAQR outer loop.
+    pub fn panels(&self) -> usize {
+        self.cols.div_ceil(self.block)
+    }
+
+    /// Validate all structural invariants the coordinator assumes.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.procs >= 1, "need at least one process");
+        ensure!(
+            self.rows >= self.cols,
+            "QR needs rows >= cols ({} < {})",
+            self.rows,
+            self.cols
+        );
+        ensure!(
+            self.block >= 1 && self.block <= self.cols,
+            "block must be in [1, cols]"
+        );
+        ensure!(
+            self.rows % self.procs == 0,
+            "rows ({}) must divide evenly across procs ({})",
+            self.rows,
+            self.procs
+        );
+        ensure!(
+            self.cols % self.block == 0,
+            "cols ({}) must be a multiple of block ({})",
+            self.cols,
+            self.block
+        );
+        ensure!(
+            self.local_rows() >= self.block,
+            "local rows ({}) must be >= block ({}) so every panel's TSQR leaf is tall",
+            self.local_rows(),
+            self.block
+        );
+        ensure!(
+            self.local_rows() % self.block == 0,
+            "local rows ({}) must be a multiple of block ({}) so panel \
+             boundaries align with rank boundaries",
+            self.local_rows(),
+            self.block
+        );
+        Ok(())
+    }
+
+    /// Parse from a flat `key = value` file (see `to_kv` for the keys).
+    pub fn from_kv(s: &str) -> Result<Self> {
+        let mut c = RunConfig::default();
+        for (lineno, raw) in s.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value", lineno + 1);
+            };
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "rows" => c.rows = v.parse()?,
+                "cols" => c.cols = v.parse()?,
+                "block" => c.block = v.parse()?,
+                "procs" => c.procs = v.parse()?,
+                "algorithm" => c.algorithm = v.parse().map_err(anyhow::Error::msg)?,
+                "semantics" => c.semantics = v.parse().map_err(anyhow::Error::msg)?,
+                "checkpoint_every" => c.checkpoint_every = v.parse()?,
+                "seed" => c.seed = v.parse()?,
+                "verify" => c.verify = v.parse()?,
+                "artifact_dir" => c.backend = BackendKind::Xla { artifact_dir: v.into() },
+                "alpha" => c.cost.alpha = v.parse()?,
+                "beta" => c.cost.beta = v.parse()?,
+                "overhead" => c.cost.o = v.parse()?,
+                "flops_per_sec" => c.cost.flops_per_sec = v.parse()?,
+                "dual_channel" => c.cost.dual_channel = v.parse()?,
+                other => bail!("config line {}: unknown key '{other}'", lineno + 1),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Serialize the scalar fields to the `key = value` format.
+    pub fn to_kv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("rows = {}\n", self.rows));
+        out.push_str(&format!("cols = {}\n", self.cols));
+        out.push_str(&format!("block = {}\n", self.block));
+        out.push_str(&format!("procs = {}\n", self.procs));
+        out.push_str(&format!("algorithm = {}\n", self.algorithm));
+        out.push_str(&format!("semantics = {}\n", self.semantics));
+        out.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));
+        out.push_str(&format!("seed = {}\n", self.seed));
+        out.push_str(&format!("verify = {}\n", self.verify));
+        if let BackendKind::Xla { artifact_dir } = &self.backend {
+            out.push_str(&format!("artifact_dir = {}\n", artifact_dir.display()));
+        }
+        out.push_str(&format!("alpha = {}\n", self.cost.alpha));
+        out.push_str(&format!("beta = {}\n", self.cost.beta));
+        out.push_str(&format!("overhead = {}\n", self.cost.o));
+        out.push_str(&format!("flops_per_sec = {}\n", self.cost.flops_per_sec));
+        out.push_str(&format!("dual_channel = {}\n", self.cost.dual_channel));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let c = RunConfig {
+            rows: 1024,
+            cols: 512,
+            block: 32,
+            procs: 8,
+            ..Default::default()
+        };
+        let t = c.to_kv();
+        let c2 = RunConfig::from_kv(&t).unwrap();
+        assert_eq!(c2.rows, 1024);
+        assert_eq!(c2.procs, 8);
+        assert_eq!(c2.algorithm, Algorithm::FaultTolerant);
+        assert_eq!(c2.cost.dual_channel, c.cost.dual_channel);
+    }
+
+    #[test]
+    fn kv_comments_and_unknown_keys() {
+        let ok = "rows = 512 # comment\ncols=128\nblock = 32\nprocs = 4\n";
+        let c = RunConfig::from_kv(ok).unwrap();
+        assert_eq!(c.rows, 512);
+        assert!(RunConfig::from_kv("bogus = 3\n").is_err());
+        assert!(RunConfig::from_kv("rows\n").is_err());
+    }
+
+    #[test]
+    fn rejects_uneven_rows() {
+        let c = RunConfig { rows: 100, procs: 3, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_wide_matrix() {
+        let c = RunConfig { rows: 32, cols: 64, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_short_local_blocks() {
+        let c = RunConfig { rows: 64, cols: 64, block: 32, procs: 4, ..Default::default() };
+        // local rows = 16 < block 32
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_misaligned_local_rows() {
+        let c = RunConfig { rows: 192, cols: 64, block: 32, procs: 4, ..Default::default() };
+        // local rows = 48, not a multiple of 32
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn panels_count() {
+        let c = RunConfig { cols: 64, block: 16, ..Default::default() };
+        assert_eq!(c.panels(), 4);
+    }
+
+    #[test]
+    fn algorithm_parses() {
+        assert_eq!("alg2".parse::<Algorithm>().unwrap(), Algorithm::FaultTolerant);
+        assert_eq!("plain".parse::<Algorithm>().unwrap(), Algorithm::Plain);
+    }
+}

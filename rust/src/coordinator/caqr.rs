@@ -1,0 +1,540 @@
+//! The CAQR panel driver and per-rank algorithm bodies.
+//!
+//! `run_caqr` builds the simulated world, distributes block rows, runs
+//! every rank's panel loop (TSQR + trailing update, plain or FT), joins
+//! the tasks — including any REBUILD replacements spawned by recovery —
+//! assembles the reduced matrix, and verifies the Gram identity.
+//!
+//! Conventions (see DESIGN.md):
+//! * pair stacking: the smaller tree index owns the globally-upper rows
+//!   and is the top (`R0`/`C0'`) of every stacked merge; the top member
+//!   continues up the tree, the bottom leaves after its step.
+//! * Algorithm 1 (plain): bottom sends `C'₁`, top computes the pair
+//!   update and returns `Ĉ'₁` — two serialized one-way messages.
+//! * Algorithm 2 (FT): both members already hold the merge factors (the
+//!   FT-TSQR exchanged R's), `sendrecv` their `C'` rows, and both
+//!   compute `W` and their own update; `{W, T, C', Y₁}` is retained for
+//!   single-buddy recovery (paper §III-C).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use crate::backend::Backend;
+use crate::config::{Algorithm, RunConfig};
+use crate::fault::{FailSite, FaultPlan, Phase};
+use crate::ft::Fail;
+use crate::linalg::{gram_residual, Matrix};
+use crate::metrics::Report;
+use crate::sim::{CostModel, MsgData, Tag, TagKind, World};
+use crate::trace::Trace;
+
+use super::panel::{geometry, PanelGeom};
+use super::store::{RecoveryStore, RevivalGate};
+use super::tree::{self, Role};
+
+/// Immutable context shared by every rank task (original and rebuilt).
+pub struct Shared {
+    pub cfg: RunConfig,
+    pub backend: Arc<Backend>,
+    pub store: Arc<RecoveryStore>,
+    pub gate: Arc<RevivalGate>,
+    pub trace: Arc<Trace>,
+    pub world: Arc<World>,
+    /// Per-rank initial blocks — the "subpart of the initial matrix" the
+    /// paper's recovery re-reads (stable storage / parallel FS stand-in).
+    pub initial: Vec<Matrix>,
+    /// Final local blocks, written by each rank on completion.
+    pub results: Mutex<HashMap<usize, Matrix>>,
+    /// Join handles of REBUILD replacement tasks.
+    pub revived: Mutex<Vec<JoinHandle<Result<(), Fail>>>>,
+}
+
+/// Outcome of a full factorization run.
+#[derive(Debug)]
+pub struct CaqrOutcome {
+    /// The assembled reduced matrix (rows x cols; `[R; 0]`).
+    pub reduced: Matrix,
+    /// Upper-triangular `R` (cols x cols).
+    pub r: Matrix,
+    /// `‖AᵀA − RᵀR‖_F / ‖AᵀA‖_F` when `cfg.verify`.
+    pub residual: Option<f32>,
+    /// Frobenius norm of the strictly-lower part of `reduced` (should
+    /// be ~0).
+    pub lower_defect: f32,
+    /// Metrics snapshot.
+    pub report: Report,
+    /// Peak bytes of buddy-retained redundancy state.
+    pub store_peak_bytes: u64,
+    /// Wallclock of the simulated run.
+    pub elapsed: std::time::Duration,
+    /// Flops issued through the backend.
+    pub backend_flops: u64,
+}
+
+/// One rank's per-panel working state.
+pub(crate) struct Ranker {
+    pub shared: Arc<Shared>,
+    pub ctx: crate::sim::RankCtx,
+    /// True for a REBUILD replacement replaying history.
+    pub resume: bool,
+    /// The local block-row (m_local x cols), updated in place.
+    pub local: Matrix,
+}
+
+impl Ranker {
+    pub(crate) fn rank(&self) -> usize {
+        self.ctx.rank
+    }
+
+    fn cfg(&self) -> &RunConfig {
+        &self.shared.cfg
+    }
+
+    /// Full panel loop; returns the final local block.
+    pub fn run(mut self) -> Result<(), Fail> {
+        let out = self.run_inner();
+        if let Err(e) = &out {
+            // A rank that exits abnormally (Abort cascade, unrecoverable
+            // failure) must look dead to its peers, or they would block
+            // forever waiting for its messages — MPI_Abort semantics.
+            if *e != Fail::Killed {
+                self.ctx.router().kill(self.ctx.rank);
+            }
+        }
+        out
+    }
+
+    fn run_inner(&mut self) -> Result<(), Fail> {
+        let panels = self.cfg().panels();
+        for k in 0..panels {
+            let g = geometry(self.cfg(), self.rank(), k);
+            crate::simlog!("[r{} inc] panel {k} start (resume={})", self.rank(), self.resume);
+            if !g.participates {
+                continue;
+            }
+            let factors = self.panel_tsqr(&g)?;
+            if g.n_trail > 0 {
+                self.panel_update(&g, &factors)?;
+            }
+            // Diskless-checkpoint baseline traffic (E7), if configured.
+            self.maybe_checkpoint(&g)?;
+            // NOTE: retained state is kept for the whole run. Replay of a
+            // failed rank walks its entire history (paper III-C recovers
+            // one step from one buddy; the full-state rebuild composes
+            // those per-step recoveries), so early retirement would leave
+            // a later replay with nothing to read — see the E7 bench for
+            // the measured memory cost vs diskless checkpointing.
+        }
+        if self.resume {
+            self.ctx.metrics.record_recovery();
+            self.shared.trace.emit(self.ctx.clock, self.rank(), 0, 0, "recovery_done", 0.0);
+        }
+        crate::simlog!("[r{}] done", self.rank());
+        self.shared
+            .results
+            .lock()
+            .unwrap()
+            .insert(self.rank(), self.local.clone());
+        Ok(())
+    }
+
+    /// Panel factorization: local leaf QR + reduction tree (plain) or
+    /// all-exchange tree (FT, paper §III-B). Returns the leaf factors
+    /// and the per-step merge factors needed by the trailing update.
+    fn panel_tsqr(&mut self, g: &PanelGeom) -> Result<PanelFactorsSet, Fail> {
+        let b = self.cfg().block;
+        let m_local = self.cfg().local_rows();
+
+        // Leaf factorization of the active panel rows (zero-row padded).
+        let apanel = self
+            .local
+            .block(g.start, g.k * b, g.active_m, b)
+            .pad_to(m_local, b);
+        let leaf = self
+            .shared
+            .backend
+            .panel_qr(&apanel)
+            
+            .map_err(|e| self.backend_err("panel_qr", e))?;
+        self.ctx.compute(crate::backend::flops::panel_qr(m_local, b));
+
+        let mut r = leaf.r.clone();
+        let nsteps = tree::steps(g.q);
+        let mut merges: Vec<Option<(Matrix, Matrix)>> = vec![None; nsteps];
+
+        match self.cfg().algorithm {
+            Algorithm::FaultTolerant => {
+                for s in 0..nsteps {
+                    let site = FailSite { panel: g.k, step: s, phase: Phase::Tsqr };
+                    self.ctx.maybe_fail(site)?;
+                    let Some(bidx) = tree::exchange_pair(g.idx, s, g.q) else {
+                        continue;
+                    };
+                    let buddy = bidx + g.owner;
+                    let tag = Tag::new(TagKind::TsqrR, g.k, s);
+
+                    // Replay path: take the completed merge from the
+                    // buddy's retained memory (recovery, paper III-C).
+                    if self.resume {
+                        if let Some(ret) =
+                            self.fetch_retained(buddy, g.k, Phase::Tsqr, s)
+                        {
+                            if tree::reduce_active(g.idx, s) {
+                                merges[s] = Some((ret.y1.clone(), ret.t.clone()));
+                            }
+                            self.retain_tsqr(g, s, buddy, &ret.y1, &ret.t, &ret.r_merged);
+                            r = ret.r_merged;
+                            continue;
+                        }
+                    }
+
+                    let peer = self
+                        .exchange(buddy, tag, MsgData::Mat(r.clone()))
+                        ?
+                        .into_mat();
+                    let (rtop, rbot) =
+                        if tree::is_top(g.idx, bidx) { (&r, &peer) } else { (&peer, &r) };
+                    let mf = self
+                        .shared
+                        .backend
+                        .tsqr_merge(rtop, rbot)
+                        
+                        .map_err(|e| self.backend_err("tsqr_merge", e))?;
+                    self.ctx.compute(crate::backend::flops::tsqr_merge(b));
+                    self.shared.trace.emit(
+                        self.ctx.clock,
+                        self.rank(),
+                        g.k,
+                        s,
+                        "redundancy",
+                        tree::expected_redundancy(s) as f64,
+                    );
+                    if tree::reduce_active(g.idx, s) {
+                        merges[s] = Some((mf.y1.clone(), mf.t.clone()));
+                    }
+                    self.retain_tsqr(g, s, buddy, &mf.y1, &mf.t, &mf.r);
+                    r = mf.r;
+                }
+            }
+            Algorithm::Plain => {
+                for s in 0..nsteps {
+                    if !tree::reduce_active(g.idx, s) {
+                        break;
+                    }
+                    let site = FailSite { panel: g.k, step: s, phase: Phase::Tsqr };
+                    self.ctx.maybe_fail(site)?;
+                    let (role, bidx) = tree::reduce_pair(g.idx, s, g.q);
+                    let buddy = bidx + g.owner;
+                    let tag = Tag::new(TagKind::TsqrR, g.k, s);
+                    match role {
+                        Role::Idle => continue,
+                        Role::Upper => {
+                            let peer = self.recv_plain(buddy, tag)?.into_mat();
+                            let mf = self
+                                .shared
+                                .backend
+                                .tsqr_merge(&r, &peer)
+                                
+                                .map_err(|e| self.backend_err("tsqr_merge", e))?;
+                            self.ctx.compute(crate::backend::flops::tsqr_merge(b));
+                            merges[s] = Some((mf.y1.clone(), mf.t.clone()));
+                            r = mf.r;
+                        }
+                        Role::Lower => {
+                            self.send_plain(buddy, tag, MsgData::Mat(r.clone()))?;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Write the panel columns of the reduced matrix: the owner holds
+        // R; everyone else's active panel rows are eliminated (zero).
+        let mut panel_out = Matrix::zeros(g.active_m, b);
+        if g.idx == 0 {
+            panel_out.set_block(0, 0, &r);
+        }
+        self.local.set_block(g.start, g.k * b, &panel_out);
+
+        Ok(PanelFactorsSet { leaf_y: leaf.y, leaf_t: leaf.t, merges })
+    }
+
+    /// Trailing-matrix update: local leaf apply + pairwise tree
+    /// (paper Algorithms 1 and 2).
+    fn panel_update(&mut self, g: &PanelGeom, f: &PanelFactorsSet) -> Result<(), Fail> {
+        let b = self.cfg().block;
+        let m_local = self.cfg().local_rows();
+
+        // Leaf: apply the local reflectors to the whole trailing block.
+        let c = self
+            .local
+            .block(g.start, g.trail_col, g.active_m, g.n_trail)
+            .pad_to(m_local, g.n_trail);
+        let chat = self
+            .shared
+            .backend
+            .leaf_apply(&f.leaf_y, &f.leaf_t, &c)
+            
+            .map_err(|e| self.backend_err("leaf_apply", e))?;
+        self.ctx.compute(crate::backend::flops::leaf_apply(m_local, b, g.n_trail));
+        self.local
+            .set_block(g.start, g.trail_col, &chat.crop_to(g.active_m, g.n_trail));
+
+        // Tree over the top-b rows of each participant's active block.
+        let mut cp = self.local.block(g.start, g.trail_col, b, g.n_trail);
+        for s in 0..tree::steps(g.q) {
+            if !tree::reduce_active(g.idx, s) {
+                break;
+            }
+            let (role, bidx) = tree::reduce_pair(g.idx, s, g.q);
+            if role == Role::Idle {
+                continue;
+            }
+            let site = FailSite { panel: g.k, step: s, phase: Phase::Update };
+            self.ctx.maybe_fail(site)?;
+            let buddy = bidx + g.owner;
+            let tag = Tag::new(TagKind::UpdateC, g.k, s);
+
+            match self.cfg().algorithm {
+                Algorithm::FaultTolerant => {
+                    let (y1, t) = f.merges[s]
+                        .clone()
+                        .expect("FT rank holds merge factors for its tree steps");
+
+                    // Replay path: recompute our rows from the buddy's
+                    // retained {W, Y1} — the paper's recovery equation.
+                    if self.resume {
+                        if let Some(ret) =
+                            self.fetch_retained(buddy, g.k, Phase::Update, s)
+                        {
+                            let pre = cp.clone();
+                            cp = self.recover_rows(&pre, role, &ret)?;
+                            self.retain_update(g, s, buddy, &ret.w, &y1, &t, &pre, &pre);
+                            if role == Role::Lower {
+                                break;
+                            }
+                            continue;
+                        }
+                    }
+
+                    let peer_c = self
+                        .exchange(buddy, tag, MsgData::Mat(cp.clone()))
+                        ?
+                        .into_mat();
+                    let (c0, c1) =
+                        if role == Role::Upper { (&cp, &peer_c) } else { (&peer_c, &cp) };
+                    let stp = self
+                        .shared
+                        .backend
+                        .tree_update(c0, c1, &y1, &t)
+                        
+                        .map_err(|e| self.backend_err("tree_update", e))?;
+                    // Both members do the full pair computation — the
+                    // paper's traded energy cost (E4).
+                    self.ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
+                    self.shared.trace.emit(
+                        self.ctx.clock,
+                        self.rank(),
+                        g.k,
+                        s,
+                        "update_exchange",
+                        buddy as f64,
+                    );
+                    self.retain_update(g, s, buddy, &stp.w, &y1, &t, c0, c1);
+                    cp = if role == Role::Upper { stp.c0 } else { stp.c1 };
+                    if role == Role::Lower {
+                        break;
+                    }
+                }
+                Algorithm::Plain => match role {
+                    Role::Idle => unreachable!("idle handled above"),
+                    Role::Upper => {
+                        let (y1, t) = f.merges[s]
+                            .clone()
+                            .expect("plain upper holds merge factors");
+                        let peer_c = self.recv_plain(buddy, tag)?.into_mat();
+                        let stp = self
+                            .shared
+                            .backend
+                            .tree_update(&cp, &peer_c, &y1, &t)
+                            
+                            .map_err(|e| self.backend_err("tree_update", e))?;
+                        self.ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
+                        // Return the buddy's updated rows (Ĉ'₁ = C'₁−Y₁W;
+                        // same bytes as the paper's W message).
+                        self.send_plain(
+                            buddy,
+                            Tag::new(TagKind::UpdateW, g.k, s),
+                            MsgData::Mat(stp.c1),
+                        )?;
+                        cp = stp.c0;
+                    }
+                    Role::Lower => {
+                        self.send_plain(buddy, tag, MsgData::Mat(cp.clone()))?;
+                        cp = self
+                            .recv_plain(buddy, Tag::new(TagKind::UpdateW, g.k, s))
+                            ?
+                            .into_mat();
+                        break;
+                    }
+                },
+            }
+        }
+        self.local.set_block(g.start, g.trail_col, &cp);
+        Ok(())
+    }
+
+    pub(crate) fn backend_err(&self, op: &str, e: anyhow::Error) -> Fail {
+        // Backend errors are infrastructure bugs, not simulated failures.
+        panic!("backend {op} failed on rank {}: {e:#}", self.ctx.rank);
+    }
+}
+
+/// Leaf + merge factors for one panel on one rank.
+pub(crate) struct PanelFactorsSet {
+    pub leaf_y: Matrix,
+    pub leaf_t: Matrix,
+    /// (Y1, T) per tree step where this rank is a reduce-tree member.
+    pub merges: Vec<Option<(Matrix, Matrix)>>,
+}
+
+/// Run a full factorization under `cfg`.
+pub fn run_caqr(
+    cfg: RunConfig,
+    backend: Arc<Backend>,
+    fault: Arc<FaultPlan>,
+    trace: Arc<Trace>,
+) -> Result<CaqrOutcome> {
+    cfg.validate()?;
+    let t0 = std::time::Instant::now();
+    let a = Matrix::randn(cfg.rows, cfg.cols, cfg.seed);
+    run_caqr_on(cfg, a, backend, fault, trace, t0)
+}
+
+/// Run on a caller-supplied matrix (tests want specific inputs).
+pub fn run_caqr_matrix(
+    cfg: RunConfig,
+    a: Matrix,
+    backend: Arc<Backend>,
+    fault: Arc<FaultPlan>,
+    trace: Arc<Trace>,
+) -> Result<CaqrOutcome> {
+    cfg.validate()?;
+    let t0 = std::time::Instant::now();
+    run_caqr_on(cfg, a, backend, fault, trace, t0)
+}
+
+fn run_caqr_on(
+    cfg: RunConfig,
+    a: Matrix,
+    backend: Arc<Backend>,
+    fault: Arc<FaultPlan>,
+    trace: Arc<Trace>,
+    t0: std::time::Instant,
+) -> Result<CaqrOutcome> {
+    assert_eq!(a.shape(), (cfg.rows, cfg.cols), "input matrix shape mismatch");
+    let m_local = cfg.local_rows();
+    let initial: Vec<Matrix> = (0..cfg.procs)
+        .map(|r| a.block(r * m_local, 0, m_local, cfg.cols))
+        .collect();
+
+    let world = World::new(cfg.procs, cfg.cost, fault);
+    let flops0 = backend.flops();
+    let shared = Arc::new(Shared {
+        cfg: cfg.clone(),
+        backend,
+        store: RecoveryStore::new(),
+        gate: RevivalGate::new(),
+        trace,
+        world: world.clone(),
+        initial: initial.clone(),
+        results: Mutex::new(HashMap::new()),
+        revived: Mutex::new(Vec::new()),
+    });
+
+    // Spawn the original incarnation of every rank.
+    let handles: Vec<_> = (0..cfg.procs)
+        .map(|r| {
+            let sh = shared.clone();
+            let ctx = world.ctx(r);
+            let local = initial[r].clone();
+            std::thread::Builder::new()
+                .name(format!("rank-{r}"))
+                .spawn(move || Ranker { shared: sh, ctx, resume: false, local }.run())
+                .expect("spawn rank thread")
+        })
+        .collect();
+
+    let mut failures: Vec<Fail> = Vec::new();
+    for h in handles {
+        match h.join().expect("rank task panicked") {
+            Ok(()) => {}
+            Err(Fail::Killed) => {} // replaced via REBUILD (or aborted below)
+            Err(e) => failures.push(e),
+        }
+    }
+    // Drain replacement tasks (they may spawn further replacements).
+    loop {
+        let next = { shared.revived.lock().unwrap().pop() };
+        match next {
+            Some(h) => match h.join().expect("revived task panicked") {
+                Ok(()) | Err(Fail::Killed) => {}
+                Err(e) => failures.push(e),
+            },
+            None => break,
+        }
+    }
+
+    let results = shared.results.lock().unwrap();
+    if results.len() != cfg.procs {
+        let missing: Vec<usize> =
+            (0..cfg.procs).filter(|r| !results.contains_key(r)).collect();
+        anyhow::bail!(
+            "run did not complete: missing ranks {missing:?}, failures: {failures:?}"
+        );
+    }
+
+    // Assemble the reduced matrix [R; 0].
+    let mut reduced = Matrix::zeros(cfg.rows, cfg.cols);
+    for r in 0..cfg.procs {
+        reduced.set_block(r * m_local, 0, &results[&r]);
+    }
+    drop(results);
+
+    let r = reduced.crop_to(cfg.cols, cfg.cols).triu();
+    let lower_defect = {
+        let strict = reduced.sub(&{
+            let mut t = Matrix::zeros(cfg.rows, cfg.cols);
+            t.set_block(0, 0, &r);
+            t
+        });
+        strict.fro_norm()
+    };
+    let residual = cfg.verify.then(|| gram_residual(&a, &r));
+
+    Ok(CaqrOutcome {
+        reduced,
+        r,
+        residual,
+        lower_defect,
+        report: world.metrics.snapshot(),
+        store_peak_bytes: shared.store.peak_bytes(),
+        elapsed: t0.elapsed(),
+        backend_flops: shared.backend.flops() - flops0,
+    })
+}
+
+/// Convenience: run with default trace/no faults on the native backend.
+pub fn run_caqr_simple(cfg: RunConfig) -> Result<CaqrOutcome> {
+    run_caqr(cfg, Backend::native(), FaultPlan::none(), Trace::disabled())
+}
+
+/// Default cost model re-export for binaries.
+pub fn default_cost() -> CostModel {
+    CostModel::default()
+}

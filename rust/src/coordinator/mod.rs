@@ -1,0 +1,23 @@
+//! The paper's coordination layer: FT-TSQR panel factorization, the
+//! fault-tolerant trailing-matrix update tree (Algorithms 1 & 2), the
+//! CAQR panel driver, and the single-buddy recovery protocol.
+//!
+//! Module map (paper section → code):
+//! * §III-A CAQR panel/update organization → [`caqr`], [`panel`]
+//! * §III-B FT-TSQR all-exchange reduction  → [`tsqr`] (standalone) and
+//!   the TSQR phase inside [`caqr`]
+//! * §III-C Algorithms 1 & 2 + recovery     → [`caqr`], [`recovery`],
+//!   [`store`]
+//! * tree shapes shared by all of the above → [`tree`]
+
+pub mod caqr;
+pub mod panel;
+pub mod recovery;
+pub mod store;
+pub mod tree;
+pub mod tsqr;
+
+pub use caqr::{run_caqr, run_caqr_matrix, run_caqr_simple, CaqrOutcome, Shared};
+pub use panel::{geometry, PanelGeom};
+pub use store::{RecoveryStore, Retained, RevivalGate};
+pub use tsqr::{run_tsqr, TsqrMode, TsqrOutcome};

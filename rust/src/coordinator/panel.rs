@@ -1,0 +1,132 @@
+//! Panel geometry for 1-D block-row CAQR.
+//!
+//! The global `rows x cols` matrix is distributed by block rows: rank `r`
+//! owns rows `[r*m_local, (r+1)*m_local)`. Panel `k` covers columns
+//! `[k*b, (k+1)*b)` and *active* rows `[k*b, rows)`; ranks whose rows lie
+//! entirely above the active region have retired from the computation.
+
+use crate::config::RunConfig;
+
+/// Geometry of one panel iteration for one rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PanelGeom {
+    /// Panel index.
+    pub k: usize,
+    /// First participating rank (owns the diagonal block).
+    pub owner: usize,
+    /// Participant count (`procs - owner`).
+    pub q: usize,
+    /// This rank's tree index (`rank - owner`); only valid when
+    /// `participates`.
+    pub idx: usize,
+    /// Whether this rank still holds active rows.
+    pub participates: bool,
+    /// First active row within the local block.
+    pub start: usize,
+    /// Active row count within the local block.
+    pub active_m: usize,
+    /// First trailing column (`(k+1)*b`).
+    pub trail_col: usize,
+    /// Trailing width (`cols - (k+1)*b`).
+    pub n_trail: usize,
+}
+
+/// Compute panel `k`'s geometry for `rank` under `cfg`.
+pub fn geometry(cfg: &RunConfig, rank: usize, k: usize) -> PanelGeom {
+    let b = cfg.block;
+    let m_local = cfg.local_rows();
+    let diag_row = k * b;
+    let owner = diag_row / m_local;
+    let participates = rank >= owner;
+    let start = if rank == owner { diag_row - owner * m_local } else { 0 };
+    let active_m = if participates { m_local - start } else { 0 };
+    PanelGeom {
+        k,
+        owner,
+        q: cfg.procs - owner,
+        idx: rank.saturating_sub(owner),
+        participates,
+        start,
+        active_m,
+        trail_col: (k + 1) * b,
+        n_trail: cfg.cols - (k + 1) * b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RunConfig {
+        RunConfig { rows: 512, cols: 128, block: 32, procs: 4, ..Default::default() }
+        // m_local = 128, panels = 4
+    }
+
+    #[test]
+    fn first_panel_everyone_participates() {
+        let c = cfg();
+        for r in 0..4 {
+            let g = geometry(&c, r, 0);
+            assert!(g.participates);
+            assert_eq!(g.owner, 0);
+            assert_eq!(g.q, 4);
+            assert_eq!(g.idx, r);
+            assert_eq!(g.start, if r == 0 { 0 } else { 0 });
+            assert_eq!(g.active_m, 128);
+            assert_eq!(g.n_trail, 96);
+        }
+    }
+
+    #[test]
+    fn owner_rows_shrink_with_panels() {
+        let c = cfg();
+        // panel 1: diag row 32 still inside rank 0's block.
+        let g = geometry(&c, 0, 1);
+        assert_eq!(g.owner, 0);
+        assert_eq!(g.start, 32);
+        assert_eq!(g.active_m, 96);
+        // panel 3: diag row 96.
+        let g3 = geometry(&c, 0, 3);
+        assert_eq!(g3.start, 96);
+        assert_eq!(g3.active_m, 32);
+        assert_eq!(g3.n_trail, 0);
+    }
+
+    #[test]
+    fn retirement() {
+        // Taller config so ownership moves past rank 0.
+        let c = RunConfig {
+            rows: 256,
+            cols: 128,
+            block: 32,
+            procs: 4,
+            ..Default::default()
+        };
+        // m_local = 64 -> panel 2 diag row = 64 -> owner = rank 1.
+        let g = geometry(&c, 0, 2);
+        assert!(!g.participates);
+        assert_eq!(g.owner, 1);
+        let g1 = geometry(&c, 1, 2);
+        assert!(g1.participates);
+        assert_eq!(g1.idx, 0);
+        assert_eq!(g1.q, 3);
+        assert_eq!(g1.start, 0);
+        let g3 = geometry(&c, 3, 3);
+        assert_eq!(g3.idx, 2);
+        assert_eq!(g3.start, 0);
+    }
+
+    #[test]
+    fn active_m_is_block_multiple_when_config_valid() {
+        let c = cfg();
+        for k in 0..c.panels() {
+            for r in 0..c.procs {
+                let g = geometry(&c, r, k);
+                if g.participates {
+                    assert_eq!(g.active_m % c.block, 0, "k={k} r={r}");
+                    assert!(g.active_m >= c.block);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Buddy-held redundancy state (paper §III-C) and the recovery manager.
+//!
+//! At the end of every FT step, each member of a pair retains
+//! `{W, T, C'_own, C'_peer, Y1}` — the paper's inventory that makes the
+//! buddy's state recomputable from *one* process. [`RecoveryStore`]
+//! models that per-process retained memory: entries are written by their
+//! owning rank as it executes and read (with simulated communication
+//! charged) by a rebuilt rank during replay.
+//!
+//! [`RecoveryManager`] arbitrates REBUILD: the first detector of a dead
+//! rank revives it and spawns the replay task; concurrent detectors just
+//! retry their operation once the revival is visible.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+use crate::fault::Phase;
+use crate::linalg::Matrix;
+
+/// Key: (owning rank, panel, phase, tree step).
+pub type StepKey = (usize, usize, Phase, usize);
+
+/// What a rank retains after an FT exchange step (paper III-C).
+#[derive(Clone, Debug)]
+pub struct Retained {
+    /// The buddy of this step.
+    pub buddy: usize,
+    /// `W = Tᵀ(C₀' + Y₁ᵀC₁')` (update steps; zero-sized for TSQR steps).
+    pub w: Matrix,
+    /// Bottom reflector block of the pair's merge.
+    pub y1: Matrix,
+    /// T factor of the pair's merge.
+    pub t: Matrix,
+    /// Merged R (TSQR steps; the buddy resumes from it directly).
+    pub r_merged: Matrix,
+}
+
+impl Retained {
+    pub fn nbytes(&self) -> usize {
+        self.w.nbytes() + self.y1.nbytes() + self.t.nbytes() + self.r_merged.nbytes()
+    }
+}
+
+/// All ranks' retained redundancy state. In a real deployment each entry
+/// lives in its owner's memory; the shared map here stands in for the
+/// buddy answering a recovery request, and every read is charged as a
+/// simulated message by the caller.
+#[derive(Default)]
+pub struct RecoveryStore {
+    entries: Mutex<HashMap<StepKey, Retained>>,
+    /// Total bytes currently retained (the FT scheme's memory overhead,
+    /// compared against diskless checkpointing in E7).
+    bytes: AtomicU64,
+    /// High-water mark of `bytes`.
+    peak_bytes: AtomicU64,
+    /// Recovery reads served.
+    reads: AtomicU64,
+}
+
+impl RecoveryStore {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Record rank `owner`'s retained state for a step.
+    pub fn insert(&self, owner: usize, panel: usize, phase: Phase, step: usize, r: Retained) {
+        let sz = r.nbytes() as u64;
+        let mut g = self.entries.lock().unwrap();
+        if let Some(old) = g.insert((owner, panel, phase, step), r) {
+            self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+        }
+        let now = self.bytes.fetch_add(sz, Ordering::Relaxed) + sz;
+        self.peak_bytes.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Read rank `owner`'s retained state (a rebuilt rank asking its
+    /// step-buddy for recovery data). Returns a clone; the caller charges
+    /// the simulated transfer.
+    pub fn get(&self, owner: usize, panel: usize, phase: Phase, step: usize) -> Option<Retained> {
+        let out = self.entries.lock().unwrap().get(&(owner, panel, phase, step)).cloned();
+        if out.is_some() {
+            self.reads.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// A process died: its retained memory is lost with it.
+    pub fn drop_owner(&self, owner: usize) {
+        let mut g = self.entries.lock().unwrap();
+        let dead: Vec<StepKey> = g.keys().filter(|k| k.0 == owner).cloned().collect();
+        for k in dead {
+            if let Some(old) = g.remove(&k) {
+                self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drop retained state older than `panel` (panels complete =>
+    /// redundancy for them is no longer needed once a global checkpoint
+    /// of R's rows exists). Keeps memory bounded in long runs.
+    pub fn retire_before(&self, panel: usize) {
+        let mut g = self.entries.lock().unwrap();
+        let dead: Vec<StepKey> = g.keys().filter(|k| k.1 < panel).cloned().collect();
+        for k in dead {
+            if let Some(old) = g.remove(&k) {
+                self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Arbitrates rank revival so exactly one detector performs REBUILD.
+#[derive(Default)]
+pub struct RevivalGate {
+    in_progress: Mutex<HashMap<usize, u32>>,
+}
+
+impl RevivalGate {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Returns true if the caller won the right to revive `rank` for the
+    /// given incarnation (i.e. it must perform the REBUILD).
+    pub fn claim(&self, rank: usize, incarnation: u32) -> bool {
+        let mut g = self.in_progress.lock().unwrap();
+        match g.get(&rank) {
+            Some(&inc) if inc >= incarnation => false,
+            _ => {
+                g.insert(rank, incarnation);
+                true
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn retained(bytes_rows: usize) -> Retained {
+        Retained {
+            buddy: 1,
+            w: Matrix::zeros(bytes_rows, 4),
+            y1: Matrix::zeros(4, 4),
+            t: Matrix::zeros(4, 4),
+            r_merged: Matrix::zeros(4, 4),
+        }
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let s = RecoveryStore::new();
+        s.insert(2, 0, Phase::Update, 1, retained(4));
+        let r = s.get(2, 0, Phase::Update, 1).unwrap();
+        assert_eq!(r.buddy, 1);
+        assert!(s.get(2, 0, Phase::Update, 0).is_none());
+        assert_eq!(s.reads(), 1);
+    }
+
+    #[test]
+    fn byte_accounting_tracks_peak() {
+        let s = RecoveryStore::new();
+        s.insert(0, 0, Phase::Tsqr, 0, retained(4));
+        let b1 = s.current_bytes();
+        assert!(b1 > 0);
+        s.insert(0, 1, Phase::Tsqr, 0, retained(4));
+        let b2 = s.current_bytes();
+        assert_eq!(b2, 2 * b1);
+        s.retire_before(1);
+        assert_eq!(s.current_bytes(), b1);
+        assert_eq!(s.peak_bytes(), b2);
+    }
+
+    #[test]
+    fn reinsert_replaces() {
+        let s = RecoveryStore::new();
+        s.insert(0, 0, Phase::Update, 0, retained(4));
+        s.insert(0, 0, Phase::Update, 0, retained(8));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(0, 0, Phase::Update, 0).unwrap().w.rows(), 8);
+    }
+
+    #[test]
+    fn revival_gate_single_winner() {
+        let g = RevivalGate::new();
+        assert!(g.claim(3, 1));
+        assert!(!g.claim(3, 1));
+        // next incarnation can be claimed again
+        assert!(g.claim(3, 2));
+    }
+}

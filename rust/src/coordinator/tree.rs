@@ -1,0 +1,225 @@
+//! Tree topology for the panel reduction and trailing-update phases.
+//!
+//! Participants of panel `k` are ranks `owner..P`, relabeled to indices
+//! `0..q`. Two pairings are used (paper §III):
+//!
+//! * **Reduce tree** (plain TSQR / both update variants): at step `s`,
+//!   index `i` with `i % 2^(s+1) == 0` is the *upper* member and merges
+//!   with `j = i + 2^s` (skipped when `j >= q` — the odd node is promoted
+//!   unchanged). The upper member continues, the lower leaves.
+//! * **All-exchange (hypercube) pairing** (FT-TSQR, §III-B / Fig 2):
+//!   at step `s` *every* index pairs with `i ^ 2^s` (skipped when the
+//!   buddy is `>= q`), both compute the merge, and the number of holders
+//!   of each intermediate R doubles per step.
+//!
+//! Correctness of the skip rule: an index that is a multiple of `2^s`
+//! always holds the complete merge of its sub-block `[i, i + 2^s) ∩ [0, q)`
+//! after step `s-1`, so the root (index 0) always accumulates every leaf.
+
+/// Role of an index in a pairing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Upper member: holds the top of the stacked pair, continues.
+    Upper,
+    /// Lower member: holds the bottom, leaves the reduce tree after
+    /// this step.
+    Lower,
+    /// Not paired this step (odd node promoted / buddy out of range).
+    Idle,
+}
+
+/// Number of tree steps for `q` participants: `ceil(log2(q))`.
+pub fn steps(q: usize) -> usize {
+    assert!(q >= 1);
+    (usize::BITS - (q - 1).leading_zeros()) as usize
+}
+
+/// Reduce-tree pairing of index `i` at step `s` among `q` participants.
+/// Returns `(role, buddy)`; buddy is meaningful unless `Idle`.
+pub fn reduce_pair(i: usize, s: usize, q: usize) -> (Role, usize) {
+    debug_assert!(i < q);
+    let span = 1usize << s;
+    let block = span << 1;
+    if i % block == 0 {
+        let j = i + span;
+        if j < q {
+            (Role::Upper, j)
+        } else {
+            (Role::Idle, i)
+        }
+    } else if i % block == span {
+        (Role::Lower, i - span)
+    } else {
+        // Left the tree at an earlier step.
+        (Role::Idle, i)
+    }
+}
+
+/// True if index `i` is still an active reduce-tree node entering step
+/// `s` (i.e. it has not been a `Lower` at any earlier step).
+pub fn reduce_active(i: usize, s: usize) -> bool {
+    i % (1usize << s) == 0
+}
+
+/// Hypercube (all-exchange) buddy of `i` at step `s`; `None` when the
+/// buddy index falls outside `[0, q)`.
+pub fn exchange_pair(i: usize, s: usize, q: usize) -> Option<usize> {
+    debug_assert!(i < q);
+    let j = i ^ (1usize << s);
+    (j < q).then_some(j)
+}
+
+/// Stack order for a pair: the smaller index owns the globally-upper
+/// rows, so it is the top (`R0`/`C0`) of the stacked merge.
+pub fn is_top(i: usize, j: usize) -> bool {
+    i < j
+}
+
+/// Redundancy of the intermediate R after step `s` of the FT all-exchange
+/// tree with `q` a power of two: `2^(s+1)` (paper Fig 2).
+pub fn expected_redundancy(s: usize) -> usize {
+    1usize << (s + 1)
+}
+
+/// The set of reduce-tree steps in which index `i` participates (as
+/// Upper or Lower) among `q` participants — the replay schedule a
+/// rebuilt rank walks during recovery.
+pub fn participation(i: usize, q: usize) -> Vec<(usize, Role, usize)> {
+    let mut out = Vec::new();
+    for s in 0..steps(q) {
+        if !reduce_active(i, s) {
+            break;
+        }
+        let (role, buddy) = reduce_pair(i, s, q);
+        match role {
+            Role::Idle => continue,
+            Role::Upper => out.push((s, Role::Upper, buddy)),
+            Role::Lower => {
+                out.push((s, Role::Lower, buddy));
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_counts() {
+        assert_eq!(steps(1), 0);
+        assert_eq!(steps(2), 1);
+        assert_eq!(steps(3), 2);
+        assert_eq!(steps(4), 2);
+        assert_eq!(steps(5), 3);
+        assert_eq!(steps(8), 3);
+    }
+
+    #[test]
+    fn reduce_tree_four() {
+        // step 0: (0,1), (2,3); step 1: (0,2)
+        assert_eq!(reduce_pair(0, 0, 4), (Role::Upper, 1));
+        assert_eq!(reduce_pair(1, 0, 4), (Role::Lower, 0));
+        assert_eq!(reduce_pair(2, 0, 4), (Role::Upper, 3));
+        assert_eq!(reduce_pair(3, 0, 4), (Role::Lower, 2));
+        assert_eq!(reduce_pair(0, 1, 4), (Role::Upper, 2));
+        assert_eq!(reduce_pair(2, 1, 4), (Role::Lower, 0));
+        assert_eq!(reduce_pair(1, 1, 4).0, Role::Idle);
+    }
+
+    #[test]
+    fn reduce_tree_odd_promotes() {
+        // q = 5: step 0: (0,1),(2,3), 4 idle; step 1: (0,2), 4 idle;
+        // step 2: (0,4).
+        assert_eq!(reduce_pair(4, 0, 5).0, Role::Idle);
+        assert_eq!(reduce_pair(4, 1, 5).0, Role::Idle);
+        assert_eq!(reduce_pair(0, 2, 5), (Role::Upper, 4));
+        assert_eq!(reduce_pair(4, 2, 5), (Role::Lower, 0));
+    }
+
+    #[test]
+    fn every_nonroot_leaves_exactly_once() {
+        for q in 1..=33 {
+            for i in 1..q {
+                let lowers: Vec<_> = participation(i, q)
+                    .into_iter()
+                    .filter(|(_, r, _)| *r == Role::Lower)
+                    .collect();
+                assert_eq!(lowers.len(), 1, "i={i} q={q}");
+            }
+            // root never leaves
+            assert!(participation(0, q)
+                .iter()
+                .all(|(_, r, _)| *r == Role::Upper));
+        }
+    }
+
+    #[test]
+    fn reduce_pairs_are_consistent() {
+        // If i sees (Upper, j) then j must see (Lower, i) at the same step.
+        for q in 2..=17 {
+            for s in 0..steps(q) {
+                for i in 0..q {
+                    let (role, j) = reduce_pair(i, s, q);
+                    match role {
+                        Role::Upper => assert_eq!(reduce_pair(j, s, q), (Role::Lower, i)),
+                        Role::Lower => assert_eq!(reduce_pair(j, s, q), (Role::Upper, i)),
+                        Role::Idle => {}
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_pairing_is_involution() {
+        for q in 2..=16 {
+            for s in 0..steps(q) {
+                for i in 0..q {
+                    if let Some(j) = exchange_pair(i, s, q) {
+                        assert_eq!(exchange_pair(j, s, q), Some(i));
+                        assert_ne!(i, j);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_covers_reduce_pairs() {
+        // Every reduce-tree pair is also an exchange pair (the FT tree is
+        // a superset), so FT members always hold the merge factors the
+        // update tree needs.
+        for q in 2..=16 {
+            for s in 0..steps(q) {
+                for i in 0..q {
+                    if let (Role::Upper, j) = reduce_pair(i, s, q) {
+                        assert_eq!(exchange_pair(i, s, q), Some(j), "i={i} s={s} q={q}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn redundancy_doubles() {
+        assert_eq!(expected_redundancy(0), 2);
+        assert_eq!(expected_redundancy(1), 4);
+        assert_eq!(expected_redundancy(2), 8);
+    }
+
+    #[test]
+    fn participation_examples() {
+        // q=8, i=5: step0 Lower with 4.
+        assert_eq!(participation(5, 8), vec![(0, Role::Lower, 4)]);
+        // q=8, i=4: step0 Upper with 5, step1 Lower... 4 % 4 == 0 so
+        // step1: Upper? 4 % 4 == 0 -> upper with 6; step2: 4 % 8 == 4 ->
+        // lower with 0.
+        assert_eq!(
+            participation(4, 8),
+            vec![(0, Role::Upper, 5), (1, Role::Upper, 6), (2, Role::Lower, 0)]
+        );
+    }
+}

@@ -1,0 +1,247 @@
+//! Standalone TSQR driver (paper §III-B, Fig 2): factorize one tall-skinny
+//! panel across P simulated ranks, either with the plain binary-tree
+//! reduction or the fault-tolerant all-exchange tree, and measure the
+//! redundancy of each intermediate R along the way.
+//!
+//! This is experiment E1's engine; the full CAQR driver embeds the same
+//! logic per panel, but the standalone version exposes the per-step
+//! redundancy series that reproduces Fig 2.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+use std::sync::Mutex;
+
+use crate::backend::Backend;
+use crate::fault::FaultPlan;
+use crate::ft::Fail;
+use crate::linalg::Matrix;
+use crate::metrics::Report;
+use crate::sim::{CostModel, MsgData, Tag, TagKind, World};
+
+use super::tree::{self, Role};
+
+/// Which reduction to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TsqrMode {
+    /// Binary-tree reduction: one holder of the final R (the root).
+    Plain,
+    /// All-exchange (hypercube): every rank finishes with the final R;
+    /// redundancy doubles per step (paper Fig 2).
+    FaultTolerant,
+}
+
+/// Result of a standalone TSQR run.
+#[derive(Debug)]
+pub struct TsqrOutcome {
+    /// Final R factor (root's copy).
+    pub r: Matrix,
+    /// `redundancy[s]` = number of ranks holding the root-path merged R
+    /// after step `s`.
+    pub redundancy: Vec<usize>,
+    /// Number of ranks whose final R equals the root's (1 for plain,
+    /// P for FT with P a power of two).
+    pub final_holders: usize,
+    pub report: Report,
+    pub elapsed: std::time::Duration,
+}
+
+/// Run TSQR over `procs` ranks, each holding an `(m_local, b)` block of
+/// the stacked matrix `a` (`rows = procs * m_local`).
+pub fn run_tsqr(
+    a: &Matrix,
+    procs: usize,
+    mode: TsqrMode,
+    backend: Arc<Backend>,
+    cost: CostModel,
+) -> Result<TsqrOutcome> {
+    let (rows, b) = a.shape();
+    anyhow::ensure!(rows % procs == 0, "rows must divide procs");
+    let m_local = rows / procs;
+    anyhow::ensure!(m_local >= b, "blocks must be tall (m_local >= b)");
+
+    let t0 = std::time::Instant::now();
+    let world = World::new(procs, cost, FaultPlan::none());
+    let nsteps = tree::steps(procs);
+    // rs_by_step[s][rank] = rank's intermediate R after step s.
+    let rs_by_step: Arc<Mutex<Vec<HashMap<usize, Matrix>>>> =
+        Arc::new(Mutex::new(vec![HashMap::new(); nsteps + 1]));
+
+    let blocks: Vec<Matrix> =
+        (0..procs).map(|r| a.block(r * m_local, 0, m_local, b)).collect();
+
+    let backend2 = backend.clone();
+    let rs2 = rs_by_step.clone();
+    let results = world
+        .run_all(move |mut ctx| {
+            let backend = backend2.clone();
+            let rs_by_step = rs2.clone();
+            let block = blocks[ctx.rank].clone();
+            {
+                let q = ctx.router().alive_count();
+                let idx = ctx.rank;
+                let f = backend
+                    .panel_qr(&block)
+                    
+                    .map_err(|_| Fail::WorldGone)?;
+                ctx.compute(crate::backend::flops::panel_qr(m_local, b));
+                let mut r = f.r;
+                rs_by_step.lock().unwrap()[0].insert(idx, r.clone());
+
+                for s in 0..tree::steps(q) {
+                    let tag = Tag::new(TagKind::TsqrR, 0, s);
+                    match mode {
+                        TsqrMode::FaultTolerant => {
+                            if let Some(bidx) = tree::exchange_pair(idx, s, q) {
+                                let peer = ctx
+                                    .sendrecv(bidx, tag, MsgData::Mat(r.clone()))
+                                    ?
+                                    .into_mat();
+                                let (rt, rb) = if tree::is_top(idx, bidx) {
+                                    (&r, &peer)
+                                } else {
+                                    (&peer, &r)
+                                };
+                                let mf = backend
+                                    .tsqr_merge(rt, rb)
+                                    
+                                    .map_err(|_| Fail::WorldGone)?;
+                                ctx.compute(crate::backend::flops::tsqr_merge(b));
+                                r = mf.r;
+                            }
+                        }
+                        TsqrMode::Plain => {
+                            if tree::reduce_active(idx, s) {
+                                let (role, bidx) = tree::reduce_pair(idx, s, q);
+                                match role {
+                                    Role::Idle => {}
+                                    Role::Upper => {
+                                        let peer =
+                                            ctx.recv(bidx, tag)?.into_mat();
+                                        let mf = backend
+                                            .tsqr_merge(&r, &peer)
+                                            
+                                            .map_err(|_| Fail::WorldGone)?;
+                                        ctx.compute(crate::backend::flops::tsqr_merge(b));
+                                        r = mf.r;
+                                    }
+                                    Role::Lower => {
+                                        ctx.send(bidx, tag, MsgData::Mat(r.clone()))?;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    rs_by_step.lock().unwrap()[s + 1].insert(idx, r.clone());
+                }
+                Ok(r)
+            }
+        })
+        ;
+
+    let finals: Vec<Matrix> = results
+        .into_iter()
+        .map(|res| res.expect("tsqr rank failed"))
+        .collect();
+    let root_r = finals[0].clone();
+
+    // Redundancy series: after step s, how many ranks hold the value the
+    // ROOT holds at that step (the root-path merge)?
+    let rs = rs_by_step.lock().unwrap();
+    let mut redundancy = Vec::with_capacity(nsteps);
+    for s in 1..=nsteps {
+        let root_val = &rs[s][&0];
+        let holders = rs[s].values().filter(|m| *m == root_val).count();
+        redundancy.push(holders);
+    }
+    let final_holders = finals.iter().filter(|m| **m == root_r).count();
+
+    Ok(TsqrOutcome {
+        r: root_r,
+        redundancy,
+        final_holders,
+        report: world.metrics.snapshot(),
+        elapsed: t0.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gram_residual;
+
+    #[test]
+    fn plain_and_ft_agree_and_are_correct() {
+        let a = Matrix::randn(128, 8, 3);
+        let be = Backend::native();
+        let plain = run_tsqr(&a, 4, TsqrMode::Plain, be.clone(), CostModel::default())
+            
+            .unwrap();
+        let ft = run_tsqr(&a, 4, TsqrMode::FaultTolerant, be, CostModel::default())
+            
+            .unwrap();
+        assert!(gram_residual(&a, &plain.r) < 1e-4);
+        assert!(gram_residual(&a, &ft.r) < 1e-4);
+        // Same tree, same merges: identical R.
+        assert_eq!(plain.r, ft.r);
+    }
+
+    #[test]
+    fn ft_redundancy_doubles_fig2() {
+        let a = Matrix::randn(256, 8, 5);
+        let be = Backend::native();
+        let ft = run_tsqr(&a, 8, TsqrMode::FaultTolerant, be, CostModel::default())
+            
+            .unwrap();
+        // Paper Fig 2: redundancy 2, 4, 8 after steps 0, 1, 2.
+        assert_eq!(ft.redundancy, vec![2, 4, 8]);
+        assert_eq!(ft.final_holders, 8);
+    }
+
+    #[test]
+    fn plain_redundancy_stays_one() {
+        let a = Matrix::randn(256, 8, 5);
+        let be = Backend::native();
+        let p = run_tsqr(&a, 8, TsqrMode::Plain, be, CostModel::default())
+            
+            .unwrap();
+        // Only the root-path holder has the merged value at each step.
+        assert!(p.redundancy.iter().all(|&h| h == 1), "{:?}", p.redundancy);
+        assert_eq!(p.final_holders, 1);
+    }
+
+    #[test]
+    fn non_power_of_two_root_correct() {
+        let a = Matrix::randn(96, 4, 7);
+        let be = Backend::native();
+        for mode in [TsqrMode::Plain, TsqrMode::FaultTolerant] {
+            let out = run_tsqr(&a, 6, mode, be.clone(), CostModel::default())
+                
+                .unwrap();
+            assert!(gram_residual(&a, &out.r) < 1e-4, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn ft_critical_path_close_to_plain() {
+        // Paper §III-B: the exchange-based tree adds no significant
+        // critical-path cost on dual-channel links.
+        let a = Matrix::randn(512, 16, 9);
+        let be = Backend::native();
+        let plain = run_tsqr(&a, 8, TsqrMode::Plain, be.clone(), CostModel::default())
+            
+            .unwrap();
+        let ft = run_tsqr(&a, 8, TsqrMode::FaultTolerant, be, CostModel::default())
+            
+            .unwrap();
+        let cp_plain = plain.report.critical_path;
+        let cp_ft = ft.report.critical_path;
+        // FT pays extra *compute* on non-root paths but the exchanges
+        // overlap; allow a modest bound.
+        assert!(
+            cp_ft <= cp_plain * 1.5 + 1e-6,
+            "cp_ft={cp_ft} cp_plain={cp_plain}"
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! Failure injection: *when* and *who* dies.
+//!
+//! A [`FaultPlan`] is consulted by each rank at well-defined sites
+//! ([`FailSite`]: before a TSQR/update tree step of a given panel). This
+//! mirrors how failures manifest in the paper's MPI setting: a process
+//! disappears, and its buddies discover it at the next communication
+//! involving it.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::linalg::Rng64;
+
+/// Where in the algorithm a rank currently is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FailSite {
+    /// Panel index of the CAQR outer loop.
+    pub panel: usize,
+    /// Step inside the TSQR / update tree.
+    pub step: usize,
+    /// Phase of the panel iteration.
+    pub phase: Phase,
+}
+
+/// Algorithm phase (used to aim failures precisely in experiments).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Tsqr,
+    Update,
+}
+
+/// One scheduled kill: rank `rank` dies at `site` (once).
+#[derive(Clone, Debug)]
+pub struct ScheduledKill {
+    pub rank: usize,
+    pub site: FailSite,
+}
+
+/// The failure model for a run.
+#[derive(Clone, Debug, Default)]
+pub enum FaultSpec {
+    /// No injected failures (baseline runs).
+    #[default]
+    None,
+    /// Deterministic schedule (reproducible experiments E3/E6).
+    Schedule { kills: Vec<ScheduledKill> },
+    /// Independent per-site failure probability (stress testing).
+    Random { prob: f64, seed: u64, max_failures: usize },
+}
+
+/// Runtime fault injector shared by all ranks. Each scheduled kill fires
+/// at most once (the `used` flags), so a REBUILT rank replaying the same
+/// site does not die again.
+pub struct FaultPlan {
+    spec: FaultSpec,
+    used: Vec<AtomicBool>,
+    budget: std::sync::atomic::AtomicUsize,
+    seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> Arc<Self> {
+        let (used_len, budget, seed) = match &spec {
+            FaultSpec::None => (0, 0, 0),
+            FaultSpec::Schedule { kills } => (kills.len(), kills.len(), 0),
+            FaultSpec::Random { max_failures, seed, .. } => (0, *max_failures, *seed),
+        };
+        Arc::new(Self {
+            spec,
+            used: (0..used_len).map(|_| AtomicBool::new(false)).collect(),
+            budget: std::sync::atomic::AtomicUsize::new(budget),
+            seed,
+        })
+    }
+
+    /// Convenience: kill `rank` at (panel, step) of `phase`.
+    pub fn kill_at(rank: usize, panel: usize, step: usize, phase: Phase) -> Arc<Self> {
+        Self::new(FaultSpec::Schedule {
+            kills: vec![ScheduledKill { rank, site: FailSite { panel, step, phase } }],
+        })
+    }
+
+    pub fn none() -> Arc<Self> {
+        Self::new(FaultSpec::None)
+    }
+
+    /// Should `rank` die at `site`? Consumes the kill when it fires.
+    /// (Incarnation 0 — see [`Self::should_fail_inc`].)
+    pub fn should_fail(&self, rank: usize, site: FailSite) -> bool {
+        self.should_fail_inc(rank, 0, site)
+    }
+
+    /// Incarnation-aware variant: random coins mix in the incarnation so
+    /// a REBUILT rank re-visiting the same site draws an independent
+    /// coin (failures are i.i.d., not site-cursed).
+    pub fn should_fail_inc(&self, rank: usize, incarnation: u32, site: FailSite) -> bool {
+        match &self.spec {
+            FaultSpec::None => false,
+            FaultSpec::Schedule { kills } => {
+                for (i, k) in kills.iter().enumerate() {
+                    if k.rank == rank && k.site == site {
+                        // fire once
+                        return !self.used[i].swap(true, Ordering::SeqCst);
+                    }
+                }
+                false
+            }
+            FaultSpec::Random { prob, .. } => {
+                if self.budget.load(Ordering::SeqCst) == 0 {
+                    return false;
+                }
+                // Deterministic per (rank, site) coin so replays agree.
+                let mut h = std::collections::hash_map::DefaultHasher::new();
+                use std::hash::{Hash, Hasher};
+                (rank, incarnation, site, self.seed).hash(&mut h);
+                let mut rng = Rng64::new(h.finish());
+                if rng.chance(*prob) {
+                    // burn budget; if we lost the race, don't fail.
+                    let prev = self.budget.fetch_update(
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                        |b| b.checked_sub(1),
+                    );
+                    return prev.is_ok();
+                }
+                false
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site(panel: usize, step: usize) -> FailSite {
+        FailSite { panel, step, phase: Phase::Update }
+    }
+
+    #[test]
+    fn none_never_fails() {
+        let p = FaultPlan::none();
+        assert!(!p.should_fail(0, site(0, 0)));
+    }
+
+    #[test]
+    fn scheduled_kill_fires_once() {
+        let p = FaultPlan::kill_at(2, 1, 0, Phase::Update);
+        assert!(!p.should_fail(2, site(0, 0)));
+        assert!(!p.should_fail(1, site(1, 0)));
+        assert!(p.should_fail(2, site(1, 0)));
+        // replay after rebuild: must NOT fire again
+        assert!(!p.should_fail(2, site(1, 0)));
+    }
+
+    #[test]
+    fn random_respects_budget() {
+        let p = FaultPlan::new(FaultSpec::Random { prob: 1.0, seed: 1, max_failures: 2 });
+        let mut fails = 0;
+        for s in 0..10 {
+            if p.should_fail(0, site(0, s)) {
+                fails += 1;
+            }
+        }
+        assert_eq!(fails, 2);
+    }
+
+    #[test]
+    fn random_deterministic_per_site() {
+        let mk = || FaultPlan::new(FaultSpec::Random { prob: 0.5, seed: 42, max_failures: 100 });
+        let a: Vec<bool> = {
+            let p = mk();
+            (0..50).map(|s| p.should_fail(3, site(0, s))).collect()
+        };
+        let b: Vec<bool> = {
+            let p = mk();
+            (0..50).map(|s| p.should_fail(3, site(0, s))).collect()
+        };
+        assert_eq!(a, b);
+        assert!(a.iter().any(|x| *x));
+        assert!(a.iter().any(|x| !*x));
+    }
+}

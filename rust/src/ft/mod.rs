@@ -1,0 +1,100 @@
+//! ULFM / FT-MPI error-handling semantics (paper §II).
+//!
+//! The paper frames recovery in terms of the four FT-MPI communicator
+//! semantics; [`Semantics`] selects which one the coordinator applies when
+//! a failure is detected:
+//!
+//! * `Shrink`  — survivors renumber into a smaller communicator; the dead
+//!   rank's *data* must still be reconstructed somewhere, so its block is
+//!   adopted by a survivor.
+//! * `Blank`   — the hole stays; operations addressed to the dead rank
+//!   return [`Fail::RankFailed`] and the algorithm routes around it.
+//! * `Rebuild` — a replacement process is spawned with the dead process's
+//!   rank and recovered state (the mode the paper's protocol targets).
+//! * `Abort`   — conventional non-FT behaviour: the whole run fails.
+
+/// Communicator-level failure-handling policy (FT-MPI / ULFM, paper §II).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Semantics {
+    Shrink,
+    Blank,
+    #[default]
+    Rebuild,
+    Abort,
+}
+
+impl std::str::FromStr for Semantics {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "shrink" => Ok(Self::Shrink),
+            "blank" => Ok(Self::Blank),
+            "rebuild" => Ok(Self::Rebuild),
+            "abort" => Ok(Self::Abort),
+            other => Err(format!("unknown semantics '{other}'")),
+        }
+    }
+}
+
+impl std::fmt::Display for Semantics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Semantics::Shrink => "shrink",
+            Semantics::Blank => "blank",
+            Semantics::Rebuild => "rebuild",
+            Semantics::Abort => "abort",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Failure conditions surfaced to the algorithms.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fail {
+    /// A communication involved rank `rank`, which is dead (ULFM-style
+    /// detection: errors surface only at operations that touch the dead
+    /// process, paper §II).
+    RankFailed { rank: usize },
+    /// This rank was itself killed by the fault injector.
+    Killed,
+    /// The run was aborted (Semantics::Abort after a failure).
+    Aborted,
+    /// The simulated world shut down underneath us.
+    WorldGone,
+}
+
+impl std::fmt::Display for Fail {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fail::RankFailed { rank } => write!(f, "rank {rank} failed"),
+            Fail::Killed => write!(f, "killed by fault injector"),
+            Fail::Aborted => write!(f, "run aborted"),
+            Fail::WorldGone => write!(f, "world shut down"),
+        }
+    }
+}
+
+impl std::error::Error for Fail {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn semantics_parse_roundtrip() {
+        for s in [Semantics::Shrink, Semantics::Blank, Semantics::Rebuild, Semantics::Abort] {
+            assert_eq!(s.to_string().parse::<Semantics>().unwrap(), s);
+        }
+        assert!("bogus".parse::<Semantics>().is_err());
+    }
+
+    #[test]
+    fn default_is_rebuild() {
+        assert_eq!(Semantics::default(), Semantics::Rebuild);
+    }
+
+    #[test]
+    fn fail_display() {
+        assert_eq!(Fail::RankFailed { rank: 3 }.to_string(), "rank 3 failed");
+    }
+}

@@ -1,0 +1,48 @@
+//! # ftcaqr — Fault-Tolerant Communication-Avoiding QR
+//!
+//! A reproduction of *"Fault Tolerant QR Factorization for General
+//! Matrices"* (Camille Coti, 2016) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   FT-TSQR all-reduce panel factorization ([`coordinator::tsqr`]), the
+//!   fault-tolerant pairwise trailing-matrix update tree
+//!   ([`coordinator::update`], the paper's Algorithms 1 & 2), the CAQR
+//!   panel driver ([`coordinator::caqr`]) and the single-buddy recovery
+//!   protocol ([`coordinator::recovery`]) — all running on a simulated
+//!   message-passing world ([`sim`]) with ULFM-style failure semantics.
+//! * **L2/L1 (build time)** — the numeric ops (panel QR, TSQR merge,
+//!   trailing updates, recovery recompute) are authored in JAX + Pallas,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`, and executed from
+//!   Rust through the PJRT CPU client ([`runtime`]). Python is never on
+//!   the request path.
+//!
+//! A pure-Rust oracle of every op lives in [`linalg`] and doubles as the
+//! fast [`backend::NativeBackend`] used by the large simulation sweeps.
+
+pub mod backend;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod fault;
+pub mod ft;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+
+/// Debug tracing for the simulated protocol, enabled by setting
+/// `FTCAQR_DEBUG=1` (used to diagnose distributed-protocol hangs).
+#[macro_export]
+macro_rules! simlog {
+    ($($arg:tt)*) => {
+        if std::env::var_os("FTCAQR_DEBUG").is_some() {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+pub use backend::{Backend, ComputeBackend, NativeBackend};
+pub use config::RunConfig;
+pub use linalg::Matrix;

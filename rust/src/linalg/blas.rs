@@ -1,0 +1,178 @@
+//! Minimal BLAS-3 kernels over [`Matrix`]: `C = alpha * op(A) op(B) (+ C)`.
+//!
+//! These back the [`crate::backend::NativeBackend`] hot path, so the inner
+//! loops are written cache-friendly (ikj order over row-major data, with a
+//! transposed copy when `op(A) = Aᵀ` so the innermost loop always streams
+//! contiguous rows).
+
+use super::Matrix;
+
+/// Transpose flag for [`gemm`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+/// `alpha * op(A) @ op(B)` into a fresh matrix.
+pub fn gemm(ta: Trans, tb: Trans, alpha: f32, a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, _k) = op_shape(ta, a);
+    let (_, n) = op_shape(tb, b);
+    let mut c = Matrix::zeros(m, n);
+    gemm_into(ta, tb, alpha, a, b, 0.0, &mut c);
+    c
+}
+
+fn op_shape(t: Trans, m: &Matrix) -> (usize, usize) {
+    match t {
+        Trans::No => m.shape(),
+        Trans::Yes => (m.cols(), m.rows()),
+    }
+}
+
+/// `C = alpha * op(A) @ op(B) + beta * C` (the workhorse).
+pub fn gemm_into(
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f32,
+    c: &mut Matrix,
+) {
+    let (m, ka) = op_shape(ta, a);
+    let (kb, n) = op_shape(tb, b);
+    assert_eq!(ka, kb, "gemm inner-dim mismatch: {ka} vs {kb}");
+    assert_eq!(c.shape(), (m, n), "gemm output shape mismatch");
+    let k = ka;
+
+    // Materialize transposed operands once so the inner loop is always a
+    // contiguous row-stream (ikj order). For the small b x b factors this
+    // copy is negligible; for big C it never happens (C is never
+    // transposed by our callers).
+    let at;
+    let a_eff: &Matrix = match ta {
+        Trans::No => a,
+        Trans::Yes => {
+            at = a.transpose();
+            &at
+        }
+    };
+    let bt;
+    let b_eff: &Matrix = match tb {
+        Trans::No => b,
+        Trans::Yes => {
+            bt = b.transpose();
+            &bt
+        }
+    };
+
+    if beta == 0.0 {
+        c.data_mut().fill(0.0);
+    } else if beta != 1.0 {
+        for x in c.data_mut() {
+            *x *= beta;
+        }
+    }
+
+    let ad = a_eff.data();
+    let bd = b_eff.data();
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for (p, &aip) in arow.iter().enumerate() {
+            let f = alpha * aip;
+            if f == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            for (cij, &bpj) in crow.iter_mut().zip(brow) {
+                *cij += f * bpj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a[(i, p)] * b[(p, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn close(a: &Matrix, b: &Matrix) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive() {
+        let a = Matrix::randn(7, 5, 1);
+        let b = Matrix::randn(5, 9, 2);
+        close(&gemm(Trans::No, Trans::No, 1.0, &a, &b), &naive(&a, &b));
+    }
+
+    #[test]
+    fn gemm_tn_matches_naive() {
+        let a = Matrix::randn(5, 7, 3);
+        let b = Matrix::randn(5, 9, 4);
+        close(
+            &gemm(Trans::Yes, Trans::No, 1.0, &a, &b),
+            &naive(&a.transpose(), &b),
+        );
+    }
+
+    #[test]
+    fn gemm_nt_matches_naive() {
+        let a = Matrix::randn(4, 6, 5);
+        let b = Matrix::randn(8, 6, 6);
+        close(
+            &gemm(Trans::No, Trans::Yes, 1.0, &a, &b),
+            &naive(&a, &b.transpose()),
+        );
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let a = Matrix::randn(3, 3, 7);
+        let b = Matrix::randn(3, 3, 8);
+        let mut c = Matrix::eye(3);
+        gemm_into(Trans::No, Trans::No, 2.0, &a, &b, 3.0, &mut c);
+        let mut want = naive(&a, &b);
+        for x in want.data_mut() {
+            *x *= 2.0;
+        }
+        let want = want.add(&{
+            let mut e = Matrix::eye(3);
+            for x in e.data_mut() {
+                *x *= 3.0;
+            }
+            e
+        });
+        close(&c, &want);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner-dim mismatch")]
+    fn gemm_dim_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        gemm(Trans::No, Trans::No, 1.0, &a, &b);
+    }
+}

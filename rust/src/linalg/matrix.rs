@@ -1,0 +1,351 @@
+//! Row-major dense `f32` matrix with the block/pad/crop operations the
+//! distributed coordinator needs. Row-major matches XLA's default layout,
+//! so [`crate::runtime`] converts to/from `xla::Literal` without copies of
+//! the element order.
+
+/// Deterministic xorshift64* PRNG (offline build: no `rand` crate).
+#[derive(Clone, Debug)]
+pub struct Rng64 {
+    state: u64,
+}
+
+impl Rng64 {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 the seed so small seeds diverge immediately.
+        let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        Self { state: (z ^ (z >> 31)) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in (0, 1] (safe for ln()).
+    pub fn uniform_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform_open();
+        let u2 = self.uniform();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+}
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows <= 8 && self.cols <= 8 {
+            for i in 0..self.rows {
+                write!(f, "\n  ")?;
+                for j in 0..self.cols {
+                    write!(f, "{:9.4} ", self[(i, j)])?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Deterministic standard-normal matrix (xorshift64*, Box–Muller).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng64::new(seed);
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Self { rows, cols, data }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_rows length mismatch");
+        Self { rows, cols, data: data.to_vec() }
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec length mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Approximate payload size in bytes (used by the sim cost model).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Copy of the sub-block `[r0, r0+h) x [c0, c0+w)`.
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        let mut out = Matrix::zeros(h, w);
+        for i in 0..h {
+            let src = (r0 + i) * self.cols + c0;
+            let dst = i * w;
+            out.data[dst..dst + w].copy_from_slice(&self.data[src..src + w]);
+        }
+        out
+    }
+
+    /// Write `src` into the sub-block starting at `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Matrix) {
+        assert!(
+            r0 + src.rows <= self.rows && c0 + src.cols <= self.cols,
+            "set_block out of range"
+        );
+        for i in 0..src.rows {
+            let dst = (r0 + i) * self.cols + c0;
+            let s = i * src.cols;
+            self.data[dst..dst + src.cols]
+                .copy_from_slice(&src.data[s..s + src.cols]);
+        }
+    }
+
+    /// Zero-pad to `(rows, cols)` (both >= current). Exact for QR/update
+    /// artifacts — see DESIGN.md "Shape strategy".
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "pad_to shrinks");
+        if (rows, cols) == self.shape() {
+            return self.clone();
+        }
+        let mut out = Matrix::zeros(rows, cols);
+        out.set_block(0, 0, self);
+        out
+    }
+
+    /// Crop to the leading `(rows, cols)` block.
+    pub fn crop_to(&self, rows: usize, cols: usize) -> Matrix {
+        self.block(0, 0, rows, cols)
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Vertical concatenation `[self; other]`.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "vstack col mismatch");
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        (self.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()).sqrt() as f32
+    }
+
+    /// Max |a_ij|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Upper-triangular copy (rows below the main diagonal zeroed).
+    pub fn triu(&self) -> Matrix {
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for j in 0..self.cols.min(i) {
+                out[(i, j)] = 0.0;
+            }
+        }
+        out
+    }
+
+    /// True when every element below the main diagonal is ~0.
+    pub fn is_upper_triangular(&self, tol: f32) -> bool {
+        for i in 0..self.rows {
+            for j in 0..self.cols.min(i) {
+                if self[(i, j)].abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Elementwise `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape(), "sub shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Elementwise `self + other`.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape(), "add shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_shapes() {
+        assert_eq!(Matrix::zeros(3, 5).shape(), (3, 5));
+        let e = Matrix::eye(4);
+        assert_eq!(e[(2, 2)], 1.0);
+        assert_eq!(e[(2, 3)], 0.0);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        assert_eq!(Matrix::randn(6, 6, 42), Matrix::randn(6, 6, 42));
+        assert_ne!(Matrix::randn(6, 6, 42), Matrix::randn(6, 6, 43));
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let a = Matrix::randn(8, 8, 1);
+        let b = a.block(2, 3, 4, 5);
+        assert_eq!(b.shape(), (4, 5));
+        assert_eq!(b[(0, 0)], a[(2, 3)]);
+        let mut c = Matrix::zeros(8, 8);
+        c.set_block(2, 3, &b);
+        assert_eq!(c[(5, 7)], a[(5, 7)]);
+        assert_eq!(c[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn pad_crop_roundtrip() {
+        let a = Matrix::randn(5, 3, 2);
+        let p = a.pad_to(8, 4);
+        assert_eq!(p.shape(), (8, 4));
+        assert_eq!(p[(7, 3)], 0.0);
+        assert_eq!(p.crop_to(5, 3), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::randn(4, 7, 3);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn vstack_shapes() {
+        let a = Matrix::randn(3, 4, 1);
+        let b = Matrix::randn(2, 4, 2);
+        let v = a.vstack(&b);
+        assert_eq!(v.shape(), (5, 4));
+        assert_eq!(v[(4, 3)], b[(1, 3)]);
+    }
+
+    #[test]
+    fn triu_works() {
+        let a = Matrix::randn(4, 4, 9).triu();
+        assert!(a.is_upper_triangular(0.0));
+    }
+
+    #[test]
+    fn add_sub_inverse() {
+        let a = Matrix::randn(3, 3, 5);
+        let b = Matrix::randn(3, 3, 6);
+        let c = a.add(&b).sub(&b);
+        for (x, y) in c.data().iter().zip(a.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Pure-Rust dense linear-algebra substrate.
+//!
+//! This module is the trusted oracle for every numeric operation the
+//! distributed algorithm performs, and the implementation behind
+//! [`crate::backend::NativeBackend`]. It deliberately mirrors the
+//! conventions of the JAX reference (`python/compile/kernels/ref.py`):
+//! row-major storage, LAPACK compact-WY reflectors (`Q = I - Y T Yᵀ`,
+//! unit-lower `Y`, upper-triangular `T`), and no sign normalization of
+//! `R` (tests compare `RᵀR`).
+
+mod blas;
+mod matrix;
+mod qr;
+
+pub use blas::{gemm, gemm_into, Trans};
+pub use matrix::{Matrix, Rng64};
+pub use qr::{
+    dense_qr_r, householder_qr, leaf_apply, recover_block, tree_update,
+    tsqr_merge, PanelFactors, TreeStep,
+};
+
+/// Relative Frobenius distance `‖a − b‖_F / max(‖b‖_F, 1)`.
+pub fn rel_err(a: &Matrix, b: &Matrix) -> f32 {
+    assert_eq!(a.shape(), b.shape(), "rel_err shape mismatch");
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (x, y) in a.data().iter().zip(b.data()) {
+        num += ((x - y) as f64).powi(2);
+        den += (*y as f64).powi(2);
+    }
+    (num.sqrt() / den.sqrt().max(1.0)) as f32
+}
+
+/// Gram-matrix residual `‖AᵀA − RᵀR‖_F / ‖AᵀA‖_F` — the sign-free check
+/// that `R` is a valid QR triangle of `A`.
+pub fn gram_residual(a: &Matrix, r: &Matrix) -> f32 {
+    let ata = gemm(Trans::Yes, Trans::No, 1.0, a, a);
+    let rtr = gemm(Trans::Yes, Trans::No, 1.0, r, r);
+    rel_err(&rtr, &ata)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let a = Matrix::randn(8, 4, 1);
+        assert_eq!(rel_err(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn gram_residual_small_for_true_qr() {
+        let a = Matrix::randn(32, 8, 2);
+        let r = dense_qr_r(&a);
+        assert!(gram_residual(&a, &r) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn rel_err_panics_on_shape_mismatch() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(3, 2);
+        rel_err(&a, &b);
+    }
+}

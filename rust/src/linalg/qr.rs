@@ -1,0 +1,308 @@
+//! Householder QR and the five distributed ops, mirroring the JAX
+//! reference (`python/compile/kernels/ref.py`) bit-for-bit in convention:
+//! unit-lower `Y`, upper `T` with `Q = I − Y T Yᵀ`, unnormalized-sign `R`.
+
+use super::blas::{gemm, gemm_into, Trans};
+use super::Matrix;
+
+/// Result of a panel factorization: `Q = I − Y T Yᵀ`, `A = Q [R; 0]`.
+#[derive(Clone, Debug)]
+pub struct PanelFactors {
+    /// Unit-lower-trapezoidal Householder vectors, `(m, b)`.
+    pub y: Matrix,
+    /// Upper-triangular block reflector factor, `(b, b)`.
+    pub t: Matrix,
+    /// Upper-triangular factor, `(b, b)`.
+    pub r: Matrix,
+}
+
+/// Result of one pairwise trailing-update tree step (paper Alg 1/2).
+#[derive(Clone, Debug)]
+pub struct TreeStep {
+    /// `W = Tᵀ(C₀ + Y₁ᵀC₁)` — the redundancy payload kept for recovery.
+    pub w: Matrix,
+    /// Updated top rows `Ĉ₀ = C₀ − W`.
+    pub c0: Matrix,
+    /// Updated bottom rows `Ĉ₁ = C₁ − Y₁W`.
+    pub c1: Matrix,
+}
+
+/// Householder QR of an `(m, b)` panel (`m >= b`).
+///
+/// Zero-row padding is exact: padded rows produce zero rows of `y` and do
+/// not perturb `t`/`r` (relied on by the shape-ladder artifact strategy).
+pub fn householder_qr(a: &Matrix) -> PanelFactors {
+    let (m, b) = a.shape();
+    assert!(m >= b, "householder_qr needs m >= b, got {m} x {b}");
+    let mut work = a.clone();
+    let mut y = Matrix::zeros(m, b);
+    let mut taus = vec![0.0f32; b];
+
+    for j in 0..b {
+        // Householder vector for column j, rows j..m.
+        let mut normx = 0f64;
+        for i in j..m {
+            normx += (work[(i, j)] as f64).powi(2);
+        }
+        let normx = normx.sqrt() as f32;
+        let x0 = work[(j, j)];
+        let sign = if x0 >= 0.0 { 1.0 } else { -1.0 };
+        let beta = -sign * normx;
+        let v0 = x0 - beta;
+
+        // v (unnormalized) = x - beta e_j ; tau_un = 2 / vᵀv.
+        let mut vtv = (v0 as f64).powi(2);
+        for i in j + 1..m {
+            vtv += (work[(i, j)] as f64).powi(2);
+        }
+        if vtv == 0.0 || v0 == 0.0 {
+            // Column already reduced (or zero): H = I.
+            taus[j] = 0.0;
+            // ref.py leaves y[:, j] all-zero in this case.
+            continue;
+        }
+        let tau = (2.0 * (v0 as f64).powi(2) / vtv) as f32;
+        taus[j] = tau;
+
+        // y[:, j] = v / v0, with y[j, j] = 1.
+        y[(j, j)] = 1.0;
+        for i in j + 1..m {
+            y[(i, j)] = work[(i, j)] / v0;
+        }
+
+        // Apply H = I - tau v vᵀ to the trailing columns j..b of work.
+        // w_row[c] = vᵀ work[:, c]
+        for c in j..b {
+            let mut dot = work[(j, c)]; // v[j] == 1
+            for i in j + 1..m {
+                dot += y[(i, j)] * work[(i, c)];
+            }
+            let f = tau * dot;
+            work[(j, c)] -= f;
+            for i in j + 1..m {
+                let yij = y[(i, j)];
+                work[(i, c)] -= f * yij;
+            }
+        }
+        // Enforce the exact beta on the diagonal (numerically identical,
+        // avoids drift in the strictly-lower part we zero below).
+        work[(j, j)] = beta;
+    }
+
+    let r = work.block(0, 0, b, b).triu();
+
+    // T accumulation: T[j,j] = tau_j; T[:j, j] = -tau_j T[:j,:j] (Yᵀy_j)[:j]
+    let mut t = Matrix::zeros(b, b);
+    for j in 0..b {
+        t[(j, j)] = taus[j];
+        if j == 0 || taus[j] == 0.0 {
+            continue;
+        }
+        // z = Y[:, :j]ᵀ y[:, j]  (length j)
+        let mut z = vec![0.0f32; j];
+        for (p, zp) in z.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for i in 0..y.rows() {
+                s += y[(i, p)] * y[(i, j)];
+            }
+            *zp = s;
+        }
+        // col = -tau_j * T[:j, :j] @ z
+        for i in 0..j {
+            let mut s = 0.0;
+            for (p, zp) in z.iter().enumerate() {
+                s += t[(i, p)] * zp;
+            }
+            t[(i, j)] = -taus[j] * s;
+        }
+    }
+
+    PanelFactors { y, t, r }
+}
+
+/// `R` factor of a full dense QR (oracle for tests / residual checks).
+pub fn dense_qr_r(a: &Matrix) -> Matrix {
+    let (m, n) = a.shape();
+    assert!(m >= n);
+    householder_qr(a).r.crop_to(n, n)
+}
+
+/// TSQR merge step: QR of the stacked pair `[r0; r1]`.
+///
+/// Returns `(y0, y1, t, r)`; for exactly-triangular inputs `y0 == I`
+/// structurally (the paper's `[I; Y1]` reflector).
+pub fn tsqr_merge(r0: &Matrix, r1: &Matrix) -> (Matrix, Matrix, Matrix, Matrix) {
+    let b = r0.rows();
+    assert_eq!(r0.shape(), (b, b));
+    assert_eq!(r1.shape(), (b, b));
+    let stacked = r0.vstack(r1);
+    let f = householder_qr(&stacked);
+    let y0 = f.y.block(0, 0, b, b);
+    let y1 = f.y.block(b, 0, b, b);
+    (y0, y1, f.t, f.r)
+}
+
+/// Apply the local `Qᵀ` to a trailing block: `Ĉ = C − Y (Tᵀ (Yᵀ C))`.
+pub fn leaf_apply(y: &Matrix, t: &Matrix, c: &Matrix) -> Matrix {
+    let p = gemm(Trans::Yes, Trans::No, 1.0, y, c); // (b, n)
+    let w = gemm(Trans::Yes, Trans::No, 1.0, t, &p); // (b, n)
+    let mut out = c.clone();
+    gemm_into(Trans::No, Trans::No, -1.0, y, &w, 1.0, &mut out);
+    out
+}
+
+/// One pairwise trailing-update tree step (paper Algorithms 1 & 2 core):
+/// `W = Tᵀ(C₀ + Y₁ᵀC₁)`, `Ĉ₀ = C₀ − W`, `Ĉ₁ = C₁ − Y₁W`.
+pub fn tree_update(c0: &Matrix, c1: &Matrix, y1: &Matrix, t: &Matrix) -> TreeStep {
+    let mut s = c0.clone();
+    gemm_into(Trans::Yes, Trans::No, 1.0, y1, c1, 1.0, &mut s);
+    let w = gemm(Trans::Yes, Trans::No, 1.0, t, &s);
+    let c0h = c0.sub(&w);
+    let mut c1h = c1.clone();
+    gemm_into(Trans::No, Trans::No, -1.0, y1, &w, 1.0, &mut c1h);
+    TreeStep { w, c0: c0h, c1: c1h }
+}
+
+/// Single-buddy recovery recompute (paper III-C): `Ĉ = C − Y W`.
+/// For the 'even' (top) member of a pair, pass `Y = I`.
+pub fn recover_block(c: &Matrix, y: &Matrix, w: &Matrix) -> Matrix {
+    let mut out = c.clone();
+    gemm_into(Trans::No, Trans::No, -1.0, y, w, 1.0, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gram_residual, rel_err};
+
+    fn q_from(y: &Matrix, t: &Matrix) -> Matrix {
+        // Q = I - Y T Yᵀ
+        let yt = gemm(Trans::No, Trans::No, 1.0, y, t);
+        let mut q = Matrix::eye(y.rows());
+        gemm_into(Trans::No, Trans::Yes, -1.0, &yt, y, 1.0, &mut q);
+        q
+    }
+
+    #[test]
+    fn qr_reconstructs_a() {
+        let a = Matrix::randn(24, 8, 1);
+        let f = householder_qr(&a);
+        let q = q_from(&f.y, &f.t);
+        let mut rfull = Matrix::zeros(24, 8);
+        rfull.set_block(0, 0, &f.r);
+        let qr = gemm(Trans::No, Trans::No, 1.0, &q, &rfull);
+        assert!(rel_err(&qr, &a) < 1e-4, "rel err {}", rel_err(&qr, &a));
+    }
+
+    #[test]
+    fn qr_q_orthogonal() {
+        let a = Matrix::randn(16, 8, 2);
+        let f = householder_qr(&a);
+        let q = q_from(&f.y, &f.t);
+        let qqt = gemm(Trans::No, Trans::Yes, 1.0, &q, &q);
+        assert!(rel_err(&qqt, &Matrix::eye(16)) < 1e-4);
+    }
+
+    #[test]
+    fn qr_y_unit_lower() {
+        let a = Matrix::randn(12, 6, 3);
+        let f = householder_qr(&a);
+        for j in 0..6 {
+            assert!((f.y[(j, j)] - 1.0).abs() < 1e-6);
+            for i in 0..j {
+                assert_eq!(f.y[(i, j)], 0.0);
+            }
+        }
+        assert!(f.r.is_upper_triangular(0.0));
+        assert!(f.t.is_upper_triangular(1e-6));
+    }
+
+    #[test]
+    fn qr_zero_matrix_finite() {
+        let f = householder_qr(&Matrix::zeros(8, 4));
+        assert!(f.y.data().iter().all(|x| x.is_finite()));
+        assert_eq!(f.r.fro_norm(), 0.0);
+        assert_eq!(f.t.fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn qr_zero_row_padding_exact() {
+        let a = Matrix::randn(24, 8, 7);
+        let f1 = householder_qr(&a);
+        let f2 = householder_qr(&a.pad_to(40, 8));
+        assert!(rel_err(&f2.r, &f1.r) < 1e-5);
+        assert!(rel_err(&f2.t, &f1.t) < 1e-5);
+        assert!(rel_err(&f2.y.block(0, 0, 24, 8), &f1.y) < 1e-5);
+        assert_eq!(f2.y.block(24, 0, 16, 8).fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn merge_y0_identity_for_triangular() {
+        let r0 = Matrix::randn(8, 8, 1).triu();
+        let r1 = Matrix::randn(8, 8, 2).triu();
+        let (y0, _y1, _t, _r) = tsqr_merge(&r0, &r1);
+        assert!(rel_err(&y0, &Matrix::eye(8)) < 1e-5);
+    }
+
+    #[test]
+    fn merge_preserves_gram() {
+        let r0 = Matrix::randn(8, 8, 3).triu();
+        let r1 = Matrix::randn(8, 8, 4).triu();
+        let (_y0, _y1, _t, r) = tsqr_merge(&r0, &r1);
+        let stacked = r0.vstack(&r1);
+        assert!(gram_residual(&stacked, &r) < 1e-4);
+    }
+
+    #[test]
+    fn leaf_apply_matches_explicit_q() {
+        let a = Matrix::randn(16, 4, 5);
+        let f = householder_qr(&a);
+        let c = Matrix::randn(16, 12, 6);
+        let got = leaf_apply(&f.y, &f.t, &c);
+        // explicit: Qᵀ C with Q = I - Y T Yᵀ → Qᵀ = I - Y Tᵀ Yᵀ
+        let q = q_from(&f.y, &f.t);
+        let want = gemm(Trans::Yes, Trans::No, 1.0, &q, &c);
+        assert!(rel_err(&got, &want) < 1e-4);
+    }
+
+    #[test]
+    fn tree_update_matches_stacked_apply() {
+        let r0 = Matrix::randn(8, 8, 7).triu();
+        let r1 = Matrix::randn(8, 8, 8).triu();
+        let (y0, y1, t, _r) = tsqr_merge(&r0, &r1);
+        let c0 = Matrix::randn(8, 16, 9);
+        let c1 = Matrix::randn(8, 16, 10);
+        let st = tree_update(&c0, &c1, &y1, &t);
+        let yfull = y0.vstack(&y1);
+        let cfull = c0.vstack(&c1);
+        let want = leaf_apply(&yfull, &t, &cfull);
+        assert!(rel_err(&st.c0, &want.block(0, 0, 8, 16)) < 1e-4);
+        assert!(rel_err(&st.c1, &want.block(8, 0, 8, 16)) < 1e-4);
+    }
+
+    #[test]
+    fn recovery_identity_both_sides() {
+        // Paper III-C: both buddies can be reconstructed from (C', Y, W).
+        let r0 = Matrix::randn(8, 8, 11).triu();
+        let r1 = Matrix::randn(8, 8, 12).triu();
+        let (_y0, y1, t, _r) = tsqr_merge(&r0, &r1);
+        let c0 = Matrix::randn(8, 24, 13);
+        let c1 = Matrix::randn(8, 24, 14);
+        let st = tree_update(&c0, &c1, &y1, &t);
+        let rec1 = recover_block(&c1, &y1, &st.w);
+        assert!(rel_err(&rec1, &st.c1) < 1e-5);
+        let rec0 = recover_block(&c0, &Matrix::eye(8), &st.w);
+        assert!(rel_err(&rec0, &st.c0) < 1e-5);
+    }
+
+    #[test]
+    fn zero_column_padding_exact_for_updates() {
+        let a = Matrix::randn(16, 4, 15);
+        let f = householder_qr(&a);
+        let c = Matrix::randn(16, 10, 16);
+        let want = leaf_apply(&f.y, &f.t, &c);
+        let got = leaf_apply(&f.y, &f.t, &c.pad_to(16, 16)).crop_to(16, 10);
+        assert!(rel_err(&got, &want) < 1e-5);
+    }
+}

@@ -1,0 +1,166 @@
+//! Run-wide counters and per-phase reports.
+//!
+//! Everything the benchmark harness prints — message counts, bytes moved,
+//! flops, the dual-channel critical-path estimate and wallclock — flows
+//! through one [`Metrics`] instance shared by every simulated rank.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Lock-free counters, cheap enough for the per-message hot path.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// One-way messages sent.
+    pub messages: AtomicU64,
+    /// Pairwise exchanges (sendrecv) performed.
+    pub exchanges: AtomicU64,
+    /// Total payload bytes moved (each direction counted).
+    pub bytes: AtomicU64,
+    /// Flops issued (from the backend flop model).
+    pub flops: AtomicU64,
+    /// Recovery events completed.
+    pub recoveries: AtomicU64,
+    /// Failures injected.
+    pub failures: AtomicU64,
+    /// Final logical clock per rank (the dual-channel cost model).
+    clocks: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new(ranks: usize) -> Arc<Self> {
+        Arc::new(Self { clocks: Mutex::new(vec![0.0; ranks]), ..Default::default() })
+    }
+
+    pub fn record_message(&self, bytes: usize) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// One `sendrecv` *call* (each member of an exchanging pair makes
+    /// one); `bytes_out` is that caller's outgoing payload, so summing
+    /// over both callers gives the true bytes on the wire.
+    pub fn record_exchange(&self, bytes_out: usize) {
+        self.exchanges.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes_out as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_flops(&self, f: u64) {
+        self.flops.fetch_add(f, Ordering::Relaxed);
+    }
+
+    pub fn record_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_recovery(&self) {
+        self.recoveries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish a rank's final logical clock.
+    pub fn set_clock(&self, rank: usize, t: f64) {
+        let mut c = self.clocks.lock().unwrap();
+        if rank >= c.len() {
+            c.resize(rank + 1, 0.0);
+        }
+        c[rank] = c[rank].max(t);
+    }
+
+    /// Critical path = max over ranks of the logical clock.
+    pub fn critical_path(&self) -> f64 {
+        self.clocks.lock().unwrap().iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn snapshot(&self) -> Report {
+        Report {
+            messages: self.messages.load(Ordering::Relaxed),
+            exchanges: self.exchanges.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+            recoveries: self.recoveries.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            critical_path: self.critical_path(),
+        }
+    }
+}
+
+/// Immutable snapshot for printing / serialization.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Report {
+    pub messages: u64,
+    pub exchanges: u64,
+    pub bytes: u64,
+    pub flops: u64,
+    pub recoveries: u64,
+    pub failures: u64,
+    pub critical_path: f64,
+}
+
+impl Report {
+    /// Difference against an earlier snapshot (for per-phase accounting).
+    pub fn since(&self, earlier: &Report) -> Report {
+        Report {
+            messages: self.messages - earlier.messages,
+            exchanges: self.exchanges - earlier.exchanges,
+            bytes: self.bytes - earlier.bytes,
+            flops: self.flops - earlier.flops,
+            recoveries: self.recoveries - earlier.recoveries,
+            failures: self.failures - earlier.failures,
+            critical_path: self.critical_path,
+        }
+    }
+}
+
+impl std::fmt::Display for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "msgs={} exch={} bytes={} flops={} fail={} recov={} cp={:.6}s",
+            self.messages,
+            self.exchanges,
+            self.bytes,
+            self.flops,
+            self.failures,
+            self.recoveries,
+            self.critical_path
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new(4);
+        m.record_message(100);
+        m.record_message(50);
+        m.record_exchange(20);
+        m.record_flops(1000);
+        let r = m.snapshot();
+        assert_eq!(r.messages, 2);
+        assert_eq!(r.exchanges, 1);
+        assert_eq!(r.bytes, 170);
+        assert_eq!(r.flops, 1000);
+    }
+
+    #[test]
+    fn critical_path_is_max_clock() {
+        let m = Metrics::new(3);
+        m.set_clock(0, 1.0);
+        m.set_clock(2, 5.0);
+        m.set_clock(1, 3.0);
+        assert_eq!(m.critical_path(), 5.0);
+    }
+
+    #[test]
+    fn since_subtracts() {
+        let m = Metrics::new(1);
+        m.record_message(10);
+        let a = m.snapshot();
+        m.record_message(20);
+        let d = m.snapshot().since(&a);
+        assert_eq!(d.messages, 1);
+        assert_eq!(d.bytes, 20);
+    }
+}

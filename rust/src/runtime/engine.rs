@@ -1,0 +1,240 @@
+//! The PJRT execution engine: one dedicated OS thread owns the
+//! `PjRtClient` and a cache of compiled executables; everyone else sends
+//! [`ExecRequest`]s over an mpsc channel and blocks on a reply channel.
+//!
+//! Why a thread and not a shared object: the `xla` crate's PJRT handles
+//! are raw C++ pointers with no `Send`/`Sync` story; confining them to
+//! one thread makes the rest of the system trivially `Send` and matches
+//! how a serving runtime would pin a device context anyway.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::linalg::Matrix;
+
+/// A single execute call: artifact name + positional inputs.
+pub struct ExecRequest {
+    pub artifact: String,
+    pub inputs: Vec<Matrix>,
+    pub reply: std::sync::mpsc::Sender<Result<Vec<Matrix>>>,
+}
+
+/// Cumulative engine counters (lock-free reads).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub executions: AtomicU64,
+    pub compilations: AtomicU64,
+    pub exec_nanos: AtomicU64,
+    pub compile_nanos: AtomicU64,
+}
+
+impl EngineStats {
+    /// (executions, compilations, exec seconds, compile seconds)
+    pub fn snapshot(&self) -> (u64, u64, f64, f64) {
+        (
+            self.executions.load(Ordering::Relaxed),
+            self.compilations.load(Ordering::Relaxed),
+            self.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            self.compile_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        )
+    }
+}
+
+/// Cloneable handle used by coordinator ranks to run artifacts.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: std::sync::mpsc::Sender<ExecRequest>,
+    manifest: Arc<Manifest>,
+    stats: Arc<EngineStats>,
+}
+
+impl EngineHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Execute an artifact (blocks until the engine thread replies).
+    pub fn exec(&self, entry: &ArtifactEntry, inputs: Vec<Matrix>) -> Result<Vec<Matrix>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(ExecRequest { artifact: entry.name(), inputs, reply })
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
+    }
+
+    /// Pre-compile a set of artifacts (hides compile latency at startup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            let entry = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|e| e.name() == *n)
+                .ok_or_else(|| anyhow!("unknown artifact {n}"))?;
+            let inputs: Vec<Matrix> =
+                entry.inputs.iter().map(|s| Matrix::zeros(s[0], s[1])).collect();
+            self.exec(entry, inputs)?;
+        }
+        Ok(())
+    }
+}
+
+/// The engine thread itself. Dropping the last [`EngineHandle`] shuts the
+/// thread down (the request channel closes).
+pub struct Engine;
+
+impl Engine {
+    /// Start the engine over an artifact directory.
+    pub fn start(artifact_dir: impl AsRef<std::path::Path>) -> Result<EngineHandle> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let stats = Arc::new(EngineStats::default());
+        let (tx, rx) = std::sync::mpsc::channel::<ExecRequest>();
+        let m2 = manifest.clone();
+        let s2 = stats.clone();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                if let Err(e) = engine_loop(rx, m2, s2) {
+                    log::error!("engine thread exited with error: {e:#}");
+                }
+            })
+            .context("spawning engine thread")?;
+        Ok(EngineHandle { tx, manifest, stats })
+    }
+}
+
+fn engine_loop(
+    rx: std::sync::mpsc::Receiver<ExecRequest>,
+    manifest: Arc<Manifest>,
+    stats: Arc<EngineStats>,
+) -> Result<()> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+    log::info!(
+        "pjrt engine up: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let by_name: HashMap<String, ArtifactEntry> = manifest
+        .artifacts
+        .iter()
+        .map(|e| (e.name(), e.clone()))
+        .collect();
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        let result = serve_one(&client, &manifest, &by_name, &mut cache, &stats, &req);
+        let _ = req.reply.send(result);
+    }
+    Ok(())
+}
+
+fn serve_one(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    by_name: &HashMap<String, ArtifactEntry>,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: &EngineStats,
+    req: &ExecRequest,
+) -> Result<Vec<Matrix>> {
+    let entry = by_name
+        .get(&req.artifact)
+        .ok_or_else(|| anyhow!("unknown artifact {}", req.artifact))?;
+
+    if !cache.contains_key(&req.artifact) {
+        let t0 = std::time::Instant::now();
+        let path = manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", req.artifact))?;
+        stats.compilations.fetch_add(1, Ordering::Relaxed);
+        stats
+            .compile_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        cache.insert(req.artifact.clone(), exe);
+    }
+    let exe = &cache[&req.artifact];
+
+    // Validate + convert inputs.
+    if req.inputs.len() != entry.inputs.len() {
+        return Err(anyhow!(
+            "{}: expected {} inputs, got {}",
+            req.artifact,
+            entry.inputs.len(),
+            req.inputs.len()
+        ));
+    }
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for (i, (m, want)) in req.inputs.iter().zip(&entry.inputs).enumerate() {
+        let (r, c) = m.shape();
+        if [r, c] != want[..] {
+            return Err(anyhow!(
+                "{} input {i}: shape ({r},{c}) != artifact {:?}",
+                req.artifact,
+                want
+            ));
+        }
+        let lit = xla::Literal::vec1(m.data())
+            .reshape(&[r as i64, c as i64])
+            .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+        literals.push(lit);
+    }
+
+    let t0 = std::time::Instant::now();
+    let bufs = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("execute {}: {e:?}", req.artifact))?;
+    let tuple = bufs[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal {}: {e:?}", req.artifact))?;
+    stats.executions.fetch_add(1, Ordering::Relaxed);
+    stats
+        .exec_nanos
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+    // All artifacts are lowered with return_tuple=True.
+    let parts = tuple
+        .to_tuple()
+        .map_err(|e| anyhow!("untuple {}: {e:?}", req.artifact))?;
+    if parts.len() != entry.outputs.len() {
+        return Err(anyhow!(
+            "{}: artifact declares {} outputs, runtime returned {}",
+            req.artifact,
+            entry.outputs.len(),
+            parts.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for (lit, shape) in parts.into_iter().zip(&entry.outputs) {
+        let v = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {}: {e:?}", req.artifact))?;
+        let (r, c) = (shape[0], shape[1]);
+        out.push(Matrix::from_vec(r, c, v));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine execution tests live in `rust/tests/runtime_xla.rs` (they
+    //! need built artifacts); here we only check startup failure modes.
+    use super::*;
+
+    #[test]
+    fn start_fails_without_manifest() {
+        let dir = std::env::temp_dir().join("ftcaqr-no-manifest");
+        let _ = std::fs::create_dir_all(&dir);
+        assert!(Engine::start(&dir).is_err());
+    }
+}

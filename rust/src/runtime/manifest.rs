@@ -1,0 +1,253 @@
+//! `artifacts/manifest.txt` parsing and shape-ladder selection.
+//!
+//! Every artifact is an HLO-text module with *static* shapes. A request
+//! for `(op, dims)` is served by the smallest artifact whose padded dims
+//! dominate the request: `b` must match exactly (it is a configuration
+//! parameter, chosen from the ladder at config time), `m` and `n` are
+//! padded up (zero-padding is numerically exact for all five ops).
+//!
+//! Format (written by `python/compile/aot.py`, one line per artifact):
+//! ```text
+//! artifact|<op>|<file>|k=v,k=v|RxC;RxC|RxC;RxC
+//! ```
+//! (A JSON twin exists for humans; the Rust loader parses the text form
+//! because the offline crate set has no JSON parser.)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One lowered (op, shape) entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub op: String,
+    /// Shape parameters the artifact was lowered with (e.g. m/b/n).
+    pub params: BTreeMap<String, usize>,
+    /// HLO-text file name, relative to the artifact dir.
+    pub file: String,
+    /// Input shapes, in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes, in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactEntry {
+    /// Unique artifact key (file stem).
+    pub fn name(&self) -> String {
+        self.file.trim_end_matches(".hlo.txt").to_string()
+    }
+}
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub profile: String,
+    pub jax_version: String,
+    pub tile: usize,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(';')
+        .map(|shape| {
+            shape
+                .split('x')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut m = Manifest {
+            profile: String::new(),
+            jax_version: String::new(),
+            tile: 0,
+            artifacts: Vec::new(),
+            dir,
+        };
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(v) = line.strip_prefix("profile=") {
+                m.profile = v.to_string();
+            } else if let Some(v) = line.strip_prefix("jax=") {
+                m.jax_version = v.to_string();
+            } else if let Some(v) = line.strip_prefix("tile=") {
+                m.tile = v.parse().context("bad tile")?;
+            } else if let Some(rest) = line.strip_prefix("artifact|") {
+                let parts: Vec<&str> = rest.split('|').collect();
+                if parts.len() != 5 {
+                    bail!("manifest line {}: expected 5 fields", lineno + 1);
+                }
+                let mut params = BTreeMap::new();
+                for kv in parts[2].split(',').filter(|s| !s.is_empty()) {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .with_context(|| format!("bad param '{kv}'"))?;
+                    params.insert(k.to_string(), v.parse()?);
+                }
+                m.artifacts.push(ArtifactEntry {
+                    op: parts[0].to_string(),
+                    file: parts[1].to_string(),
+                    params,
+                    inputs: parse_shapes(parts[3])?,
+                    outputs: parse_shapes(parts[4])?,
+                });
+            } else {
+                bail!("manifest line {}: unrecognized '{line}'", lineno + 1);
+            }
+        }
+        Ok(m)
+    }
+
+    /// Absolute path of an entry's HLO text.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+
+    /// Entries for one op.
+    pub fn entries(&self, op: &str) -> impl Iterator<Item = &ArtifactEntry> {
+        let op = op.to_string();
+        self.artifacts.iter().filter(move |e| e.op == op)
+    }
+
+    /// Select the smallest artifact for `op` that fits `want`.
+    ///
+    /// `b` (when present in `want`) must match exactly; every other
+    /// parameter must satisfy `artifact >= want` and the artifact with
+    /// the smallest padded volume (product of params) wins.
+    pub fn select(&self, op: &str, want: &BTreeMap<&str, usize>) -> Result<&ArtifactEntry> {
+        let mut best: Option<(&ArtifactEntry, usize)> = None;
+        'outer: for e in self.entries(op) {
+            let mut volume = 1usize;
+            for (k, v) in want {
+                let have = match e.params.get(*k) {
+                    Some(h) => *h,
+                    None => continue 'outer,
+                };
+                let fits = if *k == "b" { have == *v } else { have >= *v };
+                if !fits {
+                    continue 'outer;
+                }
+                volume = volume.saturating_mul(have);
+            }
+            match best {
+                Some((_, bv)) if bv <= volume => {}
+                _ => best = Some((e, volume)),
+            }
+        }
+        match best {
+            Some((e, _)) => Ok(e),
+            None => bail!(
+                "no artifact for op={op} want={want:?}; available: {:?}",
+                self.entries(op).map(|e| &e.params).collect::<Vec<_>>()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# ftcaqr manifest v1
+profile=test
+jax=0.8.2
+tile=128
+artifact|tsqr_merge|tsqr_merge_b8.hlo.txt|b=8|8x8;8x8|8x8;8x8;8x8;8x8
+artifact|leaf_apply|leaf_apply_b16_m64_n32.hlo.txt|b=16,m=64,n=32|64x16;16x16;64x32|64x32
+artifact|leaf_apply|leaf_apply_b16_m64_n64.hlo.txt|b=16,m=64,n=64|64x16;16x16;64x64|64x64
+artifact|leaf_apply|leaf_apply_b16_m128_n32.hlo.txt|b=16,m=128,n=32|128x16;16x16;128x32|128x32
+";
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::new()).unwrap()
+    }
+
+    #[test]
+    fn parses_header_and_entries() {
+        let m = sample();
+        assert_eq!(m.profile, "test");
+        assert_eq!(m.tile, 128);
+        assert_eq!(m.artifacts.len(), 4);
+        let e = &m.artifacts[1];
+        assert_eq!(e.op, "leaf_apply");
+        assert_eq!(e.params["n"], 32);
+        assert_eq!(e.inputs, vec![vec![64, 16], vec![16, 16], vec![64, 32]]);
+        assert_eq!(e.outputs, vec![vec![64, 32]]);
+        assert_eq!(e.name(), "leaf_apply_b16_m64_n32");
+    }
+
+    #[test]
+    fn select_exact_match() {
+        let m = sample();
+        let want = BTreeMap::from([("b", 16), ("m", 64), ("n", 32)]);
+        assert_eq!(m.select("leaf_apply", &want).unwrap().params["m"], 64);
+    }
+
+    #[test]
+    fn select_pads_up_minimal() {
+        let m = sample();
+        let want = BTreeMap::from([("b", 16), ("m", 60), ("n", 40)]);
+        let e = m.select("leaf_apply", &want).unwrap();
+        assert_eq!(e.params["m"], 64);
+        assert_eq!(e.params["n"], 64);
+    }
+
+    #[test]
+    fn select_b_is_exact() {
+        let m = sample();
+        let want = BTreeMap::from([("b", 4)]);
+        assert!(m.select("tsqr_merge", &want).is_err());
+    }
+
+    #[test]
+    fn select_missing_op_errors() {
+        let m = sample();
+        assert!(m.select("panel_qr", &BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Manifest::parse("artifact|x|y\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("garbage\n", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // Integration-ish: when `make artifacts` has run, validate it.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for e in &m.artifacts {
+            assert!(m.path_of(e).exists(), "missing {}", e.file);
+            assert!(!e.outputs.is_empty());
+        }
+        for op in ["panel_qr", "tsqr_merge", "leaf_apply", "tree_update", "recover"] {
+            assert!(m.entries(op).next().is_some(), "no {op} artifacts");
+        }
+    }
+}

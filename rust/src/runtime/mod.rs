@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the Rust hot path.
+//!
+//! Layout:
+//! * [`manifest`] — parse `artifacts/manifest.json`, select the smallest
+//!   artifact that fits a requested shape (zero-padding is exact, see
+//!   DESIGN.md "Shape strategy").
+//! * [`engine`] — a dedicated OS thread owning the `PjRtClient` and the
+//!   compiled-executable cache; callers talk to it over an mpsc request
+//!   channel and await a oneshot reply. PJRT handles never cross threads,
+//!   and the rest of the system stays `Send`.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineHandle, EngineStats};
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,128 @@
+//! The dual-channel communication cost model (logical clocks).
+//!
+//! The paper's critical-path claim (§III-C) is that replacing Algorithm
+//! 1's two one-way transfers with Algorithm 2's `sendrecv` exchange does
+//! not lengthen the critical path *on dual-channel hardware*, because the
+//! two transfers of an exchange overlap. We model that with per-rank
+//! logical clocks in seconds and a LogP-flavoured cost model:
+//!
+//! * one-way message `i -> j`, `B` bytes:
+//!     `t_j' = max(t_j + o, t_i_send + alpha + B * beta)`
+//! * exchange (both directions overlap, dual channel):
+//!     both ends finish at
+//!     `max(t_i, t_j) + alpha + max(B_ij, B_ji) * beta`
+//! * local compute of `F` flops: `t += F / flops_per_sec`.
+//!
+//! Experiment E2 sweeps these parameters (incl. a single-channel variant
+//! where the exchange costs the *sum*, showing where the paper's claim
+//! stops holding).
+
+/// Communication/computation cost parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Per-byte transfer time, seconds (1/bandwidth).
+    pub beta: f64,
+    /// CPU send/recv overhead, seconds.
+    pub o: f64,
+    /// Local compute rate, flops/second.
+    pub flops_per_sec: f64,
+    /// Dual-channel links: an exchange's two transfers overlap (max);
+    /// single-channel: they serialize (sum). Paper assumes dual.
+    pub dual_channel: bool,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Roughly a commodity cluster: 1 us latency, 10 GB/s links,
+        // 0.2 us CPU overhead, 50 GF/s per-core compute.
+        Self {
+            alpha: 1e-6,
+            beta: 1e-10,
+            o: 2e-7,
+            flops_per_sec: 5e10,
+            dual_channel: true,
+        }
+    }
+}
+
+impl CostModel {
+    /// Single-channel variant (exchange = sum of transfers).
+    pub fn single_channel() -> Self {
+        Self { dual_channel: false, ..Self::default() }
+    }
+
+    /// Receiver-side clock update for a one-way message.
+    pub fn recv_time(&self, t_local: f64, send_ts: f64, bytes: usize) -> f64 {
+        (t_local + self.o).max(send_ts + self.alpha + bytes as f64 * self.beta)
+    }
+
+    /// Completion time of an exchange for either end.
+    pub fn exchange_time(
+        &self,
+        t_local: f64,
+        peer_send_ts: f64,
+        bytes_out: usize,
+        bytes_in: usize,
+    ) -> f64 {
+        let start = t_local.max(peer_send_ts);
+        let wire = if self.dual_channel {
+            bytes_out.max(bytes_in) as f64 * self.beta
+        } else {
+            (bytes_out + bytes_in) as f64 * self.beta
+        };
+        start + self.alpha + wire + self.o
+    }
+
+    /// Compute-time for `flops` floating point operations.
+    pub fn compute_time(&self, flops: u64) -> f64 {
+        flops as f64 / self.flops_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_way_waits_for_sender() {
+        let c = CostModel::default();
+        // Receiver far behind the sender: bounded by sender + wire.
+        let t = c.recv_time(0.0, 1.0, 1000);
+        assert!(t >= 1.0 + c.alpha);
+        // Receiver ahead: bounded by its own clock + overhead.
+        let t2 = c.recv_time(5.0, 1.0, 1000);
+        assert!((t2 - (5.0 + c.o)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dual_channel_exchange_overlaps() {
+        let dual = CostModel::default();
+        let single = CostModel::single_channel();
+        let b = 1_000_000;
+        let td = dual.exchange_time(0.0, 0.0, b, b);
+        let ts = single.exchange_time(0.0, 0.0, b, b);
+        // Same-size payloads: single-channel exchange pays twice the wire.
+        let wire = b as f64 * dual.beta;
+        assert!((ts - td - wire).abs() < 1e-12, "td={td} ts={ts}");
+    }
+
+    #[test]
+    fn exchange_equals_one_way_wire_on_dual() {
+        // The paper's claim: exchange(B, B) costs the same wire time as a
+        // single one-way B-byte transfer (plus constant overheads).
+        let c = CostModel::default();
+        let b = 1 << 20;
+        let ex = c.exchange_time(0.0, 0.0, b, b);
+        let one = c.recv_time(0.0, 0.0, b);
+        assert!((ex - one - c.o).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_time_linear() {
+        let c = CostModel::default();
+        assert_eq!(c.compute_time(0), 0.0);
+        assert!((c.compute_time(100) - 2.0 * c.compute_time(50)).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,156 @@
+//! Message types flowing between simulated ranks.
+//!
+//! The payload stays deliberately generic (`Matrix` bundles); the
+//! coordinator layers its own conventions (which matrix is C', which is
+//! Y, ...) on top via [`Tag`]s, exactly as MPI codes do with tags.
+
+use crate::linalg::Matrix;
+
+/// Message kind — the coordinator's protocol vocabulary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TagKind {
+    /// TSQR reduction: intermediate R factor.
+    TsqrR,
+    /// Trailing-update tree: C' rows (Algorithm 1) or C'+Y (Algorithm 2).
+    UpdateC,
+    /// Trailing-update tree: the W factor sent back (Algorithm 1 only).
+    UpdateW,
+    /// Recovery: request for buddy-held state.
+    RecoveryReq,
+    /// Recovery: the {W, T, C', Y} payload (paper III-C).
+    RecoveryData,
+    /// Leader -> worker block distribution.
+    Scatter,
+    /// Worker -> leader result collection.
+    Gather,
+    /// Checkpointing traffic (diskless-checkpoint baseline).
+    Checkpoint,
+    /// Anything else (tests).
+    Misc(u16),
+}
+
+/// Full message tag: kind + panel + tree step. Matching is exact, so
+/// concurrent panels/steps can never cross-talk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Tag {
+    pub kind: TagKind,
+    pub panel: u32,
+    pub step: u32,
+}
+
+impl Tag {
+    pub fn new(kind: TagKind, panel: usize, step: usize) -> Self {
+        Self { kind, panel: panel as u32, step: step as u32 }
+    }
+
+    /// Tag with no panel/step context.
+    pub fn plain(kind: TagKind) -> Self {
+        Self { kind, panel: 0, step: 0 }
+    }
+}
+
+/// Message payload: zero or more matrices (+ an optional small control
+/// word). Sizes are accounted from the matrix buffers.
+#[derive(Clone, Debug)]
+pub enum MsgData {
+    Mat(Matrix),
+    Mats(Vec<Matrix>),
+    Ctrl(u64),
+}
+
+impl MsgData {
+    /// Payload size for the cost model.
+    pub fn nbytes(&self) -> usize {
+        match self {
+            MsgData::Mat(m) => m.nbytes(),
+            MsgData::Mats(v) => v.iter().map(Matrix::nbytes).sum(),
+            MsgData::Ctrl(_) => 8,
+        }
+    }
+
+    /// Unwrap a single matrix.
+    pub fn into_mat(self) -> Matrix {
+        match self {
+            MsgData::Mat(m) => m,
+            MsgData::Mats(mut v) if v.len() == 1 => v.pop().unwrap(),
+            other => panic!("expected Mat, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a matrix bundle.
+    pub fn into_mats(self) -> Vec<Matrix> {
+        match self {
+            MsgData::Mat(m) => vec![m],
+            MsgData::Mats(v) => v,
+            other => panic!("expected Mats, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a control word.
+    pub fn into_ctrl(self) -> u64 {
+        match self {
+            MsgData::Ctrl(c) => c,
+            other => panic!("expected Ctrl, got {other:?}"),
+        }
+    }
+}
+
+/// A routed message.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub src: usize,
+    pub tag: Tag,
+    pub data: MsgData,
+    /// Sender's logical clock at send time (cost model input).
+    pub send_ts: f64,
+    /// Payload bytes.
+    pub bytes: usize,
+    /// True when this is half of a `sendrecv` exchange (dual-channel
+    /// overlap applies — paper III-C's critical-path argument).
+    pub exchange: bool,
+}
+
+/// Mailbox events: messages, plus failure-detector notices.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Msg(Envelope),
+    /// Rank `0` died (ULFM failure detector).
+    Death(usize),
+    /// Rank `0` was rebuilt and rejoined.
+    Revive(usize),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_equality_is_exact() {
+        let a = Tag::new(TagKind::TsqrR, 1, 2);
+        let b = Tag::new(TagKind::TsqrR, 1, 3);
+        assert_ne!(a, b);
+        assert_eq!(a, Tag::new(TagKind::TsqrR, 1, 2));
+    }
+
+    #[test]
+    fn msgdata_sizes() {
+        let m = Matrix::zeros(4, 4);
+        assert_eq!(MsgData::Mat(m.clone()).nbytes(), 64);
+        assert_eq!(MsgData::Mats(vec![m.clone(), m]).nbytes(), 128);
+        assert_eq!(MsgData::Ctrl(9).nbytes(), 8);
+    }
+
+    #[test]
+    fn msgdata_unwrap() {
+        let m = Matrix::eye(2);
+        assert_eq!(MsgData::Mat(m.clone()).into_mat(), m);
+        assert_eq!(MsgData::Mats(vec![m.clone()]).into_mat(), m);
+        assert_eq!(MsgData::Ctrl(5).into_ctrl(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Mat")]
+    fn msgdata_wrong_unwrap_panics() {
+        MsgData::Ctrl(1).into_mat();
+    }
+}

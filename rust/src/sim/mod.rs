@@ -1,0 +1,506 @@
+//! Simulated message-passing world: the MPI + ULFM substrate.
+//!
+//! Each rank is an OS thread holding a [`RankCtx`]; ranks exchange typed,
+//! tagged messages through a shared [`Router`]. Failure injection kills a
+//! rank's thread and broadcasts a death notice; any operation that
+//! involves the dead rank afterwards returns [`Fail::RankFailed`] —
+//! exactly ULFM's "errors surface only at operations touching the failed
+//! process" (paper §II). `REBUILD` re-creates the rank's mailbox and a
+//! new thread continues from recovered state (paper III-C).
+//!
+//! Per-rank logical clocks implement the dual-channel cost model of
+//! [`clock::CostModel`], which is what the overhead experiments (E2)
+//! report as "critical path".
+
+pub mod clock;
+pub mod message;
+
+pub use clock::CostModel;
+pub use message::{Envelope, Event, MsgData, Tag, TagKind};
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::fault::{FailSite, FaultPlan};
+use crate::ft::Fail;
+use crate::metrics::Metrics;
+
+struct RankSlot {
+    tx: Option<Sender<Event>>,
+    alive: bool,
+    incarnation: u32,
+}
+
+/// Shared routing fabric: senders + liveness for every rank.
+pub struct Router {
+    slots: RwLock<Vec<RankSlot>>,
+}
+
+impl Router {
+    fn new(n: usize) -> (Arc<Self>, Vec<Receiver<Event>>) {
+        let mut slots = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            slots.push(RankSlot { tx: Some(tx), alive: true, incarnation: 0 });
+            rxs.push(rx);
+        }
+        (Arc::new(Self { slots: RwLock::new(slots) }), rxs)
+    }
+
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.slots.read().unwrap().get(rank).map(|s| s.alive).unwrap_or(false)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.slots.read().unwrap().iter().filter(|s| s.alive).count()
+    }
+
+    pub fn incarnation(&self, rank: usize) -> u32 {
+        self.slots.read().unwrap()[rank].incarnation
+    }
+
+    /// Deliver an event; `false` if the destination is dead/closed.
+    fn deliver(&self, dst: usize, ev: Event) -> bool {
+        let slots = self.slots.read().unwrap();
+        match slots.get(dst).and_then(|s| s.tx.as_ref()) {
+            Some(tx) if slots[dst].alive => tx.send(ev).is_ok(),
+            _ => false,
+        }
+    }
+
+    /// Kill a rank: drop its mailbox sender and notify everyone else.
+    pub fn kill(&self, rank: usize) {
+        let mut slots = self.slots.write().unwrap();
+        if !slots[rank].alive {
+            return;
+        }
+        slots[rank].alive = false;
+        slots[rank].tx = None;
+        for (i, s) in slots.iter().enumerate() {
+            if i != rank && s.alive {
+                if let Some(tx) = &s.tx {
+                    let _ = tx.send(Event::Death(rank));
+                }
+            }
+        }
+    }
+
+    /// REBUILD: new mailbox + incarnation for `rank`, notify survivors.
+    fn revive(&self, rank: usize) -> Receiver<Event> {
+        let mut slots = self.slots.write().unwrap();
+        let (tx, rx) = channel();
+        slots[rank].tx = Some(tx);
+        slots[rank].alive = true;
+        slots[rank].incarnation += 1;
+        for (i, s) in slots.iter().enumerate() {
+            if i != rank && s.alive {
+                if let Some(tx) = &s.tx {
+                    let _ = tx.send(Event::Revive(rank));
+                }
+            }
+        }
+        rx
+    }
+}
+
+/// Per-rank mailbox with selective receive and failure-notice tracking.
+struct Mailbox {
+    rx: Receiver<Event>,
+    buf: HashMap<(usize, Tag), VecDeque<Envelope>>,
+    dead: HashSet<usize>,
+    /// Revive notices seen per rank. `sendrecv` watches this: a peer
+    /// revival means the peer's old mailbox (and any half-exchange we
+    /// pushed into it) is gone, so our payload must be retransmitted.
+    revives: HashMap<usize, u64>,
+}
+
+impl Mailbox {
+    fn new(rx: Receiver<Event>) -> Self {
+        Self { rx, buf: HashMap::new(), dead: HashSet::new(), revives: HashMap::new() }
+    }
+
+    fn revive_count(&self, rank: usize) -> u64 {
+        self.revives.get(&rank).copied().unwrap_or(0)
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Msg(env) => {
+                self.buf.entry((env.src, env.tag)).or_default().push_back(env)
+            }
+            Event::Death(r) => {
+                self.dead.insert(r);
+            }
+            Event::Revive(r) => {
+                self.dead.remove(&r);
+                *self.revives.entry(r).or_insert(0) += 1;
+            }
+        }
+    }
+
+    /// Pull everything already delivered into the match buffer.
+    /// Returns false if the world shut down (channel closed).
+    fn drain(&mut self) -> bool {
+        loop {
+            match self.rx.try_recv() {
+                Ok(ev) => self.handle(ev),
+                Err(TryRecvError::Empty) => return true,
+                Err(TryRecvError::Disconnected) => return false,
+            }
+        }
+    }
+
+    fn take(&mut self, src: usize, tag: Tag) -> Option<Envelope> {
+        self.buf.get_mut(&(src, tag)).and_then(VecDeque::pop_front)
+    }
+}
+
+/// Everything a rank's thread needs: identity, mailbox, clock, metrics,
+/// fault injector. Dropping the ctx publishes the final logical clock.
+pub struct RankCtx {
+    pub rank: usize,
+    /// Logical time (seconds) under the dual-channel cost model.
+    pub clock: f64,
+    pub cost: CostModel,
+    pub metrics: Arc<Metrics>,
+    pub fault: Arc<FaultPlan>,
+    router: Arc<Router>,
+    mailbox: Mailbox,
+}
+
+impl Drop for RankCtx {
+    fn drop(&mut self) {
+        self.metrics.set_clock(self.rank, self.clock);
+    }
+}
+
+impl RankCtx {
+    /// Advance the clock for a local computation and account flops.
+    pub fn compute(&mut self, flops: u64) {
+        self.clock += self.cost.compute_time(flops);
+        self.metrics.record_flops(flops);
+    }
+
+    /// Fault-injection site: dies (and unwinds the thread) when scheduled.
+    pub fn maybe_fail(&mut self, site: FailSite) -> Result<(), Fail> {
+        let inc = self.router.incarnation(self.rank);
+        if self.fault.should_fail_inc(self.rank, inc, site) {
+            self.metrics.record_failure();
+            self.router.kill(self.rank);
+            return Err(Fail::Killed);
+        }
+        Ok(())
+    }
+
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.router.is_alive(rank)
+    }
+
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    fn push(&mut self, dst: usize, tag: Tag, data: MsgData, exchange: bool) -> Result<usize, Fail> {
+        let bytes = data.nbytes();
+        let env =
+            Envelope { src: self.rank, tag, data, send_ts: self.clock, bytes, exchange };
+        if !self.router.deliver(dst, Event::Msg(env)) {
+            return Err(Fail::RankFailed { rank: dst });
+        }
+        Ok(bytes)
+    }
+
+    /// One-way send (Algorithm 1 style). Never blocks (the fabric is an
+    /// unbounded channel); the *receiver* pays the wire time via the cost
+    /// model.
+    pub fn send(&mut self, dst: usize, tag: Tag, data: MsgData) -> Result<(), Fail> {
+        let bytes = self.push(dst, tag, data, false)?;
+        self.clock += self.cost.o;
+        self.metrics.record_message(bytes);
+        Ok(())
+    }
+
+    /// Selective receive: blocks until a message with `(src, tag)` is
+    /// available, or `src` is known dead (ULFM detection).
+    pub fn recv(&mut self, src: usize, tag: Tag) -> Result<MsgData, Fail> {
+        loop {
+            let open = self.mailbox.drain();
+            if let Some(env) = self.mailbox.take(src, tag) {
+                self.clock = self.cost.recv_time(self.clock, env.send_ts, env.bytes);
+                return Ok(env.data);
+            }
+            if !open {
+                return Err(Fail::WorldGone);
+            }
+            if self.mailbox.dead.contains(&src) || !self.router.is_alive(src) {
+                return Err(Fail::RankFailed { rank: src });
+            }
+            match self.mailbox.rx.recv() {
+                Ok(ev) => self.mailbox.handle(ev),
+                Err(_) => return Err(Fail::WorldGone),
+            }
+        }
+    }
+
+    /// Paired exchange (Algorithm 2's `sendrecv`): send our payload and
+    /// receive the peer's; both transfers overlap on dual-channel links.
+    pub fn sendrecv(&mut self, peer: usize, tag: Tag, data: MsgData) -> Result<MsgData, Fail> {
+        let retrans = data.clone();
+        crate::simlog!(
+            "[r{}] push {tag:?} -> {peer} (inc {})",
+            self.rank,
+            self.router.incarnation(peer)
+        );
+        let bytes_out = self.push(peer, tag, data, true)?;
+        self.metrics.record_exchange(bytes_out);
+        // If the peer is REBUILT while we wait, its old mailbox — holding
+        // the half-exchange we just pushed — is discarded; retransmit to
+        // the new incarnation (the real-MPI analogue: the sender's NIC
+        // retries once the replacement process re-registers).
+        let mut seen_revives = self.mailbox.revive_count(peer);
+        loop {
+            let open = self.mailbox.drain();
+            // Retransmission must be checked BEFORE consuming the peer's
+            // half: when Death + Revive + the rebuilt peer's message all
+            // arrive in one batch, returning early would complete OUR
+            // exchange while the rebuilt peer starves waiting for the
+            // half we pushed into its discarded pre-death mailbox.
+            let now = self.mailbox.revive_count(peer);
+            if now > seen_revives {
+                seen_revives = now;
+                // Best-effort: the peer may have died again already.
+                let ok = self.push(peer, tag, retrans.clone(), true).is_ok();
+                crate::simlog!("[r{}] RETRANSMIT to {peer} {tag:?} ok={ok}", self.rank);
+            }
+            if let Some(env) = self.mailbox.take(peer, tag) {
+                self.clock =
+                    self.cost.exchange_time(self.clock, env.send_ts, bytes_out, env.bytes);
+                return Ok(env.data);
+            }
+            if !open {
+                return Err(Fail::WorldGone);
+            }
+            if self.mailbox.dead.contains(&peer) || !self.router.is_alive(peer) {
+                return Err(Fail::RankFailed { rank: peer });
+            }
+            match self.mailbox.rx.recv() {
+                Ok(ev) => self.mailbox.handle(ev),
+                Err(_) => return Err(Fail::WorldGone),
+            }
+        }
+    }
+}
+
+/// The simulated machine: `n` ranks, a router, shared metrics + faults.
+pub struct World {
+    pub n: usize,
+    pub cost: CostModel,
+    pub metrics: Arc<Metrics>,
+    pub fault: Arc<FaultPlan>,
+    router: Arc<Router>,
+    mailboxes: Mutex<Vec<Option<Receiver<Event>>>>,
+}
+
+impl World {
+    pub fn new(n: usize, cost: CostModel, fault: Arc<FaultPlan>) -> Arc<Self> {
+        let (router, rxs) = Router::new(n);
+        Arc::new(Self {
+            n,
+            cost,
+            metrics: Metrics::new(n),
+            fault,
+            router,
+            mailboxes: Mutex::new(rxs.into_iter().map(Some).collect()),
+        })
+    }
+
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Take rank `rank`'s context (panics if taken twice without revive).
+    pub fn ctx(&self, rank: usize) -> RankCtx {
+        let rx = self.mailboxes.lock().unwrap()[rank]
+            .take()
+            .unwrap_or_else(|| panic!("rank {rank} ctx already taken"));
+        RankCtx {
+            rank,
+            clock: 0.0,
+            cost: self.cost,
+            metrics: self.metrics.clone(),
+            fault: self.fault.clone(),
+            router: self.router.clone(),
+            mailbox: Mailbox::new(rx),
+        }
+    }
+
+    /// REBUILD a dead rank: fresh mailbox/incarnation, clock preset to
+    /// the recovery start time (usually the detector's clock).
+    pub fn revive(&self, rank: usize, clock0: f64) -> RankCtx {
+        let rx = self.router.revive(rank);
+        RankCtx {
+            rank,
+            clock: clock0,
+            cost: self.cost,
+            metrics: self.metrics.clone(),
+            fault: self.fault.clone(),
+            router: self.router.clone(),
+            mailbox: Mailbox::new(rx),
+        }
+    }
+
+    /// Spawn every rank on its own thread with the same body; join all.
+    pub fn run_all<T, F>(self: &Arc<Self>, f: F) -> Vec<Result<T, Fail>>
+    where
+        T: Send + 'static,
+        F: Fn(RankCtx) -> Result<T, Fail> + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..self.n)
+            .map(|r| {
+                let f = f.clone();
+                let ctx = self.ctx(r);
+                std::thread::Builder::new()
+                    .name(format!("rank-{r}"))
+                    .spawn(move || f(ctx))
+                    .expect("spawn rank thread")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn tag() -> Tag {
+        Tag::plain(TagKind::Misc(1))
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let w = World::new(2, CostModel::default(), FaultPlan::none());
+        let res = w.run_all(|mut ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, tag(), MsgData::Mat(Matrix::eye(4)))?;
+                Ok(0usize)
+            } else {
+                let m = ctx.recv(0, tag())?.into_mat();
+                assert_eq!(m, Matrix::eye(4));
+                Ok(1usize)
+            }
+        });
+        assert!(res.iter().all(|r| r.is_ok()));
+        let rep = w.metrics.snapshot();
+        assert_eq!(rep.messages, 1);
+        assert_eq!(rep.bytes, 64);
+        assert!(rep.critical_path > 0.0);
+    }
+
+    #[test]
+    fn sendrecv_exchanges_both_ways() {
+        let w = World::new(2, CostModel::default(), FaultPlan::none());
+        let res = w.run_all(|mut ctx| {
+            let me = ctx.rank;
+            let peer = 1 - me;
+            let mine = Matrix::randn(4, 4, me as u64);
+            let got = ctx.sendrecv(peer, tag(), MsgData::Mat(mine))?.into_mat();
+            assert_eq!(got, Matrix::randn(4, 4, peer as u64));
+            Ok(ctx.clock)
+        });
+        let clocks: Vec<f64> = res.into_iter().map(|r| r.unwrap()).collect();
+        // Both ends of an exchange finish at the same logical time.
+        assert!((clocks[0] - clocks[1]).abs() < 1e-12);
+        assert_eq!(w.metrics.snapshot().exchanges, 2);
+    }
+
+    #[test]
+    fn selective_receive_out_of_order() {
+        let w = World::new(2, CostModel::default(), FaultPlan::none());
+        let t1 = Tag::plain(TagKind::Misc(1));
+        let t2 = Tag::plain(TagKind::Misc(2));
+        let res = w.run_all(move |mut ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, t1, MsgData::Ctrl(1))?;
+                ctx.send(1, t2, MsgData::Ctrl(2))?;
+            } else {
+                // receive in the opposite order
+                assert_eq!(ctx.recv(0, t2)?.into_ctrl(), 2);
+                assert_eq!(ctx.recv(0, t1)?.into_ctrl(), 1);
+            }
+            Ok(())
+        });
+        assert!(res.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn recv_from_dead_rank_errors() {
+        use crate::fault::{FailSite, FaultPlan, Phase};
+        let fault = FaultPlan::kill_at(0, 0, 0, Phase::Update);
+        let w = World::new(2, CostModel::default(), fault);
+        let res = w.run_all(|mut ctx| {
+            if ctx.rank == 0 {
+                ctx.maybe_fail(FailSite { panel: 0, step: 0, phase: Phase::Update })?;
+                unreachable!("rank 0 must die");
+            } else {
+                match ctx.recv(0, tag()) {
+                    Err(Fail::RankFailed { rank: 0 }) => Ok(()),
+                    other => panic!("expected RankFailed, got {other:?}"),
+                }
+            }
+        });
+        assert_eq!(res[0], Err(Fail::Killed));
+        assert!(res[1].is_ok());
+        assert_eq!(w.metrics.snapshot().failures, 1);
+    }
+
+    #[test]
+    fn message_sent_before_death_is_still_deliverable() {
+        // ULFM semantics: operations not involving the failure proceed;
+        // a message already on the wire is delivered.
+        let w = World::new(2, CostModel::default(), FaultPlan::none());
+        let r = w.router().clone();
+        let mut c0 = w.ctx(0);
+        let mut c1 = w.ctx(1);
+        c0.send(1, tag(), MsgData::Ctrl(7)).unwrap();
+        r.kill(0);
+        assert_eq!(c1.recv(0, tag()).unwrap().into_ctrl(), 7);
+        // second recv now fails
+        assert!(matches!(c1.recv(0, tag()), Err(Fail::RankFailed { rank: 0 })));
+    }
+
+    #[test]
+    fn revive_restores_communication() {
+        let w = World::new(2, CostModel::default(), FaultPlan::none());
+        let mut c1 = w.ctx(1);
+        {
+            let _c0 = w.ctx(0);
+            w.router().kill(0);
+        }
+        assert!(matches!(c1.recv(0, tag()), Err(Fail::RankFailed { rank: 0 })));
+        let mut c0b = w.revive(0, 1.5);
+        assert_eq!(w.router().incarnation(0), 1);
+        c0b.send(1, tag(), MsgData::Ctrl(9)).unwrap();
+        assert_eq!(c1.recv(0, tag()).unwrap().into_ctrl(), 9);
+        assert!(c0b.clock >= 1.5);
+    }
+
+    #[test]
+    fn compute_advances_clock_and_flops() {
+        let w = World::new(1, CostModel::default(), FaultPlan::none());
+        let mut c = w.ctx(0);
+        c.compute(5_000_000);
+        assert!(c.clock > 0.0);
+        drop(c);
+        let rep = w.metrics.snapshot();
+        assert_eq!(rep.flops, 5_000_000);
+        assert!(rep.critical_path > 0.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Integration: the distributed CAQR factorization is numerically correct
+//! across algorithms, shapes, process counts and block sizes (native
+//! backend; the XLA path is covered in `runtime_xla.rs`).
+
+use std::sync::Arc;
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::coordinator::{run_caqr_matrix, run_caqr_simple};
+use ftcaqr::fault::FaultPlan;
+use ftcaqr::linalg::Matrix;
+use ftcaqr::trace::Trace;
+
+fn cfg(rows: usize, cols: usize, block: usize, procs: usize, alg: Algorithm) -> RunConfig {
+    RunConfig {
+        rows,
+        cols,
+        block,
+        procs,
+        algorithm: alg,
+        ..Default::default()
+    }
+}
+
+fn assert_good(out: &ftcaqr::coordinator::CaqrOutcome, tag: &str) {
+    let res = out.residual.expect("verification enabled");
+    assert!(res < 5e-4, "{tag}: residual {res}");
+    assert!(out.lower_defect < 1e-3, "{tag}: lower defect {}", out.lower_defect);
+    assert!(out.r.is_upper_triangular(1e-6), "{tag}: R not triangular");
+}
+
+#[test]
+fn default_config_both_algorithms() {
+    for alg in [Algorithm::Plain, Algorithm::FaultTolerant] {
+        let out =
+            run_caqr_simple(RunConfig { algorithm: alg, ..Default::default() }).unwrap();
+        assert_good(&out, &format!("{alg:?}"));
+    }
+}
+
+#[test]
+fn sweep_process_counts() {
+    for procs in [1, 2, 3, 4, 5, 8] {
+        for alg in [Algorithm::Plain, Algorithm::FaultTolerant] {
+            let c = cfg(procs * 64, 64, 16, procs, alg);
+            let out = run_caqr_simple(c).unwrap();
+            assert_good(&out, &format!("P={procs} {alg:?}"));
+        }
+    }
+}
+
+#[test]
+fn sweep_block_sizes() {
+    for block in [8, 16, 32] {
+        let c = cfg(512, 128, block, 4, Algorithm::FaultTolerant);
+        let out = run_caqr_simple(c).unwrap();
+        assert_good(&out, &format!("b={block}"));
+    }
+}
+
+#[test]
+fn square_matrix() {
+    // cols == rows/P boundary behaviour: ranks retire panel by panel.
+    let c = cfg(256, 256, 32, 4, Algorithm::FaultTolerant);
+    let out = run_caqr_simple(c).unwrap();
+    assert_good(&out, "square");
+}
+
+#[test]
+fn single_panel_matrix() {
+    // cols == block: the run is a pure TSQR (no trailing update).
+    let c = cfg(256, 32, 32, 4, Algorithm::FaultTolerant);
+    let out = run_caqr_simple(c).unwrap();
+    assert_good(&out, "single-panel");
+}
+
+#[test]
+fn plain_and_ft_produce_identical_r() {
+    // Same tree, same merges — the FT algorithm must not change the
+    // numerics at all (paper: redundancy only, no recomputation).
+    let a = Matrix::randn(512, 128, 42);
+    let mk = |alg| {
+        run_caqr_matrix(
+            cfg(512, 128, 32, 4, alg),
+            a.clone(),
+            Backend::native(),
+            FaultPlan::none(),
+            Trace::disabled(),
+        )
+        .unwrap()
+    };
+    let plain = mk(Algorithm::Plain);
+    let ft = mk(Algorithm::FaultTolerant);
+    assert_eq!(plain.r, ft.r, "FT changed the numerics");
+}
+
+#[test]
+fn matches_single_process_reference() {
+    // P-process run equals the P=1 run (which is plain blocked QR).
+    let a = Matrix::randn(256, 64, 7);
+    let multi = run_caqr_matrix(
+        cfg(256, 64, 16, 4, Algorithm::FaultTolerant),
+        a.clone(),
+        Backend::native(),
+        FaultPlan::none(),
+        Trace::disabled(),
+    )
+    .unwrap();
+    let single = run_caqr_matrix(
+        cfg(256, 64, 16, 1, Algorithm::FaultTolerant),
+        a.clone(),
+        Backend::native(),
+        FaultPlan::none(),
+        Trace::disabled(),
+    )
+    .unwrap();
+    // Both are valid QRs of the same matrix: compare RᵀR (sign-free).
+    use ftcaqr::linalg::{gemm, rel_err, Trans};
+    let g1 = gemm(Trans::Yes, Trans::No, 1.0, &multi.r, &multi.r);
+    let g2 = gemm(Trans::Yes, Trans::No, 1.0, &single.r, &single.r);
+    assert!(rel_err(&g1, &g2) < 1e-4);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let c = cfg(256, 64, 16, 4, Algorithm::FaultTolerant);
+    let o1 = run_caqr_simple(c.clone()).unwrap();
+    let o2 = run_caqr_simple(c).unwrap();
+    assert_eq!(o1.r, o2.r);
+    assert_eq!(o1.report.messages, o2.report.messages);
+    assert_eq!(o1.report.exchanges, o2.report.exchanges);
+}
+
+#[test]
+fn ft_uses_exchanges_plain_uses_messages() {
+    // The communication *pattern* claim: Algorithm 1 = one-way sends,
+    // Algorithm 2 = sendrecv exchanges (paper III-C).
+    let p = run_caqr_simple(cfg(512, 128, 32, 4, Algorithm::Plain)).unwrap();
+    let f = run_caqr_simple(cfg(512, 128, 32, 4, Algorithm::FaultTolerant)).unwrap();
+    assert_eq!(p.report.exchanges, 0);
+    assert!(p.report.messages > 0);
+    assert_eq!(f.report.messages, 0);
+    assert!(f.report.exchanges > 0);
+}
+
+#[test]
+fn ft_critical_path_overhead_is_small() {
+    // Paper C1: failure-free critical path of Algorithm 2 ≈ Algorithm 1
+    // on dual-channel links (it is *shorter* on the update tree, since
+    // one exchange replaces two serialized one-ways).
+    let p = run_caqr_simple(cfg(1024, 256, 32, 8, Algorithm::Plain)).unwrap();
+    let f = run_caqr_simple(cfg(1024, 256, 32, 8, Algorithm::FaultTolerant)).unwrap();
+    let ratio = f.report.critical_path / p.report.critical_path;
+    assert!(
+        ratio < 1.25,
+        "FT critical path ratio {ratio} too large (cp_ft={}, cp_plain={})",
+        f.report.critical_path,
+        p.report.critical_path
+    );
+}
+
+#[test]
+fn ft_extra_flops_bounded() {
+    // Paper C4: the FT variant buys redundancy with extra computation
+    // (both pair members compute merges/updates). The overhead must be
+    // present but bounded (< 2x for these shapes).
+    let p = run_caqr_simple(cfg(512, 128, 32, 4, Algorithm::Plain)).unwrap();
+    let f = run_caqr_simple(cfg(512, 128, 32, 4, Algorithm::FaultTolerant)).unwrap();
+    assert!(f.backend_flops > p.backend_flops);
+    assert!((f.backend_flops as f64) < 2.0 * p.backend_flops as f64);
+}
+
+#[test]
+fn checkpoint_traffic_accounted() {
+    let mut c = cfg(512, 128, 32, 4, Algorithm::Plain);
+    c.checkpoint_every = 2;
+    let with = run_caqr_simple(c).unwrap();
+    let without = run_caqr_simple(cfg(512, 128, 32, 4, Algorithm::Plain)).unwrap();
+    assert!(with.report.bytes > without.report.bytes);
+    assert_good(&with, "checkpointed");
+}
+
+#[test]
+fn rejects_invalid_config() {
+    assert!(run_caqr_simple(cfg(100, 64, 16, 3, Algorithm::Plain)).is_err());
+}

@@ -1,0 +1,240 @@
+//! Property-based invariants (seeded-generator substitute for proptest,
+//! which is unavailable in the offline crate set): hundreds of random
+//! cases per property, deterministic via `Rng64`.
+
+use ftcaqr::coordinator::tree::{
+    exchange_pair, expected_redundancy, is_top, participation, reduce_active,
+    reduce_pair, steps, Role,
+};
+use ftcaqr::linalg::{
+    gemm, gram_residual, householder_qr, leaf_apply, recover_block, rel_err,
+    tree_update, tsqr_merge, Matrix, Rng64, Trans,
+};
+
+const CASES: usize = 120;
+
+/// Random (m, b) with m >= b, bounded sizes.
+fn rand_panel_dims(rng: &mut Rng64) -> (usize, usize) {
+    let b = [2, 4, 8, 16][rng.below(4)];
+    let m = b * (1 + rng.below(8));
+    (m, b)
+}
+
+#[test]
+fn prop_reduce_pairing_is_perfect_matching_each_step() {
+    // Every step's Upper/Lower pairs form a perfect matching of the
+    // still-active indices (plus at most one promoted node).
+    for q in 1..=64 {
+        for s in 0..steps(q) {
+            let mut seen = vec![false; q];
+            let mut promoted = 0;
+            for i in (0..q).filter(|i| reduce_active(*i, s)) {
+                let (role, j) = reduce_pair(i, s, q);
+                match role {
+                    Role::Upper => {
+                        assert!(!seen[i] && !seen[j], "q={q} s={s} i={i}");
+                        assert_eq!(reduce_pair(j, s, q), (Role::Lower, i));
+                        seen[i] = true;
+                        seen[j] = true;
+                    }
+                    Role::Lower => {}
+                    Role::Idle => promoted += 1,
+                }
+            }
+            assert!(promoted <= 1, "q={q} s={s}: {promoted} promoted");
+        }
+    }
+}
+
+#[test]
+fn prop_exchange_pairing_is_involution_and_covers_tree() {
+    for q in 1..=64 {
+        for s in 0..steps(q) {
+            for i in 0..q {
+                if let Some(j) = exchange_pair(i, s, q) {
+                    assert_eq!(exchange_pair(j, s, q), Some(i));
+                    assert!(is_top(i.min(j), i.max(j)));
+                }
+                if reduce_active(i, s) {
+                    if let (Role::Upper | Role::Lower, j) = reduce_pair(i, s, q) {
+                        assert_eq!(exchange_pair(i, s, q), Some(j));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_participation_terminates_and_root_survives() {
+    for q in 1..=64 {
+        for i in 0..q {
+            let p = participation(i, q);
+            assert!(p.len() <= steps(q));
+            if i == 0 {
+                assert!(p.iter().all(|(_, r, _)| *r == Role::Upper));
+            } else {
+                assert_eq!(
+                    p.iter().filter(|(_, r, _)| *r == Role::Lower).count(),
+                    1,
+                    "i={i} q={q}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_redundancy_formula() {
+    for s in 0..8 {
+        assert_eq!(expected_redundancy(s), 2usize << s);
+    }
+}
+
+#[test]
+fn prop_qr_gram_invariant() {
+    let mut rng = Rng64::new(1001);
+    for case in 0..CASES {
+        let (m, b) = rand_panel_dims(&mut rng);
+        let a = Matrix::randn(m, b, rng.next_u64());
+        let f = householder_qr(&a);
+        assert!(
+            gram_residual(&a, &f.r) < 5e-3,
+            "case {case}: m={m} b={b} residual {}",
+            gram_residual(&a, &f.r)
+        );
+        assert!(f.r.is_upper_triangular(0.0));
+        assert!(f.t.is_upper_triangular(1e-6));
+    }
+}
+
+#[test]
+fn prop_zero_row_padding_exact() {
+    let mut rng = Rng64::new(2002);
+    for _ in 0..CASES {
+        let (m, b) = rand_panel_dims(&mut rng);
+        let pad = rng.below(3) * b;
+        let a = Matrix::randn(m, b, rng.next_u64());
+        let f1 = householder_qr(&a);
+        let f2 = householder_qr(&a.pad_to(m + pad, b));
+        assert!(rel_err(&f2.r, &f1.r) < 1e-4);
+        assert!(rel_err(&f2.t, &f1.t) < 1e-4);
+        if pad > 0 {
+            assert_eq!(f2.y.block(m, 0, pad, b).fro_norm(), 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_zero_col_padding_exact_for_updates() {
+    let mut rng = Rng64::new(3003);
+    for _ in 0..CASES {
+        let (m, b) = rand_panel_dims(&mut rng);
+        let n = b * (1 + rng.below(4));
+        let pad = rng.below(3) * b;
+        let f = householder_qr(&Matrix::randn(m, b, rng.next_u64()));
+        let c = Matrix::randn(m, n, rng.next_u64());
+        let want = leaf_apply(&f.y, &f.t, &c);
+        let got = leaf_apply(&f.y, &f.t, &c.pad_to(m, n + pad)).crop_to(m, n);
+        assert!(rel_err(&got, &want) < 1e-4);
+    }
+}
+
+#[test]
+fn prop_tree_update_equals_stacked_apply() {
+    let mut rng = Rng64::new(4004);
+    for _ in 0..CASES {
+        let b = [2, 4, 8][rng.below(3)];
+        let n = b * (1 + rng.below(6));
+        let r0 = Matrix::randn(b, b, rng.next_u64()).triu();
+        let r1 = Matrix::randn(b, b, rng.next_u64()).triu();
+        let (y0, y1, t, _r) = tsqr_merge(&r0, &r1);
+        assert!(rel_err(&y0, &Matrix::eye(b)) < 1e-5, "Y0 must be I");
+        let c0 = Matrix::randn(b, n, rng.next_u64());
+        let c1 = Matrix::randn(b, n, rng.next_u64());
+        let st = tree_update(&c0, &c1, &y1, &t);
+        let full = leaf_apply(&y0.vstack(&y1), &t, &c0.vstack(&c1));
+        assert!(rel_err(&st.c0, &full.block(0, 0, b, n)) < 2e-4);
+        assert!(rel_err(&st.c1, &full.block(b, 0, b, n)) < 2e-4);
+    }
+}
+
+#[test]
+fn prop_recovery_identity() {
+    // Paper III-C: both members of a pair are recomputable from
+    // (C', Y, W) — for every random instance.
+    let mut rng = Rng64::new(5005);
+    for _ in 0..CASES {
+        let b = [2, 4, 8, 16][rng.below(4)];
+        let n = b * (1 + rng.below(6));
+        let r0 = Matrix::randn(b, b, rng.next_u64()).triu();
+        let r1 = Matrix::randn(b, b, rng.next_u64()).triu();
+        let (_y0, y1, t, _r) = tsqr_merge(&r0, &r1);
+        let c0 = Matrix::randn(b, n, rng.next_u64());
+        let c1 = Matrix::randn(b, n, rng.next_u64());
+        let st = tree_update(&c0, &c1, &y1, &t);
+        let rec0 = recover_block(&c0, &Matrix::eye(b), &st.w);
+        let rec1 = recover_block(&c1, &y1, &st.w);
+        assert!(rel_err(&rec0, &st.c0) < 1e-5);
+        assert!(rel_err(&rec1, &st.c1) < 1e-5);
+    }
+}
+
+#[test]
+fn prop_gemm_transpose_consistency() {
+    let mut rng = Rng64::new(6006);
+    for _ in 0..CASES {
+        let m = 1 + rng.below(12);
+        let k = 1 + rng.below(12);
+        let n = 1 + rng.below(12);
+        let a = Matrix::randn(m, k, rng.next_u64());
+        let b = Matrix::randn(k, n, rng.next_u64());
+        let c1 = gemm(Trans::No, Trans::No, 1.0, &a, &b);
+        // Aᵀ flagged transposed == A plain.
+        let c2 = gemm(Trans::Yes, Trans::No, 1.0, &a.transpose(), &b);
+        // Bᵀ flagged transposed == B plain.
+        let c3 = gemm(Trans::No, Trans::Yes, 1.0, &a, &b.transpose());
+        assert!(rel_err(&c2, &c1) < 1e-4);
+        assert!(rel_err(&c3, &c1) < 1e-4);
+    }
+}
+
+#[test]
+fn prop_caqr_random_configs() {
+    // End-to-end random configuration fuzz (native backend).
+    use ftcaqr::config::{Algorithm, RunConfig};
+    use ftcaqr::coordinator::run_caqr_simple;
+    let mut rng = Rng64::new(7007);
+    for case in 0..24 {
+        let b = [8, 16][rng.below(2)];
+        let mult = 1 + rng.below(3); // local rows = mult * b
+        let procs = 1 + rng.below(6);
+        let panels = 1 + rng.below(4);
+        let cfg = RunConfig {
+            rows: procs * mult * b,
+            cols: panels * b,
+            block: b,
+            procs,
+            algorithm: if rng.chance(0.5) {
+                Algorithm::Plain
+            } else {
+                Algorithm::FaultTolerant
+            },
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        if cfg.validate().is_err() {
+            continue; // e.g. cols > rows
+        }
+        let out = run_caqr_simple(cfg.clone()).unwrap();
+        let res = out.residual.unwrap();
+        assert!(
+            res < 1e-3,
+            "case {case} cfg {}x{} b{} p{}: residual {res}",
+            cfg.rows,
+            cfg.cols,
+            cfg.block,
+            cfg.procs
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration over the PJRT runtime: load the real AOT artifacts, run
+//! every op against the pure-Rust oracle, and run a full XLA-backed
+//! FT-CAQR with a failure. Skipped (cleanly) when `make artifacts` has
+//! not produced the artifact directory.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::coordinator::run_caqr_matrix;
+use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::linalg::{self, rel_err, Matrix};
+use ftcaqr::runtime::Engine;
+use ftcaqr::trace::Trace;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn xla_ops_match_native_oracle() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let xla = Backend::xla(engine);
+
+    // panel_qr (exact shape + padded shape)
+    for m in [64, 100, 128] {
+        let a = Matrix::randn(m, 16, m as u64);
+        let x = xla.panel_qr(&a).unwrap();
+        let n = linalg::householder_qr(&a);
+        assert!(rel_err(&x.r, &n.r) < 1e-3, "panel_qr m={m} R");
+        assert!(rel_err(&x.y, &n.y) < 1e-3, "panel_qr m={m} Y");
+        assert!(rel_err(&x.t, &n.t) < 1e-3, "panel_qr m={m} T");
+    }
+
+    // tsqr_merge
+    let r0 = Matrix::randn(16, 16, 1).triu();
+    let r1 = Matrix::randn(16, 16, 2).triu();
+    let mx = xla.tsqr_merge(&r0, &r1).unwrap();
+    let (ny0, ny1, nt, nr) = linalg::tsqr_merge(&r0, &r1);
+    assert!(rel_err(&mx.y0, &ny0) < 1e-3);
+    assert!(rel_err(&mx.y1, &ny1) < 1e-3);
+    assert!(rel_err(&mx.t, &nt) < 1e-3);
+    assert!(rel_err(&mx.r, &nr) < 1e-3);
+
+    // leaf_apply with padding on both dims
+    let f = linalg::householder_qr(&Matrix::randn(100, 16, 3));
+    let c = Matrix::randn(100, 50, 4);
+    let got = xla.leaf_apply(&f.y, &f.t, &c).unwrap();
+    let want = linalg::leaf_apply(&f.y, &f.t, &c);
+    assert!(rel_err(&got, &want) < 1e-3);
+
+    // tree_update + recover
+    let c0 = Matrix::randn(16, 48, 5);
+    let c1 = Matrix::randn(16, 48, 6);
+    let stx = xla.tree_update(&c0, &c1, &mx.y1, &mx.t).unwrap();
+    let stn = linalg::tree_update(&c0, &c1, &ny1, &nt);
+    assert!(rel_err(&stx.w, &stn.w) < 1e-3);
+    assert!(rel_err(&stx.c0, &stn.c0) < 1e-3);
+    assert!(rel_err(&stx.c1, &stn.c1) < 1e-3);
+    let rec = xla.recover(&c1, &mx.y1, &stx.w).unwrap();
+    assert!(rel_err(&rec, &stn.c1) < 1e-3);
+}
+
+#[test]
+fn engine_caches_compilations() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let want = BTreeMap::from([("b", 16usize)]);
+    let entry = engine.manifest().select("tsqr_merge", &want).unwrap().clone();
+    let r0 = Matrix::randn(16, 16, 1).triu();
+    let r1 = Matrix::randn(16, 16, 2).triu();
+    for _ in 0..5 {
+        engine.exec(&entry, vec![r0.clone(), r1.clone()]).unwrap();
+    }
+    let (execs, compiles, _, _) = engine.stats().snapshot();
+    assert_eq!(execs, 5);
+    assert_eq!(compiles, 1, "executable must be compiled once and cached");
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let want = BTreeMap::from([("b", 16usize)]);
+    let entry = engine.manifest().select("tsqr_merge", &want).unwrap().clone();
+    // wrong arity
+    assert!(engine.exec(&entry, vec![Matrix::eye(16)]).is_err());
+    // wrong shape
+    assert!(engine
+        .exec(&entry, vec![Matrix::eye(8), Matrix::eye(8)])
+        .is_err());
+}
+
+#[test]
+fn xla_backed_caqr_with_recovery_matches_native() {
+    let dir = require_artifacts!();
+    let cfg = RunConfig {
+        rows: 512,
+        cols: 128,
+        block: 32,
+        procs: 4,
+        algorithm: Algorithm::FaultTolerant,
+        ..Default::default()
+    };
+    let a = Matrix::randn(cfg.rows, cfg.cols, 9);
+    let kills = vec![ScheduledKill {
+        rank: 2,
+        site: FailSite { panel: 1, step: 0, phase: Phase::Update },
+    }];
+
+    let engine = Engine::start(&dir).unwrap();
+    let xla_out = run_caqr_matrix(
+        cfg.clone(),
+        a.clone(),
+        Backend::xla(engine),
+        FaultPlan::new(FaultSpec::Schedule { kills }),
+        Trace::disabled(),
+    )
+    .unwrap();
+    assert_eq!(xla_out.report.recoveries, 1);
+    let res = xla_out.residual.unwrap();
+    assert!(res < 1e-3, "xla residual {res}");
+
+    let native_out = run_caqr_matrix(
+        cfg,
+        a,
+        Backend::native(),
+        FaultPlan::none(),
+        Trace::disabled(),
+    )
+    .unwrap();
+    // Same factorization up to f32 kernel-order effects.
+    assert!(rel_err(&xla_out.r, &native_out.r) < 5e-3);
+}
