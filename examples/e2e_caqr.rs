@@ -13,7 +13,7 @@
 use ftcaqr::backend::Backend;
 use ftcaqr::config::{Algorithm, RunConfig};
 use ftcaqr::coordinator::run_caqr_matrix;
-use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
 use ftcaqr::linalg::Matrix;
 use ftcaqr::runtime::Engine;
 use ftcaqr::trace::Trace;
@@ -43,12 +43,10 @@ fn main() -> anyhow::Result<()> {
     let backend = Backend::xla(engine.clone());
 
     let a = Matrix::randn(cfg.rows, cfg.cols, 2026);
-    let fault = FaultPlan::new(FaultSpec::Schedule {
-        kills: vec![
-            ScheduledKill { rank: 3, site: FailSite { panel: 2, step: 0, phase: Phase::Update } },
-            ScheduledKill { rank: 6, site: FailSite { panel: 7, step: 1, phase: Phase::Tsqr } },
-        ],
-    });
+    let fault = FaultPlan::schedule(vec![
+        ScheduledKill::new(3, 2, 0, Phase::Update),
+        ScheduledKill::new(6, 7, 1, Phase::Tsqr),
+    ]);
     let trace = Trace::new();
     let t0 = std::time::Instant::now();
     let out = run_caqr_matrix(cfg.clone(), a, backend, fault, trace.clone())?;

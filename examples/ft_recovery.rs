@@ -9,7 +9,7 @@
 use ftcaqr::backend::Backend;
 use ftcaqr::config::RunConfig;
 use ftcaqr::coordinator::run_caqr_matrix;
-use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
 use ftcaqr::linalg::Matrix;
 use ftcaqr::trace::Trace;
 
@@ -42,12 +42,8 @@ fn main() -> anyhow::Result<()> {
     );
     for (victim, panel) in [(3usize, 0usize), (5, 1), (2, 3), (6, 5)] {
         let trace = Trace::new();
-        let fault = FaultPlan::new(FaultSpec::Schedule {
-            kills: vec![ScheduledKill {
-                rank: victim,
-                site: FailSite { panel, step: 0, phase: Phase::Update },
-            }],
-        });
+        let fault =
+            FaultPlan::schedule(vec![ScheduledKill::new(victim, panel, 0, Phase::Update)]);
         let out = run_caqr_matrix(cfg.clone(), a.clone(), Backend::native(), fault, trace.clone())?;
         assert_eq!(out.report.failures, 1);
         assert_eq!(out.report.recoveries, 1);
@@ -61,6 +57,49 @@ fn main() -> anyhow::Result<()> {
         );
         assert!(identical, "recovered factorization must be bit-identical");
     }
+
+    // -- multi-failure scenarios (k >= 2) ---------------------------------
+    println!("\n== multi-failure scenarios ==");
+
+    // k = 3 independent kills across panels and phases: every replacement
+    // replays from single-buddy state; the result is still bit-identical.
+    let fault = FaultPlan::schedule(vec![
+        ScheduledKill::new(3, 0, 0, Phase::Update),
+        ScheduledKill::new(5, 2, 1, Phase::Tsqr),
+        ScheduledKill::new(1, 4, 0, Phase::Update),
+    ]);
+    let out = run_caqr_matrix(cfg.clone(), a.clone(), Backend::native(), fault, Trace::disabled())?;
+    assert_eq!(out.report.failures, 3);
+    assert!(out.r == clean.r);
+    println!(
+        "  k=3 disjoint kills   : {} failures, {} recoveries, identical R — OK",
+        out.report.failures, out.report.recoveries
+    );
+
+    // A failure DURING recovery: the first replacement of rank 3 dies at
+    // the start of its replay; the second replacement completes it.
+    let fault = FaultPlan::schedule(vec![
+        ScheduledKill::new(3, 2, 0, Phase::Update),
+        ScheduledKill::new(3, 0, 0, Phase::Tsqr).at_incarnation(1),
+    ]);
+    let out = run_caqr_matrix(cfg.clone(), a.clone(), Backend::native(), fault, Trace::disabled())?;
+    assert_eq!(out.report.failures, 2);
+    assert!(out.r == clean.r);
+    println!(
+        "  kill during REBUILD  : {} failures, {} recoveries, identical R — OK",
+        out.report.failures, out.report.recoveries
+    );
+
+    // A correlated buddy-pair crash: ranks 2 and 3 (step-0 exchange
+    // buddies) die at the same instant AFTER completing a shared step —
+    // both copies of that step's {W, T, Y1} are lost, which the paper's
+    // single-buddy protocol cannot survive. The run reports it instead
+    // of hanging.
+    let fault = FaultPlan::kill_pair_at((2, 3), 0, 1, Phase::Tsqr);
+    let res = run_caqr_matrix(cfg.clone(), a.clone(), Backend::native(), fault, Trace::disabled());
+    let err = format!("{:#}", res.expect_err("buddy-pair crash must fail"));
+    assert!(err.contains("unrecoverable"));
+    println!("  buddy-pair crash     : reported unrecoverable (no hang) — OK");
 
     println!("\nEvery recovery reconstructed the failed rank from its initial");
     println!("block + per-step {{W, T, Y1}} held by ONE buddy per step (C2).");

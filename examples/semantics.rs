@@ -10,7 +10,7 @@ use std::sync::Arc;
 use ftcaqr::config::RunConfig;
 use ftcaqr::coordinator::run_caqr_matrix;
 use ftcaqr::backend::Backend;
-use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
 use ftcaqr::ft::{Fail, Semantics};
 use ftcaqr::linalg::Matrix;
 use ftcaqr::sim::{CostModel, MsgData, Tag, TagKind, World};
@@ -64,12 +64,7 @@ fn demo_shrink() {
 fn demo_rebuild() {
     let cfg = RunConfig { rows: 512, cols: 128, block: 32, procs: 4, ..Default::default() };
     let a = Matrix::randn(cfg.rows, cfg.cols, 1);
-    let fault = FaultPlan::new(FaultSpec::Schedule {
-        kills: vec![ScheduledKill {
-            rank: 2,
-            site: FailSite { panel: 1, step: 0, phase: Phase::Update },
-        }],
-    });
+    let fault = FaultPlan::schedule(vec![ScheduledKill::new(2, 1, 0, Phase::Update)]);
     let out = run_caqr_matrix(cfg, a, Backend::native(), fault, Trace::disabled()).unwrap();
     assert_eq!(out.report.failures, 1);
     assert_eq!(out.report.recoveries, 1);
@@ -88,12 +83,7 @@ fn demo_abort() {
         ..Default::default()
     };
     let a = Matrix::randn(cfg.rows, cfg.cols, 1);
-    let fault = FaultPlan::new(FaultSpec::Schedule {
-        kills: vec![ScheduledKill {
-            rank: 2,
-            site: FailSite { panel: 1, step: 0, phase: Phase::Update },
-        }],
-    });
+    let fault = FaultPlan::schedule(vec![ScheduledKill::new(2, 1, 0, Phase::Update)]);
     let res = run_caqr_matrix(cfg, a, Backend::native(), fault, Trace::disabled());
     assert!(res.is_err());
     println!("  ABORT  : failure propagated, run aborted as configured. OK");

@@ -12,7 +12,7 @@ use ftcaqr::backend::Backend;
 use ftcaqr::checkpoint::CheckpointModel;
 use ftcaqr::config::{Algorithm, RunConfig};
 use ftcaqr::coordinator::run_caqr_matrix;
-use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
 use ftcaqr::linalg::Matrix;
 use ftcaqr::trace::Trace;
 
@@ -74,12 +74,7 @@ fn main() {
         "fail panel", "ABFT cp-overhead", "ckpt i=1", "ckpt i=2", "ckpt i=4"
     );
     for panel in [1usize, 3, 5, 7] {
-        let fault = FaultPlan::new(FaultSpec::Schedule {
-            kills: vec![ScheduledKill {
-                rank: 5,
-                site: FailSite { panel, step: 0, phase: Phase::Update },
-            }],
-        });
+        let fault = FaultPlan::schedule(vec![ScheduledKill::new(5, panel, 0, Phase::Update)]);
         let failed = run(cfg0.clone(), fault);
         if failed.report.failures == 0 {
             continue;

@@ -8,7 +8,7 @@ mod common;
 use ftcaqr::backend::Backend;
 use ftcaqr::config::RunConfig;
 use ftcaqr::coordinator::run_caqr_matrix;
-use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
 use ftcaqr::linalg::Matrix;
 use ftcaqr::trace::Trace;
 
@@ -31,12 +31,7 @@ fn main() {
     );
     for panel in 0..cfg.panels() {
         let trace = Trace::new();
-        let fault = FaultPlan::new(FaultSpec::Schedule {
-            kills: vec![ScheduledKill {
-                rank: 5,
-                site: FailSite { panel, step: 0, phase: Phase::Update },
-            }],
-        });
+        let fault = FaultPlan::schedule(vec![ScheduledKill::new(5, panel, 0, Phase::Update)]);
         let out =
             run_caqr_matrix(cfg.clone(), a.clone(), Backend::native(), fault, trace.clone())
                 .unwrap();
@@ -76,12 +71,8 @@ fn main() {
         )
         .unwrap();
         let trace = Trace::new();
-        let fault = FaultPlan::new(FaultSpec::Schedule {
-            kills: vec![ScheduledKill {
-                rank: procs / 2,
-                site: FailSite { panel: 4, step: 0, phase: Phase::Update },
-            }],
-        });
+        let fault =
+            FaultPlan::schedule(vec![ScheduledKill::new(procs / 2, 4, 0, Phase::Update)]);
         let out =
             run_caqr_matrix(cfg, a, Backend::native(), fault, trace.clone()).unwrap();
         println!(
@@ -98,12 +89,7 @@ fn main() {
         let cfg =
             RunConfig { rows: 1024, cols: 256, block: 32, procs: 8, ..Default::default() };
         let a = Matrix::randn(cfg.rows, cfg.cols, 7);
-        let fault = FaultPlan::new(FaultSpec::Schedule {
-            kills: vec![ScheduledKill {
-                rank: 5,
-                site: FailSite { panel: 4, step: 0, phase: Phase::Update },
-            }],
-        });
+        let fault = FaultPlan::schedule(vec![ScheduledKill::new(5, 4, 0, Phase::Update)]);
         let _ = run_caqr_matrix(cfg, a, Backend::native(), fault, Trace::disabled()).unwrap();
     });
     common::row("recovery/P8/1024x256/panel4", med, mean, sd, "");

@@ -27,7 +27,9 @@ pub struct MergeFactors {
     pub y0: Matrix,
     /// Bottom reflector block — the `Y₁` of the paper's Algorithm 1/2.
     pub y1: Matrix,
+    /// Upper-triangular block reflector factor.
     pub t: Matrix,
+    /// Merged upper-triangular factor.
     pub r: Matrix,
 }
 
@@ -45,7 +47,9 @@ pub struct XlaBackend {
 
 /// The compute interface used by every coordinator rank.
 pub enum Backend {
+    /// Pure-Rust linalg oracle.
     Native(NativeBackend),
+    /// PJRT-backed AOT artifacts.
     Xla(XlaBackend),
 }
 

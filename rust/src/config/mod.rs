@@ -70,10 +70,19 @@ pub struct RunConfig {
     pub block: usize,
     /// Number of simulated processes (P); each owns rows/P block rows.
     pub procs: usize,
+    /// Worker-pool width driving the simulated ranks (0 = auto: the
+    /// machine's core count, capped by P). P is *not* bounded by this —
+    /// rank tasks park on communication instead of holding a thread.
+    pub workers: usize,
+    /// Trailing-update algorithm (paper Algorithm 1 vs 2).
     pub algorithm: Algorithm,
+    /// Failure-handling policy (FT-MPI / ULFM, paper §II).
     pub semantics: Semantics,
+    /// Compute-backend selection.
     pub backend: BackendKind,
+    /// Communication/computation cost parameters.
     pub cost: CostModel,
+    /// Failure model for the run.
     pub fault: FaultSpec,
     /// Diskless-checkpoint interval in panels (0 = off) — the §II
     /// comparator baseline, experiment E7.
@@ -91,6 +100,7 @@ impl Default for RunConfig {
             cols: 64,
             block: 16,
             procs: 4,
+            workers: 0,
             algorithm: Algorithm::default(),
             semantics: Semantics::default(),
             backend: BackendKind::default(),
@@ -112,6 +122,16 @@ impl RunConfig {
     /// Number of panels in the CAQR outer loop.
     pub fn panels(&self) -> usize {
         self.cols.div_ceil(self.block)
+    }
+
+    /// The worker-pool width actually used: `workers`, or (when 0) the
+    /// machine's available parallelism capped by the process count.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            crate::sim::default_workers(self.procs)
+        }
     }
 
     /// Validate all structural invariants the coordinator assumes.
@@ -172,6 +192,7 @@ impl RunConfig {
                 "cols" => c.cols = v.parse()?,
                 "block" => c.block = v.parse()?,
                 "procs" => c.procs = v.parse()?,
+                "workers" => c.workers = v.parse()?,
                 "algorithm" => c.algorithm = v.parse().map_err(anyhow::Error::msg)?,
                 "semantics" => c.semantics = v.parse().map_err(anyhow::Error::msg)?,
                 "checkpoint_every" => c.checkpoint_every = v.parse()?,
@@ -197,6 +218,7 @@ impl RunConfig {
         out.push_str(&format!("cols = {}\n", self.cols));
         out.push_str(&format!("block = {}\n", self.block));
         out.push_str(&format!("procs = {}\n", self.procs));
+        out.push_str(&format!("workers = {}\n", self.workers));
         out.push_str(&format!("algorithm = {}\n", self.algorithm));
         out.push_str(&format!("semantics = {}\n", self.semantics));
         out.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));

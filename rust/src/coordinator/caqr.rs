@@ -1,11 +1,15 @@
 //! The CAQR panel driver and per-rank algorithm bodies.
 //!
 //! `run_caqr` builds the simulated world, distributes block rows, runs
-//! every rank's panel loop (TSQR + trailing update, plain or FT), joins
-//! the tasks — including any REBUILD replacements spawned by recovery —
-//! assembles the reduced matrix, and verifies the Gram identity.
+//! every rank's panel loop (TSQR + trailing update, plain or FT) as a
+//! resumable task on the bounded worker pool — including any REBUILD
+//! replacement tasks spawned by recovery — assembles the reduced matrix,
+//! and verifies the Gram identity. Rank bodies are explicit state
+//! machines ([`Ranker`]): they park on in-flight exchanges/receives
+//! instead of blocking an OS thread, so P = 256–1024 rank runs fit on a
+//! laptop core count (see `DESIGN.md` "Scheduler: parking and wakeup").
 //!
-//! Conventions (see DESIGN.md):
+//! Conventions (see `DESIGN.md` "Pair stacking and message patterns"):
 //! * pair stacking: the smaller tree index owns the globally-upper rows
 //!   and is the top (`R0`/`C0'`) of every stacked merge; the top member
 //!   continues up the tree, the bottom leaves after its step.
@@ -16,12 +20,11 @@
 //!   compute `W` and their own update; `{W, T, C', Y₁}` is retained for
 //!   single-buddy recovery (paper §III-C).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::Result;
 use std::sync::Mutex;
-use std::thread::JoinHandle;
 
 use crate::backend::Backend;
 use crate::config::{Algorithm, RunConfig};
@@ -29,28 +32,69 @@ use crate::fault::{FailSite, FaultPlan, Phase};
 use crate::ft::Fail;
 use crate::linalg::{gram_residual, Matrix};
 use crate::metrics::Report;
-use crate::sim::{CostModel, MsgData, Tag, TagKind, World};
+use crate::sim::{CostModel, MsgData, RankCtx, RankTask, Spawner, Tag, TagKind, TaskPoll, World};
 use crate::trace::Trace;
 
 use super::panel::{geometry, PanelGeom};
+use super::recovery::FtOp;
 use super::store::{RecoveryStore, RevivalGate};
 use super::tree::{self, Role};
 
 /// Immutable context shared by every rank task (original and rebuilt).
 pub struct Shared {
+    /// The run description.
     pub cfg: RunConfig,
+    /// Compute backend serving the five numeric ops.
     pub backend: Arc<Backend>,
+    /// Buddy-retained redundancy state (paper §III-C).
     pub store: Arc<RecoveryStore>,
+    /// REBUILD arbitration: one winner per dead incarnation.
     pub gate: Arc<RevivalGate>,
+    /// Structured event trace.
     pub trace: Arc<Trace>,
+    /// The simulated machine.
     pub world: Arc<World>,
     /// Per-rank initial blocks — the "subpart of the initial matrix" the
     /// paper's recovery re-reads (stable storage / parallel FS stand-in).
     pub initial: Vec<Matrix>,
     /// Final local blocks, written by each rank on completion.
     pub results: Mutex<HashMap<usize, Matrix>>,
-    /// Join handles of REBUILD replacement tasks.
-    pub revived: Mutex<Vec<JoinHandle<Result<(), Fail>>>>,
+    /// First unrecoverable failure observed; poisons the whole run (no
+    /// further REBUILDs, every detector aborts).
+    pub poison: Mutex<Option<Fail>>,
+    /// Ranks parked waiting for a buddy's retained-state insert (a
+    /// replaying replacement that outran its wall-clock-slower buddy).
+    pub(crate) store_watchers: Mutex<HashSet<usize>>,
+}
+
+impl Shared {
+    /// The poisoning failure, if the run has been declared unrecoverable.
+    pub fn poisoned(&self) -> Option<Fail> {
+        self.poison.lock().unwrap().clone()
+    }
+
+    pub(crate) fn poison_with(&self, f: Fail) {
+        let mut g = self.poison.lock().unwrap();
+        if g.is_none() {
+            *g = Some(f);
+        }
+    }
+
+    /// Register `rank` to be poked on the next retained-state insert.
+    pub(crate) fn watch_store(&self, rank: usize) {
+        self.store_watchers.lock().unwrap().insert(rank);
+    }
+
+    /// Poke every watcher (called after each retained-state insert).
+    pub(crate) fn notify_store_watchers(&self) {
+        let drained: Vec<usize> = {
+            let mut g = self.store_watchers.lock().unwrap();
+            g.drain().collect()
+        };
+        for r in drained {
+            self.world.router().notify(r);
+        }
+    }
 }
 
 /// Outcome of a full factorization run.
@@ -75,81 +119,188 @@ pub struct CaqrOutcome {
     pub backend_flops: u64,
 }
 
-/// One rank's per-panel working state.
+/// TSQR-phase working state for one panel on one rank.
+pub(crate) struct TsqrPhase {
+    g: PanelGeom,
+    leaf_y: Matrix,
+    leaf_t: Matrix,
+    r: Matrix,
+    /// (Y1, T) per tree step where this rank is a reduce-tree member.
+    merges: Vec<Option<(Matrix, Matrix)>>,
+    s: usize,
+    wait: TsqrWait,
+}
+
+enum TsqrWait {
+    /// Ready to enter tree step `s`.
+    Enter,
+    /// FT exchange in flight.
+    Ft(FtOp),
+    /// Plain upper member waiting for the lower member's R.
+    PlainRecv { buddy: usize, tag: Tag },
+}
+
+/// Update-phase working state for one panel on one rank.
+pub(crate) struct UpdatePhase {
+    g: PanelGeom,
+    merges: Vec<Option<(Matrix, Matrix)>>,
+    /// The top-b rows of this rank's active trailing block.
+    cp: Matrix,
+    s: usize,
+    wait: UpdateWait,
+}
+
+enum UpdateWait {
+    Enter,
+    Ft { op: FtOp, role: Role, y1: Matrix, t: Matrix },
+    PlainUpper { buddy: usize, tag: Tag, y1: Matrix, t: Matrix },
+    PlainLowerW { buddy: usize, tag: Tag },
+}
+
+/// Where one rank task currently is in the panel loop.
+enum State {
+    /// About to start panel `k` (or finish, when `k == panels`).
+    Panel { k: usize },
+    Tsqr(TsqrPhase),
+    Update(UpdatePhase),
+    Checkpoint { g: PanelGeom, op: FtOp },
+    Done,
+}
+
+/// Outcome of stepping a phase state machine.
+enum Stepped {
+    /// A non-blocking primitive reported "nothing yet" — park.
+    Parked,
+    /// The phase completed.
+    Finished,
+}
+
+/// One rank's resumable panel-loop body (original or REBUILD replacement).
 pub(crate) struct Ranker {
-    pub shared: Arc<Shared>,
-    pub ctx: crate::sim::RankCtx,
+    pub(crate) shared: Arc<Shared>,
     /// True for a REBUILD replacement replaying history.
-    pub resume: bool,
+    pub(crate) resume: bool,
     /// The local block-row (m_local x cols), updated in place.
-    pub local: Matrix,
+    pub(crate) local: Matrix,
+    state: State,
+}
+
+impl RankTask for Ranker {
+    fn poll(&mut self, ctx: &mut RankCtx, sp: &Spawner) -> TaskPoll {
+        match self.drive(ctx, sp) {
+            Ok(true) => TaskPoll::Ready(Ok(())),
+            Ok(false) => TaskPoll::Pending,
+            Err(e) => {
+                if let Fail::Unrecoverable { .. } = &e {
+                    // Poison BEFORE killing ourselves so detectors see it.
+                    self.shared.poison_with(e.clone());
+                }
+                // A rank that exits abnormally (Abort cascade,
+                // unrecoverable failure) must look dead to its peers, or
+                // they would park forever waiting for its messages —
+                // MPI_Abort semantics.
+                if e != Fail::Killed {
+                    ctx.router().kill(ctx.rank);
+                }
+                TaskPoll::Ready(Err(e))
+            }
+        }
+    }
 }
 
 impl Ranker {
-    pub(crate) fn rank(&self) -> usize {
-        self.ctx.rank
+    pub(crate) fn new(shared: Arc<Shared>, resume: bool, local: Matrix) -> Self {
+        Self { shared, resume, local, state: State::Panel { k: 0 } }
     }
 
     fn cfg(&self) -> &RunConfig {
         &self.shared.cfg
     }
 
-    /// Full panel loop; returns the final local block.
-    pub fn run(mut self) -> Result<(), Fail> {
-        let out = self.run_inner();
-        if let Err(e) = &out {
-            // A rank that exits abnormally (Abort cascade, unrecoverable
-            // failure) must look dead to its peers, or they would block
-            // forever waiting for its messages — MPI_Abort semantics.
-            if *e != Fail::Killed {
-                self.ctx.router().kill(self.ctx.rank);
+    /// Run the state machine forward as far as possible.
+    /// `Ok(true)` = the rank completed; `Ok(false)` = parked.
+    fn drive(&mut self, ctx: &mut RankCtx, sp: &Spawner) -> Result<bool, Fail> {
+        loop {
+            let state = std::mem::replace(&mut self.state, State::Done);
+            match state {
+                State::Panel { k } => {
+                    if k == self.cfg().panels() {
+                        self.finish(ctx);
+                        return Ok(true);
+                    }
+                    let g = geometry(self.cfg(), ctx.rank, k);
+                    crate::simlog!(
+                        "[r{} inc] panel {k} start (resume={})",
+                        ctx.rank,
+                        self.resume
+                    );
+                    if !g.participates {
+                        self.state = State::Panel { k: k + 1 };
+                        continue;
+                    }
+                    let ph = self.begin_tsqr(ctx, g);
+                    self.state = State::Tsqr(ph);
+                }
+                State::Tsqr(mut ph) => match self.step_tsqr(&mut ph, ctx, sp)? {
+                    Stepped::Parked => {
+                        self.state = State::Tsqr(ph);
+                        return Ok(false);
+                    }
+                    Stepped::Finished => {
+                        self.state = self.after_tsqr(ctx, ph);
+                    }
+                },
+                State::Update(mut ph) => match self.step_update(&mut ph, ctx, sp)? {
+                    Stepped::Parked => {
+                        self.state = State::Update(ph);
+                        return Ok(false);
+                    }
+                    Stepped::Finished => {
+                        let g = ph.g;
+                        self.local.set_block(g.start, g.trail_col, &ph.cp);
+                        self.state = self.next_after_panel(ctx.rank, g);
+                    }
+                },
+                State::Checkpoint { g, mut op } => match self.poll_ft(&mut op, ctx, sp)? {
+                    None => {
+                        self.state = State::Checkpoint { g, op };
+                        return Ok(false);
+                    }
+                    Some(_peer_copy) => {
+                        self.shared.trace.emit(
+                            ctx.clock,
+                            ctx.rank,
+                            g.k,
+                            0,
+                            "checkpoint",
+                            op.peer() as f64,
+                        );
+                        self.state = State::Panel { k: g.k + 1 };
+                    }
+                },
+                State::Done => unreachable!("drive called after completion"),
             }
         }
-        out
     }
 
-    fn run_inner(&mut self) -> Result<(), Fail> {
-        let panels = self.cfg().panels();
-        for k in 0..panels {
-            let g = geometry(self.cfg(), self.rank(), k);
-            crate::simlog!("[r{} inc] panel {k} start (resume={})", self.rank(), self.resume);
-            if !g.participates {
-                continue;
-            }
-            let factors = self.panel_tsqr(&g)?;
-            if g.n_trail > 0 {
-                self.panel_update(&g, &factors)?;
-            }
-            // Diskless-checkpoint baseline traffic (E7), if configured.
-            self.maybe_checkpoint(&g)?;
-            // NOTE: retained state is kept for the whole run. Replay of a
-            // failed rank walks its entire history (paper III-C recovers
-            // one step from one buddy; the full-state rebuild composes
-            // those per-step recoveries), so early retirement would leave
-            // a later replay with nothing to read — see the E7 bench for
-            // the measured memory cost vs diskless checkpointing.
-        }
+    fn finish(&mut self, ctx: &mut RankCtx) {
         if self.resume {
-            self.ctx.metrics.record_recovery();
-            self.shared.trace.emit(self.ctx.clock, self.rank(), 0, 0, "recovery_done", 0.0);
+            ctx.metrics.record_recovery();
+            self.shared.trace.emit(ctx.clock, ctx.rank, 0, 0, "recovery_done", 0.0);
         }
-        crate::simlog!("[r{}] done", self.rank());
+        crate::simlog!("[r{}] done", ctx.rank);
         self.shared
             .results
             .lock()
             .unwrap()
-            .insert(self.rank(), self.local.clone());
-        Ok(())
+            .insert(ctx.rank, self.local.clone());
     }
 
-    /// Panel factorization: local leaf QR + reduction tree (plain) or
-    /// all-exchange tree (FT, paper §III-B). Returns the leaf factors
-    /// and the per-step merge factors needed by the trailing update.
-    fn panel_tsqr(&mut self, g: &PanelGeom) -> Result<PanelFactorsSet, Fail> {
+    /// Leaf factorization of the active panel rows (zero-row padded) —
+    /// the local, non-blocking prologue of the TSQR phase.
+    fn begin_tsqr(&mut self, ctx: &mut RankCtx, g: PanelGeom) -> TsqrPhase {
         let b = self.cfg().block;
         let m_local = self.cfg().local_rows();
-
-        // Leaf factorization of the active panel rows (zero-row padded).
         let apanel = self
             .local
             .block(g.start, g.k * b, g.active_m, b)
@@ -158,119 +309,244 @@ impl Ranker {
             .shared
             .backend
             .panel_qr(&apanel)
-            
-            .map_err(|e| self.backend_err("panel_qr", e))?;
-        self.ctx.compute(crate::backend::flops::panel_qr(m_local, b));
-
-        let mut r = leaf.r.clone();
+            .unwrap_or_else(|e| self.backend_err(ctx.rank, "panel_qr", e));
+        ctx.compute(crate::backend::flops::panel_qr(m_local, b));
         let nsteps = tree::steps(g.q);
-        let mut merges: Vec<Option<(Matrix, Matrix)>> = vec![None; nsteps];
+        TsqrPhase {
+            g,
+            leaf_y: leaf.y,
+            leaf_t: leaf.t,
+            r: leaf.r,
+            merges: vec![None; nsteps],
+            s: 0,
+            wait: TsqrWait::Enter,
+        }
+    }
 
-        match self.cfg().algorithm {
-            Algorithm::FaultTolerant => {
-                for s in 0..nsteps {
-                    let site = FailSite { panel: g.k, step: s, phase: Phase::Tsqr };
-                    self.ctx.maybe_fail(site)?;
-                    let Some(bidx) = tree::exchange_pair(g.idx, s, g.q) else {
-                        continue;
-                    };
-                    let buddy = bidx + g.owner;
-                    let tag = Tag::new(TagKind::TsqrR, g.k, s);
+    /// Panel factorization tree: plain reduction or FT all-exchange
+    /// (paper §III-B), with the replay shortcut for REBUILD replacements.
+    fn step_tsqr(
+        &mut self,
+        ph: &mut TsqrPhase,
+        ctx: &mut RankCtx,
+        sp: &Spawner,
+    ) -> Result<Stepped, Fail> {
+        let b = self.cfg().block;
+        let nsteps = tree::steps(ph.g.q);
+        loop {
+            match std::mem::replace(&mut ph.wait, TsqrWait::Enter) {
+                TsqrWait::Enter => {
+                    if ph.s == nsteps {
+                        return Ok(Stepped::Finished);
+                    }
+                    let g = ph.g;
+                    let s = ph.s;
+                    match self.cfg().algorithm {
+                        Algorithm::FaultTolerant => {
+                            let site = FailSite { panel: g.k, step: s, phase: Phase::Tsqr };
+                            self.maybe_fail(ctx, site)?;
+                            let Some(bidx) = tree::exchange_pair(g.idx, s, g.q) else {
+                                ph.s += 1;
+                                continue;
+                            };
+                            let buddy = bidx + g.owner;
+                            let tag = Tag::new(TagKind::TsqrR, g.k, s);
 
-                    // Replay path: take the completed merge from the
-                    // buddy's retained memory (recovery, paper III-C).
-                    if self.resume {
-                        if let Some(ret) =
-                            self.fetch_retained(buddy, g.k, Phase::Tsqr, s)
-                        {
-                            if tree::reduce_active(g.idx, s) {
-                                merges[s] = Some((ret.y1.clone(), ret.t.clone()));
+                            // Replay path: take the completed merge from
+                            // the buddy's retained memory (paper III-C).
+                            if self.resume {
+                                match self.fetch_retained(ctx, sp, buddy, g.k, Phase::Tsqr, s)? {
+                                    Fetch::Hit(ret) => {
+                                        if tree::reduce_active(g.idx, s) {
+                                            ph.merges[s] =
+                                                Some((ret.y1.clone(), ret.t.clone()));
+                                        }
+                                        self.retain_tsqr(
+                                            ctx.rank,
+                                            ctx.incarnation(),
+                                            &g,
+                                            s,
+                                            buddy,
+                                            &ret.y1,
+                                            &ret.t,
+                                            &ret.r_merged,
+                                        );
+                                        ph.r = ret.r_merged;
+                                        ph.s += 1;
+                                        continue;
+                                    }
+                                    Fetch::Wait => return Ok(Stepped::Parked),
+                                    Fetch::Live => {}
+                                }
                             }
-                            self.retain_tsqr(g, s, buddy, &ret.y1, &ret.t, &ret.r_merged);
-                            r = ret.r_merged;
-                            continue;
+                            ph.wait =
+                                TsqrWait::Ft(FtOp::new(buddy, tag, MsgData::Mat(ph.r.clone())));
+                        }
+                        Algorithm::Plain => {
+                            if !tree::reduce_active(g.idx, s) {
+                                return Ok(Stepped::Finished);
+                            }
+                            let site = FailSite { panel: g.k, step: s, phase: Phase::Tsqr };
+                            self.maybe_fail(ctx, site)?;
+                            let (role, bidx) = tree::reduce_pair(g.idx, s, g.q);
+                            let buddy = bidx + g.owner;
+                            let tag = Tag::new(TagKind::TsqrR, g.k, s);
+                            match role {
+                                Role::Idle => {
+                                    ph.s += 1;
+                                }
+                                Role::Upper => {
+                                    ph.wait = TsqrWait::PlainRecv { buddy, tag };
+                                }
+                                Role::Lower => {
+                                    self.send_plain(
+                                        ctx,
+                                        buddy,
+                                        tag,
+                                        MsgData::Mat(ph.r.clone()),
+                                    )?;
+                                    return Ok(Stepped::Finished);
+                                }
+                            }
                         }
                     }
-
-                    let peer = self
-                        .exchange(buddy, tag, MsgData::Mat(r.clone()))
-                        ?
-                        .into_mat();
-                    let (rtop, rbot) =
-                        if tree::is_top(g.idx, bidx) { (&r, &peer) } else { (&peer, &r) };
-                    let mf = self
-                        .shared
-                        .backend
-                        .tsqr_merge(rtop, rbot)
-                        
-                        .map_err(|e| self.backend_err("tsqr_merge", e))?;
-                    self.ctx.compute(crate::backend::flops::tsqr_merge(b));
-                    self.shared.trace.emit(
-                        self.ctx.clock,
-                        self.rank(),
-                        g.k,
-                        s,
-                        "redundancy",
-                        tree::expected_redundancy(s) as f64,
-                    );
-                    if tree::reduce_active(g.idx, s) {
-                        merges[s] = Some((mf.y1.clone(), mf.t.clone()));
-                    }
-                    self.retain_tsqr(g, s, buddy, &mf.y1, &mf.t, &mf.r);
-                    r = mf.r;
                 }
-            }
-            Algorithm::Plain => {
-                for s in 0..nsteps {
-                    if !tree::reduce_active(g.idx, s) {
-                        break;
+                TsqrWait::Ft(mut op) => match self.poll_ft(&mut op, ctx, sp)? {
+                    None => {
+                        ph.wait = TsqrWait::Ft(op);
+                        return Ok(Stepped::Parked);
                     }
-                    let site = FailSite { panel: g.k, step: s, phase: Phase::Tsqr };
-                    self.ctx.maybe_fail(site)?;
-                    let (role, bidx) = tree::reduce_pair(g.idx, s, g.q);
-                    let buddy = bidx + g.owner;
-                    let tag = Tag::new(TagKind::TsqrR, g.k, s);
-                    match role {
-                        Role::Idle => continue,
-                        Role::Upper => {
-                            let peer = self.recv_plain(buddy, tag)?.into_mat();
+                    Some(d) => {
+                        let peer = d.into_mat();
+                        let g = ph.g;
+                        let s = ph.s;
+                        let buddy = op.peer();
+                        let bidx = buddy - g.owner;
+                        let mf = {
+                            let (rtop, rbot) = if tree::is_top(g.idx, bidx) {
+                                (&ph.r, &peer)
+                            } else {
+                                (&peer, &ph.r)
+                            };
+                            self.shared
+                                .backend
+                                .tsqr_merge(rtop, rbot)
+                                .unwrap_or_else(|e| self.backend_err(ctx.rank, "tsqr_merge", e))
+                        };
+                        ctx.compute(crate::backend::flops::tsqr_merge(b));
+                        self.shared.trace.emit(
+                            ctx.clock,
+                            ctx.rank,
+                            g.k,
+                            s,
+                            "redundancy",
+                            tree::expected_redundancy(s) as f64,
+                        );
+                        if tree::reduce_active(g.idx, s) {
+                            ph.merges[s] = Some((mf.y1.clone(), mf.t.clone()));
+                        }
+                        self.retain_tsqr(
+                            ctx.rank,
+                            ctx.incarnation(),
+                            &g,
+                            s,
+                            buddy,
+                            &mf.y1,
+                            &mf.t,
+                            &mf.r,
+                        );
+                        ph.r = mf.r;
+                        ph.s += 1;
+                    }
+                },
+                TsqrWait::PlainRecv { buddy, tag } => {
+                    match self.recv_plain_poll(ctx, buddy, tag)? {
+                        None => {
+                            ph.wait = TsqrWait::PlainRecv { buddy, tag };
+                            return Ok(Stepped::Parked);
+                        }
+                        Some(d) => {
+                            let peer = d.into_mat();
                             let mf = self
                                 .shared
                                 .backend
-                                .tsqr_merge(&r, &peer)
-                                
-                                .map_err(|e| self.backend_err("tsqr_merge", e))?;
-                            self.ctx.compute(crate::backend::flops::tsqr_merge(b));
-                            merges[s] = Some((mf.y1.clone(), mf.t.clone()));
-                            r = mf.r;
-                        }
-                        Role::Lower => {
-                            self.send_plain(buddy, tag, MsgData::Mat(r.clone()))?;
-                            break;
+                                .tsqr_merge(&ph.r, &peer)
+                                .unwrap_or_else(|e| self.backend_err(ctx.rank, "tsqr_merge", e));
+                            ctx.compute(crate::backend::flops::tsqr_merge(b));
+                            ph.merges[ph.s] = Some((mf.y1.clone(), mf.t.clone()));
+                            ph.r = mf.r;
+                            ph.s += 1;
                         }
                     }
                 }
             }
         }
+    }
 
-        // Write the panel columns of the reduced matrix: the owner holds
-        // R; everyone else's active panel rows are eliminated (zero).
+    /// Write the panel columns of the reduced matrix (the owner holds R;
+    /// everyone else's active panel rows are eliminated), then move on to
+    /// the trailing update / checkpoint / next panel.
+    fn after_tsqr(&mut self, ctx: &mut RankCtx, ph: TsqrPhase) -> State {
+        let g = ph.g;
+        let b = self.cfg().block;
         let mut panel_out = Matrix::zeros(g.active_m, b);
         if g.idx == 0 {
-            panel_out.set_block(0, 0, &r);
+            panel_out.set_block(0, 0, &ph.r);
         }
         self.local.set_block(g.start, g.k * b, &panel_out);
 
-        Ok(PanelFactorsSet { leaf_y: leaf.y, leaf_t: leaf.t, merges })
+        if g.n_trail > 0 {
+            let ph2 = self.begin_update(ctx, g, &ph.leaf_y, &ph.leaf_t, ph.merges);
+            State::Update(ph2)
+        } else {
+            self.next_after_panel(ctx.rank, g)
+        }
     }
 
-    /// Trailing-matrix update: local leaf apply + pairwise tree
-    /// (paper Algorithms 1 and 2).
-    fn panel_update(&mut self, g: &PanelGeom, f: &PanelFactorsSet) -> Result<(), Fail> {
+    /// Diskless-checkpoint baseline traffic (E7), if configured; else
+    /// straight to the next panel.
+    fn next_after_panel(&mut self, rank: usize, g: PanelGeom) -> State {
+        // NOTE: retained state is kept for the whole run. Replay of a
+        // failed rank walks its entire history (paper III-C recovers one
+        // step from one buddy; the full-state rebuild composes those
+        // per-step recoveries), so early retirement would leave a later
+        // replay with nothing to read — see the E7 bench for the measured
+        // memory cost vs diskless checkpointing.
+        let every = self.cfg().checkpoint_every;
+        if every == 0 || (g.k + 1) % every != 0 {
+            return State::Panel { k: g.k + 1 };
+        }
+        // Pair within the ranks still participating in this panel —
+        // retired ranks have left the computation and exchange nothing.
+        let pidx = g.idx ^ 1;
+        if pidx >= g.q {
+            return State::Panel { k: g.k + 1 };
+        }
+        // Replay shortcut: if the pre-death incarnation had already moved
+        // past this panel (its frontier shows a later-panel step), the
+        // partner completed its half of this checkpoint long ago and will
+        // never exchange it again — re-entering would park forever.
+        if self.resume && self.shared.store.has_completed(rank, g.k + 1, Phase::Tsqr, 0) {
+            return State::Panel { k: g.k + 1 };
+        }
+        let partner = g.owner + pidx;
+        let tag = Tag::new(TagKind::Checkpoint, g.k, 0);
+        let op = FtOp::new(partner, tag, MsgData::Mat(self.local.clone()));
+        State::Checkpoint { g, op }
+    }
+
+    /// Leaf: apply the local reflectors to the whole trailing block —
+    /// the local, non-blocking prologue of the update phase.
+    fn begin_update(
+        &mut self,
+        ctx: &mut RankCtx,
+        g: PanelGeom,
+        leaf_y: &Matrix,
+        leaf_t: &Matrix,
+        merges: Vec<Option<(Matrix, Matrix)>>,
+    ) -> UpdatePhase {
         let b = self.cfg().block;
         let m_local = self.cfg().local_rows();
-
-        // Leaf: apply the local reflectors to the whole trailing block.
         let c = self
             .local
             .block(g.start, g.trail_col, g.active_m, g.n_trail)
@@ -278,129 +554,212 @@ impl Ranker {
         let chat = self
             .shared
             .backend
-            .leaf_apply(&f.leaf_y, &f.leaf_t, &c)
-            
-            .map_err(|e| self.backend_err("leaf_apply", e))?;
-        self.ctx.compute(crate::backend::flops::leaf_apply(m_local, b, g.n_trail));
+            .leaf_apply(leaf_y, leaf_t, &c)
+            .unwrap_or_else(|e| self.backend_err(ctx.rank, "leaf_apply", e));
+        ctx.compute(crate::backend::flops::leaf_apply(m_local, b, g.n_trail));
         self.local
             .set_block(g.start, g.trail_col, &chat.crop_to(g.active_m, g.n_trail));
 
         // Tree over the top-b rows of each participant's active block.
-        let mut cp = self.local.block(g.start, g.trail_col, b, g.n_trail);
-        for s in 0..tree::steps(g.q) {
-            if !tree::reduce_active(g.idx, s) {
-                break;
-            }
-            let (role, bidx) = tree::reduce_pair(g.idx, s, g.q);
-            if role == Role::Idle {
-                continue;
-            }
-            let site = FailSite { panel: g.k, step: s, phase: Phase::Update };
-            self.ctx.maybe_fail(site)?;
-            let buddy = bidx + g.owner;
-            let tag = Tag::new(TagKind::UpdateC, g.k, s);
-
-            match self.cfg().algorithm {
-                Algorithm::FaultTolerant => {
-                    let (y1, t) = f.merges[s]
-                        .clone()
-                        .expect("FT rank holds merge factors for its tree steps");
-
-                    // Replay path: recompute our rows from the buddy's
-                    // retained {W, Y1} — the paper's recovery equation.
-                    if self.resume {
-                        if let Some(ret) =
-                            self.fetch_retained(buddy, g.k, Phase::Update, s)
-                        {
-                            let pre = cp.clone();
-                            cp = self.recover_rows(&pre, role, &ret)?;
-                            self.retain_update(g, s, buddy, &ret.w, &y1, &t, &pre, &pre);
-                            if role == Role::Lower {
-                                break;
-                            }
-                            continue;
-                        }
-                    }
-
-                    let peer_c = self
-                        .exchange(buddy, tag, MsgData::Mat(cp.clone()))
-                        ?
-                        .into_mat();
-                    let (c0, c1) =
-                        if role == Role::Upper { (&cp, &peer_c) } else { (&peer_c, &cp) };
-                    let stp = self
-                        .shared
-                        .backend
-                        .tree_update(c0, c1, &y1, &t)
-                        
-                        .map_err(|e| self.backend_err("tree_update", e))?;
-                    // Both members do the full pair computation — the
-                    // paper's traded energy cost (E4).
-                    self.ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
-                    self.shared.trace.emit(
-                        self.ctx.clock,
-                        self.rank(),
-                        g.k,
-                        s,
-                        "update_exchange",
-                        buddy as f64,
-                    );
-                    self.retain_update(g, s, buddy, &stp.w, &y1, &t, c0, c1);
-                    cp = if role == Role::Upper { stp.c0 } else { stp.c1 };
-                    if role == Role::Lower {
-                        break;
-                    }
-                }
-                Algorithm::Plain => match role {
-                    Role::Idle => unreachable!("idle handled above"),
-                    Role::Upper => {
-                        let (y1, t) = f.merges[s]
-                            .clone()
-                            .expect("plain upper holds merge factors");
-                        let peer_c = self.recv_plain(buddy, tag)?.into_mat();
-                        let stp = self
-                            .shared
-                            .backend
-                            .tree_update(&cp, &peer_c, &y1, &t)
-                            
-                            .map_err(|e| self.backend_err("tree_update", e))?;
-                        self.ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
-                        // Return the buddy's updated rows (Ĉ'₁ = C'₁−Y₁W;
-                        // same bytes as the paper's W message).
-                        self.send_plain(
-                            buddy,
-                            Tag::new(TagKind::UpdateW, g.k, s),
-                            MsgData::Mat(stp.c1),
-                        )?;
-                        cp = stp.c0;
-                    }
-                    Role::Lower => {
-                        self.send_plain(buddy, tag, MsgData::Mat(cp.clone()))?;
-                        cp = self
-                            .recv_plain(buddy, Tag::new(TagKind::UpdateW, g.k, s))
-                            ?
-                            .into_mat();
-                        break;
-                    }
-                },
-            }
-        }
-        self.local.set_block(g.start, g.trail_col, &cp);
-        Ok(())
+        let cp = self.local.block(g.start, g.trail_col, b, g.n_trail);
+        UpdatePhase { g, merges, cp, s: 0, wait: UpdateWait::Enter }
     }
 
-    pub(crate) fn backend_err(&self, op: &str, e: anyhow::Error) -> Fail {
+    /// Trailing-matrix update tree (paper Algorithms 1 and 2), with the
+    /// replay shortcut (`Ĉ' = C' − Y W`) for REBUILD replacements.
+    fn step_update(
+        &mut self,
+        ph: &mut UpdatePhase,
+        ctx: &mut RankCtx,
+        sp: &Spawner,
+    ) -> Result<Stepped, Fail> {
+        let b = self.cfg().block;
+        loop {
+            match std::mem::replace(&mut ph.wait, UpdateWait::Enter) {
+                UpdateWait::Enter => {
+                    let g = ph.g;
+                    let s = ph.s;
+                    if s == tree::steps(g.q) || !tree::reduce_active(g.idx, s) {
+                        return Ok(Stepped::Finished);
+                    }
+                    let (role, bidx) = tree::reduce_pair(g.idx, s, g.q);
+                    if role == Role::Idle {
+                        ph.s += 1;
+                        continue;
+                    }
+                    let site = FailSite { panel: g.k, step: s, phase: Phase::Update };
+                    self.maybe_fail(ctx, site)?;
+                    let buddy = bidx + g.owner;
+                    let tag = Tag::new(TagKind::UpdateC, g.k, s);
+
+                    match self.cfg().algorithm {
+                        Algorithm::FaultTolerant => {
+                            let (y1, t) = ph.merges[s]
+                                .clone()
+                                .expect("FT rank holds merge factors for its tree steps");
+
+                            // Replay path: recompute our rows from the
+                            // buddy's retained {W, Y1} — the paper's
+                            // recovery equation.
+                            if self.resume {
+                                match self.fetch_retained(ctx, sp, buddy, g.k, Phase::Update, s)? {
+                                    Fetch::Hit(ret) => {
+                                        let pre = ph.cp.clone();
+                                        ph.cp = self.recover_rows(ctx, &pre, role, &ret);
+                                        self.retain_update(
+                                            ctx.rank,
+                                            ctx.incarnation(),
+                                            &g,
+                                            s,
+                                            buddy,
+                                            &ret.w,
+                                            &y1,
+                                            &t,
+                                        );
+                                        if role == Role::Lower {
+                                            return Ok(Stepped::Finished);
+                                        }
+                                        ph.s += 1;
+                                        continue;
+                                    }
+                                    Fetch::Wait => return Ok(Stepped::Parked),
+                                    Fetch::Live => {}
+                                }
+                            }
+                            let op = FtOp::new(buddy, tag, MsgData::Mat(ph.cp.clone()));
+                            ph.wait = UpdateWait::Ft { op, role, y1, t };
+                        }
+                        Algorithm::Plain => match role {
+                            Role::Idle => unreachable!("idle handled above"),
+                            Role::Upper => {
+                                let (y1, t) = ph.merges[s]
+                                    .clone()
+                                    .expect("plain upper holds merge factors");
+                                ph.wait = UpdateWait::PlainUpper { buddy, tag, y1, t };
+                            }
+                            Role::Lower => {
+                                self.send_plain(ctx, buddy, tag, MsgData::Mat(ph.cp.clone()))?;
+                                ph.wait = UpdateWait::PlainLowerW {
+                                    buddy,
+                                    tag: Tag::new(TagKind::UpdateW, g.k, s),
+                                };
+                            }
+                        },
+                    }
+                }
+                UpdateWait::Ft { mut op, role, y1, t } => {
+                    match self.poll_ft(&mut op, ctx, sp)? {
+                        None => {
+                            ph.wait = UpdateWait::Ft { op, role, y1, t };
+                            return Ok(Stepped::Parked);
+                        }
+                        Some(d) => {
+                            let peer_c = d.into_mat();
+                            let g = ph.g;
+                            let s = ph.s;
+                            let stp = {
+                                let (c0, c1) = if role == Role::Upper {
+                                    (&ph.cp, &peer_c)
+                                } else {
+                                    (&peer_c, &ph.cp)
+                                };
+                                self.shared
+                                    .backend
+                                    .tree_update(c0, c1, &y1, &t)
+                                    .unwrap_or_else(|e| {
+                                        self.backend_err(ctx.rank, "tree_update", e)
+                                    })
+                            };
+                            // Both members do the full pair computation —
+                            // the paper's traded energy cost (E4).
+                            ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
+                            self.shared.trace.emit(
+                                ctx.clock,
+                                ctx.rank,
+                                g.k,
+                                s,
+                                "update_exchange",
+                                op.peer() as f64,
+                            );
+                            self.retain_update(
+                                ctx.rank,
+                                ctx.incarnation(),
+                                &g,
+                                s,
+                                op.peer(),
+                                &stp.w,
+                                &y1,
+                                &t,
+                            );
+                            ph.cp = if role == Role::Upper { stp.c0 } else { stp.c1 };
+                            if role == Role::Lower {
+                                return Ok(Stepped::Finished);
+                            }
+                            ph.s += 1;
+                        }
+                    }
+                }
+                UpdateWait::PlainUpper { buddy, tag, y1, t } => {
+                    match self.recv_plain_poll(ctx, buddy, tag)? {
+                        None => {
+                            ph.wait = UpdateWait::PlainUpper { buddy, tag, y1, t };
+                            return Ok(Stepped::Parked);
+                        }
+                        Some(d) => {
+                            let peer_c = d.into_mat();
+                            let g = ph.g;
+                            let s = ph.s;
+                            let stp = self
+                                .shared
+                                .backend
+                                .tree_update(&ph.cp, &peer_c, &y1, &t)
+                                .unwrap_or_else(|e| self.backend_err(ctx.rank, "tree_update", e));
+                            ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
+                            // Return the buddy's updated rows (Ĉ'₁ =
+                            // C'₁−Y₁W; same bytes as the paper's W
+                            // message).
+                            self.send_plain(
+                                ctx,
+                                buddy,
+                                Tag::new(TagKind::UpdateW, g.k, s),
+                                MsgData::Mat(stp.c1),
+                            )?;
+                            ph.cp = stp.c0;
+                            ph.s += 1;
+                        }
+                    }
+                }
+                UpdateWait::PlainLowerW { buddy, tag } => {
+                    match self.recv_plain_poll(ctx, buddy, tag)? {
+                        None => {
+                            ph.wait = UpdateWait::PlainLowerW { buddy, tag };
+                            return Ok(Stepped::Parked);
+                        }
+                        Some(d) => {
+                            ph.cp = d.into_mat();
+                            return Ok(Stepped::Finished);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub(crate) fn backend_err(&self, rank: usize, op: &str, e: anyhow::Error) -> ! {
         // Backend errors are infrastructure bugs, not simulated failures.
-        panic!("backend {op} failed on rank {}: {e:#}", self.ctx.rank);
+        panic!("backend {op} failed on rank {rank}: {e:#}");
     }
 }
 
-/// Leaf + merge factors for one panel on one rank.
-pub(crate) struct PanelFactorsSet {
-    pub leaf_y: Matrix,
-    pub leaf_t: Matrix,
-    /// (Y1, T) per tree step where this rank is a reduce-tree member.
-    pub merges: Vec<Option<(Matrix, Matrix)>>,
+/// Outcome of a replay lookup in the buddy store (see
+/// [`Ranker::fetch_retained`]).
+pub(crate) enum Fetch {
+    /// Retained state found: recover from it.
+    Hit(super::store::Retained),
+    /// The step was never completed — re-enter it live.
+    Live,
+    /// The buddy is behind in wall-clock; park until it retains.
+    Wait,
 }
 
 /// Run a full factorization under `cfg`.
@@ -454,40 +813,34 @@ fn run_caqr_on(
         world: world.clone(),
         initial: initial.clone(),
         results: Mutex::new(HashMap::new()),
-        revived: Mutex::new(Vec::new()),
+        poison: Mutex::new(None),
+        store_watchers: Mutex::new(HashSet::new()),
     });
 
-    // Spawn the original incarnation of every rank.
-    let handles: Vec<_> = (0..cfg.procs)
+    // The original incarnation of every rank, driven by the worker pool;
+    // REBUILD replacements are spawned into the same pool mid-run.
+    let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..cfg.procs)
         .map(|r| {
-            let sh = shared.clone();
-            let ctx = world.ctx(r);
-            let local = initial[r].clone();
-            std::thread::Builder::new()
-                .name(format!("rank-{r}"))
-                .spawn(move || Ranker { shared: sh, ctx, resume: false, local }.run())
-                .expect("spawn rank thread")
+            let t = Ranker::new(shared.clone(), false, initial[r].clone());
+            (r, Box::new(t) as Box<dyn RankTask>)
         })
         .collect();
+    let workers = cfg.effective_workers();
+    let results = world.run_tasks(workers, tasks);
 
     let mut failures: Vec<Fail> = Vec::new();
-    for h in handles {
-        match h.join().expect("rank task panicked") {
+    for (_rank, res) in results {
+        match res {
             Ok(()) => {}
             Err(Fail::Killed) => {} // replaced via REBUILD (or aborted below)
             Err(e) => failures.push(e),
         }
     }
-    // Drain replacement tasks (they may spawn further replacements).
-    loop {
-        let next = { shared.revived.lock().unwrap().pop() };
-        match next {
-            Some(h) => match h.join().expect("revived task panicked") {
-                Ok(()) | Err(Fail::Killed) => {}
-                Err(e) => failures.push(e),
-            },
-            None => break,
-        }
+    if let Some(p) = shared.poisoned() {
+        anyhow::bail!(
+            "run unrecoverable: {p} (both copies of a step's redundancy lost; \
+             other failures: {failures:?})"
+        );
     }
 
     let results = shared.results.lock().unwrap();

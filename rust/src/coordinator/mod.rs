@@ -20,4 +20,4 @@ pub mod tsqr;
 pub use caqr::{run_caqr, run_caqr_matrix, run_caqr_simple, CaqrOutcome, Shared};
 pub use panel::{geometry, PanelGeom};
 pub use store::{RecoveryStore, Retained, RevivalGate};
-pub use tsqr::{run_tsqr, TsqrMode, TsqrOutcome};
+pub use tsqr::{run_tsqr, run_tsqr_pooled, TsqrMode, TsqrOutcome};

@@ -3,44 +3,135 @@
 //!
 //! Detection is ULFM-style: a communication touching a dead rank returns
 //! [`Fail::RankFailed`]. Under `Semantics::Rebuild`, the first detector
-//! wins the [`RevivalGate`], drops the dead rank's (lost) retained
-//! memory, revives its mailbox, and spawns a replacement task that
-//! replays from the rank's initial block: local factorizations are
-//! recomputed, completed pair steps are reconstructed from the buddy's
-//! retained `{W, T, Y₁, R̃}` via `Ĉ' = C' − Y W` (the `recover`
-//! artifact), and the interrupted step is simply re-entered live — the
-//! detector retries its exchange until the replacement arrives.
+//! wins the `RevivalGate`, drops the dead rank's (lost) retained memory,
+//! revives its mailbox, and spawns a replacement *task* into the worker
+//! pool; the replacement replays from the rank's initial block: local
+//! factorizations are recomputed, completed pair steps are reconstructed
+//! from the buddy's retained `{W, T, Y₁, R̃}` via `Ĉ' = C' − Y W`, and
+//! the interrupted step is simply re-entered live — the detector's
+//! exchange stays parked until the replacement arrives.
+//!
+//! Multi-failure semantics: the store's per-rank *progress frontier*
+//! (which steps a rank ever completed, surviving its death) lets a
+//! replaying replacement distinguish three miss cases —
+//!
+//! * the step never completed → re-enter it live;
+//! * the buddy is merely behind in wall-clock → park until it retains;
+//! * both pair members completed the step and both copies are gone
+//!   (correlated buddy-pair kill, or a buddy killed mid-recovery) →
+//!   [`Fail::Unrecoverable`]: the paper's single-buddy protocol cannot
+//!   reconstruct the state, so the run is poisoned and aborts instead of
+//!   hanging or silently recomputing outside the protocol.
 
 use crate::config::Algorithm;
-use crate::fault::Phase;
+use crate::fault::{FailSite, Phase};
 use crate::ft::{Fail, Semantics};
 use crate::linalg::Matrix;
-use crate::sim::{MsgData, Tag};
+use crate::sim::{ExchangeOp, MsgData, RankCtx, Spawner, Tag, TagKind};
 
-use super::caqr::Ranker;
+use super::caqr::{Fetch, Ranker};
 use super::panel::PanelGeom;
 use super::store::Retained;
 use super::tree::Role;
 
+/// A fault-tolerant pairwise exchange in flight: wraps the sim-level
+/// [`ExchangeOp`] with ULFM failure handling (REBUILD arbitration and
+/// retry). Created per tree step / checkpoint, polled until it yields
+/// the peer's payload.
+pub(crate) struct FtOp {
+    peer: usize,
+    tag: Tag,
+    payload: MsgData,
+    inner: Option<ExchangeOp>,
+}
+
+impl FtOp {
+    pub(crate) fn new(peer: usize, tag: Tag, payload: MsgData) -> Self {
+        Self { peer, tag, payload, inner: None }
+    }
+
+    pub(crate) fn peer(&self) -> usize {
+        self.peer
+    }
+}
+
 impl Ranker {
-    /// FT exchange with failure handling: retries after arranging (or
-    /// waiting for) the peer's REBUILD.
-    pub(crate) fn exchange(
-        &mut self,
-        peer: usize,
-        tag: Tag,
-        data: MsgData,
-    ) -> Result<MsgData, Fail> {
-        crate::simlog!("[r{}] exch-> peer={peer} {tag:?}", self.rank());
+    /// Fault-injection wrapper: when the kill fires, the dead process's
+    /// retained memory is lost with it — and with every correlated group
+    /// member killed at the same instant (a simulated node crash).
+    ///
+    /// Ordering matters: the store drops (and the epoch bumps that reject
+    /// straggling retains from the dying incarnations) happen BEFORE the
+    /// router broadcasts the death, so a detector-spawned replacement can
+    /// never read memory that died with the process.
+    pub(crate) fn maybe_fail(&self, ctx: &mut RankCtx, site: FailSite) -> Result<(), Fail> {
+        let router = ctx.router().clone();
+        let inc = router.incarnation(ctx.rank);
+        if !ctx.fault.should_fail_inc(ctx.rank, inc, site) {
+            return Ok(());
+        }
+        let collateral = ctx.fault.collateral_of(ctx.rank, site);
+        self.shared.store.drop_owner_dead(ctx.rank, inc);
+        for &other in &collateral {
+            if other != ctx.rank {
+                self.shared
+                    .store
+                    .drop_owner_dead(other, router.incarnation(other));
+            }
+        }
+        // Now make the deaths visible (mirrors `RankCtx::maybe_fail`).
+        ctx.metrics.record_failure();
+        router.kill(ctx.rank);
+        for other in collateral {
+            if other != ctx.rank && router.is_alive(other) {
+                ctx.metrics.record_failure();
+                router.kill(other);
+            }
+        }
+        Err(Fail::Killed)
+    }
+
+    /// Drive an FT exchange with failure handling. `Ok(None)` parks the
+    /// task — either on the exchange itself or waiting out a REBUILD
+    /// performed by another detector; the next mailbox event re-polls.
+    pub(crate) fn poll_ft(
+        &self,
+        op: &mut FtOp,
+        ctx: &mut RankCtx,
+        sp: &Spawner,
+    ) -> Result<Option<MsgData>, Fail> {
         loop {
-            match self.ctx.sendrecv(peer, tag, data.clone()) {
-                Ok(d) => {
-                    crate::simlog!("[r{}] exch<- peer={peer} {tag:?}", self.rank());
-                    return Ok(d);
+            if op.inner.is_none() {
+                crate::simlog!("[r{}] exch-> peer={} {:?}", ctx.rank, op.peer, op.tag);
+                match ctx.begin_exchange(op.peer, op.tag, op.payload.clone()) {
+                    Ok(x) => op.inner = Some(x),
+                    Err(Fail::RankFailed { rank }) => {
+                        if self.on_peer_failure(ctx, sp, rank)? {
+                            continue;
+                        }
+                        return Ok(None);
+                    }
+                    Err(e) => return Err(e),
                 }
+            }
+            match ctx.poll_exchange(op.inner.as_mut().expect("inner exchange set")) {
+                Ok(Some(d)) => {
+                    crate::simlog!("[r{}] exch<- peer={} {:?}", ctx.rank, op.peer, op.tag);
+                    op.inner = None;
+                    return Ok(Some(d));
+                }
+                Ok(None) => return Ok(None),
                 Err(Fail::RankFailed { rank }) => {
-                    crate::simlog!("[r{}] detected rank {rank} dead at {tag:?}", self.rank());
-                    self.on_peer_failure(rank)?;
+                    crate::simlog!(
+                        "[r{}] detected rank {rank} dead at {:?}",
+                        ctx.rank,
+                        op.tag
+                    );
+                    op.inner = None;
+                    if self.on_peer_failure(ctx, sp, rank)? {
+                        continue;
+                    }
+                    return Ok(None);
                 }
                 Err(e) => return Err(e),
             }
@@ -49,27 +140,39 @@ impl Ranker {
 
     /// Plain-mode receive: no recovery (the baseline has no redundancy);
     /// failures follow the configured semantics (Abort by default).
-    pub(crate) fn recv_plain(&mut self, src: usize, tag: Tag) -> Result<MsgData, Fail> {
-        match self.ctx.recv(src, tag) {
-            Ok(d) => Ok(d),
-            Err(Fail::RankFailed { rank }) => {
-                if self.shared.cfg.algorithm == Algorithm::FaultTolerant {
-                    // Plain-mode helpers are only used by Algorithm::Plain.
-                    unreachable!("recv_plain in FT mode");
-                }
-                match self.shared.cfg.semantics {
-                    Semantics::Abort => Err(Fail::Aborted),
-                    _ => Err(Fail::RankFailed { rank }),
-                }
-            }
+    pub(crate) fn recv_plain_poll(
+        &self,
+        ctx: &mut RankCtx,
+        src: usize,
+        tag: Tag,
+    ) -> Result<Option<MsgData>, Fail> {
+        debug_assert!(
+            self.shared.cfg.algorithm == Algorithm::Plain,
+            "recv_plain in FT mode"
+        );
+        match ctx.try_recv(src, tag) {
+            Ok(v) => Ok(v),
+            Err(Fail::RankFailed { rank }) => match self.shared.cfg.semantics {
+                Semantics::Abort => Err(Fail::Aborted),
+                _ => Err(Fail::RankFailed { rank }),
+            },
             Err(e) => Err(e),
         }
     }
 
-    pub(crate) fn send_plain(&mut self, dst: usize, tag: Tag, data: MsgData) -> Result<(), Fail> {
-        match self.ctx.send(dst, tag, data) {
+    /// Plain-mode send, mapped through the configured semantics.
+    pub(crate) fn send_plain(
+        &self,
+        ctx: &mut RankCtx,
+        dst: usize,
+        tag: Tag,
+        data: MsgData,
+    ) -> Result<(), Fail> {
+        match ctx.send(dst, tag, data) {
             Ok(()) => Ok(()),
-            Err(Fail::RankFailed { .. }) if self.shared.cfg.semantics == Semantics::Abort => {
+            Err(Fail::RankFailed { .. })
+                if self.shared.cfg.semantics == Semantics::Abort =>
+            {
                 Err(Fail::Aborted)
             }
             Err(e) => Err(e),
@@ -77,7 +180,20 @@ impl Ranker {
     }
 
     /// Handle a detected peer failure according to the semantics.
-    pub(crate) fn on_peer_failure(&mut self, dead: usize) -> Result<(), Fail> {
+    /// `Ok(true)` = the peer is alive again (either already rebuilt or
+    /// revived by us) — retry the operation now; `Ok(false)` = another
+    /// detector is rebuilding — park until its Revive notice arrives.
+    pub(crate) fn on_peer_failure(
+        &self,
+        ctx: &mut RankCtx,
+        sp: &Spawner,
+        dead: usize,
+    ) -> Result<bool, Fail> {
+        if self.shared.poisoned().is_some() {
+            // An unrecoverable failure elsewhere: join the abort cascade
+            // instead of spawning further replacements.
+            return Err(Fail::Aborted);
+        }
         match self.shared.cfg.semantics {
             Semantics::Abort => Err(Fail::Aborted),
             Semantics::Shrink | Semantics::Blank => {
@@ -94,82 +210,146 @@ impl Ranker {
                 let inc_dead = self.shared.world.router().incarnation(dead);
                 if self.shared.world.router().is_alive(dead) {
                     // Already rebuilt — just retry the operation.
-                    return Ok(());
+                    return Ok(true);
                 }
                 if self.shared.gate.claim(dead, inc_dead + 1) {
-                    crate::simlog!("[r{}] REBUILD rank {dead} (inc {})", self.rank(), inc_dead + 1);
+                    crate::simlog!(
+                        "[r{}] REBUILD rank {dead} (inc {})",
+                        ctx.rank,
+                        inc_dead + 1
+                    );
                     self.shared.trace.emit(
-                        self.ctx.clock,
-                        self.rank(),
+                        ctx.clock,
+                        ctx.rank,
                         0,
                         0,
                         "recovery_start",
                         dead as f64,
                     );
-                    // The dead process's memory is gone.
-                    self.shared.store.drop_owner(dead);
+                    // The dead process's memory is gone (and stays gone:
+                    // the epoch bump rejects straggling retains from the
+                    // dead incarnation's still-unwinding task).
+                    self.shared.store.drop_owner_dead(dead, inc_dead);
                     // REBUILD: fresh mailbox; the replacement's clock
                     // starts at the detector's (failure-detection time).
-                    let ctx = self.shared.world.revive(dead, self.ctx.clock);
+                    let new_ctx = self.shared.world.revive(dead, ctx.clock);
                     let sh = self.shared.clone();
                     let local = sh.initial[dead].clone();
-                    let h = std::thread::Builder::new()
-                        .name(format!("rank-{dead}-rebuilt"))
-                        .spawn(move || {
-                            Ranker { shared: sh, ctx, resume: true, local }.run()
-                        })
-                        .expect("spawn rebuilt rank thread");
-                    self.shared.revived.lock().unwrap().push(h);
+                    sp.spawn(new_ctx, Box::new(Ranker::new(sh, true, local)));
+                    Ok(true)
                 } else {
-                    // Someone else is rebuilding; wait for liveness.
-                    while !self.shared.world.router().is_alive(dead) {
-                        std::thread::yield_now();
-                    }
+                    // Someone else is rebuilding; its Revive notice will
+                    // land in our mailbox and wake us to retry.
+                    Ok(false)
                 }
-                Ok(())
             }
         }
     }
 
     /// Read a buddy's retained step data during replay, charging the
     /// simulated transfer (one message from one process — paper III-C).
+    /// See the module docs for the three miss cases.
     pub(crate) fn fetch_retained(
-        &mut self,
+        &self,
+        ctx: &mut RankCtx,
+        sp: &Spawner,
         buddy: usize,
         panel: usize,
         phase: Phase,
         step: usize,
-    ) -> Option<Retained> {
-        let Some(ret) = self.shared.store.get(buddy, panel, phase, step) else {
-            crate::simlog!(
-                "[r{}] replay MISS ({buddy},{panel},{phase:?},{step}) -> live",
-                self.rank()
+    ) -> Result<Fetch, Fail> {
+        if let Some(ret) = self.shared.store.get(buddy, panel, phase, step) {
+            self.charge_fetch(ctx, buddy, panel, phase, step, &ret);
+            return Ok(Fetch::Hit(ret));
+        }
+        if self.shared.store.has_completed(ctx.rank, panel, phase, step) {
+            if self.shared.store.has_completed(buddy, panel, phase, step) {
+                // The buddy completed this step too, yet its entry is
+                // missing — only a death removes entries, so BOTH copies
+                // of the redundancy are gone. Unrecoverable (paper III-C
+                // reconstructs from exactly one surviving pair member).
+                crate::simlog!(
+                    "[r{}] replay LOST ({buddy},{panel},{phase:?},{step}) -> unrecoverable",
+                    ctx.rank
+                );
+                return Err(Fail::Unrecoverable { rank: ctx.rank });
+            }
+            // The buddy never completed the step. If its (rebuilt) task
+            // has already pushed us a live half for this step, join the
+            // live exchange; otherwise wait for the buddy to either
+            // retain the step or die trying.
+            let live_tag = Tag::new(
+                match phase {
+                    Phase::Tsqr => TagKind::TsqrR,
+                    Phase::Update => TagKind::UpdateC,
+                },
+                panel,
+                step,
             );
-            return None;
-        };
+            if ctx.has_pending(buddy, live_tag) {
+                crate::simlog!(
+                    "[r{}] replay JOIN-LIVE ({buddy},{panel},{phase:?},{step})",
+                    ctx.rank
+                );
+                return Ok(Fetch::Live);
+            }
+            if !self.shared.world.router().is_alive(buddy) {
+                // Become the buddy's detector so its replay can start;
+                // either way we park and re-check on the next wakeup.
+                let _revived_now = self.on_peer_failure(ctx, sp, buddy)?;
+            }
+            self.shared.watch_store(ctx.rank);
+            // Close the insert/watch race: the buddy may have retained
+            // between our miss and the registration.
+            if let Some(ret) = self.shared.store.get(buddy, panel, phase, step) {
+                self.charge_fetch(ctx, buddy, panel, phase, step, &ret);
+                return Ok(Fetch::Hit(ret));
+            }
+            crate::simlog!(
+                "[r{}] replay WAIT ({buddy},{panel},{phase:?},{step})",
+                ctx.rank
+            );
+            return Ok(Fetch::Wait);
+        }
+        crate::simlog!(
+            "[r{}] replay MISS ({buddy},{panel},{phase:?},{step}) -> live",
+            ctx.rank
+        );
+        Ok(Fetch::Live)
+    }
+
+    fn charge_fetch(
+        &self,
+        ctx: &mut RankCtx,
+        buddy: usize,
+        panel: usize,
+        phase: Phase,
+        step: usize,
+        ret: &Retained,
+    ) {
         let bytes = ret.nbytes();
-        self.ctx.clock = self.ctx.cost.recv_time(self.ctx.clock, self.ctx.clock, bytes);
-        self.ctx.metrics.record_message(bytes);
+        ctx.clock = ctx.cost.recv_time(ctx.clock, ctx.clock, bytes);
+        ctx.metrics.record_message(bytes);
         self.shared.trace.emit(
-            self.ctx.clock,
-            self.rank(),
+            ctx.clock,
+            ctx.rank,
             panel,
             step,
             "recovery_fetch",
             buddy as f64,
         );
-        crate::simlog!("[r{}] replay hit ({buddy},{panel},{phase:?},{step})", self.rank());
-        Some(ret)
+        crate::simlog!("[r{}] replay hit ({buddy},{panel},{phase:?},{step})", ctx.rank);
     }
 
     /// Recompute this rank's update rows from buddy-retained `{W, Y1}`:
     /// `Ĉ' = C' − Y W` with `Y = I` for the top member (paper III-C).
     pub(crate) fn recover_rows(
-        &mut self,
+        &self,
+        ctx: &mut RankCtx,
         cp: &Matrix,
         role: Role,
         ret: &Retained,
-    ) -> Result<Matrix, Fail> {
+    ) -> Matrix {
         let b = cp.rows();
         let y = match role {
             Role::Upper => Matrix::eye(b),
@@ -180,16 +360,18 @@ impl Ranker {
             .shared
             .backend
             .recover(cp, &y, &ret.w)
-            
             .unwrap_or_else(|e| panic!("recover op failed: {e:#}"));
-        self.ctx.compute(crate::backend::flops::recover(b, cp.cols()));
-        Ok(out)
+        ctx.compute(crate::backend::flops::recover(b, cp.cols()));
+        out
     }
 
     /// Retain the FT-TSQR step outcome (both pair members hold the
     /// merged factors after the exchange, §III-B).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn retain_tsqr(
-        &mut self,
+        &self,
+        rank: usize,
+        inc: u32,
         g: &PanelGeom,
         step: usize,
         buddy: usize,
@@ -198,7 +380,8 @@ impl Ranker {
         r_merged: &Matrix,
     ) {
         self.shared.store.insert(
-            self.rank(),
+            rank,
+            inc,
             g.k,
             Phase::Tsqr,
             step,
@@ -210,28 +393,28 @@ impl Ranker {
                 r_merged: r_merged.clone(),
             },
         );
+        self.shared.notify_store_watchers();
     }
 
-    /// Retain the FT update step inventory `{W, T, C'₀, C'₁, Y₁}`
-    /// (paper III-C's end-of-step list).
+    /// Retain the FT update step inventory `{W, T, Y₁}` (paper III-C's
+    /// end-of-step list; the C' copies of the paper's inventory are
+    /// replayed from the initial block, so only the factors are stored —
+    /// the byte accounting intentionally reflects what recovery reads).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn retain_update(
-        &mut self,
+        &self,
+        rank: usize,
+        inc: u32,
         g: &PanelGeom,
         step: usize,
         buddy: usize,
         w: &Matrix,
         y1: &Matrix,
         t: &Matrix,
-        _c0: &Matrix,
-        _c1: &Matrix,
     ) {
-        // C' copies are part of the paper's inventory; recovery as
-        // implemented replays C' from the initial block, so only the
-        // factors are stored (the byte accounting intentionally reflects
-        // what recovery actually reads).
         self.shared.store.insert(
-            self.rank(),
+            rank,
+            inc,
             g.k,
             Phase::Update,
             step,
@@ -243,34 +426,6 @@ impl Ranker {
                 r_merged: Matrix::zeros(0, 0),
             },
         );
-    }
-
-    /// Diskless-checkpoint baseline (§II / E7): every `interval` panels,
-    /// exchange a full copy of the local block with a partner.
-    pub(crate) fn maybe_checkpoint(&mut self, g: &PanelGeom) -> Result<(), Fail> {
-        let every = self.shared.cfg.checkpoint_every;
-        if every == 0 || (g.k + 1) % every != 0 {
-            return Ok(());
-        }
-        // Pair within the ranks still participating in this panel —
-        // retired ranks have left the computation and exchange nothing.
-        let pidx = g.idx ^ 1;
-        if pidx >= g.q {
-            return Ok(());
-        }
-        let partner = g.owner + pidx;
-        let tag = Tag::new(crate::sim::TagKind::Checkpoint, g.k, 0);
-        let _peer = self
-            .exchange(partner, tag, MsgData::Mat(self.local.clone()))
-            ?;
-        self.shared.trace.emit(
-            self.ctx.clock,
-            self.rank(),
-            g.k,
-            0,
-            "checkpoint",
-            partner as f64,
-        );
-        Ok(())
+        self.shared.notify_store_watchers();
     }
 }

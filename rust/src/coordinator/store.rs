@@ -7,9 +7,13 @@
 //! owning rank as it executes and read (with simulated communication
 //! charged) by a rebuilt rank during replay.
 //!
-//! [`RecoveryManager`] arbitrates REBUILD: the first detector of a dead
+//! [`RevivalGate`] arbitrates REBUILD: the first detector of a dead
 //! rank revives it and spawns the replay task; concurrent detectors just
-//! retry their operation once the revival is visible.
+//! retry their operation once the revival is visible. The store also
+//! tracks each rank's *progress frontier* (completed steps, surviving
+//! the rank's death) — the runtime metadata that lets a replay tell a
+//! slow buddy from lost redundancy (see `DESIGN.md` "Multi-failure
+//! recovery semantics").
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -39,6 +43,7 @@ pub struct Retained {
 }
 
 impl Retained {
+    /// Payload size of a recovery read (what the fetch is charged as).
     pub fn nbytes(&self) -> usize {
         self.w.nbytes() + self.y1.nbytes() + self.t.nbytes() + self.r_merged.nbytes()
     }
@@ -58,22 +63,82 @@ pub struct RecoveryStore {
     peak_bytes: AtomicU64,
     /// Recovery reads served.
     reads: AtomicU64,
+    /// Per-rank execution frontier: the highest step each rank has ever
+    /// *completed* (monotone across incarnations — this is runtime
+    /// metadata, so unlike `entries` it survives the rank's death). A
+    /// replay that misses an entry *below* its own frontier has lost
+    /// both copies of the step's redundancy: unrecoverable.
+    progress: Mutex<HashMap<usize, u64>>,
+    /// Lowest incarnation per rank whose inserts are still accepted.
+    /// [`RecoveryStore::drop_owner_dead`] bumps it past the dying
+    /// incarnation *before* the death becomes visible, so a straggling
+    /// retain from the killed task can never resurrect memory that died
+    /// with the process (the entry is rejected; the progress frontier is
+    /// still advanced — the step really did complete before the crash).
+    accept_from: Mutex<HashMap<usize, u32>>,
+}
+
+/// Total order on fail/retention sites matching execution order: panels
+/// outermost, TSQR before Update within a panel, tree steps innermost.
+fn site_index(panel: usize, phase: Phase, step: usize) -> u64 {
+    let ph = match phase {
+        Phase::Tsqr => 0u64,
+        Phase::Update => 1u64,
+    };
+    ((panel as u64) << 32) | (ph << 24) | (step as u64 & 0xff_ffff)
 }
 
 impl RecoveryStore {
+    /// An empty store.
     pub fn new() -> Arc<Self> {
         Arc::new(Self::default())
     }
 
-    /// Record rank `owner`'s retained state for a step.
-    pub fn insert(&self, owner: usize, panel: usize, phase: Phase, step: usize, r: Retained) {
-        let sz = r.nbytes() as u64;
-        let mut g = self.entries.lock().unwrap();
-        if let Some(old) = g.insert((owner, panel, phase, step), r) {
-            self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+    /// Record rank `owner`'s retained state for a step, written by the
+    /// owner's incarnation `inc`; also advances `owner`'s completion
+    /// frontier (a step is retained exactly when it completes). The
+    /// entry is silently rejected — though the frontier still advances —
+    /// when `inc` predates the last declared death of the rank (see
+    /// [`RecoveryStore::drop_owner_dead`]).
+    pub fn insert(
+        &self,
+        owner: usize,
+        inc: u32,
+        panel: usize,
+        phase: Phase,
+        step: usize,
+        r: Retained,
+    ) {
+        {
+            // Lock order everywhere: accept_from before entries.
+            let gate = self.accept_from.lock().unwrap();
+            let min = gate.get(&owner).copied().unwrap_or(0);
+            if inc >= min {
+                let sz = r.nbytes() as u64;
+                let mut g = self.entries.lock().unwrap();
+                if let Some(old) = g.insert((owner, panel, phase, step), r) {
+                    self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+                }
+                let now = self.bytes.fetch_add(sz, Ordering::Relaxed) + sz;
+                self.peak_bytes.fetch_max(now, Ordering::Relaxed);
+            }
         }
-        let now = self.bytes.fetch_add(sz, Ordering::Relaxed) + sz;
-        self.peak_bytes.fetch_max(now, Ordering::Relaxed);
+        let idx = site_index(panel, phase, step);
+        let mut p = self.progress.lock().unwrap();
+        let e = p.entry(owner).or_insert(0);
+        *e = (*e).max(idx);
+    }
+
+    /// Has `owner` (in any incarnation) ever completed the given step?
+    /// Queried by a replaying replacement on a retained-state miss to
+    /// distinguish "step never ran — re-enter it live" from "step ran
+    /// and both redundancy copies are gone — unrecoverable".
+    pub fn has_completed(&self, owner: usize, panel: usize, phase: Phase, step: usize) -> bool {
+        self.progress
+            .lock()
+            .unwrap()
+            .get(&owner)
+            .is_some_and(|&max| max >= site_index(panel, phase, step))
     }
 
     /// Read rank `owner`'s retained state (a rebuilt rank asking its
@@ -98,6 +163,19 @@ impl RecoveryStore {
         }
     }
 
+    /// Incarnation `dead_inc` of `owner` died: wipe its retained memory
+    /// AND refuse any straggling insert from that (or an earlier)
+    /// incarnation. Must be called *before* the death is made visible on
+    /// the router, so no replacement can ever read memory that died.
+    pub fn drop_owner_dead(&self, owner: usize, dead_inc: u32) {
+        {
+            let mut gate = self.accept_from.lock().unwrap();
+            let e = gate.entry(owner).or_insert(0);
+            *e = (*e).max(dead_inc + 1);
+        }
+        self.drop_owner(owner);
+    }
+
     /// Drop retained state older than `panel` (panels complete =>
     /// redundancy for them is no longer needed once a global checkpoint
     /// of R's rows exists). Keeps memory bounded in long runs.
@@ -111,22 +189,27 @@ impl RecoveryStore {
         }
     }
 
+    /// Bytes currently retained.
     pub fn current_bytes(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
     }
 
+    /// High-water mark of retained bytes.
     pub fn peak_bytes(&self) -> u64 {
         self.peak_bytes.load(Ordering::Relaxed)
     }
 
+    /// Recovery reads served so far.
     pub fn reads(&self) -> u64 {
         self.reads.load(Ordering::Relaxed)
     }
 
+    /// Number of retained step entries.
     pub fn len(&self) -> usize {
         self.entries.lock().unwrap().len()
     }
 
+    /// True when nothing is retained.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -139,6 +222,7 @@ pub struct RevivalGate {
 }
 
 impl RevivalGate {
+    /// A gate with no revivals in progress.
     pub fn new() -> Arc<Self> {
         Arc::new(Self::default())
     }
@@ -174,7 +258,7 @@ mod tests {
     #[test]
     fn insert_get_roundtrip() {
         let s = RecoveryStore::new();
-        s.insert(2, 0, Phase::Update, 1, retained(4));
+        s.insert(2, 0, 0, Phase::Update, 1, retained(4));
         let r = s.get(2, 0, Phase::Update, 1).unwrap();
         assert_eq!(r.buddy, 1);
         assert!(s.get(2, 0, Phase::Update, 0).is_none());
@@ -184,10 +268,10 @@ mod tests {
     #[test]
     fn byte_accounting_tracks_peak() {
         let s = RecoveryStore::new();
-        s.insert(0, 0, Phase::Tsqr, 0, retained(4));
+        s.insert(0, 0, 0, Phase::Tsqr, 0, retained(4));
         let b1 = s.current_bytes();
         assert!(b1 > 0);
-        s.insert(0, 1, Phase::Tsqr, 0, retained(4));
+        s.insert(0, 0, 1, Phase::Tsqr, 0, retained(4));
         let b2 = s.current_bytes();
         assert_eq!(b2, 2 * b1);
         s.retire_before(1);
@@ -198,10 +282,42 @@ mod tests {
     #[test]
     fn reinsert_replaces() {
         let s = RecoveryStore::new();
-        s.insert(0, 0, Phase::Update, 0, retained(4));
-        s.insert(0, 0, Phase::Update, 0, retained(8));
+        s.insert(0, 0, 0, Phase::Update, 0, retained(4));
+        s.insert(0, 0, 0, Phase::Update, 0, retained(8));
         assert_eq!(s.len(), 1);
         assert_eq!(s.get(0, 0, Phase::Update, 0).unwrap().w.rows(), 8);
+    }
+
+    #[test]
+    fn progress_frontier_survives_drop_owner() {
+        let s = RecoveryStore::new();
+        s.insert(2, 0, 1, Phase::Tsqr, 1, retained(4));
+        assert!(s.has_completed(2, 1, Phase::Tsqr, 1));
+        assert!(s.has_completed(2, 0, Phase::Update, 3), "earlier sites covered");
+        assert!(!s.has_completed(2, 1, Phase::Update, 0), "later sites not");
+        assert!(!s.has_completed(3, 0, Phase::Tsqr, 0), "other ranks untouched");
+        // Death wipes the retained data but NOT the runtime's knowledge
+        // of how far the rank had progressed.
+        s.drop_owner(2);
+        assert!(s.get(2, 1, Phase::Tsqr, 1).is_none());
+        assert!(s.has_completed(2, 1, Phase::Tsqr, 1));
+    }
+
+    #[test]
+    fn dead_incarnation_inserts_rejected_but_progress_advances() {
+        let s = RecoveryStore::new();
+        s.insert(2, 0, 0, Phase::Tsqr, 0, retained(4));
+        // Incarnation 0 dies; its memory is gone and stays gone even if a
+        // straggling retain from the killed task lands afterwards.
+        s.drop_owner_dead(2, 0);
+        assert!(s.get(2, 0, Phase::Tsqr, 0).is_none());
+        s.insert(2, 0, 0, Phase::Tsqr, 1, retained(4));
+        assert!(s.get(2, 0, Phase::Tsqr, 1).is_none(), "stale insert resurrected");
+        // ...but the runtime still learns the step completed pre-crash.
+        assert!(s.has_completed(2, 0, Phase::Tsqr, 1));
+        // The replacement (incarnation 1) retains normally.
+        s.insert(2, 1, 0, Phase::Tsqr, 1, retained(4));
+        assert!(s.get(2, 0, Phase::Tsqr, 1).is_some());
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! This is experiment E1's engine; the full CAQR driver embeds the same
 //! logic per panel, but the standalone version exposes the per-step
 //! redundancy series that reproduces Fig 2.
+//!
+//! Rank bodies are resumable [`RankTask`]s on the bounded worker pool
+//! ([`crate::sim::sched`]), so sweeps run at P = 512 and beyond on a
+//! laptop core count — see `benches/scale.rs`.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -18,7 +22,9 @@ use crate::fault::FaultPlan;
 use crate::ft::Fail;
 use crate::linalg::Matrix;
 use crate::metrics::Report;
-use crate::sim::{CostModel, MsgData, Tag, TagKind, World};
+use crate::sim::{
+    CostModel, ExchangeOp, MsgData, RankCtx, RankTask, Spawner, Tag, TagKind, TaskPoll, World,
+};
 
 use super::tree::{self, Role};
 
@@ -43,18 +49,178 @@ pub struct TsqrOutcome {
     /// Number of ranks whose final R equals the root's (1 for plain,
     /// P for FT with P a power of two).
     pub final_holders: usize,
+    /// Metrics snapshot of the simulated run.
     pub report: Report,
+    /// Wallclock of the simulated run.
     pub elapsed: std::time::Duration,
 }
 
+/// Where one TSQR task is parked (or about to run next).
+enum TsqrWait {
+    /// Local leaf factorization not done yet.
+    Leaf,
+    /// Ready to enter tree step `s`.
+    Enter,
+    /// FT exchange in flight.
+    Exch(ExchangeOp),
+    /// Plain upper member waiting for the lower member's R.
+    Recv { buddy: usize, tag: Tag },
+}
+
+/// One rank's resumable TSQR body.
+struct TsqrTask {
+    mode: TsqrMode,
+    backend: Arc<Backend>,
+    q: usize,
+    b: usize,
+    m_local: usize,
+    block: Matrix,
+    /// `rs_by_step[s][rank]` = rank's intermediate R after step s.
+    rs_by_step: Arc<Mutex<Vec<HashMap<usize, Matrix>>>>,
+    finals: Arc<Mutex<HashMap<usize, Matrix>>>,
+    r: Option<Matrix>,
+    s: usize,
+    wait: TsqrWait,
+}
+
+impl TsqrTask {
+    fn record_step(&self, idx: usize) {
+        self.rs_by_step.lock().unwrap()[self.s + 1]
+            .insert(idx, self.r.clone().expect("r set after leaf"));
+    }
+
+    fn drive(&mut self, ctx: &mut RankCtx) -> Result<bool, Fail> {
+        loop {
+            match std::mem::replace(&mut self.wait, TsqrWait::Enter) {
+                TsqrWait::Leaf => {
+                    let f = self.backend.panel_qr(&self.block).map_err(|_| Fail::WorldGone)?;
+                    ctx.compute(crate::backend::flops::panel_qr(self.m_local, self.b));
+                    self.rs_by_step.lock().unwrap()[0].insert(ctx.rank, f.r.clone());
+                    self.r = Some(f.r);
+                    self.s = 0;
+                }
+                TsqrWait::Enter => {
+                    if self.s == tree::steps(self.q) {
+                        self.finals
+                            .lock()
+                            .unwrap()
+                            .insert(ctx.rank, self.r.clone().expect("final r"));
+                        return Ok(true);
+                    }
+                    let s = self.s;
+                    let idx = ctx.rank;
+                    let tag = Tag::new(TagKind::TsqrR, 0, s);
+                    match self.mode {
+                        TsqrMode::FaultTolerant => {
+                            if let Some(bidx) = tree::exchange_pair(idx, s, self.q) {
+                                let mine = self.r.clone().expect("r set");
+                                let op = ctx.begin_exchange(bidx, tag, MsgData::Mat(mine))?;
+                                self.wait = TsqrWait::Exch(op);
+                            } else {
+                                self.record_step(idx);
+                                self.s += 1;
+                            }
+                        }
+                        TsqrMode::Plain => {
+                            if tree::reduce_active(idx, s) {
+                                let (role, bidx) = tree::reduce_pair(idx, s, self.q);
+                                match role {
+                                    Role::Idle => {
+                                        self.record_step(idx);
+                                        self.s += 1;
+                                    }
+                                    Role::Upper => {
+                                        self.wait = TsqrWait::Recv { buddy: bidx, tag };
+                                    }
+                                    Role::Lower => {
+                                        let mine = self.r.clone().expect("r set");
+                                        ctx.send(bidx, tag, MsgData::Mat(mine))?;
+                                        self.record_step(idx);
+                                        self.s += 1;
+                                    }
+                                }
+                            } else {
+                                self.record_step(idx);
+                                self.s += 1;
+                            }
+                        }
+                    }
+                }
+                TsqrWait::Exch(mut op) => match ctx.poll_exchange(&mut op)? {
+                    None => {
+                        self.wait = TsqrWait::Exch(op);
+                        return Ok(false);
+                    }
+                    Some(d) => {
+                        let peer_r = d.into_mat();
+                        let idx = ctx.rank;
+                        let bidx = op.peer();
+                        let mf = {
+                            let r = self.r.as_ref().expect("r set");
+                            let (rt, rb) =
+                                if tree::is_top(idx, bidx) { (r, &peer_r) } else { (&peer_r, r) };
+                            self.backend.tsqr_merge(rt, rb).map_err(|_| Fail::WorldGone)?
+                        };
+                        ctx.compute(crate::backend::flops::tsqr_merge(self.b));
+                        self.r = Some(mf.r);
+                        self.record_step(idx);
+                        self.s += 1;
+                    }
+                },
+                TsqrWait::Recv { buddy, tag } => match ctx.try_recv(buddy, tag)? {
+                    None => {
+                        self.wait = TsqrWait::Recv { buddy, tag };
+                        return Ok(false);
+                    }
+                    Some(d) => {
+                        let peer = d.into_mat();
+                        let mf = {
+                            let r = self.r.as_ref().expect("r set");
+                            self.backend.tsqr_merge(r, &peer).map_err(|_| Fail::WorldGone)?
+                        };
+                        ctx.compute(crate::backend::flops::tsqr_merge(self.b));
+                        self.r = Some(mf.r);
+                        self.record_step(ctx.rank);
+                        self.s += 1;
+                    }
+                },
+            }
+        }
+    }
+}
+
+impl RankTask for TsqrTask {
+    fn poll(&mut self, ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+        match self.drive(ctx) {
+            Ok(true) => TaskPoll::Ready(Ok(())),
+            Ok(false) => TaskPoll::Pending,
+            Err(e) => TaskPoll::Ready(Err(e)),
+        }
+    }
+}
+
 /// Run TSQR over `procs` ranks, each holding an `(m_local, b)` block of
-/// the stacked matrix `a` (`rows = procs * m_local`).
+/// the stacked matrix `a` (`rows = procs * m_local`), with an
+/// automatically sized worker pool.
 pub fn run_tsqr(
     a: &Matrix,
     procs: usize,
     mode: TsqrMode,
     backend: Arc<Backend>,
     cost: CostModel,
+) -> Result<TsqrOutcome> {
+    run_tsqr_pooled(a, procs, mode, backend, cost, crate::sim::default_workers(procs))
+}
+
+/// [`run_tsqr`] with an explicit worker-pool width — the scale sweeps
+/// pin this to the core count to show P = 512 ranks on a fixed pool.
+pub fn run_tsqr_pooled(
+    a: &Matrix,
+    procs: usize,
+    mode: TsqrMode,
+    backend: Arc<Backend>,
+    cost: CostModel,
+    workers: usize,
 ) -> Result<TsqrOutcome> {
     let (rows, b) = a.shape();
     anyhow::ensure!(rows % procs == 0, "rows must divide procs");
@@ -64,87 +230,35 @@ pub fn run_tsqr(
     let t0 = std::time::Instant::now();
     let world = World::new(procs, cost, FaultPlan::none());
     let nsteps = tree::steps(procs);
-    // rs_by_step[s][rank] = rank's intermediate R after step s.
     let rs_by_step: Arc<Mutex<Vec<HashMap<usize, Matrix>>>> =
         Arc::new(Mutex::new(vec![HashMap::new(); nsteps + 1]));
+    let finals: Arc<Mutex<HashMap<usize, Matrix>>> = Arc::new(Mutex::new(HashMap::new()));
 
-    let blocks: Vec<Matrix> =
-        (0..procs).map(|r| a.block(r * m_local, 0, m_local, b)).collect();
-
-    let backend2 = backend.clone();
-    let rs2 = rs_by_step.clone();
-    let results = world
-        .run_all(move |mut ctx| {
-            let backend = backend2.clone();
-            let rs_by_step = rs2.clone();
-            let block = blocks[ctx.rank].clone();
-            {
-                let q = ctx.router().alive_count();
-                let idx = ctx.rank;
-                let f = backend
-                    .panel_qr(&block)
-                    
-                    .map_err(|_| Fail::WorldGone)?;
-                ctx.compute(crate::backend::flops::panel_qr(m_local, b));
-                let mut r = f.r;
-                rs_by_step.lock().unwrap()[0].insert(idx, r.clone());
-
-                for s in 0..tree::steps(q) {
-                    let tag = Tag::new(TagKind::TsqrR, 0, s);
-                    match mode {
-                        TsqrMode::FaultTolerant => {
-                            if let Some(bidx) = tree::exchange_pair(idx, s, q) {
-                                let peer = ctx
-                                    .sendrecv(bidx, tag, MsgData::Mat(r.clone()))
-                                    ?
-                                    .into_mat();
-                                let (rt, rb) = if tree::is_top(idx, bidx) {
-                                    (&r, &peer)
-                                } else {
-                                    (&peer, &r)
-                                };
-                                let mf = backend
-                                    .tsqr_merge(rt, rb)
-                                    
-                                    .map_err(|_| Fail::WorldGone)?;
-                                ctx.compute(crate::backend::flops::tsqr_merge(b));
-                                r = mf.r;
-                            }
-                        }
-                        TsqrMode::Plain => {
-                            if tree::reduce_active(idx, s) {
-                                let (role, bidx) = tree::reduce_pair(idx, s, q);
-                                match role {
-                                    Role::Idle => {}
-                                    Role::Upper => {
-                                        let peer =
-                                            ctx.recv(bidx, tag)?.into_mat();
-                                        let mf = backend
-                                            .tsqr_merge(&r, &peer)
-                                            
-                                            .map_err(|_| Fail::WorldGone)?;
-                                        ctx.compute(crate::backend::flops::tsqr_merge(b));
-                                        r = mf.r;
-                                    }
-                                    Role::Lower => {
-                                        ctx.send(bidx, tag, MsgData::Mat(r.clone()))?;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    rs_by_step.lock().unwrap()[s + 1].insert(idx, r.clone());
-                }
-                Ok(r)
-            }
+    let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..procs)
+        .map(|r| {
+            let task = TsqrTask {
+                mode,
+                backend: backend.clone(),
+                q: procs,
+                b,
+                m_local,
+                block: a.block(r * m_local, 0, m_local, b),
+                rs_by_step: rs_by_step.clone(),
+                finals: finals.clone(),
+                r: None,
+                s: 0,
+                wait: TsqrWait::Leaf,
+            };
+            (r, Box::new(task) as Box<dyn RankTask>)
         })
-        ;
-
-    let finals: Vec<Matrix> = results
-        .into_iter()
-        .map(|res| res.expect("tsqr rank failed"))
         .collect();
-    let root_r = finals[0].clone();
+
+    for (rank, res) in world.run_tasks(workers, tasks) {
+        res.map_err(|e| anyhow::anyhow!("tsqr rank {rank} failed: {e}"))?;
+    }
+
+    let finals = finals.lock().unwrap();
+    let root_r = finals[&0].clone();
 
     // Redundancy series: after step s, how many ranks hold the value the
     // ROOT holds at that step (the root-path merge)?
@@ -155,7 +269,7 @@ pub fn run_tsqr(
         let holders = rs[s].values().filter(|m| *m == root_val).count();
         redundancy.push(holders);
     }
-    let final_holders = finals.iter().filter(|m| **m == root_r).count();
+    let final_holders = finals.values().filter(|m| **m == root_r).count();
 
     Ok(TsqrOutcome {
         r: root_r,
@@ -176,10 +290,8 @@ mod tests {
         let a = Matrix::randn(128, 8, 3);
         let be = Backend::native();
         let plain = run_tsqr(&a, 4, TsqrMode::Plain, be.clone(), CostModel::default())
-            
             .unwrap();
         let ft = run_tsqr(&a, 4, TsqrMode::FaultTolerant, be, CostModel::default())
-            
             .unwrap();
         assert!(gram_residual(&a, &plain.r) < 1e-4);
         assert!(gram_residual(&a, &ft.r) < 1e-4);
@@ -192,7 +304,6 @@ mod tests {
         let a = Matrix::randn(256, 8, 5);
         let be = Backend::native();
         let ft = run_tsqr(&a, 8, TsqrMode::FaultTolerant, be, CostModel::default())
-            
             .unwrap();
         // Paper Fig 2: redundancy 2, 4, 8 after steps 0, 1, 2.
         assert_eq!(ft.redundancy, vec![2, 4, 8]);
@@ -204,7 +315,6 @@ mod tests {
         let a = Matrix::randn(256, 8, 5);
         let be = Backend::native();
         let p = run_tsqr(&a, 8, TsqrMode::Plain, be, CostModel::default())
-            
             .unwrap();
         // Only the root-path holder has the merged value at each step.
         assert!(p.redundancy.iter().all(|&h| h == 1), "{:?}", p.redundancy);
@@ -217,7 +327,6 @@ mod tests {
         let be = Backend::native();
         for mode in [TsqrMode::Plain, TsqrMode::FaultTolerant] {
             let out = run_tsqr(&a, 6, mode, be.clone(), CostModel::default())
-                
                 .unwrap();
             assert!(gram_residual(&a, &out.r) < 1e-4, "mode {mode:?}");
         }
@@ -230,10 +339,8 @@ mod tests {
         let a = Matrix::randn(512, 16, 9);
         let be = Backend::native();
         let plain = run_tsqr(&a, 8, TsqrMode::Plain, be.clone(), CostModel::default())
-            
             .unwrap();
         let ft = run_tsqr(&a, 8, TsqrMode::FaultTolerant, be, CostModel::default())
-            
             .unwrap();
         let cp_plain = plain.report.critical_path;
         let cp_ft = ft.report.critical_path;
@@ -243,5 +350,26 @@ mod tests {
             cp_ft <= cp_plain * 1.5 + 1e-6,
             "cp_ft={cp_ft} cp_plain={cp_plain}"
         );
+    }
+
+    #[test]
+    fn large_p_on_fixed_pool() {
+        // The tentpole check in miniature: P = 256 simulated ranks on a
+        // 4-thread pool (the full P = 512 sweep lives in benches/scale.rs).
+        let procs = 256;
+        let b = 4;
+        let a = Matrix::randn(procs * b, b, 11);
+        let out = run_tsqr_pooled(
+            &a,
+            procs,
+            TsqrMode::FaultTolerant,
+            Backend::native(),
+            CostModel::default(),
+            4,
+        )
+        .unwrap();
+        assert!(gram_residual(&a, &out.r) < 1e-3);
+        assert_eq!(out.final_holders, procs);
+        assert_eq!(out.redundancy, vec![2, 4, 8, 16, 32, 64, 128, 256]);
     }
 }

@@ -5,6 +5,18 @@
 //! mirrors how failures manifest in the paper's MPI setting: a process
 //! disappears, and its buddies discover it at the next communication
 //! involving it.
+//!
+//! Multi-failure scenarios compose from three knobs on [`ScheduledKill`]:
+//!
+//! * several independent kills in one schedule (k failures across
+//!   panels/ranks);
+//! * `incarnation`-targeted kills, which aim at a REBUILD replacement —
+//!   "a failure *during recovery*";
+//! * correlated `group` kills (a simulated node crash): when one member
+//!   fires, every member dies at the same instant. Killing both members
+//!   of a retention pair this way destroys both copies of the step's
+//!   redundancy, which the coordinator must report as
+//!   [`crate::ft::Fail::Unrecoverable`] rather than heal or hang.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -25,15 +37,51 @@ pub struct FailSite {
 /// Algorithm phase (used to aim failures precisely in experiments).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Phase {
+    /// Panel factorization (TSQR reduction tree).
     Tsqr,
+    /// Trailing-matrix update tree.
     Update,
 }
 
 /// One scheduled kill: rank `rank` dies at `site` (once).
 #[derive(Clone, Debug)]
 pub struct ScheduledKill {
+    /// Victim rank.
     pub rank: usize,
+    /// Where in the algorithm the kill fires.
     pub site: FailSite,
+    /// `Some(i)` restricts the kill to incarnation `i` of the rank —
+    /// `Some(1)` kills the first REBUILD replacement mid-recovery.
+    /// `None` fires for whichever incarnation reaches the site first.
+    pub incarnation: Option<u32>,
+    /// Correlated-failure group (a simulated node crash): when any
+    /// member's kill fires, all members die simultaneously and the
+    /// group's remaining kills are consumed.
+    pub group: Option<u32>,
+}
+
+impl ScheduledKill {
+    /// Kill `rank` at `(panel, step)` of `phase`, any incarnation.
+    pub fn new(rank: usize, panel: usize, step: usize, phase: Phase) -> Self {
+        Self {
+            rank,
+            site: FailSite { panel, step, phase },
+            incarnation: None,
+            group: None,
+        }
+    }
+
+    /// Restrict the kill to one incarnation (1 = first replacement).
+    pub fn at_incarnation(mut self, inc: u32) -> Self {
+        self.incarnation = Some(inc);
+        self
+    }
+
+    /// Join a correlated-failure group.
+    pub fn in_group(mut self, group: u32) -> Self {
+        self.group = Some(group);
+        self
+    }
 }
 
 /// The failure model for a run.
@@ -59,6 +107,7 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
+    /// Build the runtime injector for a failure model.
     pub fn new(spec: FaultSpec) -> Arc<Self> {
         let (used_len, budget, seed) = match &spec {
             FaultSpec::None => (0, 0, 0),
@@ -75,11 +124,29 @@ impl FaultPlan {
 
     /// Convenience: kill `rank` at (panel, step) of `phase`.
     pub fn kill_at(rank: usize, panel: usize, step: usize, phase: Phase) -> Arc<Self> {
-        Self::new(FaultSpec::Schedule {
-            kills: vec![ScheduledKill { rank, site: FailSite { panel, step, phase } }],
-        })
+        Self::schedule(vec![ScheduledKill::new(rank, panel, step, phase)])
     }
 
+    /// A deterministic multi-kill schedule.
+    pub fn schedule(kills: Vec<ScheduledKill>) -> Arc<Self> {
+        Self::new(FaultSpec::Schedule { kills })
+    }
+
+    /// Correlated node crash: both ranks die the instant either reaches
+    /// the site (the buddy-pair scenario of the recovery tests).
+    pub fn kill_pair_at(
+        ranks: (usize, usize),
+        panel: usize,
+        step: usize,
+        phase: Phase,
+    ) -> Arc<Self> {
+        Self::schedule(vec![
+            ScheduledKill::new(ranks.0, panel, step, phase).in_group(0),
+            ScheduledKill::new(ranks.1, panel, step, phase).in_group(0),
+        ])
+    }
+
+    /// No injected failures.
     pub fn none() -> Arc<Self> {
         Self::new(FaultSpec::None)
     }
@@ -90,17 +157,21 @@ impl FaultPlan {
         self.should_fail_inc(rank, 0, site)
     }
 
-    /// Incarnation-aware variant: random coins mix in the incarnation so
-    /// a REBUILT rank re-visiting the same site draws an independent
-    /// coin (failures are i.i.d., not site-cursed).
+    /// Incarnation-aware variant: scheduled kills may target a specific
+    /// incarnation (a failure during recovery), and random coins mix in
+    /// the incarnation so a REBUILT rank re-visiting the same site draws
+    /// an independent coin (failures are i.i.d., not site-cursed).
     pub fn should_fail_inc(&self, rank: usize, incarnation: u32, site: FailSite) -> bool {
         match &self.spec {
             FaultSpec::None => false,
             FaultSpec::Schedule { kills } => {
                 for (i, k) in kills.iter().enumerate() {
-                    if k.rank == rank && k.site == site {
-                        // fire once
-                        return !self.used[i].swap(true, Ordering::SeqCst);
+                    if k.rank == rank
+                        && k.site == site
+                        && k.incarnation.map_or(true, |want| want == incarnation)
+                        && !self.used[i].swap(true, Ordering::SeqCst)
+                    {
+                        return true; // fire once
                     }
                 }
                 false
@@ -127,6 +198,31 @@ impl FaultPlan {
             }
         }
     }
+
+    /// Ranks that die *with* `rank` when its kill at `site` fires — the
+    /// other members of the kill's correlated group. Their own scheduled
+    /// kills are consumed so REBUILD replacements do not re-fire them.
+    /// Idempotent; empty for ungrouped kills and non-schedule specs.
+    pub fn collateral_of(&self, rank: usize, site: FailSite) -> Vec<usize> {
+        let FaultSpec::Schedule { kills } = &self.spec else {
+            return Vec::new();
+        };
+        let Some(g) = kills
+            .iter()
+            .find(|k| k.rank == rank && k.site == site && k.group.is_some())
+            .and_then(|k| k.group)
+        else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for (i, k) in kills.iter().enumerate() {
+            if k.group == Some(g) && k.rank != rank {
+                self.used[i].store(true, Ordering::SeqCst);
+                out.push(k.rank);
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +247,31 @@ mod tests {
         assert!(p.should_fail(2, site(1, 0)));
         // replay after rebuild: must NOT fire again
         assert!(!p.should_fail(2, site(1, 0)));
+    }
+
+    #[test]
+    fn incarnation_targeted_kill_spares_other_incarnations() {
+        let p = FaultPlan::schedule(vec![
+            ScheduledKill::new(1, 0, 0, Phase::Update).at_incarnation(1),
+        ]);
+        // Incarnation 0 sails through; incarnation 1 (the replacement)
+        // dies; incarnation 2 survives the replay.
+        assert!(!p.should_fail_inc(1, 0, site(0, 0)));
+        assert!(p.should_fail_inc(1, 1, site(0, 0)));
+        assert!(!p.should_fail_inc(1, 2, site(0, 0)));
+    }
+
+    #[test]
+    fn group_kill_reports_collateral_and_consumes_it() {
+        let p = FaultPlan::kill_pair_at((2, 3), 0, 1, Phase::Tsqr);
+        let s = FailSite { panel: 0, step: 1, phase: Phase::Tsqr };
+        assert!(p.should_fail_inc(2, 0, s));
+        assert_eq!(p.collateral_of(2, s), vec![3]);
+        // The partner's kill was consumed with the group.
+        assert!(!p.should_fail_inc(3, 0, s));
+        assert!(!p.should_fail_inc(3, 1, s));
+        // Ungrouped queries yield no collateral.
+        assert!(p.collateral_of(0, s).is_empty());
     }
 
     #[test]

@@ -16,10 +16,14 @@
 /// Communicator-level failure-handling policy (FT-MPI / ULFM, paper §II).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Semantics {
+    /// Survivors renumber into a smaller communicator.
     Shrink,
+    /// The hole stays; operations addressed to it error.
     Blank,
+    /// A replacement process is spawned with recovered state.
     #[default]
     Rebuild,
+    /// Conventional non-FT behaviour: the whole run fails.
     Abort,
 }
 
@@ -61,6 +65,19 @@ pub enum Fail {
     Aborted,
     /// The simulated world shut down underneath us.
     WorldGone,
+    /// The scheduler detected a global stall: every live task parked
+    /// with no event in flight. A protocol bug surfaced as an error
+    /// instead of a hang.
+    Stalled,
+    /// Recovery is impossible: rank `rank` completed a step whose
+    /// retained redundancy was lost together with the step buddy — both
+    /// copies of the paper's `{W, T, C', Y₁}` inventory are gone
+    /// (e.g. a correlated buddy-pair kill, or a buddy killed while the
+    /// rebuild was still replaying).
+    Unrecoverable {
+        /// The rank whose state can no longer be reconstructed.
+        rank: usize,
+    },
 }
 
 impl std::fmt::Display for Fail {
@@ -70,6 +87,10 @@ impl std::fmt::Display for Fail {
             Fail::Killed => write!(f, "killed by fault injector"),
             Fail::Aborted => write!(f, "run aborted"),
             Fail::WorldGone => write!(f, "world shut down"),
+            Fail::Stalled => write!(f, "scheduler stall: every live task parked"),
+            Fail::Unrecoverable { rank } => {
+                write!(f, "rank {rank} unrecoverable: buddy redundancy lost")
+            }
         }
     }
 }

@@ -7,7 +7,8 @@
 //! * **L3 (this crate)** — the paper's coordination contribution: the
 //!   FT-TSQR all-reduce panel factorization ([`coordinator::tsqr`]), the
 //!   fault-tolerant pairwise trailing-matrix update tree
-//!   ([`coordinator::update`], the paper's Algorithms 1 & 2), the CAQR
+//!   (the update phase of [`coordinator::caqr`], the paper's Algorithms
+//!   1 & 2), the CAQR
 //!   panel driver ([`coordinator::caqr`]) and the single-buddy recovery
 //!   protocol ([`coordinator::recovery`]) — all running on a simulated
 //!   message-passing world ([`sim`]) with ULFM-style failure semantics.
@@ -19,6 +20,30 @@
 //!
 //! A pure-Rust oracle of every op lives in [`linalg`] and doubles as the
 //! fast [`backend::NativeBackend`] used by the large simulation sweeps.
+//!
+//! ## Scheduler: how P = 512 ranks fit on a laptop
+//!
+//! The simulated world used to spawn one OS thread per rank, capping
+//! experiments at a few dozen processes. Rank bodies are now *resumable
+//! tasks* ([`sim::RankTask`]) driven by a bounded worker pool
+//! ([`sim::sched`], [`sim::World::run_tasks`]): instead of blocking in
+//! `recv`/`sendrecv`, a task **parks** on the non-blocking primitives
+//! ([`sim::RankCtx::try_recv`], [`sim::RankCtx::begin_exchange`] /
+//! [`sim::RankCtx::poll_exchange`]) and is woken when an event lands in
+//! its mailbox. REBUILD replacements are spawned into the same pool
+//! mid-run, and a global stall is reported as [`ft::Fail::Stalled`]
+//! instead of hanging. See `rust/DESIGN.md` "Scheduler: parking and
+//! wakeup" for the protocol, and `benches/scale.rs` for FT-TSQR sweeps
+//! at P = 512 plus multi-failure CAQR recovery at scale.
+//!
+//! Multi-failure experiments compose from [`fault::ScheduledKill`]'s
+//! three knobs: k independent kills, incarnation-targeted kills (a
+//! failure *during* recovery) and correlated group kills (a node crash);
+//! a correlated kill of both members of a retention pair is detected via
+//! the store's progress frontier and reported as
+//! [`ft::Fail::Unrecoverable`].
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod checkpoint;

@@ -10,7 +10,9 @@ use super::Matrix;
 /// Transpose flag for [`gemm`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Trans {
+    /// Use the operand as stored.
     No,
+    /// Use the operand transposed.
     Yes,
 }
 

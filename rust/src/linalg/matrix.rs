@@ -10,6 +10,7 @@ pub struct Rng64 {
 }
 
 impl Rng64 {
+    /// Seed the generator (any seed works; 0 is remapped).
     pub fn new(seed: u64) -> Self {
         // splitmix64 the seed so small seeds diverge immediately.
         let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -18,6 +19,7 @@ impl Rng64 {
         Self { state: (z ^ (z >> 31)) | 1 }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;
@@ -112,26 +114,32 @@ impl Matrix {
         Self { rows, cols, data }
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// Row-major element buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element buffer.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the row-major element buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }

@@ -24,8 +24,8 @@ use anyhow::{bail, Context, Result};
 
 use ftcaqr::backend::Backend;
 use ftcaqr::config::{Algorithm, BackendKind, RunConfig};
-use ftcaqr::coordinator::{run_caqr, run_tsqr, TsqrMode};
-use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::coordinator::{run_caqr, run_tsqr, run_tsqr_pooled, TsqrMode};
+use ftcaqr::fault::{FaultPlan, FaultSpec, Phase, ScheduledKill};
 use ftcaqr::ft::Semantics;
 use ftcaqr::linalg::Matrix;
 use ftcaqr::runtime::{Engine, Manifest};
@@ -76,26 +76,68 @@ impl Flags {
     }
 }
 
+/// Parse `panel:step[:tsqr|update[:incarnation]]`.
+fn parse_site(spec: &str, rest: &str) -> Result<(usize, usize, Phase, Option<u32>)> {
+    let mut it = rest.split(':');
+    let panel = it
+        .next()
+        .filter(|p| !p.is_empty())
+        .with_context(|| format!("kill spec '{spec}': missing panel"))?
+        .parse()?;
+    let step = it
+        .next()
+        .with_context(|| format!("kill spec '{spec}': missing step"))?
+        .parse()?;
+    let phase = match it.next() {
+        None | Some("update") => Phase::Update,
+        Some("tsqr") => Phase::Tsqr,
+        Some(other) => bail!("kill spec '{spec}': unknown phase '{other}' (tsqr|update)"),
+    };
+    let incarnation = it.next().map(str::parse).transpose()?;
+    if it.next().is_some() {
+        bail!("kill spec '{spec}': too many ':' fields");
+    }
+    Ok((panel, step, phase, incarnation))
+}
+
+/// `--kill rank@panel:step[:phase[:incarnation]]` — k independent kills
+/// compose by repeating the flag; an incarnation of 1 aims the kill at
+/// the first REBUILD replacement (a failure during recovery).
 fn parse_kills(specs: &[String]) -> Result<Vec<ScheduledKill>> {
     specs
         .iter()
         .map(|s| {
             let (rank, rest) = s
                 .split_once('@')
-                .with_context(|| format!("kill spec '{s}' must be rank@panel:step"))?;
-            let (panel, step) = rest
-                .split_once(':')
-                .with_context(|| format!("kill spec '{s}' must be rank@panel:step"))?;
-            Ok(ScheduledKill {
-                rank: rank.parse()?,
-                site: FailSite {
-                    panel: panel.parse()?,
-                    step: step.parse()?,
-                    phase: Phase::Update,
-                },
-            })
+                .with_context(|| format!("kill spec '{s}' must be rank@panel:step[...]"))?;
+            let (panel, step, phase, inc) = parse_site(s, rest)?;
+            let mut k = ScheduledKill::new(rank.parse()?, panel, step, phase);
+            if let Some(i) = inc {
+                k = k.at_incarnation(i);
+            }
+            Ok(k)
         })
         .collect()
+}
+
+/// `--kill-pair a,b@panel:step[:phase]` — a correlated node crash taking
+/// both ranks down at the same instant. Killing both members of a
+/// retention pair makes the run unrecoverable (reported, not hung).
+fn parse_kill_pairs(specs: &[String], group0: u32) -> Result<Vec<ScheduledKill>> {
+    let mut out = Vec::new();
+    for (i, s) in specs.iter().enumerate() {
+        let (ranks, rest) = s
+            .split_once('@')
+            .with_context(|| format!("kill-pair spec '{s}' must be a,b@panel:step[...]"))?;
+        let (ra, rb) = ranks
+            .split_once(',')
+            .with_context(|| format!("kill-pair spec '{s}': ranks must be a,b"))?;
+        let (panel, step, phase, _) = parse_site(s, rest)?;
+        let g = group0 + i as u32;
+        out.push(ScheduledKill::new(ra.parse()?, panel, step, phase).in_group(g));
+        out.push(ScheduledKill::new(rb.parse()?, panel, step, phase).in_group(g));
+    }
+    Ok(out)
 }
 
 fn make_backend(kind: &str, artifacts: &PathBuf) -> Result<Arc<Backend>> {
@@ -114,12 +156,21 @@ ftcaqr — fault-tolerant communication-avoiding QR (Coti 2016)
 
 USAGE:
   ftcaqr run  [--config f.kv] [--rows N] [--cols N] [--block B] [--procs P]
-              [--algorithm ft|plain] [--semantics rebuild|abort|shrink|blank]
+              [--workers W] [--algorithm ft|plain]
+              [--semantics rebuild|abort|shrink|blank]
               [--backend native|xla] [--artifacts DIR]
-              [--kill rank@panel:step]... [--checkpoint-every K]
-              [--seed S] [--trace-out trace.json]
-  ftcaqr tsqr [--rows N] [--block B] [--procs P] [--mode ft|plain] [--seed S]
+              [--kill rank@panel:step[:tsqr|update[:incarnation]]]...
+              [--kill-pair a,b@panel:step[:phase]]...
+              [--checkpoint-every K] [--seed S] [--trace-out trace.json]
+  ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W]
+              [--mode ft|plain] [--seed S]
   ftcaqr info [--artifacts DIR]
+
+P is the number of simulated ranks (hundreds are fine: ranks are pooled
+tasks, not OS threads); W bounds the worker pool (0 = core count).
+Repeat --kill for k independent failures; --kill ...:1 aims at the first
+REBUILD replacement (failure during recovery); --kill-pair crashes both
+ranks at once — on a retention pair this is reported as unrecoverable.
 ";
 
 fn cmd_run(flags: &Flags) -> Result<()> {
@@ -131,6 +182,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     cfg.cols = flags.num("cols", cfg.cols)?;
     cfg.block = flags.num("block", cfg.block)?;
     cfg.procs = flags.num("procs", cfg.procs)?;
+    cfg.workers = flags.num("workers", cfg.workers)?;
     cfg.seed = flags.num("seed", cfg.seed)?;
     cfg.checkpoint_every = flags.num("checkpoint-every", cfg.checkpoint_every)?;
     if let Some(a) = flags.get("algorithm") {
@@ -141,7 +193,8 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
     let backend_kind = flags.get("backend").unwrap_or("native").to_string();
     let artifacts = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
-    let kills = parse_kills(&flags.all("kill"))?;
+    let mut kills = parse_kills(&flags.all("kill"))?;
+    kills.extend(parse_kill_pairs(&flags.all("kill-pair"), 0)?);
     if !kills.is_empty() {
         cfg.fault = FaultSpec::Schedule { kills };
     }
@@ -181,6 +234,7 @@ fn cmd_tsqr(flags: &Flags) -> Result<()> {
     let rows: usize = flags.num("rows", 512)?;
     let block: usize = flags.num("block", 16)?;
     let procs: usize = flags.num("procs", 8)?;
+    let workers: usize = flags.num("workers", 0)?;
     let seed: u64 = flags.num("seed", 0)?;
     let mode_s = flags.get("mode").unwrap_or("ft");
     let a = Matrix::randn(rows, block, seed);
@@ -188,7 +242,11 @@ fn cmd_tsqr(flags: &Flags) -> Result<()> {
         "plain" => TsqrMode::Plain,
         _ => TsqrMode::FaultTolerant,
     };
-    let out = run_tsqr(&a, procs, m, Backend::native(), CostModel::default())?;
+    let out = if workers > 0 {
+        run_tsqr_pooled(&a, procs, m, Backend::native(), CostModel::default(), workers)?
+    } else {
+        run_tsqr(&a, procs, m, Backend::native(), CostModel::default())?
+    };
     println!("== tsqr {mode_s} ==");
     println!("redundancy per step (paper Fig 2): {:?}", out.redundancy);
     println!("final holders of R: {}/{procs}", out.final_holders);

@@ -86,12 +86,19 @@ impl Metrics {
 /// Immutable snapshot for printing / serialization.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Report {
+    /// One-way messages sent.
     pub messages: u64,
+    /// Pairwise exchanges (sendrecv calls) performed.
     pub exchanges: u64,
+    /// Total payload bytes moved.
     pub bytes: u64,
+    /// Flops issued (from the backend flop model).
     pub flops: u64,
+    /// Recovery events completed.
     pub recoveries: u64,
+    /// Failures injected.
     pub failures: u64,
+    /// Max over ranks of the final logical clock, seconds.
     pub critical_path: f64,
 }
 

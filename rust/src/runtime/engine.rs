@@ -6,7 +6,16 @@
 //! are raw C++ pointers with no `Send`/`Sync` story; confining them to
 //! one thread makes the rest of the system trivially `Send` and matches
 //! how a serving runtime would pin a device context anyway.
+//!
+//! The PJRT binding itself is only available in deployment images, so the
+//! real execution loop is gated behind the `pjrt` cargo feature (which
+//! additionally requires adding the vendored `xla` binding to
+//! `Cargo.toml` — it is not on crates.io). Without the feature the
+//! engine still starts (manifest loading, shape selection and
+//! `ftcaqr info` all work), but every exec request fails fast with a
+//! clear error instead of a link failure at build time.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -18,17 +27,24 @@ use crate::linalg::Matrix;
 
 /// A single execute call: artifact name + positional inputs.
 pub struct ExecRequest {
+    /// Artifact name (file stem from the manifest).
     pub artifact: String,
+    /// Positional inputs, already padded to the artifact's shapes.
     pub inputs: Vec<Matrix>,
+    /// Where the engine thread sends the outputs.
     pub reply: std::sync::mpsc::Sender<Result<Vec<Matrix>>>,
 }
 
 /// Cumulative engine counters (lock-free reads).
 #[derive(Debug, Default)]
 pub struct EngineStats {
+    /// Artifact executions served.
     pub executions: AtomicU64,
+    /// Compilations performed (cache misses).
     pub compilations: AtomicU64,
+    /// Nanoseconds spent executing.
     pub exec_nanos: AtomicU64,
+    /// Nanoseconds spent compiling.
     pub compile_nanos: AtomicU64,
 }
 
@@ -53,10 +69,12 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
+    /// The artifact manifest the engine serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Cumulative engine counters.
     pub fn stats(&self) -> &EngineStats {
         &self.stats
     }
@@ -103,7 +121,7 @@ impl Engine {
             .name("pjrt-engine".into())
             .spawn(move || {
                 if let Err(e) = engine_loop(rx, m2, s2) {
-                    log::error!("engine thread exited with error: {e:#}");
+                    eprintln!("ftcaqr: engine thread exited with error: {e:#}");
                 }
             })
             .context("spawning engine thread")?;
@@ -111,13 +129,33 @@ impl Engine {
     }
 }
 
+/// Stub loop (no `pjrt` feature): answer every request with an error so
+/// callers get a diagnosable failure instead of a missing-linker build.
+#[cfg(not(feature = "pjrt"))]
+fn engine_loop(
+    rx: std::sync::mpsc::Receiver<ExecRequest>,
+    _manifest: Arc<Manifest>,
+    _stats: Arc<EngineStats>,
+) -> Result<()> {
+    while let Ok(req) = rx.recv() {
+        let _ = req.reply.send(Err(anyhow!(
+            "artifact {}: ftcaqr was built without the `pjrt` feature; \
+             the XLA backend is unavailable (use --backend native, or build \
+             with `--features pjrt` in a deployment image)",
+            req.artifact
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn engine_loop(
     rx: std::sync::mpsc::Receiver<ExecRequest>,
     manifest: Arc<Manifest>,
     stats: Arc<EngineStats>,
 ) -> Result<()> {
     let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-    log::info!(
+    crate::simlog!(
         "pjrt engine up: platform={} devices={}",
         client.platform_name(),
         client.device_count()
@@ -136,6 +174,7 @@ fn engine_loop(
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn serve_one(
     client: &xla::PjRtClient,
     manifest: &Manifest,

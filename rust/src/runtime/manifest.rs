@@ -42,10 +42,15 @@ impl ArtifactEntry {
 /// Parsed manifest plus the directory it lives in.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Lowering profile the artifacts were built with.
     pub profile: String,
+    /// JAX version that produced the HLO.
     pub jax_version: String,
+    /// Pallas tile size baked into the kernels.
     pub tile: usize,
+    /// All lowered (op, shape) entries.
     pub artifacts: Vec<ArtifactEntry>,
+    /// Directory the manifest (and HLO files) live in.
     pub dir: PathBuf,
 }
 

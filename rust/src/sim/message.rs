@@ -33,8 +33,11 @@ pub enum TagKind {
 /// concurrent panels/steps can never cross-talk.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Tag {
+    /// Protocol message kind.
     pub kind: TagKind,
+    /// CAQR panel index the message belongs to.
     pub panel: u32,
+    /// Tree step the message belongs to.
     pub step: u32,
 }
 
@@ -53,8 +56,11 @@ impl Tag {
 /// word). Sizes are accounted from the matrix buffers.
 #[derive(Clone, Debug)]
 pub enum MsgData {
+    /// A single matrix payload.
     Mat(Matrix),
+    /// A bundle of matrices.
     Mats(Vec<Matrix>),
+    /// A small control word.
     Ctrl(u64),
 }
 
@@ -98,8 +104,11 @@ impl MsgData {
 /// A routed message.
 #[derive(Clone, Debug)]
 pub struct Envelope {
+    /// Sending rank.
     pub src: usize,
+    /// Full message tag (kind + panel + step).
     pub tag: Tag,
+    /// The payload.
     pub data: MsgData,
     /// Sender's logical clock at send time (cost model input).
     pub send_ts: f64,
@@ -113,6 +122,7 @@ pub struct Envelope {
 /// Mailbox events: messages, plus failure-detector notices.
 #[derive(Clone, Debug)]
 pub enum Event {
+    /// A routed message.
     Msg(Envelope),
     /// Rank `0` died (ULFM failure detector).
     Death(usize),

@@ -1,12 +1,24 @@
 //! Simulated message-passing world: the MPI + ULFM substrate.
 //!
-//! Each rank is an OS thread holding a [`RankCtx`]; ranks exchange typed,
-//! tagged messages through a shared [`Router`]. Failure injection kills a
-//! rank's thread and broadcasts a death notice; any operation that
-//! involves the dead rank afterwards returns [`Fail::RankFailed`] —
-//! exactly ULFM's "errors surface only at operations touching the failed
-//! process" (paper §II). `REBUILD` re-creates the rank's mailbox and a
-//! new thread continues from recovered state (paper III-C).
+//! Each rank holds a [`RankCtx`]; ranks exchange typed, tagged messages
+//! through a shared [`Router`]. Failure injection kills a rank and
+//! broadcasts a death notice; any operation that involves the dead rank
+//! afterwards returns [`Fail::RankFailed`] — exactly ULFM's "errors
+//! surface only at operations touching the failed process" (paper §II).
+//! `REBUILD` re-creates the rank's mailbox and a new task continues from
+//! recovered state (paper III-C).
+//!
+//! Two execution engines drive rank bodies (see `DESIGN.md` "Scheduler:
+//! parking and wakeup"):
+//!
+//! * [`World::run_all`] — one OS thread per rank with *blocking*
+//!   [`RankCtx::recv`] / [`RankCtx::sendrecv`]. Simple, used by small
+//!   unit tests and demos; caps out at a few dozen ranks.
+//! * [`World::run_tasks`] — the production engine: a bounded worker pool
+//!   ([`sched`]) drives resumable [`sched::RankTask`]s that *park* on the
+//!   non-blocking [`RankCtx::try_recv`] / [`RankCtx::begin_exchange`] +
+//!   [`RankCtx::poll_exchange`] primitives and are woken by message
+//!   delivery. P = 512–1024 ranks run comfortably on a laptop core count.
 //!
 //! Per-rank logical clocks implement the dual-channel cost model of
 //! [`clock::CostModel`], which is what the overhead experiments (E2)
@@ -14,9 +26,11 @@
 
 pub mod clock;
 pub mod message;
+pub mod sched;
 
 pub use clock::CostModel;
 pub use message::{Envelope, Event, MsgData, Tag, TagKind};
+pub use sched::{default_workers, RankTask, Spawner, TaskPoll};
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -32,9 +46,16 @@ struct RankSlot {
     incarnation: u32,
 }
 
+/// Callback invoked with a rank id whenever an event lands in that rank's
+/// mailbox — the pooled scheduler registers one to unpark the rank's task.
+pub type Waker = Arc<dyn Fn(usize) + Send + Sync>;
+
 /// Shared routing fabric: senders + liveness for every rank.
 pub struct Router {
     slots: RwLock<Vec<RankSlot>>,
+    /// Scheduler wakeup hook (None under the thread-per-rank engine,
+    /// where blocking `recv` needs no external wakeups).
+    waker: RwLock<Option<Waker>>,
 }
 
 impl Router {
@@ -46,61 +67,105 @@ impl Router {
             slots.push(RankSlot { tx: Some(tx), alive: true, incarnation: 0 });
             rxs.push(rx);
         }
-        (Arc::new(Self { slots: RwLock::new(slots) }), rxs)
+        (Arc::new(Self { slots: RwLock::new(slots), waker: RwLock::new(None) }), rxs)
     }
 
+    /// Install the scheduler's wakeup hook (see [`sched`]).
+    pub(crate) fn set_waker(&self, w: Option<Waker>) {
+        *self.waker.write().unwrap() = w;
+    }
+
+    fn wake(&self, rank: usize) {
+        if let Some(w) = self.waker.read().unwrap().as_ref() {
+            w(rank);
+        }
+    }
+
+    fn wake_all(&self, n: usize) {
+        if let Some(w) = self.waker.read().unwrap().as_ref() {
+            for r in 0..n {
+                w(r);
+            }
+        }
+    }
+
+    /// Poke a rank's task (scheduler wakeup) without delivering an event
+    /// — used by the coordinator when buddy-store contents change.
+    pub(crate) fn notify(&self, rank: usize) {
+        self.wake(rank);
+    }
+
+    /// Is `rank` currently alive?
     pub fn is_alive(&self, rank: usize) -> bool {
         self.slots.read().unwrap().get(rank).map(|s| s.alive).unwrap_or(false)
     }
 
+    /// Number of currently-alive ranks.
     pub fn alive_count(&self) -> usize {
         self.slots.read().unwrap().iter().filter(|s| s.alive).count()
     }
 
+    /// Current incarnation of `rank` (0 until its first REBUILD).
     pub fn incarnation(&self, rank: usize) -> u32 {
         self.slots.read().unwrap()[rank].incarnation
     }
 
     /// Deliver an event; `false` if the destination is dead/closed.
     fn deliver(&self, dst: usize, ev: Event) -> bool {
-        let slots = self.slots.read().unwrap();
-        match slots.get(dst).and_then(|s| s.tx.as_ref()) {
-            Some(tx) if slots[dst].alive => tx.send(ev).is_ok(),
-            _ => false,
+        let delivered = {
+            let slots = self.slots.read().unwrap();
+            match slots.get(dst).and_then(|s| s.tx.as_ref()) {
+                Some(tx) if slots[dst].alive => tx.send(ev).is_ok(),
+                _ => false,
+            }
+        };
+        if delivered {
+            self.wake(dst);
         }
+        delivered
     }
 
     /// Kill a rank: drop its mailbox sender and notify everyone else.
     pub fn kill(&self, rank: usize) {
-        let mut slots = self.slots.write().unwrap();
-        if !slots[rank].alive {
-            return;
-        }
-        slots[rank].alive = false;
-        slots[rank].tx = None;
-        for (i, s) in slots.iter().enumerate() {
-            if i != rank && s.alive {
-                if let Some(tx) = &s.tx {
-                    let _ = tx.send(Event::Death(rank));
+        let n = {
+            let mut slots = self.slots.write().unwrap();
+            if !slots[rank].alive {
+                return;
+            }
+            slots[rank].alive = false;
+            slots[rank].tx = None;
+            for (i, s) in slots.iter().enumerate() {
+                if i != rank && s.alive {
+                    if let Some(tx) = &s.tx {
+                        let _ = tx.send(Event::Death(rank));
+                    }
                 }
             }
-        }
+            slots.len()
+        };
+        // Death notices may unblock tasks parked on the dead rank.
+        self.wake_all(n);
     }
 
     /// REBUILD: new mailbox + incarnation for `rank`, notify survivors.
     fn revive(&self, rank: usize) -> Receiver<Event> {
-        let mut slots = self.slots.write().unwrap();
-        let (tx, rx) = channel();
-        slots[rank].tx = Some(tx);
-        slots[rank].alive = true;
-        slots[rank].incarnation += 1;
-        for (i, s) in slots.iter().enumerate() {
-            if i != rank && s.alive {
-                if let Some(tx) = &s.tx {
-                    let _ = tx.send(Event::Revive(rank));
+        let (rx, n) = {
+            let mut slots = self.slots.write().unwrap();
+            let (tx, rx) = channel();
+            slots[rank].tx = Some(tx);
+            slots[rank].alive = true;
+            slots[rank].incarnation += 1;
+            for (i, s) in slots.iter().enumerate() {
+                if i != rank && s.alive {
+                    if let Some(tx) = &s.tx {
+                        let _ = tx.send(Event::Revive(rank));
+                    }
                 }
             }
-        }
+            (rx, slots.len())
+        };
+        // Revive notices let parked detectors retry their exchange.
+        self.wake_all(n);
         rx
     }
 }
@@ -157,15 +222,23 @@ impl Mailbox {
     }
 }
 
-/// Everything a rank's thread needs: identity, mailbox, clock, metrics,
+/// Everything a rank's task needs: identity, mailbox, clock, metrics,
 /// fault injector. Dropping the ctx publishes the final logical clock.
 pub struct RankCtx {
+    /// This rank's id in `[0, world.n)`.
     pub rank: usize,
     /// Logical time (seconds) under the dual-channel cost model.
     pub clock: f64,
+    /// Cost-model parameters shared by the whole world.
     pub cost: CostModel,
+    /// Run-wide counters.
     pub metrics: Arc<Metrics>,
+    /// Failure injector consulted at [`RankCtx::maybe_fail`] sites.
     pub fault: Arc<FaultPlan>,
+    /// Incarnation this context was created for; a correlated (group)
+    /// kill can invalidate it while the task still runs — see
+    /// [`RankCtx::check_self`].
+    inc: u32,
     router: Arc<Router>,
     mailbox: Mailbox,
 }
@@ -183,21 +256,46 @@ impl RankCtx {
         self.metrics.record_flops(flops);
     }
 
-    /// Fault-injection site: dies (and unwinds the thread) when scheduled.
+    /// Fault-injection site: dies (and unwinds the task) when scheduled.
+    /// A kill belonging to a correlated group (a simulated node crash)
+    /// takes the other group members down at the same instant.
     pub fn maybe_fail(&mut self, site: FailSite) -> Result<(), Fail> {
         let inc = self.router.incarnation(self.rank);
         if self.fault.should_fail_inc(self.rank, inc, site) {
             self.metrics.record_failure();
             self.router.kill(self.rank);
+            for other in self.fault.collateral_of(self.rank, site) {
+                if other != self.rank && self.router.is_alive(other) {
+                    self.metrics.record_failure();
+                    self.router.kill(other);
+                }
+            }
             return Err(Fail::Killed);
         }
         Ok(())
     }
 
+    /// The incarnation this context was created for.
+    pub fn incarnation(&self) -> u32 {
+        self.inc
+    }
+
+    /// `Err(Killed)` when this context's incarnation is no longer the
+    /// live one (the rank was killed out from under the task by a
+    /// correlated kill, or superseded by a REBUILD).
+    pub fn check_self(&self) -> Result<(), Fail> {
+        if !self.router.is_alive(self.rank) || self.router.incarnation(self.rank) != self.inc {
+            return Err(Fail::Killed);
+        }
+        Ok(())
+    }
+
+    /// Is `rank` currently alive?
     pub fn is_alive(&self, rank: usize) -> bool {
         self.router.is_alive(rank)
     }
 
+    /// The routing fabric (liveness queries, failure injection hooks).
     pub fn router(&self) -> &Arc<Router> {
         &self.router
     }
@@ -291,13 +389,120 @@ impl RankCtx {
             }
         }
     }
+
+    // ---- non-blocking primitives (pooled scheduler) --------------------
+
+    /// True when a message from `src` with `tag` is already deliverable
+    /// (drains delivered events first; does not consume the message).
+    pub fn has_pending(&mut self, src: usize, tag: Tag) -> bool {
+        let _ = self.mailbox.drain();
+        self.mailbox
+            .buf
+            .get(&(src, tag))
+            .is_some_and(|q| !q.is_empty())
+    }
+
+    /// Non-blocking selective receive for pooled tasks: `Ok(None)` means
+    /// "nothing yet — park and re-poll on the next wakeup". Semantics
+    /// otherwise match [`RankCtx::recv`] (messages already on the wire
+    /// are delivered before death is reported).
+    pub fn try_recv(&mut self, src: usize, tag: Tag) -> Result<Option<MsgData>, Fail> {
+        self.check_self()?;
+        let open = self.mailbox.drain();
+        if let Some(env) = self.mailbox.take(src, tag) {
+            self.clock = self.cost.recv_time(self.clock, env.send_ts, env.bytes);
+            return Ok(Some(env.data));
+        }
+        if !open {
+            return Err(Fail::WorldGone);
+        }
+        if self.mailbox.dead.contains(&src) || !self.router.is_alive(src) {
+            return Err(Fail::RankFailed { rank: src });
+        }
+        Ok(None)
+    }
+
+    /// Start a paired exchange (Algorithm 2's `sendrecv`) without
+    /// blocking: pushes our half to the peer and returns a resumable
+    /// [`ExchangeOp`] to be driven by [`RankCtx::poll_exchange`].
+    pub fn begin_exchange(
+        &mut self,
+        peer: usize,
+        tag: Tag,
+        data: MsgData,
+    ) -> Result<ExchangeOp, Fail> {
+        self.check_self()?;
+        let payload = data.clone();
+        let seen_revives = self.mailbox.revive_count(peer);
+        crate::simlog!(
+            "[r{}] push {tag:?} -> {peer} (inc {})",
+            self.rank,
+            self.router.incarnation(peer)
+        );
+        let bytes_out = self.push(peer, tag, data, true)?;
+        self.metrics.record_exchange(bytes_out);
+        Ok(ExchangeOp { peer, tag, payload, bytes_out, seen_revives })
+    }
+
+    /// Drive an in-flight exchange. `Ok(None)` = park; `Ok(Some(d))` =
+    /// the peer's half arrived; `Err(RankFailed)` = the peer died
+    /// (ULFM detection — the caller decides whether to REBUILD + retry
+    /// with a fresh [`RankCtx::begin_exchange`]). Handles the
+    /// retransmit-on-revive protocol exactly like blocking `sendrecv`.
+    pub fn poll_exchange(&mut self, op: &mut ExchangeOp) -> Result<Option<MsgData>, Fail> {
+        self.check_self()?;
+        let open = self.mailbox.drain();
+        // Retransmission must be checked BEFORE consuming the peer's
+        // half (same reasoning as the blocking path: a Death + Revive +
+        // rebuilt-peer message batch must not starve the replacement).
+        let now = self.mailbox.revive_count(op.peer);
+        if now > op.seen_revives {
+            op.seen_revives = now;
+            let ok = self.push(op.peer, op.tag, op.payload.clone(), true).is_ok();
+            crate::simlog!("[r{}] RETRANSMIT to {} {:?} ok={ok}", self.rank, op.peer, op.tag);
+        }
+        if let Some(env) = self.mailbox.take(op.peer, op.tag) {
+            self.clock =
+                self.cost.exchange_time(self.clock, env.send_ts, op.bytes_out, env.bytes);
+            return Ok(Some(env.data));
+        }
+        if !open {
+            return Err(Fail::WorldGone);
+        }
+        if self.mailbox.dead.contains(&op.peer) || !self.router.is_alive(op.peer) {
+            return Err(Fail::RankFailed { rank: op.peer });
+        }
+        Ok(None)
+    }
+}
+
+/// State of one in-flight pairwise exchange under the pooled scheduler:
+/// created by [`RankCtx::begin_exchange`], resumed by
+/// [`RankCtx::poll_exchange`] each time the owning task is woken.
+pub struct ExchangeOp {
+    peer: usize,
+    tag: Tag,
+    payload: MsgData,
+    bytes_out: usize,
+    seen_revives: u64,
+}
+
+impl ExchangeOp {
+    /// The peer rank this exchange is paired with.
+    pub fn peer(&self) -> usize {
+        self.peer
+    }
 }
 
 /// The simulated machine: `n` ranks, a router, shared metrics + faults.
 pub struct World {
+    /// Number of simulated ranks.
     pub n: usize,
+    /// Cost-model parameters shared by every rank.
     pub cost: CostModel,
+    /// Run-wide counters.
     pub metrics: Arc<Metrics>,
+    /// Failure injector shared by every rank.
     pub fault: Arc<FaultPlan>,
     router: Arc<Router>,
     mailboxes: Mutex<Vec<Option<Receiver<Event>>>>,
@@ -331,6 +536,7 @@ impl World {
             cost: self.cost,
             metrics: self.metrics.clone(),
             fault: self.fault.clone(),
+            inc: self.router.incarnation(rank),
             router: self.router.clone(),
             mailbox: Mailbox::new(rx),
         }
@@ -346,12 +552,16 @@ impl World {
             cost: self.cost,
             metrics: self.metrics.clone(),
             fault: self.fault.clone(),
+            inc: self.router.incarnation(rank),
             router: self.router.clone(),
             mailbox: Mailbox::new(rx),
         }
     }
 
-    /// Spawn every rank on its own thread with the same body; join all.
+    /// Spawn every rank on its own OS thread with the same blocking body;
+    /// join all. This is the small-world test harness — production
+    /// drivers use [`World::run_tasks`], which scales to P >= 512 on a
+    /// bounded pool.
     pub fn run_all<T, F>(self: &Arc<Self>, f: F) -> Vec<Result<T, Fail>>
     where
         T: Send + 'static,
@@ -372,6 +582,21 @@ impl World {
             .into_iter()
             .map(|h| h.join().expect("rank thread panicked"))
             .collect()
+    }
+
+    /// Drive resumable rank tasks on a bounded worker pool (the engine
+    /// behind the large-P sweeps and the CAQR driver). `tasks` pairs each
+    /// initial task with its rank; further tasks (REBUILD replacements)
+    /// can be added mid-run through the [`Spawner`] passed to every
+    /// `poll`. Returns one `(rank, result)` per task ever run, in spawn
+    /// order. A global stall (every live task parked with nothing in
+    /// flight) is reported as [`Fail::Stalled`] instead of hanging.
+    pub fn run_tasks(
+        self: &Arc<Self>,
+        workers: usize,
+        tasks: Vec<(usize, Box<dyn RankTask>)>,
+    ) -> Vec<(usize, Result<(), Fail>)> {
+        sched::run_pool(self, workers, tasks)
     }
 }
 

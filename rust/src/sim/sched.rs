@@ -1,0 +1,455 @@
+//! Bounded worker-pool scheduler: the engine that lets one process
+//! simulate P >= 512 ranks.
+//!
+//! The thread-per-rank engine ([`super::World::run_all`]) burns an OS
+//! thread per simulated process, which caps experiments at a few dozen
+//! ranks. Here instead, rank bodies are *resumable tasks* implementing
+//! [`RankTask`]: `poll` runs the body forward until it either finishes or
+//! would block on a receive/exchange, in which case it returns
+//! [`TaskPoll::Pending`] and **parks**. A fixed set of workers (default:
+//! the machine's core count) drains a run queue of unparked tasks.
+//!
+//! Wakeup protocol (see `DESIGN.md` "Scheduler: parking and wakeup"):
+//!
+//! * every event delivered to rank `r`'s mailbox (message, death notice,
+//!   revive notice) calls the [`super::Router`]'s registered waker, which
+//!   re-queues `r`'s task if it is parked;
+//! * a wake that lands while the task is mid-poll sets a *dirty* flag so
+//!   the task is immediately re-queued when its poll parks — the classic
+//!   lost-wakeup guard;
+//! * REBUILD replacements are injected mid-run through the [`Spawner`]
+//!   handed to every poll, and their results are collected with
+//!   everyone else's.
+//!
+//! Because events are only ever produced by running tasks, "run queue
+//! empty and nothing running but live tasks remain" is a proof of global
+//! deadlock; the pool then fails every parked task with
+//! [`Fail::Stalled`] instead of hanging the process — protocol bugs
+//! surface as crisp errors even at P = 1024.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::ft::Fail;
+
+use super::{RankCtx, World};
+
+/// Outcome of one [`RankTask::poll`] call.
+pub enum TaskPoll {
+    /// The task finished (successfully or with a failure).
+    Ready(Result<(), Fail>),
+    /// The task parked on a receive/exchange; re-poll after a wakeup.
+    Pending,
+}
+
+/// A resumable rank body. `poll` must make as much progress as possible
+/// and return `Pending` only after a non-blocking primitive
+/// ([`RankCtx::try_recv`] / [`RankCtx::poll_exchange`]) reported
+/// "nothing yet"; the scheduler re-polls after the next event delivery
+/// to this rank. Polls of distinct tasks run concurrently on the pool,
+/// so shared state must be synchronized (as with rank threads).
+pub trait RankTask: Send {
+    /// Advance the task. `sp` spawns REBUILD replacement tasks mid-run.
+    fn poll(&mut self, ctx: &mut RankCtx, sp: &Spawner) -> TaskPoll;
+}
+
+/// Default pool width for `n_tasks` simulated ranks: the machine's
+/// available parallelism, capped by the task count.
+pub fn default_workers(n_tasks: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    hw.clamp(1, n_tasks.max(1))
+}
+
+enum RunState {
+    /// In the run queue.
+    Queued,
+    /// Being polled by a worker; `dirty` records a wakeup that arrived
+    /// mid-poll.
+    Running { dirty: bool },
+    /// Waiting for a wakeup.
+    Parked,
+    /// Finished; `result` is set.
+    Done,
+}
+
+struct Slot {
+    rank: usize,
+    run: RunState,
+    /// Context + task, present unless Running (a worker holds them) or
+    /// Done (dropped — dropping the ctx publishes its final clock).
+    cell: Option<(RankCtx, Box<dyn RankTask>)>,
+    result: Option<Result<(), Fail>>,
+}
+
+struct CoreState {
+    slots: Vec<Slot>,
+    queue: VecDeque<usize>,
+    /// rank -> live task id (the latest incarnation's task).
+    rank_task: HashMap<usize, usize>,
+    /// Tasks not yet Done.
+    active: usize,
+    /// Tasks currently being polled.
+    running: usize,
+}
+
+struct Core {
+    state: Mutex<CoreState>,
+    cv: Condvar,
+}
+
+impl Core {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(CoreState {
+                slots: Vec::new(),
+                queue: VecDeque::new(),
+                rank_task: HashMap::new(),
+                active: 0,
+                running: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Router waker target: unpark rank `rank`'s live task.
+    fn wake(&self, rank: usize) {
+        let mut g = self.state.lock().unwrap();
+        if let Some(&id) = g.rank_task.get(&rank) {
+            match g.slots[id].run {
+                RunState::Parked => {
+                    g.slots[id].run = RunState::Queued;
+                    g.queue.push_back(id);
+                    self.cv.notify_one();
+                }
+                RunState::Running { .. } => {
+                    g.slots[id].run = RunState::Running { dirty: true };
+                }
+                RunState::Queued | RunState::Done => {}
+            }
+        }
+    }
+
+    fn results(&self) -> Vec<(usize, Result<(), Fail>)> {
+        let mut g = self.state.lock().unwrap();
+        g.slots
+            .iter_mut()
+            .map(|s| (s.rank, s.result.take().unwrap_or(Err(Fail::Stalled))))
+            .collect()
+    }
+}
+
+/// Handle for adding tasks to a running pool (REBUILD replacements).
+/// Cloneable and passed to every [`RankTask::poll`].
+#[derive(Clone)]
+pub struct Spawner {
+    core: Arc<Core>,
+}
+
+impl Spawner {
+    /// Register `task` as rank `ctx.rank`'s live task and queue it. The
+    /// rank's previous task (if any) keeps running to completion but no
+    /// longer receives wakeups — it is expected to be dead/superseded
+    /// (see [`RankCtx::check_self`]).
+    pub fn spawn(&self, ctx: RankCtx, task: Box<dyn RankTask>) {
+        let mut g = self.core.state.lock().unwrap();
+        let id = g.slots.len();
+        let rank = ctx.rank;
+        g.slots.push(Slot { rank, run: RunState::Queued, cell: Some((ctx, task)), result: None });
+        g.rank_task.insert(rank, id);
+        g.active += 1;
+        g.queue.push_back(id);
+        self.core.cv.notify_one();
+    }
+}
+
+enum PollOutcome {
+    Finished(Result<(), Fail>),
+    Parked(RankCtx, Box<dyn RankTask>),
+}
+
+fn worker_loop(core: &Arc<Core>, sp: &Spawner) {
+    let mut g = core.state.lock().unwrap();
+    loop {
+        if let Some(id) = g.queue.pop_front() {
+            let Some((mut ctx, mut task)) = g.slots[id].cell.take() else {
+                continue; // stale queue entry for a finished task
+            };
+            g.slots[id].run = RunState::Running { dirty: false };
+            g.running += 1;
+            drop(g);
+
+            let outcome = match task.poll(&mut ctx, sp) {
+                TaskPoll::Ready(res) => {
+                    // Dropping the ctx publishes the final logical clock.
+                    drop(ctx);
+                    drop(task);
+                    PollOutcome::Finished(res)
+                }
+                TaskPoll::Pending => PollOutcome::Parked(ctx, task),
+            };
+
+            g = core.state.lock().unwrap();
+            g.running -= 1;
+            match outcome {
+                PollOutcome::Finished(res) => {
+                    let rank = g.slots[id].rank;
+                    g.slots[id].run = RunState::Done;
+                    g.slots[id].result = Some(res);
+                    if g.rank_task.get(&rank) == Some(&id) {
+                        g.rank_task.remove(&rank);
+                    }
+                    g.active -= 1;
+                    if g.active == 0 {
+                        core.cv.notify_all();
+                    }
+                }
+                PollOutcome::Parked(ctx, task) => {
+                    let dirty = matches!(g.slots[id].run, RunState::Running { dirty: true });
+                    g.slots[id].cell = Some((ctx, task));
+                    if dirty {
+                        g.slots[id].run = RunState::Queued;
+                        g.queue.push_back(id);
+                        core.cv.notify_one();
+                    } else {
+                        g.slots[id].run = RunState::Parked;
+                    }
+                }
+            }
+            continue;
+        }
+        if g.active == 0 {
+            core.cv.notify_all();
+            return;
+        }
+        if g.running == 0 {
+            // Global stall: every live task is parked, no poll is in
+            // flight, and events are only produced by running tasks —
+            // nothing can ever wake anyone again. Fail crisply.
+            for slot in g.slots.iter_mut() {
+                if !matches!(slot.run, RunState::Done) {
+                    slot.cell = None; // drop ctx -> publish final clock
+                    slot.run = RunState::Done;
+                    slot.result = Some(Err(Fail::Stalled));
+                }
+            }
+            g.active = 0;
+            g.rank_task.clear();
+            core.cv.notify_all();
+            return;
+        }
+        g = core.cv.wait(g).unwrap();
+    }
+}
+
+/// Run `tasks` to completion on `workers` pool threads (see
+/// [`World::run_tasks`]).
+pub(crate) fn run_pool(
+    world: &Arc<World>,
+    workers: usize,
+    tasks: Vec<(usize, Box<dyn RankTask>)>,
+) -> Vec<(usize, Result<(), Fail>)> {
+    let core = Core::new();
+    {
+        let c = core.clone();
+        let waker: super::Waker = Arc::new(move |rank| c.wake(rank));
+        world.router().set_waker(Some(waker));
+    }
+    let sp = Spawner { core: core.clone() };
+    for (rank, task) in tasks {
+        sp.spawn(world.ctx(rank), task);
+    }
+    let nworkers = workers.max(1);
+    std::thread::scope(|s| {
+        for i in 0..nworkers {
+            let core = core.clone();
+            let sp = sp.clone();
+            std::thread::Builder::new()
+                .name(format!("sim-worker-{i}"))
+                .spawn_scoped(s, move || worker_loop(&core, &sp))
+                .expect("spawn pool worker");
+        }
+    });
+    world.router().set_waker(None);
+    core.results()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultPlan;
+    use crate::sim::{CostModel, ExchangeOp, MsgData, Tag, TagKind};
+
+    fn tag() -> Tag {
+        Tag::plain(TagKind::Misc(42))
+    }
+
+    /// Even ranks send a token to rank+1 and wait for the doubled reply;
+    /// odd ranks wait for the token and reply.
+    struct PingPong {
+        sent: bool,
+    }
+
+    impl RankTask for PingPong {
+        fn poll(&mut self, ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+            let me = ctx.rank;
+            if me % 2 == 0 {
+                if !self.sent {
+                    if let Err(e) = ctx.send(me + 1, tag(), MsgData::Ctrl(me as u64)) {
+                        return TaskPoll::Ready(Err(e));
+                    }
+                    self.sent = true;
+                }
+                match ctx.try_recv(me + 1, tag()) {
+                    Ok(Some(d)) => {
+                        assert_eq!(d.into_ctrl(), 2 * me as u64);
+                        TaskPoll::Ready(Ok(()))
+                    }
+                    Ok(None) => TaskPoll::Pending,
+                    Err(e) => TaskPoll::Ready(Err(e)),
+                }
+            } else {
+                match ctx.try_recv(me - 1, tag()) {
+                    Ok(Some(d)) => {
+                        let v = d.into_ctrl();
+                        match ctx.send(me - 1, tag(), MsgData::Ctrl(2 * v)) {
+                            Ok(()) => TaskPoll::Ready(Ok(())),
+                            Err(e) => TaskPoll::Ready(Err(e)),
+                        }
+                    }
+                    Ok(None) => TaskPoll::Pending,
+                    Err(e) => TaskPoll::Ready(Err(e)),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_many_ranks_on_few_workers() {
+        let n = 128;
+        let w = World::new(n, CostModel::default(), FaultPlan::none());
+        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..n)
+            .map(|r| (r, Box::new(PingPong { sent: false }) as Box<dyn RankTask>))
+            .collect();
+        let results = w.run_tasks(4, tasks);
+        assert_eq!(results.len(), n);
+        for (rank, res) in results {
+            assert_eq!(res, Ok(()), "rank {rank}");
+        }
+        assert_eq!(w.metrics.snapshot().messages, n as u64);
+    }
+
+    /// Hypercube exchange at every step — the FT-TSQR communication
+    /// pattern, driven through begin/poll_exchange.
+    struct ExchangeChain {
+        s: usize,
+        steps: usize,
+        op: Option<ExchangeOp>,
+    }
+
+    impl RankTask for ExchangeChain {
+        fn poll(&mut self, ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+            loop {
+                if let Some(op) = self.op.as_mut() {
+                    match ctx.poll_exchange(op) {
+                        Ok(Some(d)) => {
+                            let _ = d.into_ctrl();
+                            self.op = None;
+                            self.s += 1;
+                        }
+                        Ok(None) => return TaskPoll::Pending,
+                        Err(e) => return TaskPoll::Ready(Err(e)),
+                    }
+                }
+                if self.s == self.steps {
+                    return TaskPoll::Ready(Ok(()));
+                }
+                let peer = ctx.rank ^ (1 << self.s);
+                let t = Tag::new(TagKind::Misc(1), 0, self.s);
+                match ctx.begin_exchange(peer, t, MsgData::Ctrl(ctx.rank as u64)) {
+                    Ok(op) => self.op = Some(op),
+                    Err(e) => return TaskPoll::Ready(Err(e)),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_exchanges_run_a_hypercube() {
+        let n = 64; // 6 hypercube steps
+        let w = World::new(n, CostModel::default(), FaultPlan::none());
+        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..n)
+            .map(|r| (r, Box::new(ExchangeChain { s: 0, steps: 6, op: None }) as Box<dyn RankTask>))
+            .collect();
+        let results = w.run_tasks(default_workers(n), tasks);
+        for (rank, res) in results {
+            assert_eq!(res, Ok(()), "rank {rank}");
+        }
+        assert_eq!(w.metrics.snapshot().exchanges, (n * 6) as u64);
+    }
+
+    /// A task that parks forever (waits for a message nobody sends).
+    struct Forever;
+
+    impl RankTask for Forever {
+        fn poll(&mut self, ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+            match ctx.try_recv((ctx.rank + 1) % 2, tag()) {
+                Ok(Some(_)) => TaskPoll::Ready(Ok(())),
+                Ok(None) => TaskPoll::Pending,
+                Err(e) => TaskPoll::Ready(Err(e)),
+            }
+        }
+    }
+
+    #[test]
+    fn global_stall_is_detected_not_hung() {
+        let w = World::new(2, CostModel::default(), FaultPlan::none());
+        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..2)
+            .map(|r| (r, Box::new(Forever) as Box<dyn RankTask>))
+            .collect();
+        let results = w.run_tasks(2, tasks);
+        for (_, res) in results {
+            assert_eq!(res, Err(Fail::Stalled));
+        }
+    }
+
+    /// First poll spawns a sender task for rank 1 (carried along), then
+    /// waits for its message — exercises mid-run spawning.
+    struct SpawningTask {
+        carried: Option<(RankCtx, Box<dyn RankTask>)>,
+    }
+
+    struct SendOnce;
+
+    impl RankTask for SendOnce {
+        fn poll(&mut self, ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+            TaskPoll::Ready(ctx.send(0, tag(), MsgData::Ctrl(99)))
+        }
+    }
+
+    impl RankTask for SpawningTask {
+        fn poll(&mut self, ctx: &mut RankCtx, sp: &Spawner) -> TaskPoll {
+            if let Some((c, t)) = self.carried.take() {
+                sp.spawn(c, t);
+            }
+            match ctx.try_recv(1, tag()) {
+                Ok(Some(d)) => {
+                    assert_eq!(d.into_ctrl(), 99);
+                    TaskPoll::Ready(Ok(()))
+                }
+                Ok(None) => TaskPoll::Pending,
+                Err(e) => TaskPoll::Ready(Err(e)),
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_spawned_mid_run_are_driven_and_reported() {
+        let w = World::new(2, CostModel::default(), FaultPlan::none());
+        let ctx1 = w.ctx(1);
+        let t0 = SpawningTask { carried: Some((ctx1, Box::new(SendOnce) as Box<dyn RankTask>)) };
+        let results = w.run_tasks(2, vec![(0, Box::new(t0) as Box<dyn RankTask>)]);
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|(_, r)| r.is_ok()));
+        assert_eq!(results[1].0, 1);
+    }
+}

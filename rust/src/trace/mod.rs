@@ -12,8 +12,11 @@ use std::sync::Mutex;
 pub struct TraceEvent {
     /// Logical time (dual-channel cost model seconds).
     pub t: f64,
+    /// Emitting rank.
     pub rank: usize,
+    /// CAQR panel index.
     pub panel: usize,
+    /// Tree step.
     pub step: usize,
     /// Event kind, e.g. "tsqr_merge", "update_exchange", "failure",
     /// "recovery_start", "recovery_done", "redundancy".
@@ -40,6 +43,7 @@ impl Trace {
         Arc::new(Self { events: Mutex::new(Vec::new()), enabled: false })
     }
 
+    /// Append one event (no-op when the trace is disabled).
     #[inline]
     pub fn record(&self, ev: TraceEvent) {
         if self.enabled {
@@ -59,10 +63,12 @@ impl Trace {
         self.record(TraceEvent { t, rank, panel, step, kind, value });
     }
 
+    /// Number of recorded events.
     pub fn len(&self) -> usize {
         self.events.lock().unwrap().len()
     }
 
+    /// True when nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -7,7 +7,7 @@
 use ftcaqr::backend::Backend;
 use ftcaqr::config::{Algorithm, RunConfig};
 use ftcaqr::coordinator::run_caqr_matrix;
-use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::fault::{FaultPlan, FaultSpec, Phase, ScheduledKill};
 use ftcaqr::ft::Semantics;
 use ftcaqr::linalg::Matrix;
 use ftcaqr::trace::Trace;
@@ -25,7 +25,7 @@ fn cfg(procs: usize) -> RunConfig {
 }
 
 fn kill(rank: usize, panel: usize, step: usize, phase: Phase) -> ScheduledKill {
-    ScheduledKill { rank, site: FailSite { panel, step, phase } }
+    ScheduledKill::new(rank, panel, step, phase)
 }
 
 fn run_with(c: &RunConfig, a: &Matrix, kills: Vec<ScheduledKill>) -> ftcaqr::coordinator::CaqrOutcome {

@@ -1,0 +1,156 @@
+//! Integration: multi-failure scenarios beyond single scheduled kills —
+//! k independent kills in different panels, kills aimed at a REBUILD
+//! replacement (failure during recovery), and correlated buddy-pair
+//! kills that destroy both copies of a step's redundancy and therefore
+//! must be *reported* as unrecoverable (paper §III-C reconstructs a
+//! failed process from exactly one surviving pair member), never hang.
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::coordinator::run_caqr_matrix;
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
+use ftcaqr::ft::Semantics;
+use ftcaqr::linalg::Matrix;
+use ftcaqr::trace::Trace;
+
+fn cfg(procs: usize) -> RunConfig {
+    RunConfig {
+        rows: procs * 64,
+        cols: 64,
+        block: 16,
+        procs,
+        algorithm: Algorithm::FaultTolerant,
+        semantics: Semantics::Rebuild,
+        ..Default::default()
+    }
+}
+
+fn run_with(
+    c: &RunConfig,
+    a: &Matrix,
+    fault: std::sync::Arc<FaultPlan>,
+) -> anyhow::Result<ftcaqr::coordinator::CaqrOutcome> {
+    run_caqr_matrix(c.clone(), a.clone(), Backend::native(), fault, Trace::disabled())
+}
+
+#[test]
+fn disjoint_panel_kills_both_recover() {
+    // k = 2 independent failures in different panels: both REBUILD
+    // replays succeed and the result is bitwise identical.
+    let c = cfg(8);
+    let a = Matrix::randn(c.rows, c.cols, 41);
+    let clean = run_with(&c, &a, FaultPlan::none()).unwrap();
+    let failed = run_with(
+        &c,
+        &a,
+        FaultPlan::schedule(vec![
+            ScheduledKill::new(2, 0, 0, Phase::Update),
+            ScheduledKill::new(5, 1, 0, Phase::Update),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(failed.report.failures, 2);
+    assert_eq!(failed.report.recoveries, 2);
+    assert_eq!(clean.r, failed.r);
+    assert_eq!(clean.reduced, failed.reduced);
+}
+
+#[test]
+fn kill_during_rebuild_is_survived() {
+    // The first replacement (incarnation 1) is itself killed at the very
+    // start of its replay; a second REBUILD completes the recovery.
+    let c = cfg(4);
+    let a = Matrix::randn(c.rows, c.cols, 43);
+    let clean = run_with(&c, &a, FaultPlan::none()).unwrap();
+    let failed = run_with(
+        &c,
+        &a,
+        FaultPlan::schedule(vec![
+            ScheduledKill::new(2, 1, 0, Phase::Update),
+            ScheduledKill::new(2, 0, 0, Phase::Tsqr).at_incarnation(1),
+        ]),
+    )
+    .unwrap();
+    // Two deaths (original + first replacement), one completed recovery
+    // (only the final incarnation finishes its replay).
+    assert_eq!(failed.report.failures, 2);
+    assert_eq!(failed.report.recoveries, 1);
+    assert_eq!(clean.r, failed.r);
+}
+
+#[test]
+fn buddy_pair_simultaneous_kill_is_unrecoverable_not_a_hang() {
+    // Ranks 2 and 3 are exchange buddies at tree step 0; killing both at
+    // step 1 (a node crash) destroys BOTH retained copies of their
+    // completed step-0 state. The paper's single-buddy protocol cannot
+    // reconstruct it: the run must terminate with an unrecoverable
+    // error — not deadlock, and not silently recompute outside the
+    // protocol.
+    let c = cfg(4);
+    let a = Matrix::randn(c.rows, c.cols, 47);
+    let res = run_with(&c, &a, FaultPlan::kill_pair_at((2, 3), 0, 1, Phase::Tsqr));
+    let err = format!("{:#}", res.expect_err("buddy-pair kill must fail the run"));
+    assert!(
+        err.contains("unrecoverable"),
+        "error should report lost redundancy, got: {err}"
+    );
+}
+
+#[test]
+fn simultaneous_kills_of_non_buddies_recover() {
+    // Simultaneity itself is not fatal: ranks 1 and 2 die at the same
+    // instant, but their step-0 retention buddies (ranks 0 and 3) are
+    // alive and still hold the redundant copies, so both replays succeed.
+    let c = cfg(4);
+    let a = Matrix::randn(c.rows, c.cols, 53);
+    let clean = run_with(&c, &a, FaultPlan::none()).unwrap();
+    let failed = run_with(&c, &a, FaultPlan::kill_pair_at((1, 2), 0, 1, Phase::Tsqr)).unwrap();
+    assert_eq!(failed.report.failures, 2);
+    assert_eq!(failed.report.recoveries, 2);
+    assert_eq!(clean.r, failed.r);
+}
+
+#[test]
+fn buddy_pair_kill_before_any_shared_step_recovers() {
+    // The same correlated crash aimed at step 0 — BEFORE the pair has
+    // completed (and retained) anything together. Nothing is lost, both
+    // replacements re-enter step 0 live against each other, and the run
+    // completes identically.
+    let c = cfg(4);
+    let a = Matrix::randn(c.rows, c.cols, 59);
+    let clean = run_with(&c, &a, FaultPlan::none()).unwrap();
+    let failed = run_with(&c, &a, FaultPlan::kill_pair_at((2, 3), 0, 0, Phase::Tsqr)).unwrap();
+    assert_eq!(failed.report.failures, 2);
+    assert_eq!(failed.report.recoveries, 2);
+    assert_eq!(clean.r, failed.r);
+}
+
+#[test]
+fn large_p_multi_failure_gram_identity() {
+    // Scale + faults together on the pooled scheduler: P = 64 ranks on
+    // an auto-sized pool, three kills across panels/phases, Gram-check.
+    let procs = 64;
+    let c = RunConfig {
+        rows: procs * 16,
+        cols: 32,
+        block: 8,
+        procs,
+        algorithm: Algorithm::FaultTolerant,
+        ..Default::default()
+    };
+    let a = Matrix::randn(c.rows, c.cols, 61);
+    let out = run_with(
+        &c,
+        &a,
+        FaultPlan::schedule(vec![
+            ScheduledKill::new(11, 0, 0, Phase::Update),
+            ScheduledKill::new(30, 1, 2, Phase::Tsqr),
+            ScheduledKill::new(62, 2, 0, Phase::Update),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(out.report.failures, 3);
+    assert_eq!(out.report.recoveries, 3);
+    let res = out.residual.expect("verify on");
+    assert!(res < 1e-3, "residual {res}");
+}

@@ -10,7 +10,7 @@ use std::sync::Arc;
 use ftcaqr::backend::Backend;
 use ftcaqr::config::{Algorithm, RunConfig};
 use ftcaqr::coordinator::run_caqr_matrix;
-use ftcaqr::fault::{FailSite, FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::fault::{FaultPlan, FaultSpec, Phase, ScheduledKill};
 use ftcaqr::linalg::{self, rel_err, Matrix};
 use ftcaqr::runtime::Engine;
 use ftcaqr::trace::Trace;
@@ -119,10 +119,7 @@ fn xla_backed_caqr_with_recovery_matches_native() {
         ..Default::default()
     };
     let a = Matrix::randn(cfg.rows, cfg.cols, 9);
-    let kills = vec![ScheduledKill {
-        rank: 2,
-        site: FailSite { panel: 1, step: 0, phase: Phase::Update },
-    }];
+    let kills = vec![ScheduledKill::new(2, 1, 0, Phase::Update)];
 
     let engine = Engine::start(&dir).unwrap();
     let xla_out = run_caqr_matrix(
