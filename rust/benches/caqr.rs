@@ -30,9 +30,9 @@ fn bench_backend(name: &str, be: impl Fn() -> Arc<Backend>) {
                 ..Default::default()
             };
             let backend = be();
-            let t0 = std::time::Instant::now();
-            let out = run_caqr(cfg, backend, FaultPlan::none(), Trace::disabled()).unwrap();
-            let wall = t0.elapsed().as_secs_f64();
+            let (out, wall) = common::wall(|| {
+                run_caqr(cfg, backend, FaultPlan::none(), Trace::disabled()).unwrap()
+            });
             println!(
                 "{:>8} {procs:>5} {:>11} | {:>12.2} {:>12.3} {:>14.2}",
                 format!("{name}/{alg:?}").chars().take(8).collect::<String>(),

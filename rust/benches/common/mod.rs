@@ -2,8 +2,15 @@
 //! Each bench target is a `harness = false` binary that prints a table of
 //! median / mean / stddev wallclock per case, plus the simulated-metric
 //! columns the paper's experiments report.
+//!
+//! Shared across every bench (one include, no copy-paste):
+//! * timing — [`time_case`], [`wall`], [`fmt_time`]
+//! * layout — [`header`], [`row`]
+//! * environment — [`pool`], [`smoke`], [`artifacts_present`]
+//! * machine-readable output — [`JsonSink`] (hand-rolled JSON, no serde)
+#![allow(dead_code)] // each bench includes this module and uses a subset
 
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// Run `f` repeatedly and return (median, mean, stddev) seconds.
 pub fn time_case<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
@@ -21,6 +28,13 @@ pub fn time_case<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / samples.len() as f64;
     (median, mean, var.sqrt())
+}
+
+/// Wall-clock one invocation of `f`: returns `(f's result, seconds)`.
+pub fn wall<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
 }
 
 /// Pretty-print seconds.
@@ -49,6 +63,18 @@ pub fn row(label: &str, med: f64, mean: f64, sd: f64, extra: &str) {
     );
 }
 
+/// Machine pool width (available parallelism) for scale benches.
+pub fn pool() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Reduced-size CI mode: set `FTCAQR_BENCH_SMOKE=1` to shrink sweeps so
+/// the bench doubles as a smoke test (see `.github/workflows/ci.yml`,
+/// job `bench-smoke`).
+pub fn smoke() -> bool {
+    std::env::var("FTCAQR_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
 /// Guard for XLA-dependent benches.
 pub fn artifacts_present() -> bool {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -56,5 +82,66 @@ pub fn artifacts_present() -> bool {
         .exists()
 }
 
-#[allow(dead_code)]
-pub fn noop(_: Duration) {}
+/// One JSON field value (hand-rolled: the offline crate set has no serde).
+pub enum JsonVal<'a> {
+    /// String field.
+    S(&'a str),
+    /// Float field (written with enough digits to round-trip).
+    F(f64),
+    /// Integer field.
+    I(i64),
+}
+
+/// Collects flat JSON records and writes them as an array — to the path
+/// in `FTCAQR_BENCH_JSON` if set, else to `<bench>.json` under the crate
+/// root. This is the machine-readable channel CI archives so the perf
+/// trajectory is tracked across PRs.
+pub struct JsonSink {
+    records: Vec<String>,
+}
+
+impl JsonSink {
+    pub fn new() -> Self {
+        Self { records: Vec::new() }
+    }
+
+    /// Append one flat object.
+    pub fn rec(&mut self, fields: &[(&str, JsonVal<'_>)]) {
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(k, v)| {
+                let val = match v {
+                    JsonVal::S(s) => format!("\"{}\"", escape(s)),
+                    JsonVal::F(f) if f.is_finite() => format!("{f:e}"),
+                    JsonVal::F(_) => "null".to_string(),
+                    JsonVal::I(i) => i.to_string(),
+                };
+                format!("\"{}\":{}", escape(k), val)
+            })
+            .collect();
+        self.records.push(format!("{{{}}}", body.join(",")));
+    }
+
+    /// Write the array and report where it went. Returns the path used.
+    pub fn finish(self, bench: &str) -> std::path::PathBuf {
+        let path = match std::env::var("FTCAQR_BENCH_JSON") {
+            Ok(p) => std::path::PathBuf::from(p),
+            Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join(format!("{bench}.json")),
+        };
+        let body = format!("[\n{}\n]\n", self.records.join(",\n"));
+        match std::fs::write(&path, &body) {
+            Ok(()) => println!(
+                "\njson: {} records -> {}",
+                self.records.len(),
+                path.display()
+            ),
+            Err(e) => println!("\njson: write to {} failed: {e}", path.display()),
+        }
+        path
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}

@@ -1,49 +1,193 @@
-//! Kernel-level bench (§Perf L1/L2): per-op latency of the AOT JAX/Pallas
-//! artifacts through PJRT vs the native oracle, plus engine
-//! compile-vs-exec accounting. This is the profile that drives the
-//! performance pass.
+//! Kernel-level bench (§Perf L1/L2): the compute hot path before/after
+//! the tiled rewrite, plus per-op latency of the AOT JAX/Pallas artifacts
+//! through PJRT vs the native oracle.
+//!
+//! Sections:
+//! * GEMM n x n x n sweep (64..1024): pre-tile ikj reference
+//!   (`gemm_ref_into`) vs tiled/packed kernel, GFLOP/s and speedup.
+//! * Panel QR: scalar reference (`householder_qr_ref`) vs blocked.
+//! * tree_update: clone-returning pair step vs in-place half update.
+//! * Optional GEMM thread-split sweep (`set_par_threads`).
+//! * XLA artifact rows (engine compile-vs-exec accounting) when present.
+//!
+//! Every row is also emitted as a JSON record (`FTCAQR_BENCH_JSON`, CI's
+//! `bench-smoke` artifact), so the perf trajectory is tracked from this
+//! PR on. `FTCAQR_BENCH_SMOKE=1` shrinks the sweep for CI.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use std::collections::BTreeMap;
 
+use common::JsonVal::{F, I, S};
+
 use ftcaqr::backend::Backend;
-use ftcaqr::linalg::{self, Matrix};
+use ftcaqr::linalg::{self, gemm_into, gemm_ref_into, Matrix, Trans};
 use ftcaqr::runtime::Engine;
 
-fn main() {
-    common::header("kernel micro-bench: native oracle");
-    let a128 = Matrix::randn(128, 32, 1);
-    let (med, mean, sd) = common::time_case(3, 15, || {
-        let _ = linalg::householder_qr(&a128);
-    });
-    common::row("native/panel_qr/128x32", med, mean, sd, "");
-    let f = linalg::householder_qr(&a128);
-    let c = Matrix::randn(128, 512, 2);
-    let (med, mean, sd) = common::time_case(3, 15, || {
-        let _ = linalg::leaf_apply(&f.y, &f.t, &c);
-    });
-    let flops = ftcaqr::backend::flops::leaf_apply(128, 32, 512) as f64;
-    common::row(
-        "native/leaf_apply/128x32x512",
-        med,
-        mean,
-        sd,
-        &format!("{:.2} GFLOP/s", flops / med / 1e9),
+fn gemm_sweep(sink: &mut common::JsonSink) {
+    common::header("GEMM n x n x n: pre-tile ikj reference vs tiled/packed (1 thread)");
+    println!(
+        "{:>6} | {:>12} {:>12} | {:>10} {:>10} | {:>8}",
+        "n", "ref med", "tiled med", "ref GF/s", "tile GF/s", "speedup"
     );
-    let r0 = Matrix::randn(32, 32, 3).triu();
-    let r1 = Matrix::randn(32, 32, 4).triu();
-    let (med, mean, sd) = common::time_case(3, 15, || {
-        let _ = linalg::tsqr_merge(&r0, &r1);
-    });
-    common::row("native/tsqr_merge/b32", med, mean, sd, "");
+    let sizes: &[usize] =
+        if common::smoke() { &[64, 128] } else { &[64, 128, 256, 512, 1024] };
+    for &n in sizes {
+        let a = Matrix::randn(n, n, 1);
+        let b = Matrix::randn(n, n, 2);
+        let mut c = Matrix::zeros(n, n);
+        let iters = if n >= 512 { 3 } else { 9 };
+        let (ref_med, _, _) = common::time_case(1, iters, || {
+            gemm_ref_into(Trans::No, Trans::No, 1.0, &a, &b, 0.0, &mut c)
+        });
+        let (tile_med, _, _) = common::time_case(1, iters, || {
+            gemm_into(Trans::No, Trans::No, 1.0, &a, &b, 0.0, &mut c)
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        let (gf_ref, gf_tile) = (flops / ref_med / 1e9, flops / tile_med / 1e9);
+        let speedup = ref_med / tile_med;
+        println!(
+            "{n:>6} | {:>12} {:>12} | {gf_ref:>10.2} {gf_tile:>10.2} | {speedup:>7.2}x",
+            common::fmt_time(ref_med),
+            common::fmt_time(tile_med),
+        );
+        sink.rec(&[
+            ("bench", S("gemm")),
+            ("n", I(n as i64)),
+            ("ref_s", F(ref_med)),
+            ("tiled_s", F(tile_med)),
+            ("ref_gflops", F(gf_ref)),
+            ("tiled_gflops", F(gf_tile)),
+            ("speedup", F(speedup)),
+        ]);
+    }
+}
 
+fn panel_qr_sweep(sink: &mut common::JsonSink) {
+    common::header("panel QR (m x b): scalar reference vs blocked level-3");
+    println!(
+        "{:>12} | {:>12} {:>12} | {:>8}",
+        "m x b", "ref med", "blocked med", "speedup"
+    );
+    let shapes: &[(usize, usize)] = if common::smoke() {
+        &[(128, 32)]
+    } else {
+        &[(128, 32), (256, 64), (512, 64), (1024, 128)]
+    };
+    for &(m, b) in shapes {
+        let a = Matrix::randn(m, b, 3);
+        let iters = if m >= 512 { 3 } else { 9 };
+        let (ref_med, _, _) = common::time_case(1, iters, || {
+            let _ = linalg::householder_qr_ref(&a);
+        });
+        let (blk_med, _, _) = common::time_case(1, iters, || {
+            let _ = linalg::householder_qr(&a);
+        });
+        let speedup = ref_med / blk_med;
+        println!(
+            "{:>12} | {:>12} {:>12} | {speedup:>7.2}x",
+            format!("{m}x{b}"),
+            common::fmt_time(ref_med),
+            common::fmt_time(blk_med),
+        );
+        sink.rec(&[
+            ("bench", S("panel_qr")),
+            ("m", I(m as i64)),
+            ("b", I(b as i64)),
+            ("ref_s", F(ref_med)),
+            ("blocked_s", F(blk_med)),
+            ("speedup", F(speedup)),
+        ]);
+    }
+}
+
+fn tree_update_sweep(sink: &mut common::JsonSink) {
+    common::header("tree_update (b=32): clone-returning pair step vs in-place half");
+    println!(
+        "{:>6} | {:>12} {:>12} | {:>8}",
+        "n", "full med", "half med", "speedup"
+    );
+    let b = 32usize;
+    let r0 = Matrix::randn(b, b, 4).triu();
+    let r1 = Matrix::randn(b, b, 5).triu();
+    let (_y0, y1, t, _r) = linalg::tsqr_merge(&r0, &r1);
+    let sizes: &[usize] = if common::smoke() { &[256] } else { &[256, 1024, 4096] };
+    for &n in sizes {
+        let c0 = Matrix::randn(b, n, 6);
+        let c1 = Matrix::randn(b, n, 7);
+        let iters = if n >= 4096 { 5 } else { 11 };
+        let (full_med, _, _) = common::time_case(1, iters, || {
+            let _ = linalg::tree_update(&c0, &c1, &y1, &t);
+        });
+        // The in-place half still pays one clone here so each iteration
+        // starts from the same rows — the live coordinator pays none.
+        let (half_med, _, _) = common::time_case(1, iters, || {
+            let mut cp = c0.clone();
+            let _ = linalg::tree_update_half(&mut cp, &c1, &y1, &t, true);
+        });
+        let speedup = full_med / half_med;
+        println!(
+            "{n:>6} | {:>12} {:>12} | {speedup:>7.2}x",
+            common::fmt_time(full_med),
+            common::fmt_time(half_med),
+        );
+        sink.rec(&[
+            ("bench", S("tree_update")),
+            ("b", I(b as i64)),
+            ("n", I(n as i64)),
+            ("full_s", F(full_med)),
+            ("half_s", F(half_med)),
+            ("speedup", F(speedup)),
+        ]);
+    }
+}
+
+fn par_sweep(sink: &mut common::JsonSink) {
+    let n = 1024usize;
+    common::header("GEMM thread split (set_par_threads), n=1024");
+    println!("{:>8} | {:>12} | {:>10}", "threads", "median", "GF/s");
+    let a = Matrix::randn(n, n, 1);
+    let b = Matrix::randn(n, n, 2);
+    let mut c = Matrix::zeros(n, n);
+    let flops = 2.0 * (n as f64).powi(3);
+    for threads in [1usize, 2, 4] {
+        if threads > common::pool() {
+            continue;
+        }
+        linalg::set_par_threads(threads);
+        let (med, _, _) = common::time_case(1, 3, || {
+            gemm_into(Trans::No, Trans::No, 1.0, &a, &b, 0.0, &mut c)
+        });
+        println!(
+            "{threads:>8} | {:>12} | {:>10.2}",
+            common::fmt_time(med),
+            flops / med / 1e9
+        );
+        sink.rec(&[
+            ("bench", S("gemm_par")),
+            ("n", I(n as i64)),
+            ("threads", I(threads as i64)),
+            ("tiled_s", F(med)),
+            ("tiled_gflops", F(flops / med / 1e9)),
+        ]);
+    }
+    linalg::set_par_threads(1);
+}
+
+fn xla_rows() {
     if !common::artifacts_present() {
         println!("\n(artifacts/ missing — skipping XLA kernel rows)");
         return;
     }
     common::header("kernel micro-bench: XLA artifacts (PJRT CPU, interpret-mode Pallas)");
+    let a128 = Matrix::randn(128, 32, 1);
+    let f = linalg::householder_qr(&a128);
+    let c = Matrix::randn(128, 512, 2);
+    let r0 = Matrix::randn(32, 32, 3).triu();
+    let r1 = Matrix::randn(32, 32, 4).triu();
+    let flops = ftcaqr::backend::flops::leaf_apply(128, 32, 512) as f64;
+
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = Engine::start(&dir).unwrap();
     let xla = Backend::xla(engine.clone());
@@ -102,4 +246,16 @@ fn main() {
         exec_s / execs.max(1) as f64 * 1e3,
         compile_s / compiles.max(1) as f64 * 1e3
     );
+}
+
+fn main() {
+    let mut sink = common::JsonSink::new();
+    gemm_sweep(&mut sink);
+    panel_qr_sweep(&mut sink);
+    tree_update_sweep(&mut sink);
+    if !common::smoke() {
+        par_sweep(&mut sink);
+        xla_rows();
+    }
+    sink.finish("kernels");
 }

@@ -22,13 +22,8 @@ use ftcaqr::linalg::Matrix;
 use ftcaqr::sim::CostModel;
 use ftcaqr::trace::Trace;
 
-/// Fixed pool width for the whole bench: whatever the machine has.
-fn pool() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-}
-
 fn tsqr_sweep() {
-    let workers = pool();
+    let workers = common::pool();
     common::header(&format!(
         "FT-TSQR scale sweep on a fixed {workers}-worker pool (no thread-per-rank)"
     ));
@@ -41,10 +36,10 @@ fn tsqr_sweep() {
         let m_local = 8usize;
         let a = Matrix::randn(procs * m_local, b, 99);
         let be = Backend::native();
-        let t0 = std::time::Instant::now();
-        let out = run_tsqr_pooled(&a, procs, TsqrMode::FaultTolerant, be, CostModel::default(), workers)
-            .expect("ft-tsqr sweep");
-        let wall = t0.elapsed().as_secs_f64();
+        let (out, wall) = common::wall(|| {
+            run_tsqr_pooled(&a, procs, TsqrMode::FaultTolerant, be, CostModel::default(), workers)
+                .expect("ft-tsqr sweep")
+        });
         assert_eq!(
             out.final_holders, procs,
             "every rank must finish holding the final R"
@@ -88,16 +83,16 @@ fn caqr_multi_failure() {
             ScheduledKill::new(procs - 2, 2, 0, Phase::Update),
         ];
         let nkills = kills.len();
-        let t0 = std::time::Instant::now();
-        let out = run_caqr_matrix(
-            cfg.clone(),
-            a,
-            Backend::native(),
-            FaultPlan::schedule(kills),
-            Trace::disabled(),
-        )
-        .expect("multi-failure CAQR run");
-        let wall = t0.elapsed().as_secs_f64();
+        let (out, wall) = common::wall(|| {
+            run_caqr_matrix(
+                cfg.clone(),
+                a,
+                Backend::native(),
+                FaultPlan::schedule(kills),
+                Trace::disabled(),
+            )
+            .expect("multi-failure CAQR run")
+        });
         let res = out.residual.expect("verify on");
         assert!(
             res < 1e-3,

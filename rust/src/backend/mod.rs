@@ -166,6 +166,121 @@ impl Backend {
         }
     }
 
+    /// Apply local `Qᵀ` to the trailing block **in place** — the
+    /// coordinator hot path (no copy of `C` on the native backend; the
+    /// XLA path necessarily materializes the artifact output and writes
+    /// it back).
+    pub fn leaf_apply_into(&self, y: &Matrix, t: &Matrix, c: &mut Matrix) -> Result<()> {
+        match self {
+            Backend::Native(_) => {
+                let (m, b) = y.shape();
+                self.add_flops(flops::leaf_apply(m, b, c.cols()));
+                linalg::leaf_apply_into(y, t, c);
+                Ok(())
+            }
+            Backend::Xla(_) => {
+                *c = self.leaf_apply(y, t, c)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// One member's half of a pairwise update step, in place: updates the
+    /// caller's rows `cp` from the buddy's (read-only) `peer` rows and
+    /// returns the retained `W`. Flops are charged at the full pair cost
+    /// — both members redundantly compute `W` (the paper's traded energy
+    /// cost, E4) — even though the native backend skips the peer's half
+    /// of the row update.
+    pub fn tree_update_half(
+        &self,
+        cp: &mut Matrix,
+        peer: &Matrix,
+        y1: &Matrix,
+        t: &Matrix,
+        is_top: bool,
+    ) -> Result<Matrix> {
+        match self {
+            Backend::Native(_) => {
+                let (b, n) = cp.shape();
+                self.add_flops(flops::tree_update(b, n));
+                Ok(linalg::tree_update_half(cp, peer, y1, t, is_top))
+            }
+            Backend::Xla(_) => {
+                let st = if is_top {
+                    self.tree_update(cp, peer, y1, t)?
+                } else {
+                    self.tree_update(peer, cp, y1, t)?
+                };
+                *cp = if is_top { st.c0 } else { st.c1 };
+                Ok(st.w)
+            }
+        }
+    }
+
+    /// Full pairwise update step in place: both halves updated, `W`
+    /// returned (Algorithm 1's top member, which must send the buddy's
+    /// updated rows back).
+    pub fn tree_update_into(
+        &self,
+        c0: &mut Matrix,
+        c1: &mut Matrix,
+        y1: &Matrix,
+        t: &Matrix,
+    ) -> Result<Matrix> {
+        match self {
+            Backend::Native(_) => {
+                let (b, n) = c0.shape();
+                self.add_flops(flops::tree_update(b, n));
+                Ok(linalg::tree_update_into(c0, c1, y1, t))
+            }
+            Backend::Xla(_) => {
+                let st = self.tree_update(c0, c1, y1, t)?;
+                *c0 = st.c0;
+                *c1 = st.c1;
+                Ok(st.w)
+            }
+        }
+    }
+
+    /// Top-member recovery `C ← C − W` (the `Y = I` case of the paper's
+    /// recovery equation): a plain elementwise subtract on the native
+    /// backend — the exact expression the live top half executes, so the
+    /// replayed block is bit-identical — and the padded recover artifact
+    /// with an explicit identity on XLA.
+    pub fn recover_top_into(&self, c: &mut Matrix, w: &Matrix) -> Result<()> {
+        match self {
+            Backend::Native(_) => {
+                let (b, n) = c.shape();
+                self.add_flops(flops::recover(b, n));
+                c.sub_assign(w);
+                Ok(())
+            }
+            Backend::Xla(_) => {
+                let y = Matrix::eye(c.rows());
+                *c = self.recover(c, &y, w)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Single-buddy recovery recompute `C ← C − Y W` in place (paper
+    /// III-C). Shares the kernel with the live bottom-half update, so
+    /// replayed blocks are bit-identical to the originals.
+    pub fn recover_into(&self, c: &mut Matrix, y: &Matrix, w: &Matrix) -> Result<()> {
+        match self {
+            Backend::Native(_) => {
+                let (b, n) = c.shape();
+                self.add_flops(flops::recover(b, n));
+                linalg::recover_block_into(c, y, w);
+                Ok(())
+            }
+            Backend::Xla(_) => {
+                *c = self.recover(c, y, w)?;
+                Ok(())
+            }
+        }
+    }
+
     /// Apply local `Qᵀ` to the trailing block.
     pub fn leaf_apply(&self, y: &Matrix, t: &Matrix, c: &Matrix) -> Result<Matrix> {
         let (m, b) = y.shape();
@@ -266,6 +381,41 @@ mod tests {
         assert_eq!(f.r, g.r);
         assert_eq!(be.name(), "native");
         assert!(be.flops() > 0);
+    }
+
+    #[test]
+    fn inplace_ops_match_copying_ops() {
+        let be = Backend::native();
+        let f = be.panel_qr(&Matrix::randn(32, 8, 2)).unwrap();
+        let c = Matrix::randn(32, 12, 3);
+        let want = be.leaf_apply(&f.y, &f.t, &c).unwrap();
+        let mut got = c.clone();
+        be.leaf_apply_into(&f.y, &f.t, &mut got).unwrap();
+        assert_eq!(got, want);
+
+        let r0 = Matrix::randn(8, 8, 4).triu();
+        let r1 = Matrix::randn(8, 8, 5).triu();
+        let mf = be.tsqr_merge(&r0, &r1).unwrap();
+        let c0 = Matrix::randn(8, 10, 6);
+        let c1 = Matrix::randn(8, 10, 7);
+        let st = be.tree_update(&c0, &c1, &mf.y1, &mf.t).unwrap();
+        let mut top = c0.clone();
+        let w = be.tree_update_half(&mut top, &c1, &mf.y1, &mf.t, true).unwrap();
+        assert_eq!(w, st.w);
+        assert_eq!(top, st.c0);
+        let mut bot = c1.clone();
+        let w2 = be.tree_update_half(&mut bot, &c0, &mf.y1, &mf.t, false).unwrap();
+        assert_eq!(w2, st.w);
+        assert_eq!(bot, st.c1);
+
+        let mut rec = c1.clone();
+        be.recover_into(&mut rec, &mf.y1, &st.w).unwrap();
+        assert_eq!(rec, st.c1);
+
+        // Top-member recovery is the live top half's exact expression.
+        let mut rec0 = c0.clone();
+        be.recover_top_into(&mut rec0, &st.w).unwrap();
+        assert_eq!(rec0, st.c0);
     }
 
     #[test]

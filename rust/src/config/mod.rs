@@ -74,6 +74,11 @@ pub struct RunConfig {
     /// machine's core count, capped by P). P is *not* bounded by this —
     /// rank tasks park on communication instead of holding a thread.
     pub workers: usize,
+    /// GEMM row-panel thread split (process-wide,
+    /// [`crate::linalg::set_par_threads`]): 1 = serial kernels (the
+    /// default — the rank worker pool usually owns the cores); N > 1
+    /// splits large products across N plain threads.
+    pub par: usize,
     /// Trailing-update algorithm (paper Algorithm 1 vs 2).
     pub algorithm: Algorithm,
     /// Failure-handling policy (FT-MPI / ULFM, paper §II).
@@ -101,6 +106,7 @@ impl Default for RunConfig {
             block: 16,
             procs: 4,
             workers: 0,
+            par: 1,
             algorithm: Algorithm::default(),
             semantics: Semantics::default(),
             backend: BackendKind::default(),
@@ -137,6 +143,7 @@ impl RunConfig {
     /// Validate all structural invariants the coordinator assumes.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.procs >= 1, "need at least one process");
+        ensure!(self.par >= 1, "par must be >= 1 (1 = serial kernels)");
         ensure!(
             self.rows >= self.cols,
             "QR needs rows >= cols ({} < {})",
@@ -193,6 +200,7 @@ impl RunConfig {
                 "block" => c.block = v.parse()?,
                 "procs" => c.procs = v.parse()?,
                 "workers" => c.workers = v.parse()?,
+                "par" => c.par = v.parse()?,
                 "algorithm" => c.algorithm = v.parse().map_err(anyhow::Error::msg)?,
                 "semantics" => c.semantics = v.parse().map_err(anyhow::Error::msg)?,
                 "checkpoint_every" => c.checkpoint_every = v.parse()?,
@@ -219,6 +227,7 @@ impl RunConfig {
         out.push_str(&format!("block = {}\n", self.block));
         out.push_str(&format!("procs = {}\n", self.procs));
         out.push_str(&format!("workers = {}\n", self.workers));
+        out.push_str(&format!("par = {}\n", self.par));
         out.push_str(&format!("algorithm = {}\n", self.algorithm));
         out.push_str(&format!("semantics = {}\n", self.semantics));
         out.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));

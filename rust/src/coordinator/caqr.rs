@@ -119,14 +119,17 @@ pub struct CaqrOutcome {
     pub backend_flops: u64,
 }
 
-/// TSQR-phase working state for one panel on one rank.
+/// TSQR-phase working state for one panel on one rank. The factor
+/// matrices are `Arc`-shared with the retention store and any in-flight
+/// message payloads — handing `R` to the exchange or the buddy store
+/// bumps a refcount instead of deep-copying the buffer.
 pub(crate) struct TsqrPhase {
     g: PanelGeom,
     leaf_y: Matrix,
     leaf_t: Matrix,
-    r: Matrix,
+    r: Arc<Matrix>,
     /// (Y1, T) per tree step where this rank is a reduce-tree member.
-    merges: Vec<Option<(Matrix, Matrix)>>,
+    merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
     s: usize,
     wait: TsqrWait,
 }
@@ -143,8 +146,9 @@ enum TsqrWait {
 /// Update-phase working state for one panel on one rank.
 pub(crate) struct UpdatePhase {
     g: PanelGeom,
-    merges: Vec<Option<(Matrix, Matrix)>>,
-    /// The top-b rows of this rank's active trailing block.
+    merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
+    /// The top-b rows of this rank's active trailing block, updated in
+    /// place by each tree step (never cloned into the step kernels).
     cp: Matrix,
     s: usize,
     wait: UpdateWait,
@@ -152,8 +156,8 @@ pub(crate) struct UpdatePhase {
 
 enum UpdateWait {
     Enter,
-    Ft { op: FtOp, role: Role, y1: Matrix, t: Matrix },
-    PlainUpper { buddy: usize, tag: Tag, y1: Matrix, t: Matrix },
+    Ft { op: FtOp, role: Role, y1: Arc<Matrix>, t: Arc<Matrix> },
+    PlainUpper { buddy: usize, tag: Tag, y1: Arc<Matrix>, t: Arc<Matrix> },
     PlainLowerW { buddy: usize, tag: Tag },
 }
 
@@ -289,11 +293,10 @@ impl Ranker {
             self.shared.trace.emit(ctx.clock, ctx.rank, 0, 0, "recovery_done", 0.0);
         }
         crate::simlog!("[r{}] done", ctx.rank);
-        self.shared
-            .results
-            .lock()
-            .unwrap()
-            .insert(ctx.rank, self.local.clone());
+        // The task is done with its block — move it out instead of
+        // cloning a whole local matrix per rank.
+        let local = std::mem::replace(&mut self.local, Matrix::zeros(0, 0));
+        self.shared.results.lock().unwrap().insert(ctx.rank, local);
     }
 
     /// Leaf factorization of the active panel rows (zero-row padded) —
@@ -301,10 +304,8 @@ impl Ranker {
     fn begin_tsqr(&mut self, ctx: &mut RankCtx, g: PanelGeom) -> TsqrPhase {
         let b = self.cfg().block;
         let m_local = self.cfg().local_rows();
-        let apanel = self
-            .local
-            .block(g.start, g.k * b, g.active_m, b)
-            .pad_to(m_local, b);
+        let apanel =
+            self.local.block_padded(g.start, g.k * b, g.active_m, b, m_local, b);
         let leaf = self
             .shared
             .backend
@@ -316,7 +317,7 @@ impl Ranker {
             g,
             leaf_y: leaf.y,
             leaf_t: leaf.t,
-            r: leaf.r,
+            r: Arc::new(leaf.r),
             merges: vec![None; nsteps],
             s: 0,
             wait: TsqrWait::Enter,
@@ -371,6 +372,9 @@ impl Ranker {
                                             &ret.t,
                                             &ret.r_merged,
                                         );
+                                        // Same Arc the buddy holds: the
+                                        // replayed R is bit-identical by
+                                        // construction.
                                         ph.r = ret.r_merged;
                                         ph.s += 1;
                                         continue;
@@ -424,9 +428,9 @@ impl Ranker {
                         let bidx = buddy - g.owner;
                         let mf = {
                             let (rtop, rbot) = if tree::is_top(g.idx, bidx) {
-                                (&ph.r, &peer)
+                                (ph.r.as_ref(), peer.as_ref())
                             } else {
-                                (&peer, &ph.r)
+                                (peer.as_ref(), ph.r.as_ref())
                             };
                             self.shared
                                 .backend
@@ -442,8 +446,14 @@ impl Ranker {
                             "redundancy",
                             tree::expected_redundancy(s) as f64,
                         );
+                        // One allocation per factor; every holder (tree
+                        // state, retention store, next exchange payload)
+                        // shares it.
+                        let y1 = Arc::new(mf.y1);
+                        let t = Arc::new(mf.t);
+                        let r = Arc::new(mf.r);
                         if tree::reduce_active(g.idx, s) {
-                            ph.merges[s] = Some((mf.y1.clone(), mf.t.clone()));
+                            ph.merges[s] = Some((y1.clone(), t.clone()));
                         }
                         self.retain_tsqr(
                             ctx.rank,
@@ -451,11 +461,11 @@ impl Ranker {
                             &g,
                             s,
                             buddy,
-                            &mf.y1,
-                            &mf.t,
-                            &mf.r,
+                            &y1,
+                            &t,
+                            &r,
                         );
-                        ph.r = mf.r;
+                        ph.r = r;
                         ph.s += 1;
                     }
                 },
@@ -470,11 +480,11 @@ impl Ranker {
                             let mf = self
                                 .shared
                                 .backend
-                                .tsqr_merge(&ph.r, &peer)
+                                .tsqr_merge(ph.r.as_ref(), peer.as_ref())
                                 .unwrap_or_else(|e| self.backend_err(ctx.rank, "tsqr_merge", e));
                             ctx.compute(crate::backend::flops::tsqr_merge(b));
-                            ph.merges[ph.s] = Some((mf.y1.clone(), mf.t.clone()));
-                            ph.r = mf.r;
+                            ph.merges[ph.s] = Some((Arc::new(mf.y1), Arc::new(mf.t)));
+                            ph.r = Arc::new(mf.r);
                             ph.s += 1;
                         }
                     }
@@ -491,7 +501,7 @@ impl Ranker {
         let b = self.cfg().block;
         let mut panel_out = Matrix::zeros(g.active_m, b);
         if g.idx == 0 {
-            panel_out.set_block(0, 0, &ph.r);
+            panel_out.set_block(0, 0, ph.r.as_ref());
         }
         self.local.set_block(g.start, g.k * b, &panel_out);
 
@@ -531,34 +541,41 @@ impl Ranker {
         }
         let partner = g.owner + pidx;
         let tag = Tag::new(TagKind::Checkpoint, g.k, 0);
-        let op = FtOp::new(partner, tag, MsgData::Mat(self.local.clone()));
+        // One snapshot copy into an Arc; the exchange's retransmit buffer
+        // and the routed envelope share it instead of re-copying.
+        let op = FtOp::new(partner, tag, MsgData::mat(self.local.clone()));
         State::Checkpoint { g, op }
     }
 
     /// Leaf: apply the local reflectors to the whole trailing block —
-    /// the local, non-blocking prologue of the update phase.
+    /// the local, non-blocking prologue of the update phase. The trailing
+    /// block is extracted once (zero-row padded), updated in place, and
+    /// written back through a view — no `crop_to` round-trip copy.
     fn begin_update(
         &mut self,
         ctx: &mut RankCtx,
         g: PanelGeom,
         leaf_y: &Matrix,
         leaf_t: &Matrix,
-        merges: Vec<Option<(Matrix, Matrix)>>,
+        merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
     ) -> UpdatePhase {
         let b = self.cfg().block;
         let m_local = self.cfg().local_rows();
-        let c = self
-            .local
-            .block(g.start, g.trail_col, g.active_m, g.n_trail)
-            .pad_to(m_local, g.n_trail);
-        let chat = self
-            .shared
+        let mut c = self.local.block_padded(
+            g.start,
+            g.trail_col,
+            g.active_m,
+            g.n_trail,
+            m_local,
+            g.n_trail,
+        );
+        self.shared
             .backend
-            .leaf_apply(leaf_y, leaf_t, &c)
+            .leaf_apply_into(leaf_y, leaf_t, &mut c)
             .unwrap_or_else(|e| self.backend_err(ctx.rank, "leaf_apply", e));
         ctx.compute(crate::backend::flops::leaf_apply(m_local, b, g.n_trail));
         self.local
-            .set_block(g.start, g.trail_col, &chat.crop_to(g.active_m, g.n_trail));
+            .set_block_view(g.start, g.trail_col, c.view(0, 0, g.active_m, g.n_trail));
 
         // Tree over the top-b rows of each participant's active block.
         let cp = self.local.block(g.start, g.trail_col, b, g.n_trail);
@@ -600,12 +617,11 @@ impl Ranker {
 
                             // Replay path: recompute our rows from the
                             // buddy's retained {W, Y1} — the paper's
-                            // recovery equation.
+                            // recovery equation, applied in place.
                             if self.resume {
                                 match self.fetch_retained(ctx, sp, buddy, g.k, Phase::Update, s)? {
                                     Fetch::Hit(ret) => {
-                                        let pre = ph.cp.clone();
-                                        ph.cp = self.recover_rows(ctx, &pre, role, &ret);
+                                        self.recover_rows(ctx, &mut ph.cp, role, &ret);
                                         self.retain_update(
                                             ctx.rank,
                                             ctx.incarnation(),
@@ -626,7 +642,10 @@ impl Ranker {
                                     Fetch::Live => {}
                                 }
                             }
-                            let op = FtOp::new(buddy, tag, MsgData::Mat(ph.cp.clone()));
+                            // One snapshot copy of our rows into the
+                            // shared payload (the exchange may have to
+                            // retransmit it after a peer REBUILD).
+                            let op = FtOp::new(buddy, tag, MsgData::mat(ph.cp.clone()));
                             ph.wait = UpdateWait::Ft { op, role, y1, t };
                         }
                         Algorithm::Plain => match role {
@@ -638,7 +657,11 @@ impl Ranker {
                                 ph.wait = UpdateWait::PlainUpper { buddy, tag, y1, t };
                             }
                             Role::Lower => {
-                                self.send_plain(ctx, buddy, tag, MsgData::Mat(ph.cp.clone()))?;
+                                // Our rows travel to the top member and
+                                // come back updated — move them into the
+                                // message instead of cloning.
+                                let cp = std::mem::replace(&mut ph.cp, Matrix::zeros(0, 0));
+                                self.send_plain(ctx, buddy, tag, MsgData::mat(cp))?;
                                 ph.wait = UpdateWait::PlainLowerW {
                                     buddy,
                                     tag: Tag::new(TagKind::UpdateW, g.k, s),
@@ -654,24 +677,29 @@ impl Ranker {
                             return Ok(Stepped::Parked);
                         }
                         Some(d) => {
+                            // Peer rows are read-only for our half of the
+                            // pair step: borrow them straight out of the
+                            // message, update our rows in place.
                             let peer_c = d.into_mat();
                             let g = ph.g;
                             let s = ph.s;
-                            let stp = {
-                                let (c0, c1) = if role == Role::Upper {
-                                    (&ph.cp, &peer_c)
-                                } else {
-                                    (&peer_c, &ph.cp)
-                                };
-                                self.shared
-                                    .backend
-                                    .tree_update(c0, c1, &y1, &t)
-                                    .unwrap_or_else(|e| {
-                                        self.backend_err(ctx.rank, "tree_update", e)
-                                    })
-                            };
-                            // Both members do the full pair computation —
-                            // the paper's traded energy cost (E4).
+                            let w = self
+                                .shared
+                                .backend
+                                .tree_update_half(
+                                    &mut ph.cp,
+                                    peer_c.as_ref(),
+                                    &y1,
+                                    &t,
+                                    role == Role::Upper,
+                                )
+                                .unwrap_or_else(|e| {
+                                    self.backend_err(ctx.rank, "tree_update", e)
+                                });
+                            // Both members are charged the full pair
+                            // computation — the paper's traded energy
+                            // cost (E4) — regardless of the host-side
+                            // half-update optimization.
                             ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
                             self.shared.trace.emit(
                                 ctx.clock,
@@ -681,17 +709,17 @@ impl Ranker {
                                 "update_exchange",
                                 op.peer() as f64,
                             );
+                            let w = Arc::new(w);
                             self.retain_update(
                                 ctx.rank,
                                 ctx.incarnation(),
                                 &g,
                                 s,
                                 op.peer(),
-                                &stp.w,
+                                &w,
                                 &y1,
                                 &t,
                             );
-                            ph.cp = if role == Role::Upper { stp.c0 } else { stp.c1 };
                             if role == Role::Lower {
                                 return Ok(Stepped::Finished);
                             }
@@ -706,25 +734,27 @@ impl Ranker {
                             return Ok(Stepped::Parked);
                         }
                         Some(d) => {
-                            let peer_c = d.into_mat();
+                            // The lower member moved its rows into the
+                            // message, so this unwrap is copy-free; both
+                            // halves update in place.
+                            let mut peer_c = d.into_mat_owned();
                             let g = ph.g;
                             let s = ph.s;
-                            let stp = self
+                            let _w = self
                                 .shared
                                 .backend
-                                .tree_update(&ph.cp, &peer_c, &y1, &t)
+                                .tree_update_into(&mut ph.cp, &mut peer_c, &y1, &t)
                                 .unwrap_or_else(|e| self.backend_err(ctx.rank, "tree_update", e));
                             ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
                             // Return the buddy's updated rows (Ĉ'₁ =
                             // C'₁−Y₁W; same bytes as the paper's W
-                            // message).
+                            // message), moved into the reply.
                             self.send_plain(
                                 ctx,
                                 buddy,
                                 Tag::new(TagKind::UpdateW, g.k, s),
-                                MsgData::Mat(stp.c1),
+                                MsgData::mat(peer_c),
                             )?;
-                            ph.cp = stp.c0;
                             ph.s += 1;
                         }
                     }
@@ -736,7 +766,7 @@ impl Ranker {
                             return Ok(Stepped::Parked);
                         }
                         Some(d) => {
-                            ph.cp = d.into_mat();
+                            ph.cp = d.into_mat_owned();
                             return Ok(Stepped::Finished);
                         }
                     }
@@ -797,6 +827,18 @@ fn run_caqr_on(
     t0: std::time::Instant,
 ) -> Result<CaqrOutcome> {
     assert_eq!(a.shape(), (cfg.rows, cfg.cols), "input matrix shape mismatch");
+    // The GEMM split knob is process-wide; apply this run's value and
+    // restore the previous one on every exit path (including bail!).
+    // Concurrent runs with different `par` race only on thread count,
+    // never on results (the kernels are bit-deterministic either way).
+    struct ParGuard(usize);
+    impl Drop for ParGuard {
+        fn drop(&mut self) {
+            crate::linalg::set_par_threads(self.0);
+        }
+    }
+    let _par_guard = ParGuard(crate::linalg::par_threads());
+    crate::linalg::set_par_threads(cfg.par);
     let m_local = cfg.local_rows();
     let initial: Vec<Matrix> = (0..cfg.procs)
         .map(|r| a.block(r * m_local, 0, m_local, cfg.cols))
@@ -811,17 +853,19 @@ fn run_caqr_on(
         gate: RevivalGate::new(),
         trace,
         world: world.clone(),
-        initial: initial.clone(),
+        initial,
         results: Mutex::new(HashMap::new()),
         poison: Mutex::new(None),
         store_watchers: Mutex::new(HashSet::new()),
     });
 
     // The original incarnation of every rank, driven by the worker pool;
-    // REBUILD replacements are spawned into the same pool mid-run.
+    // REBUILD replacements are spawned into the same pool mid-run. Each
+    // task owns a (necessarily deep) copy of its block — it mutates it —
+    // while `shared.initial` stays pristine for replays.
     let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..cfg.procs)
         .map(|r| {
-            let t = Ranker::new(shared.clone(), false, initial[r].clone());
+            let t = Ranker::new(shared.clone(), false, shared.initial[r].clone());
             (r, Box::new(t) as Box<dyn RankTask>)
         })
         .collect();

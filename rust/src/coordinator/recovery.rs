@@ -23,6 +23,8 @@
 //!   reconstruct the state, so the run is poisoned and aborts instead of
 //!   hanging or silently recomputing outside the protocol.
 
+use std::sync::Arc;
+
 use crate::config::Algorithm;
 use crate::fault::{FailSite, Phase};
 use crate::ft::{Fail, Semantics};
@@ -341,32 +343,39 @@ impl Ranker {
         crate::simlog!("[r{}] replay hit ({buddy},{panel},{phase:?},{step})", ctx.rank);
     }
 
-    /// Recompute this rank's update rows from buddy-retained `{W, Y1}`:
-    /// `Ĉ' = C' − Y W` with `Y = I` for the top member (paper III-C).
+    /// Recompute this rank's update rows from buddy-retained `{W, Y1}`
+    /// **in place**: `C' ← C' − Y W` with `Y = I` for the top member
+    /// (paper III-C). No copy of the `C'` rows is taken.
     pub(crate) fn recover_rows(
         &self,
         ctx: &mut RankCtx,
-        cp: &Matrix,
+        cp: &mut Matrix,
         role: Role,
         ret: &Retained,
-    ) -> Matrix {
-        let b = cp.rows();
-        let y = match role {
-            Role::Upper => Matrix::eye(b),
-            Role::Lower => ret.y1.clone(),
+    ) {
+        let (b, n) = cp.shape();
+        match role {
+            // Top member: Ĉ₀ = C₀ − W — the live top half's exact
+            // elementwise expression (no dense multiply by an identity).
+            Role::Upper => self
+                .shared
+                .backend
+                .recover_top_into(cp, &ret.w)
+                .unwrap_or_else(|e| panic!("recover op failed: {e:#}")),
+            Role::Lower => self
+                .shared
+                .backend
+                .recover_into(cp, &ret.y1, &ret.w)
+                .unwrap_or_else(|e| panic!("recover op failed: {e:#}")),
             Role::Idle => unreachable!("idle roles never reach recovery"),
-        };
-        let out = self
-            .shared
-            .backend
-            .recover(cp, &y, &ret.w)
-            .unwrap_or_else(|e| panic!("recover op failed: {e:#}"));
-        ctx.compute(crate::backend::flops::recover(b, cp.cols()));
-        out
+        }
+        ctx.compute(crate::backend::flops::recover(b, n));
     }
 
     /// Retain the FT-TSQR step outcome (both pair members hold the
-    /// merged factors after the exchange, §III-B).
+    /// merged factors after the exchange, §III-B). The `Arc` clones share
+    /// buffers with the caller's working state — retention is
+    /// refcount-priced, the byte accounting is not (see [`Retained`]).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn retain_tsqr(
         &self,
@@ -375,9 +384,9 @@ impl Ranker {
         g: &PanelGeom,
         step: usize,
         buddy: usize,
-        y1: &Matrix,
-        t: &Matrix,
-        r_merged: &Matrix,
+        y1: &Arc<Matrix>,
+        t: &Arc<Matrix>,
+        r_merged: &Arc<Matrix>,
     ) {
         self.shared.store.insert(
             rank,
@@ -387,7 +396,7 @@ impl Ranker {
             step,
             Retained {
                 buddy,
-                w: Matrix::zeros(0, 0),
+                w: Arc::new(Matrix::zeros(0, 0)),
                 y1: y1.clone(),
                 t: t.clone(),
                 r_merged: r_merged.clone(),
@@ -408,9 +417,9 @@ impl Ranker {
         g: &PanelGeom,
         step: usize,
         buddy: usize,
-        w: &Matrix,
-        y1: &Matrix,
-        t: &Matrix,
+        w: &Arc<Matrix>,
+        y1: &Arc<Matrix>,
+        t: &Arc<Matrix>,
     ) {
         self.shared.store.insert(
             rank,
@@ -423,7 +432,7 @@ impl Ranker {
                 w: w.clone(),
                 y1: y1.clone(),
                 t: t.clone(),
-                r_merged: Matrix::zeros(0, 0),
+                r_merged: Arc::new(Matrix::zeros(0, 0)),
             },
         );
         self.shared.notify_store_watchers();

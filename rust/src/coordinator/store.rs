@@ -28,18 +28,25 @@ use crate::linalg::Matrix;
 pub type StepKey = (usize, usize, Phase, usize);
 
 /// What a rank retains after an FT exchange step (paper III-C).
+///
+/// Matrix fields are [`Arc`]-shared with the producing step's working
+/// state: retaining costs a refcount, not a buffer copy, and
+/// [`RecoveryStore::get`]'s clone of the whole entry is equally cheap.
+/// The byte accounting ([`Retained::nbytes`]) still charges the full
+/// buffer sizes — it models *per-process retained memory*, which a real
+/// deployment cannot share across address spaces.
 #[derive(Clone, Debug)]
 pub struct Retained {
     /// The buddy of this step.
     pub buddy: usize,
     /// `W = Tᵀ(C₀' + Y₁ᵀC₁')` (update steps; zero-sized for TSQR steps).
-    pub w: Matrix,
+    pub w: Arc<Matrix>,
     /// Bottom reflector block of the pair's merge.
-    pub y1: Matrix,
+    pub y1: Arc<Matrix>,
     /// T factor of the pair's merge.
-    pub t: Matrix,
+    pub t: Arc<Matrix>,
     /// Merged R (TSQR steps; the buddy resumes from it directly).
-    pub r_merged: Matrix,
+    pub r_merged: Arc<Matrix>,
 }
 
 impl Retained {
@@ -248,10 +255,10 @@ mod tests {
     fn retained(bytes_rows: usize) -> Retained {
         Retained {
             buddy: 1,
-            w: Matrix::zeros(bytes_rows, 4),
-            y1: Matrix::zeros(4, 4),
-            t: Matrix::zeros(4, 4),
-            r_merged: Matrix::zeros(4, 4),
+            w: Arc::new(Matrix::zeros(bytes_rows, 4)),
+            y1: Arc::new(Matrix::zeros(4, 4)),
+            t: Arc::new(Matrix::zeros(4, 4)),
+            r_merged: Arc::new(Matrix::zeros(4, 4)),
         }
     }
 

@@ -67,7 +67,10 @@ enum TsqrWait {
     Recv { buddy: usize, tag: Tag },
 }
 
-/// One rank's resumable TSQR body.
+/// One rank's resumable TSQR body. The intermediate `R` is `Arc`-shared:
+/// the redundancy bookkeeping (every rank's R per step) and the exchange
+/// payloads all point at one buffer per merge instead of deep-copying it
+/// at each recording/sending site.
 struct TsqrTask {
     mode: TsqrMode,
     backend: Arc<Backend>,
@@ -76,9 +79,9 @@ struct TsqrTask {
     m_local: usize,
     block: Matrix,
     /// `rs_by_step[s][rank]` = rank's intermediate R after step s.
-    rs_by_step: Arc<Mutex<Vec<HashMap<usize, Matrix>>>>,
-    finals: Arc<Mutex<HashMap<usize, Matrix>>>,
-    r: Option<Matrix>,
+    rs_by_step: Arc<Mutex<Vec<HashMap<usize, Arc<Matrix>>>>>,
+    finals: Arc<Mutex<HashMap<usize, Arc<Matrix>>>>,
+    r: Option<Arc<Matrix>>,
     s: usize,
     wait: TsqrWait,
 }
@@ -95,8 +98,9 @@ impl TsqrTask {
                 TsqrWait::Leaf => {
                     let f = self.backend.panel_qr(&self.block).map_err(|_| Fail::WorldGone)?;
                     ctx.compute(crate::backend::flops::panel_qr(self.m_local, self.b));
-                    self.rs_by_step.lock().unwrap()[0].insert(ctx.rank, f.r.clone());
-                    self.r = Some(f.r);
+                    let r = Arc::new(f.r);
+                    self.rs_by_step.lock().unwrap()[0].insert(ctx.rank, r.clone());
+                    self.r = Some(r);
                     self.s = 0;
                 }
                 TsqrWait::Enter => {
@@ -157,12 +161,15 @@ impl TsqrTask {
                         let bidx = op.peer();
                         let mf = {
                             let r = self.r.as_ref().expect("r set");
-                            let (rt, rb) =
-                                if tree::is_top(idx, bidx) { (r, &peer_r) } else { (&peer_r, r) };
+                            let (rt, rb) = if tree::is_top(idx, bidx) {
+                                (r.as_ref(), peer_r.as_ref())
+                            } else {
+                                (peer_r.as_ref(), r.as_ref())
+                            };
                             self.backend.tsqr_merge(rt, rb).map_err(|_| Fail::WorldGone)?
                         };
                         ctx.compute(crate::backend::flops::tsqr_merge(self.b));
-                        self.r = Some(mf.r);
+                        self.r = Some(Arc::new(mf.r));
                         self.record_step(idx);
                         self.s += 1;
                     }
@@ -176,10 +183,12 @@ impl TsqrTask {
                         let peer = d.into_mat();
                         let mf = {
                             let r = self.r.as_ref().expect("r set");
-                            self.backend.tsqr_merge(r, &peer).map_err(|_| Fail::WorldGone)?
+                            self.backend
+                                .tsqr_merge(r.as_ref(), peer.as_ref())
+                                .map_err(|_| Fail::WorldGone)?
                         };
                         ctx.compute(crate::backend::flops::tsqr_merge(self.b));
-                        self.r = Some(mf.r);
+                        self.r = Some(Arc::new(mf.r));
                         self.record_step(ctx.rank);
                         self.s += 1;
                     }
@@ -230,9 +239,10 @@ pub fn run_tsqr_pooled(
     let t0 = std::time::Instant::now();
     let world = World::new(procs, cost, FaultPlan::none());
     let nsteps = tree::steps(procs);
-    let rs_by_step: Arc<Mutex<Vec<HashMap<usize, Matrix>>>> =
+    let rs_by_step: Arc<Mutex<Vec<HashMap<usize, Arc<Matrix>>>>> =
         Arc::new(Mutex::new(vec![HashMap::new(); nsteps + 1]));
-    let finals: Arc<Mutex<HashMap<usize, Matrix>>> = Arc::new(Mutex::new(HashMap::new()));
+    let finals: Arc<Mutex<HashMap<usize, Arc<Matrix>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
 
     let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..procs)
         .map(|r| {
@@ -261,7 +271,8 @@ pub fn run_tsqr_pooled(
     let root_r = finals[&0].clone();
 
     // Redundancy series: after step s, how many ranks hold the value the
-    // ROOT holds at that step (the root-path merge)?
+    // ROOT holds at that step (the root-path merge)? Compared by value —
+    // Arc sharing is an optimization, not the identity criterion.
     let rs = rs_by_step.lock().unwrap();
     let mut redundancy = Vec::with_capacity(nsteps);
     for s in 1..=nsteps {
@@ -269,10 +280,11 @@ pub fn run_tsqr_pooled(
         let holders = rs[s].values().filter(|m| *m == root_val).count();
         redundancy.push(holders);
     }
-    let final_holders = finals.values().filter(|m| **m == root_r).count();
+    let final_holders =
+        finals.values().filter(|m| m.as_ref() == root_r.as_ref()).count();
 
     Ok(TsqrOutcome {
-        r: root_r,
+        r: root_r.as_ref().clone(),
         redundancy,
         final_holders,
         report: world.metrics.snapshot(),

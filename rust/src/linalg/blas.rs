@@ -1,11 +1,22 @@
-//! Minimal BLAS-3 kernels over [`Matrix`]: `C = alpha * op(A) op(B) (+ C)`.
+//! Level-3 kernels over [`Matrix`] / [`MatrixView`]: `C = alpha * op(A)
+//! op(B) + beta * C`, plus triangular specializations.
 //!
-//! These back the [`crate::backend::NativeBackend`] hot path, so the inner
-//! loops are written cache-friendly (ikj order over row-major data, with a
-//! transposed copy when `op(A) = Aᵀ` so the innermost loop always streams
-//! contiguous rows).
+//! These back the [`crate::backend::NativeBackend`] hot path. The GEMM is
+//! a BLIS-style tiled/packed kernel (see DESIGN.md "Kernel architecture"):
+//! operands are packed into cache-sized `MC x KC` / `KC x NC` blocks, and
+//! an `MR x NR` register micro-kernel streams contiguous packed panels so
+//! the compiler can keep the accumulator tile in SIMD registers. Packing
+//! reads through strided [`MatrixView`]s, so transposed operands and
+//! sub-block views cost a pack pass (O(mk + kn)), never an extra
+//! materialized copy of the operand.
+//!
+//! The pre-tile ikj kernel is kept as [`gemm_ref_into`]: it is the
+//! correctness oracle for the property tests and the "before" baseline in
+//! `benches/kernels.rs`.
 
-use super::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::matrix::{Matrix, MatrixView, MatrixViewMut};
 
 /// Transpose flag for [`gemm`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -16,19 +27,57 @@ pub enum Trans {
     Yes,
 }
 
+// --- tile geometry (f32, sized for ~32K L1 / ~512K L2 caches) ----------
+
+/// Rows of op(A) packed per block.
+const MC: usize = 64;
+/// Inner (k) depth packed per block.
+const KC: usize = 256;
+/// Columns of op(B) packed per block.
+const NC: usize = 256;
+/// Micro-kernel rows (accumulator tile height).
+const MR: usize = 4;
+/// Micro-kernel columns (accumulator tile width; 4 SIMD vectors of 4).
+const NR: usize = 16;
+/// Minimum `m * n * k` before the row-panel thread split engages.
+const PAR_MIN_WORK: usize = 1 << 21;
+/// At or below this op volume the pack-buffer setup dominates the math:
+/// take the direct (allocation-free) strided loop instead. Dispatch
+/// depends only on the shape, so a given op always takes the same path —
+/// replay bit-equality is unaffected.
+const SMALL_WORK: usize = 32 * 32 * 32;
+
+/// Worker count for the GEMM row-panel split (process-wide; see
+/// [`set_par_threads`]). Default 1 = serial.
+static PAR_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the process-wide GEMM thread split: large products are divided
+/// into contiguous row panels of `C`, one plain `std::thread` each (no
+/// rayon). `n <= 1` (including 0) means serial. Drivers apply
+/// `RunConfig::par` through this; leave it at 1 when a simulation worker
+/// pool already saturates the machine.
+pub fn set_par_threads(n: usize) {
+    PAR_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current GEMM thread split (see [`set_par_threads`]).
+pub fn par_threads() -> usize {
+    PAR_THREADS.load(Ordering::Relaxed).max(1)
+}
+
 /// `alpha * op(A) @ op(B)` into a fresh matrix.
 pub fn gemm(ta: Trans, tb: Trans, alpha: f32, a: &Matrix, b: &Matrix) -> Matrix {
-    let (m, _k) = op_shape(ta, a);
-    let (_, n) = op_shape(tb, b);
+    let (m, _k) = op_shape(ta, a.shape());
+    let (_, n) = op_shape(tb, b.shape());
     let mut c = Matrix::zeros(m, n);
     gemm_into(ta, tb, alpha, a, b, 0.0, &mut c);
     c
 }
 
-fn op_shape(t: Trans, m: &Matrix) -> (usize, usize) {
+fn op_shape(t: Trans, (r, c): (usize, usize)) -> (usize, usize) {
     match t {
-        Trans::No => m.shape(),
-        Trans::Yes => (m.cols(), m.rows()),
+        Trans::No => (r, c),
+        Trans::Yes => (c, r),
     }
 }
 
@@ -42,16 +91,416 @@ pub fn gemm_into(
     beta: f32,
     c: &mut Matrix,
 ) {
-    let (m, ka) = op_shape(ta, a);
-    let (kb, n) = op_shape(tb, b);
+    gemm_view_into(ta, tb, alpha, a.as_view(), b.as_view(), beta, c.as_view_mut());
+}
+
+/// `alpha * op(A) @ op(B)` over borrowed views, into a fresh matrix.
+pub fn gemm_view(ta: Trans, tb: Trans, alpha: f32, a: MatrixView<'_>, b: MatrixView<'_>) -> Matrix {
+    let (m, _k) = op_shape(ta, a.shape());
+    let (_, n) = op_shape(tb, b.shape());
+    let mut c = Matrix::zeros(m, n);
+    gemm_view_into(ta, tb, alpha, a, b, 0.0, c.as_view_mut());
+    c
+}
+
+/// View-based `C = alpha * op(A) @ op(B) + beta * C`: the zero-copy entry
+/// point — `A`, `B` and `C` may all be strided windows into larger
+/// matrices, so callers update trailing blocks in place.
+///
+/// Results are bit-deterministic and independent of [`par_threads`]:
+/// each output row's accumulation order depends only on the k-blocking,
+/// never on which band or register tile the row lands in.
+pub fn gemm_view_into(
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    beta: f32,
+    mut c: MatrixViewMut<'_>,
+) {
+    let (m, ka) = op_shape(ta, a.shape());
+    let (kb, n) = op_shape(tb, b.shape());
+    assert_eq!(ka, kb, "gemm inner-dim mismatch: {ka} vs {kb}");
+    assert_eq!(c.shape(), (m, n), "gemm output shape mismatch");
+    let k = ka;
+
+    scale_rows(&mut c, beta);
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+
+    // The coordinator issues hordes of tiny b x b products (T algebra,
+    // TSQR merges); packing would cost more than the flops.
+    if m * n * k <= SMALL_WORK {
+        gemm_small(ta, tb, alpha, a, b, &mut c);
+        return;
+    }
+
+    let threads = par_threads();
+    if threads > 1 && m >= 2 * MR && m * n * k >= PAR_MIN_WORK {
+        gemm_parallel(ta, tb, alpha, a, b, threads, c);
+    } else {
+        gemm_band(ta, tb, alpha, a, b, c);
+    }
+}
+
+/// Thread-split driver. All of `op(B)` is packed **once** up front into
+/// a single buffer (one segment per `(jc, pc)` block) shared read-only
+/// by every thread; `C` is divided into contiguous row bands and each
+/// band gets one thread, spawned once, that walks the same `jc`/`pc`
+/// block order as the serial path over its rows. No per-block thread
+/// respawns, no duplicated B packing, one A-pack buffer per thread.
+/// Per-row accumulation order is unchanged, so results stay
+/// bit-identical to the serial path.
+fn gemm_parallel(
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    threads: usize,
+    c: MatrixViewMut<'_>,
+) {
+    let m = c.rows();
+    let n = c.cols();
+    let k = op_shape(ta, a.shape()).1;
+    let jblocks = n.div_ceil(NC);
+    let kblocks = k.div_ceil(KC);
+
+    // Pack every op(B) block once (segment offsets precomputed; total is
+    // op(B) rounded up to NR columns — comparable to the old transposed
+    // copy the pre-tile kernel materialized).
+    let mut offs = Vec::with_capacity(jblocks * kblocks);
+    let mut total = 0usize;
+    for jb in 0..jblocks {
+        let nc = NC.min(n - jb * NC);
+        for pb in 0..kblocks {
+            let kc = KC.min(k - pb * KC);
+            offs.push(total);
+            total += kc * nc.div_ceil(NR) * NR;
+        }
+    }
+    let mut bpack = vec![0.0f32; total];
+    for jb in 0..jblocks {
+        let nc = NC.min(n - jb * NC);
+        for pb in 0..kblocks {
+            let kc = KC.min(k - pb * KC);
+            let off = offs[jb * kblocks + pb];
+            let len = kc * nc.div_ceil(NR) * NR;
+            pack_b(&mut bpack[off..off + len], b, tb, pb * KC, kc, jb * NC, nc);
+        }
+    }
+
+    // One contiguous row band of C per thread.
+    let bands = threads.min(m / MR);
+    let rows_per = m.div_ceil(bands);
+    let mut parts: Vec<(usize, MatrixViewMut<'_>)> = Vec::with_capacity(bands);
+    let mut rest = c;
+    let mut row0 = 0;
+    while rest.rows() > rows_per {
+        let (head, tail) = rest.split_rows(rows_per);
+        parts.push((row0, head));
+        row0 += rows_per;
+        rest = tail;
+    }
+    parts.push((row0, rest));
+
+    let bpack = &bpack[..];
+    let offs = &offs[..];
+    std::thread::scope(|s| {
+        for (r0, mut band) in parts {
+            s.spawn(move || {
+                let bm = band.rows();
+                let kc_cap = KC.min(k);
+                let mut abuf =
+                    vec![0.0f32; MC.min(bm).div_ceil(MR) * MR * kc_cap];
+                for jb in 0..jblocks {
+                    let jc = jb * NC;
+                    let nc = NC.min(n - jc);
+                    for pb in 0..kblocks {
+                        let pc = pb * KC;
+                        let kc = KC.min(k - pc);
+                        let bp = &bpack[offs[jb * kblocks + pb]..];
+                        let mut ic = 0;
+                        while ic < bm {
+                            let mc = MC.min(bm - ic);
+                            pack_a(&mut abuf, a, ta, r0 + ic, mc, pc, kc);
+                            macro_kernel(
+                                &abuf, bp, kc, mc, nc, alpha, &mut band, ic, jc,
+                            );
+                            ic += MC;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Scale every row of `c` by `beta` (`0.0` zero-fills).
+fn scale_rows(c: &mut MatrixViewMut<'_>, beta: f32) {
+    if beta == 1.0 {
+        return;
+    }
+    for i in 0..c.rows() {
+        let row = c.row_mut(i);
+        if beta == 0.0 {
+            row.fill(0.0);
+        } else {
+            for x in row {
+                *x *= beta;
+            }
+        }
+    }
+}
+
+/// Element `(i, p)` of `op(A)` where `i` indexes rows of the op result.
+#[inline(always)]
+fn op_at(t: Trans, m: MatrixView<'_>, i: usize, p: usize) -> f32 {
+    match t {
+        Trans::No => m.at(i, p),
+        Trans::Yes => m.at(p, i),
+    }
+}
+
+/// Allocation-free path for small products: ikj over the views, with the
+/// reference kernel's zero-skip (structural zeros of small triangular /
+/// identity operands cost nothing).
+fn gemm_small(
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    c: &mut MatrixViewMut<'_>,
+) {
+    let (m, k) = op_shape(ta, a.shape());
+    let n = c.cols();
+    for i in 0..m {
+        let crow = c.row_mut(i);
+        for p in 0..k {
+            let f = alpha * op_at(ta, a, i, p);
+            if f == 0.0 {
+                continue;
+            }
+            match tb {
+                Trans::No => {
+                    for (cij, &bpj) in crow.iter_mut().zip(b.row(p)) {
+                        *cij += f * bpj;
+                    }
+                }
+                Trans::Yes => {
+                    for (j, cij) in crow.iter_mut().enumerate().take(n) {
+                        *cij += f * b.at(j, p);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serial tiled kernel over the whole of `C` (the thread split uses
+/// [`gemm_parallel`] instead, which shares the packed `B` across bands).
+fn gemm_band(
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    mut c: MatrixViewMut<'_>,
+) {
+    let m = c.rows();
+    let n = c.cols();
+    let k = op_shape(ta, a.shape()).1;
+    // Packed panels: A as MR-row strips (MR values contiguous per k), B as
+    // NR-column strips (NR values contiguous per k). Edges are zero-padded
+    // so the micro-kernel always runs a full MR x NR tile. Buffers are
+    // sized to the problem (capped at one block) so mid-size ops don't pay
+    // the full 320 KB block allocation.
+    let kc_cap = KC.min(k);
+    let mut abuf = vec![0.0f32; MC.min(m).div_ceil(MR) * MR * kc_cap];
+    let mut bbuf = vec![0.0f32; kc_cap * NC.min(n).div_ceil(NR) * NR];
+
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(&mut bbuf, b, tb, pc, kc, jc, nc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                pack_a(&mut abuf, a, ta, ic, mc, pc, kc);
+                macro_kernel(&abuf, &bbuf, kc, mc, nc, alpha, &mut c, ic, jc);
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// Pack `op(A)[i0..i0+mc, p0..p0+kc]` into MR-row panels.
+fn pack_a(
+    buf: &mut [f32],
+    a: MatrixView<'_>,
+    ta: Trans,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+) {
+    let panels = mc.div_ceil(MR);
+    for ir in 0..panels {
+        let base = ir * kc * MR;
+        for p in 0..kc {
+            let off = base + p * MR;
+            for r in 0..MR {
+                let i = ir * MR + r;
+                buf[off + r] =
+                    if i < mc { op_at(ta, a, i0 + i, p0 + p) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack `op(B)[p0..p0+kc, j0..j0+nc]` into NR-column panels.
+fn pack_b(
+    buf: &mut [f32],
+    b: MatrixView<'_>,
+    tb: Trans,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+) {
+    let panels = nc.div_ceil(NR);
+    for jr in 0..panels {
+        let base = jr * kc * NR;
+        for p in 0..kc {
+            let off = base + p * NR;
+            for cc in 0..NR {
+                let j = jr * NR + cc;
+                buf[off + cc] =
+                    if j < nc { op_at(tb, b, p0 + p, j0 + j) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Drive the micro-kernel over every MR x NR tile of one packed block and
+/// accumulate `alpha * tile` into `C`.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    abuf: &[f32],
+    bbuf: &[f32],
+    kc: usize,
+    mc: usize,
+    nc: usize,
+    alpha: f32,
+    c: &mut MatrixViewMut<'_>,
+    ic: usize,
+    jc: usize,
+) {
+    let mpanels = mc.div_ceil(MR);
+    let npanels = nc.div_ceil(NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for jr in 0..npanels {
+        let bp = &bbuf[jr * kc * NR..(jr + 1) * kc * NR];
+        for ir in 0..mpanels {
+            let ap = &abuf[ir * kc * MR..(ir + 1) * kc * MR];
+            for row in acc.iter_mut() {
+                row.fill(0.0);
+            }
+            micro_kernel(ap, bp, &mut acc);
+            let rmax = MR.min(mc - ir * MR);
+            let cmax = NR.min(nc - jr * NR);
+            for (r, arow) in acc.iter().enumerate().take(rmax) {
+                let j0 = jc + jr * NR;
+                let crow = &mut c.row_mut(ic + ir * MR + r)[j0..j0 + cmax];
+                for (cij, v) in crow.iter_mut().zip(&arow[..cmax]) {
+                    *cij += alpha * v;
+                }
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[r][c] += a[r] * b[c]` over the packed k run.
+/// `ap`/`bp` are exact-length packed panels, so every slice below has a
+/// compile-time-known width and the loop autovectorizes to fma chains
+/// (no per-element zero test — that branch defeated vectorization in the
+/// pre-tile kernel).
+#[inline(always)]
+fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let arp = av[r];
+            for (x, &y) in acc[r].iter_mut().zip(bv) {
+                *x += arp * y;
+            }
+        }
+    }
+}
+
+/// Upper-triangular multiply `alpha * op(T) @ B` with `T` upper
+/// triangular: the trmm-style specialization for the `T` and `R` factors.
+/// Skips the structural-zero half of `T` (half the flops of a dense
+/// `gemm`) while streaming contiguous rows of `B`.
+pub fn trmm_upper(tt: Trans, alpha: f32, t: &Matrix, b: &Matrix) -> Matrix {
+    let bt = t.rows();
+    assert_eq!(t.shape(), (bt, bt), "trmm_upper needs a square T");
+    assert_eq!(b.rows(), bt, "trmm_upper inner-dim mismatch");
+    let n = b.cols();
+    let mut out = Matrix::zeros(bt, n);
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..bt {
+        let orow = &mut od[i * n..(i + 1) * n];
+        let prange = match tt {
+            Trans::No => i..bt,      // row i of U
+            Trans::Yes => 0..i + 1,  // column i of U (row i of Uᵀ)
+        };
+        for p in prange {
+            let tip = match tt {
+                Trans::No => t[(i, p)],
+                Trans::Yes => t[(p, i)],
+            };
+            let f = alpha * tip;
+            if f == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            for (o, &x) in orow.iter_mut().zip(brow) {
+                *o += f * x;
+            }
+        }
+    }
+    out
+}
+
+/// The pre-tile ikj kernel, kept verbatim as the correctness oracle for
+/// the property tests and the "before" baseline in `benches/kernels.rs`.
+/// Semantics match [`gemm_into`] up to f32 summation order.
+pub fn gemm_ref_into(
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f32,
+    c: &mut Matrix,
+) {
+    let (m, ka) = op_shape(ta, a.shape());
+    let (kb, n) = op_shape(tb, b.shape());
     assert_eq!(ka, kb, "gemm inner-dim mismatch: {ka} vs {kb}");
     assert_eq!(c.shape(), (m, n), "gemm output shape mismatch");
     let k = ka;
 
     // Materialize transposed operands once so the inner loop is always a
-    // contiguous row-stream (ikj order). For the small b x b factors this
-    // copy is negligible; for big C it never happens (C is never
-    // transposed by our callers).
+    // contiguous row-stream (ikj order).
     let at;
     let a_eff: &Matrix = match ta {
         Trans::No => a,
@@ -168,6 +617,79 @@ mod tests {
             e
         });
         close(&c, &want);
+    }
+
+    #[test]
+    fn gemm_tile_boundaries_match_reference() {
+        // Shapes straddling every tile constant: MR/NR edges, > MC rows,
+        // > KC depth, > NC cols.
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 5, 7), (4, 16, 16), (65, 257, 17), (130, 300, 33)]
+        {
+            let a = Matrix::randn(m, k, (m * 31 + k) as u64);
+            let b = Matrix::randn(k, n, (k * 17 + n) as u64);
+            let got = gemm(Trans::No, Trans::No, 1.0, &a, &b);
+            let mut want = Matrix::zeros(m, n);
+            gemm_ref_into(Trans::No, Trans::No, 1.0, &a, &b, 0.0, &mut want);
+            assert!(
+                crate::linalg::rel_err(&got, &want) < 1e-4,
+                "({m},{k},{n}): {}",
+                crate::linalg::rel_err(&got, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_empty_dims_are_noops() {
+        // k = 0: C = beta * C, no contribution.
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 4);
+        let mut c = Matrix::eye(3).pad_to(3, 4);
+        gemm_into(Trans::No, Trans::No, 1.0, &a, &b, 1.0, &mut c);
+        assert_eq!(c, Matrix::eye(3).pad_to(3, 4));
+        // m = 0 / n = 0 products exist and are empty.
+        assert_eq!(
+            gemm(Trans::No, Trans::No, 1.0, &Matrix::zeros(0, 5), &Matrix::zeros(5, 4))
+                .shape(),
+            (0, 4)
+        );
+    }
+
+    #[test]
+    fn gemm_par_split_matches_serial_bitwise() {
+        let a = Matrix::randn(150, 64, 1);
+        let b = Matrix::randn(64, 220, 2);
+        let serial = gemm(Trans::No, Trans::No, 1.0, &a, &b);
+        set_par_threads(3);
+        let par = gemm(Trans::No, Trans::No, 1.0, &a, &b);
+        set_par_threads(1);
+        assert_eq!(serial, par, "thread split must not change results");
+    }
+
+    #[test]
+    fn gemm_views_match_block_copies() {
+        let big_a = Matrix::randn(12, 10, 3);
+        let big_b = Matrix::randn(11, 9, 4);
+        let av = big_a.view(2, 1, 6, 5);
+        let bv = big_b.view(3, 2, 5, 7);
+        let got = gemm_view(Trans::No, Trans::No, 1.0, av, bv);
+        let want =
+            gemm(Trans::No, Trans::No, 1.0, &big_a.block(2, 1, 6, 5), &big_b.block(3, 2, 5, 7));
+        assert_eq!(got, want, "strided packing must match copied blocks");
+    }
+
+    #[test]
+    fn trmm_matches_gemm_on_triangles() {
+        let t = Matrix::randn(8, 8, 5).triu();
+        let b = Matrix::randn(8, 12, 6);
+        close(
+            &trmm_upper(Trans::No, 1.0, &t, &b),
+            &gemm(Trans::No, Trans::No, 1.0, &t, &b),
+        );
+        close(
+            &trmm_upper(Trans::Yes, -2.0, &t, &b),
+            &gemm(Trans::Yes, Trans::No, -2.0, &t, &b),
+        );
     }
 
     #[test]

@@ -2,6 +2,13 @@
 //! distributed coordinator needs. Row-major matches XLA's default layout,
 //! so [`crate::runtime`] converts to/from `xla::Literal` without copies of
 //! the element order.
+//!
+//! Sub-blocks can be borrowed without copying through [`MatrixView`] /
+//! [`MatrixViewMut`] (a strided window over the parent's buffer); the
+//! tiled kernels in [`crate::linalg`] are written against views, so the
+//! coordinator can update trailing blocks in place instead of round-
+//! tripping them through `block` + `set_block` copies (see DESIGN.md
+//! "Kernel architecture").
 
 /// Deterministic xorshift64* PRNG (offline build: no `rand` crate).
 #[derive(Clone, Debug)]
@@ -46,14 +53,135 @@ impl Rng64 {
         ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
     }
 
-    /// Uniform usize in [0, n).
+    /// Uniform usize in [0, n): Lemire's widening-multiply method with
+    /// the rejection zone, so the draw is *exactly* uniform (the old
+    /// `next_u64() % n` carried a modulo bias of up to `2⁶⁴ mod n`
+    /// per bucket, which skews large-P fault-injection sampling).
     pub fn below(&mut self, n: usize) -> usize {
-        (self.next_u64() % n as u64) as usize
+        assert!(n > 0, "Rng64::below(0)");
+        let n64 = n as u64;
+        let mut m = u128::from(self.next_u64()) * u128::from(n64);
+        let mut lo = m as u64;
+        if lo < n64 {
+            // Reject draws in the short leading zone so every bucket
+            // receives exactly floor(2^64 / n) raw values.
+            let zone = n64.wrapping_neg() % n64;
+            while lo < zone {
+                m = u128::from(self.next_u64()) * u128::from(n64);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as usize
     }
 
     /// Bernoulli(p).
     pub fn chance(&mut self, p: f64) -> bool {
         self.uniform() < p
+    }
+}
+
+/// Borrowed read-only sub-block of a [`Matrix`]: a strided window over
+/// the parent's row-major buffer. Copy-free counterpart of
+/// [`Matrix::block`].
+#[derive(Clone, Copy)]
+pub struct MatrixView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    stride: usize,
+}
+
+impl<'a> MatrixView<'a> {
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Element `(i, j)`.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.stride + j]
+    }
+
+    /// Row `i` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    /// Materialize the window into an owned [`Matrix`].
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            out.data[i * self.cols..(i + 1) * self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+/// Borrowed mutable sub-block of a [`Matrix`] (strided window). The
+/// in-place kernels (`gemm_view_into`, `leaf_apply_into`, ...) write
+/// through this instead of returning fresh allocations.
+pub struct MatrixViewMut<'a> {
+    data: &'a mut [f32],
+    rows: usize,
+    cols: usize,
+    stride: usize,
+}
+
+impl<'a> MatrixViewMut<'a> {
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Row `i` as a contiguous mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    /// Split into the first `h1` rows and the rest (used by the GEMM
+    /// row-panel thread split). Both halves keep the parent stride.
+    pub fn split_rows(self, h1: usize) -> (MatrixViewMut<'a>, MatrixViewMut<'a>) {
+        assert!(h1 <= self.rows, "split_rows past the end");
+        let (rows, cols, stride) = (self.rows, self.cols, self.stride);
+        if h1 == 0 {
+            let head = MatrixViewMut { data: &mut [], rows: 0, cols, stride };
+            return (head, self);
+        }
+        if h1 == rows {
+            let tail = MatrixViewMut { data: &mut [], rows: 0, cols, stride };
+            return (self, tail);
+        }
+        let (a, b) = self.data.split_at_mut(h1 * stride);
+        (
+            MatrixViewMut { data: a, rows: h1, cols, stride },
+            MatrixViewMut { data: b, rows: rows - h1, cols, stride },
+        )
     }
 }
 
@@ -149,6 +277,48 @@ impl Matrix {
         self.data.len() * std::mem::size_of::<f32>()
     }
 
+    /// Borrow the whole matrix as a view.
+    pub fn as_view(&self) -> MatrixView<'_> {
+        MatrixView { data: &self.data, rows: self.rows, cols: self.cols, stride: self.cols }
+    }
+
+    /// Borrow the whole matrix as a mutable view.
+    pub fn as_view_mut(&mut self) -> MatrixViewMut<'_> {
+        MatrixViewMut {
+            data: &mut self.data,
+            rows: self.rows,
+            cols: self.cols,
+            stride: self.cols,
+        }
+    }
+
+    /// Borrow the sub-block `[r0, r0+h) x [c0, c0+w)` without copying.
+    pub fn view(&self, r0: usize, c0: usize, h: usize, w: usize) -> MatrixView<'_> {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "view out of range");
+        if h == 0 || w == 0 {
+            return MatrixView { data: &[], rows: h, cols: w, stride: self.cols };
+        }
+        let start = r0 * self.cols + c0;
+        let end = start + (h - 1) * self.cols + w;
+        MatrixView { data: &self.data[start..end], rows: h, cols: w, stride: self.cols }
+    }
+
+    /// Mutably borrow the sub-block `[r0, r0+h) x [c0, c0+w)`.
+    pub fn view_mut(&mut self, r0: usize, c0: usize, h: usize, w: usize) -> MatrixViewMut<'_> {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "view_mut out of range");
+        if h == 0 || w == 0 {
+            return MatrixViewMut { data: &mut [], rows: h, cols: w, stride: self.cols };
+        }
+        let start = r0 * self.cols + c0;
+        let end = start + (h - 1) * self.cols + w;
+        MatrixViewMut {
+            data: &mut self.data[start..end],
+            rows: h,
+            cols: w,
+            stride: self.cols,
+        }
+    }
+
     /// Copy of the sub-block `[r0, r0+h) x [c0, c0+w)`.
     pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
         assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
@@ -161,17 +331,46 @@ impl Matrix {
         out
     }
 
+    /// `block` + `pad_to` in one copy: the sub-block `[r0, r0+h) x
+    /// [c0, c0+w)` placed at the origin of a zero `(rows, cols)` matrix.
+    /// This is the single-copy extraction the coordinator's panel loop
+    /// uses instead of the old `block(...).pad_to(...)` double copy.
+    pub fn block_padded(
+        &self,
+        r0: usize,
+        c0: usize,
+        h: usize,
+        w: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block_padded out of range");
+        assert!(rows >= h && cols >= w, "block_padded shrinks");
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..h {
+            let src = (r0 + i) * self.cols + c0;
+            let dst = i * cols;
+            out.data[dst..dst + w].copy_from_slice(&self.data[src..src + w]);
+        }
+        out
+    }
+
     /// Write `src` into the sub-block starting at `(r0, c0)`.
     pub fn set_block(&mut self, r0: usize, c0: usize, src: &Matrix) {
+        self.set_block_view(r0, c0, src.as_view());
+    }
+
+    /// Write a borrowed view into the sub-block starting at `(r0, c0)` —
+    /// lets callers store a window of one matrix into another without an
+    /// intermediate `block`/`crop_to` copy.
+    pub fn set_block_view(&mut self, r0: usize, c0: usize, src: MatrixView<'_>) {
         assert!(
-            r0 + src.rows <= self.rows && c0 + src.cols <= self.cols,
+            r0 + src.rows() <= self.rows && c0 + src.cols() <= self.cols,
             "set_block out of range"
         );
-        for i in 0..src.rows {
+        for i in 0..src.rows() {
             let dst = (r0 + i) * self.cols + c0;
-            let s = i * src.cols;
-            self.data[dst..dst + src.cols]
-                .copy_from_slice(&src.data[s..s + src.cols]);
+            self.data[dst..dst + src.cols()].copy_from_slice(src.row(i));
         }
     }
 
@@ -268,6 +467,22 @@ impl Matrix {
             .collect();
         Matrix::from_vec(self.rows, self.cols, data)
     }
+
+    /// Elementwise `self += other`, allocation-free.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape(), "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise `self -= other`, allocation-free.
+    pub fn sub_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape(), "sub_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
 }
 
 impl std::ops::Index<(usize, usize)> for Matrix {
@@ -318,6 +533,55 @@ mod tests {
     }
 
     #[test]
+    fn view_matches_block() {
+        let a = Matrix::randn(9, 7, 4);
+        let v = a.view(2, 1, 5, 4);
+        assert_eq!(v.shape(), (5, 4));
+        assert_eq!(v.at(0, 0), a[(2, 1)]);
+        assert_eq!(v.row(3), a.block(5, 1, 1, 4).data());
+        assert_eq!(v.to_matrix(), a.block(2, 1, 5, 4));
+        // empty windows are fine
+        assert_eq!(a.view(9, 0, 0, 7).to_matrix(), Matrix::zeros(0, 7));
+        assert_eq!(a.view(0, 7, 4, 0).to_matrix(), Matrix::zeros(4, 0));
+    }
+
+    #[test]
+    fn view_mut_split_rows_writes_through() {
+        let mut a = Matrix::zeros(6, 4);
+        {
+            let v = a.view_mut(1, 1, 4, 3);
+            let (mut top, mut bot) = v.split_rows(2);
+            top.row_mut(0).fill(1.0);
+            bot.row_mut(1).fill(2.0);
+        }
+        assert_eq!(a[(1, 1)], 1.0);
+        assert_eq!(a[(1, 3)], 1.0);
+        assert_eq!(a[(1, 0)], 0.0, "outside the window untouched");
+        assert_eq!(a[(4, 2)], 2.0);
+        assert_eq!(a[(5, 2)], 0.0);
+    }
+
+    #[test]
+    fn set_block_view_matches_set_block() {
+        let src = Matrix::randn(6, 6, 9);
+        let mut via_block = Matrix::zeros(8, 8);
+        via_block.set_block(1, 2, &src.block(1, 1, 4, 3));
+        let mut via_view = Matrix::zeros(8, 8);
+        via_view.set_block_view(1, 2, src.view(1, 1, 4, 3));
+        assert_eq!(via_block, via_view);
+    }
+
+    #[test]
+    fn block_padded_matches_block_then_pad() {
+        let a = Matrix::randn(10, 6, 3);
+        let one = a.block_padded(2, 1, 5, 4, 8, 6);
+        let two = a.block(2, 1, 5, 4).pad_to(8, 6);
+        assert_eq!(one, two);
+        // degenerate: no padding needed
+        assert_eq!(a.block_padded(0, 0, 10, 6, 10, 6), a);
+    }
+
+    #[test]
     fn pad_crop_roundtrip() {
         let a = Matrix::randn(5, 3, 2);
         let p = a.pad_to(8, 4);
@@ -354,6 +618,40 @@ mod tests {
         let c = a.add(&b).sub(&b);
         for (x, y) in c.data().iter().zip(a.data()) {
             assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn assign_ops_match_pure_ops() {
+        let a = Matrix::randn(4, 5, 7);
+        let b = Matrix::randn(4, 5, 8);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(c, a.add(&b));
+        c.sub_assign(&b);
+        assert_eq!(c, a.add(&b).sub(&b));
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Rng64::new(123);
+        let n = 7;
+        let mut counts = vec![0u32; n];
+        let draws = 70_000;
+        for _ in 0..draws {
+            let v = rng.below(n);
+            assert!(v < n);
+            counts[v] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.05, "bucket {i}: {c} vs {expect} ({dev:.3})");
+        }
+        // huge n exercises the widening-multiply path's upper bits
+        let big = usize::MAX / 2 + 3;
+        for _ in 0..100 {
+            assert!(rng.below(big) < big);
         }
     }
 }

@@ -12,11 +12,15 @@ mod blas;
 mod matrix;
 mod qr;
 
-pub use blas::{gemm, gemm_into, Trans};
-pub use matrix::{Matrix, Rng64};
+pub use blas::{
+    gemm, gemm_into, gemm_ref_into, gemm_view, gemm_view_into, par_threads,
+    set_par_threads, trmm_upper, Trans,
+};
+pub use matrix::{Matrix, MatrixView, MatrixViewMut, Rng64};
 pub use qr::{
-    dense_qr_r, householder_qr, leaf_apply, recover_block, tree_update,
-    tsqr_merge, PanelFactors, TreeStep,
+    dense_qr_r, householder_qr, householder_qr_blocked, householder_qr_ref,
+    leaf_apply, leaf_apply_into, recover_block, recover_block_into, tree_update,
+    tree_update_half, tree_update_into, tsqr_merge, PanelFactors, TreeStep,
 };
 
 /// Relative Frobenius distance `‖a − b‖_F / max(‖b‖_F, 1)`.

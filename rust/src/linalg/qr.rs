@@ -1,9 +1,23 @@
 //! Householder QR and the five distributed ops, mirroring the JAX
 //! reference (`python/compile/kernels/ref.py`) bit-for-bit in convention:
 //! unit-lower `Y`, upper `T` with `Q = I − Y T Yᵀ`, unnormalized-sign `R`.
+//!
+//! The panel factorization is *blocked* (see DESIGN.md "Kernel
+//! architecture"): width-[`NB`] sub-panels are factored by a slice-based
+//! column kernel over a column-major scratch (contiguous column access,
+//! no per-element `(i, j)` indexing), `T` is accumulated incrementally
+//! via the compact-WY merge identity, and reflectors are applied to the
+//! trailing sub-panels through level-3 [`gemm_view_into`] calls instead
+//! of per-column rank-1 updates. The pre-blocking scalar implementation
+//! survives as [`householder_qr_ref`], the oracle for
+//! `tests/kernel_props.rs`.
 
-use super::blas::{gemm, gemm_into, Trans};
-use super::Matrix;
+use super::blas::{gemm, gemm_into, gemm_view, gemm_view_into, trmm_upper, Trans};
+use super::matrix::{Matrix, MatrixView};
+
+/// Sub-panel width of the blocked QR: trailing columns are updated with
+/// level-3 kernels every `NB` factored columns.
+const NB: usize = 16;
 
 /// Result of a panel factorization: `Q = I − Y T Yᵀ`, `A = Q [R; 0]`.
 #[derive(Clone, Debug)]
@@ -27,11 +41,189 @@ pub struct TreeStep {
     pub c1: Matrix,
 }
 
-/// Householder QR of an `(m, b)` panel (`m >= b`).
+/// Householder QR of an `(m, b)` panel (`m >= b`), blocked at width
+/// [`NB`].
 ///
 /// Zero-row padding is exact: padded rows produce zero rows of `y` and do
 /// not perturb `t`/`r` (relied on by the shape-ladder artifact strategy).
 pub fn householder_qr(a: &Matrix) -> PanelFactors {
+    householder_qr_blocked(a, NB)
+}
+
+/// [`householder_qr`] with an explicit sub-panel width (exposed for the
+/// property tests' `nb` sweeps; `nb >= b` degenerates to a single
+/// unblocked panel).
+pub fn householder_qr_blocked(a: &Matrix, nb: usize) -> PanelFactors {
+    let (m, b) = a.shape();
+    assert!(m >= b, "householder_qr needs m >= b, got {m} x {b}");
+    assert!(nb >= 1, "householder_qr_blocked needs nb >= 1");
+    let mut work = a.clone();
+    let mut y = Matrix::zeros(m, b);
+    let mut t = Matrix::zeros(b, b);
+
+    let mut j0 = 0;
+    while j0 < b {
+        let w = nb.min(b - j0);
+        let pm = m - j0;
+
+        // 1. Gather the sub-panel (rows j0.., cols j0..j0+w) into a
+        //    column-major scratch so the column kernel works on
+        //    contiguous slices.
+        let mut panel = vec![0.0f32; pm * w];
+        for i in 0..pm {
+            let src = work.view(j0 + i, j0, 1, w);
+            for (c, &v) in src.row(0).iter().enumerate() {
+                panel[c * pm + i] = v;
+            }
+        }
+        let mut taus = vec![0.0f32; w];
+        factor_panel(&mut panel, pm, w, &mut taus);
+
+        // 2. Scatter back: R entries (on/above the panel diagonal) into
+        //    `work`, reflector tails into `y` (unit diagonal explicit,
+        //    matching the reference convention; degenerate columns keep
+        //    an all-zero y column).
+        for c in 0..w {
+            let col = &panel[c * pm..(c + 1) * pm];
+            for (i, &v) in col.iter().enumerate().take(c + 1) {
+                work[(j0 + i, j0 + c)] = v;
+            }
+            if taus[c] != 0.0 {
+                y[(j0 + c, j0 + c)] = 1.0;
+                for i in c + 1..pm {
+                    y[(j0 + i, j0 + c)] = col[i];
+                }
+            }
+        }
+
+        let yblk = y.view(j0, j0, pm, w);
+        let tblk = build_panel_t(yblk, &taus);
+
+        // 3. Level-3 trailing update: C -= Y (Tᵀ (Yᵀ C)) on the columns
+        //    right of this sub-panel (replaces per-column rank-1 updates).
+        let nt = b - (j0 + w);
+        if nt > 0 {
+            let p = gemm_view(Trans::Yes, Trans::No, 1.0, yblk, work.view(j0, j0 + w, pm, nt));
+            let wm = trmm_upper(Trans::Yes, 1.0, &tblk, &p);
+            gemm_view_into(
+                Trans::No,
+                Trans::No,
+                -1.0,
+                yblk,
+                wm.as_view(),
+                1.0,
+                work.view_mut(j0, j0 + w, pm, nt),
+            );
+        }
+
+        // 4. Incremental T: for Q = Q_prev Q_blk the compact-WY factor is
+        //    [[T_prev, T12], [0, T_blk]] with
+        //    T12 = -T_prev (Y_prevᵀ Y_blk) T_blk. Rows above j0 of Y_blk
+        //    are structurally zero, so the gram restricts to rows j0...
+        if j0 > 0 {
+            let g12 = gemm_view(Trans::Yes, Trans::No, 1.0, y.view(j0, 0, pm, j0), yblk);
+            let tprev = t.block(0, 0, j0, j0);
+            let tmp = trmm_upper(Trans::No, -1.0, &tprev, &g12);
+            let t12 = gemm(Trans::No, Trans::No, 1.0, &tmp, &tblk);
+            t.set_block(0, j0, &t12);
+        }
+        t.set_block(j0, j0, &tblk);
+        j0 += w;
+    }
+
+    let r = work.block(0, 0, b, b).triu();
+    PanelFactors { y, t, r }
+}
+
+/// Unblocked column kernel over a column-major scratch: `panel` holds `w`
+/// columns of `pm` contiguous values each. On return, column `c` carries
+/// R entries in `[..=c]` and the reflector tail (`v / v0`) in `[c+1..]`.
+fn factor_panel(panel: &mut [f32], pm: usize, w: usize, taus: &mut [f32]) {
+    for j in 0..w {
+        let (left, trailing) = panel.split_at_mut((j + 1) * pm);
+        let col = &mut left[j * pm..];
+
+        // Householder vector for rows j.. of column j.
+        let mut normx = 0f64;
+        for &x in &col[j..] {
+            normx += (x as f64).powi(2);
+        }
+        let normx = normx.sqrt() as f32;
+        let x0 = col[j];
+        let sign = if x0 >= 0.0 { 1.0 } else { -1.0 };
+        let beta = -sign * normx;
+        let v0 = x0 - beta;
+
+        // v (unnormalized) = x - beta e_j ; tau_un = 2 / vᵀv.
+        let mut vtv = (v0 as f64).powi(2);
+        for &x in &col[j + 1..] {
+            vtv += (x as f64).powi(2);
+        }
+        if vtv == 0.0 || v0 == 0.0 {
+            // Column segment already zero: H = I, y column stays zero.
+            taus[j] = 0.0;
+            for x in &mut col[j + 1..] {
+                *x = 0.0;
+            }
+            continue;
+        }
+        let tau = (2.0 * (v0 as f64).powi(2) / vtv) as f32;
+        taus[j] = tau;
+
+        // Normalize in place: y = v / v0 (unit at j, stored implicitly),
+        // exact beta on the diagonal.
+        for x in &mut col[j + 1..] {
+            *x /= v0;
+        }
+        col[j] = beta;
+
+        // Apply H = I - tau v vᵀ to the trailing columns: contiguous
+        // slice dot + axpy per column.
+        let ytail = &col[j + 1..];
+        for cpanel in trailing.chunks_exact_mut(pm) {
+            let (chead, ctail) = cpanel.split_at_mut(j + 1);
+            let cj = &mut chead[j];
+            let mut dot = *cj; // v[j] == 1
+            for (yi, ci) in ytail.iter().zip(ctail.iter()) {
+                dot += yi * ci;
+            }
+            let f = tau * dot;
+            *cj -= f;
+            for (yi, ci) in ytail.iter().zip(ctail.iter_mut()) {
+                *ci -= f * yi;
+            }
+        }
+    }
+}
+
+/// Compact-WY `T` for one sub-panel: `T[j,j] = tau_j`,
+/// `T[:j, j] = -tau_j T[:j,:j] (YᵀY)[:j, j]` (the gram is computed once
+/// with a level-3 call; the recurrence itself is O(w³) on a tiny tile).
+fn build_panel_t(yblk: MatrixView<'_>, taus: &[f32]) -> Matrix {
+    let w = taus.len();
+    let g = gemm_view(Trans::Yes, Trans::No, 1.0, yblk, yblk);
+    let mut t = Matrix::zeros(w, w);
+    for j in 0..w {
+        t[(j, j)] = taus[j];
+        if j == 0 || taus[j] == 0.0 {
+            continue;
+        }
+        for i in 0..j {
+            let mut s = 0.0f32;
+            for p in i..j {
+                s += t[(i, p)] * g[(p, j)];
+            }
+            t[(i, j)] = -taus[j] * s;
+        }
+    }
+    t
+}
+
+/// The pre-blocking scalar Householder QR, kept verbatim as the oracle
+/// for `tests/kernel_props.rs` and the "before" baseline in
+/// `benches/kernels.rs`. Identical conventions to [`householder_qr`];
+/// results agree to f32 rounding.
+pub fn householder_qr_ref(a: &Matrix) -> PanelFactors {
     let (m, b) = a.shape();
     assert!(m >= b, "householder_qr needs m >= b, got {m} x {b}");
     let mut work = a.clone();
@@ -39,7 +231,6 @@ pub fn householder_qr(a: &Matrix) -> PanelFactors {
     let mut taus = vec![0.0f32; b];
 
     for j in 0..b {
-        // Householder vector for column j, rows j..m.
         let mut normx = 0f64;
         for i in j..m {
             normx += (work[(i, j)] as f64).powi(2);
@@ -50,30 +241,24 @@ pub fn householder_qr(a: &Matrix) -> PanelFactors {
         let beta = -sign * normx;
         let v0 = x0 - beta;
 
-        // v (unnormalized) = x - beta e_j ; tau_un = 2 / vᵀv.
         let mut vtv = (v0 as f64).powi(2);
         for i in j + 1..m {
             vtv += (work[(i, j)] as f64).powi(2);
         }
         if vtv == 0.0 || v0 == 0.0 {
-            // Column already reduced (or zero): H = I.
             taus[j] = 0.0;
-            // ref.py leaves y[:, j] all-zero in this case.
             continue;
         }
         let tau = (2.0 * (v0 as f64).powi(2) / vtv) as f32;
         taus[j] = tau;
 
-        // y[:, j] = v / v0, with y[j, j] = 1.
         y[(j, j)] = 1.0;
         for i in j + 1..m {
             y[(i, j)] = work[(i, j)] / v0;
         }
 
-        // Apply H = I - tau v vᵀ to the trailing columns j..b of work.
-        // w_row[c] = vᵀ work[:, c]
         for c in j..b {
-            let mut dot = work[(j, c)]; // v[j] == 1
+            let mut dot = work[(j, c)];
             for i in j + 1..m {
                 dot += y[(i, j)] * work[(i, c)];
             }
@@ -84,21 +269,17 @@ pub fn householder_qr(a: &Matrix) -> PanelFactors {
                 work[(i, c)] -= f * yij;
             }
         }
-        // Enforce the exact beta on the diagonal (numerically identical,
-        // avoids drift in the strictly-lower part we zero below).
         work[(j, j)] = beta;
     }
 
     let r = work.block(0, 0, b, b).triu();
 
-    // T accumulation: T[j,j] = tau_j; T[:j, j] = -tau_j T[:j,:j] (Yᵀy_j)[:j]
     let mut t = Matrix::zeros(b, b);
     for j in 0..b {
         t[(j, j)] = taus[j];
         if j == 0 || taus[j] == 0.0 {
             continue;
         }
-        // z = Y[:, :j]ᵀ y[:, j]  (length j)
         let mut z = vec![0.0f32; j];
         for (p, zp) in z.iter_mut().enumerate() {
             let mut s = 0.0;
@@ -107,7 +288,6 @@ pub fn householder_qr(a: &Matrix) -> PanelFactors {
             }
             *zp = s;
         }
-        // col = -tau_j * T[:j, :j] @ z
         for i in 0..j {
             let mut s = 0.0;
             for (p, zp) in z.iter().enumerate() {
@@ -142,32 +322,88 @@ pub fn tsqr_merge(r0: &Matrix, r1: &Matrix) -> (Matrix, Matrix, Matrix, Matrix) 
     (y0, y1, f.t, f.r)
 }
 
-/// Apply the local `Qᵀ` to a trailing block: `Ĉ = C − Y (Tᵀ (Yᵀ C))`.
-pub fn leaf_apply(y: &Matrix, t: &Matrix, c: &Matrix) -> Matrix {
+/// Apply the local `Qᵀ` to a trailing block in place:
+/// `C ← C − Y (Tᵀ (Yᵀ C))`. No copy of `C` is taken.
+pub fn leaf_apply_into(y: &Matrix, t: &Matrix, c: &mut Matrix) {
     let p = gemm(Trans::Yes, Trans::No, 1.0, y, c); // (b, n)
-    let w = gemm(Trans::Yes, Trans::No, 1.0, t, &p); // (b, n)
+    let w = trmm_upper(Trans::Yes, 1.0, t, &p); // (b, n)
+    gemm_into(Trans::No, Trans::No, -1.0, y, &w, 1.0, c);
+}
+
+/// Copying wrapper over [`leaf_apply_into`]: `Ĉ = C − Y (Tᵀ (Yᵀ C))`.
+pub fn leaf_apply(y: &Matrix, t: &Matrix, c: &Matrix) -> Matrix {
     let mut out = c.clone();
-    gemm_into(Trans::No, Trans::No, -1.0, y, &w, 1.0, &mut out);
+    leaf_apply_into(y, t, &mut out);
     out
 }
 
-/// One pairwise trailing-update tree step (paper Algorithms 1 & 2 core):
-/// `W = Tᵀ(C₀ + Y₁ᵀC₁)`, `Ĉ₀ = C₀ − W`, `Ĉ₁ = C₁ − Y₁W`.
+/// One pairwise trailing-update tree step in place (paper Algorithms 1 &
+/// 2 core): `W = Tᵀ(C₀ + Y₁ᵀC₁)`, `C₀ ← C₀ − W`, `C₁ ← C₁ − Y₁W`.
+/// Returns `W` (the retained redundancy payload); neither `C` block is
+/// copied.
+pub fn tree_update_into(c0: &mut Matrix, c1: &mut Matrix, y1: &Matrix, t: &Matrix) -> Matrix {
+    let mut s = gemm(Trans::Yes, Trans::No, 1.0, y1, c1);
+    s.add_assign(c0);
+    let w = trmm_upper(Trans::Yes, 1.0, t, &s);
+    c0.sub_assign(&w);
+    gemm_into(Trans::No, Trans::No, -1.0, y1, &w, 1.0, c1);
+    w
+}
+
+/// One member's half of the pair step: updates only the caller's rows
+/// (`cp`) in place, reading the buddy's rows (`peer`) without copying or
+/// mutating them. `W` is identical on both sides of the pair — the two
+/// halves compute it with the same expression, so an FT exchange where
+/// each member calls this with its own role reproduces
+/// [`tree_update_into`] bit-for-bit on the rows each member keeps.
+pub fn tree_update_half(
+    cp: &mut Matrix,
+    peer: &Matrix,
+    y1: &Matrix,
+    t: &Matrix,
+    is_top: bool,
+) -> Matrix {
+    if is_top {
+        // cp = C₀, peer = C₁: s = Y₁ᵀC₁ + C₀, then C₀ ← C₀ − W.
+        let mut s = gemm(Trans::Yes, Trans::No, 1.0, y1, peer);
+        s.add_assign(cp);
+        let w = trmm_upper(Trans::Yes, 1.0, t, &s);
+        cp.sub_assign(&w);
+        w
+    } else {
+        // cp = C₁, peer = C₀: same s, then C₁ ← C₁ − Y₁W.
+        let mut s = gemm(Trans::Yes, Trans::No, 1.0, y1, cp);
+        s.add_assign(peer);
+        let w = trmm_upper(Trans::Yes, 1.0, t, &s);
+        gemm_into(Trans::No, Trans::No, -1.0, y1, &w, 1.0, cp);
+        w
+    }
+}
+
+/// Copying wrapper over [`tree_update_into`] (kept for the oracle tests
+/// and the XLA artifact path, which returns all three outputs anyway).
 pub fn tree_update(c0: &Matrix, c1: &Matrix, y1: &Matrix, t: &Matrix) -> TreeStep {
-    let mut s = c0.clone();
-    gemm_into(Trans::Yes, Trans::No, 1.0, y1, c1, 1.0, &mut s);
-    let w = gemm(Trans::Yes, Trans::No, 1.0, t, &s);
-    let c0h = c0.sub(&w);
+    let mut c0h = c0.clone();
     let mut c1h = c1.clone();
-    gemm_into(Trans::No, Trans::No, -1.0, y1, &w, 1.0, &mut c1h);
+    let w = tree_update_into(&mut c0h, &mut c1h, y1, t);
     TreeStep { w, c0: c0h, c1: c1h }
 }
 
-/// Single-buddy recovery recompute (paper III-C): `Ĉ = C − Y W`.
-/// For the 'even' (top) member of a pair, pass `Y = I`.
+/// Single-buddy recovery recompute in place (paper III-C):
+/// `C ← C − Y W`. With `Y = Y₁` this is the exact [`gemm_into`]
+/// expression of the live bottom-half update, so a replayed lower block
+/// is bit-identical to the one the dead rank computed. (The top member's
+/// `Y = I` case is an elementwise subtract — the coordinator routes it
+/// through `Backend::recover_top_into` instead of multiplying by an
+/// identity.)
+pub fn recover_block_into(c: &mut Matrix, y: &Matrix, w: &Matrix) {
+    gemm_into(Trans::No, Trans::No, -1.0, y, w, 1.0, c);
+}
+
+/// Copying wrapper over [`recover_block_into`]: `Ĉ = C − Y W`.
 pub fn recover_block(c: &Matrix, y: &Matrix, w: &Matrix) -> Matrix {
     let mut out = c.clone();
-    gemm_into(Trans::No, Trans::No, -1.0, y, w, 1.0, &mut out);
+    recover_block_into(&mut out, y, w);
     out
 }
 
@@ -238,6 +474,18 @@ mod tests {
     }
 
     #[test]
+    fn qr_blocked_matches_reference_oracle() {
+        // Cross-check the blocked rewrite against the scalar original on
+        // a panel wider than NB (multiple sub-panels + T merges).
+        let a = Matrix::randn(96, 48, 11);
+        let blk = householder_qr(&a);
+        let refr = householder_qr_ref(&a);
+        assert!(rel_err(&blk.r, &refr.r) < 1e-4, "r: {}", rel_err(&blk.r, &refr.r));
+        assert!(rel_err(&blk.t, &refr.t) < 1e-4, "t: {}", rel_err(&blk.t, &refr.t));
+        assert!(rel_err(&blk.y, &refr.y) < 1e-4, "y: {}", rel_err(&blk.y, &refr.y));
+    }
+
+    #[test]
     fn merge_y0_identity_for_triangular() {
         let r0 = Matrix::randn(8, 8, 1).triu();
         let r1 = Matrix::randn(8, 8, 2).triu();
@@ -279,6 +527,26 @@ mod tests {
         let want = leaf_apply(&yfull, &t, &cfull);
         assert!(rel_err(&st.c0, &want.block(0, 0, 8, 16)) < 1e-4);
         assert!(rel_err(&st.c1, &want.block(8, 0, 8, 16)) < 1e-4);
+    }
+
+    #[test]
+    fn tree_update_halves_match_full_bitwise() {
+        // The FT exchange depends on both members' W (and their own
+        // halves) being identical to the pair computation.
+        let r0 = Matrix::randn(8, 8, 17).triu();
+        let r1 = Matrix::randn(8, 8, 18).triu();
+        let (_y0, y1, t, _r) = tsqr_merge(&r0, &r1);
+        let c0 = Matrix::randn(8, 24, 19);
+        let c1 = Matrix::randn(8, 24, 20);
+        let st = tree_update(&c0, &c1, &y1, &t);
+        let mut top = c0.clone();
+        let w_top = tree_update_half(&mut top, &c1, &y1, &t, true);
+        let mut bot = c1.clone();
+        let w_bot = tree_update_half(&mut bot, &c0, &y1, &t, false);
+        assert_eq!(w_top, st.w);
+        assert_eq!(w_bot, st.w);
+        assert_eq!(top, st.c0);
+        assert_eq!(bot, st.c1);
     }
 
     #[test]

@@ -156,18 +156,20 @@ ftcaqr — fault-tolerant communication-avoiding QR (Coti 2016)
 
 USAGE:
   ftcaqr run  [--config f.kv] [--rows N] [--cols N] [--block B] [--procs P]
-              [--workers W] [--algorithm ft|plain]
+              [--workers W] [--par T] [--algorithm ft|plain]
               [--semantics rebuild|abort|shrink|blank]
               [--backend native|xla] [--artifacts DIR]
               [--kill rank@panel:step[:tsqr|update[:incarnation]]]...
               [--kill-pair a,b@panel:step[:phase]]...
               [--checkpoint-every K] [--seed S] [--trace-out trace.json]
-  ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W]
+  ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W] [--par T]
               [--mode ft|plain] [--seed S]
   ftcaqr info [--artifacts DIR]
 
 P is the number of simulated ranks (hundreds are fine: ranks are pooled
-tasks, not OS threads); W bounds the worker pool (0 = core count).
+tasks, not OS threads); W bounds the worker pool (0 = core count); T
+splits large GEMMs across T kernel threads (default 1 — leave serial
+when the worker pool already owns the cores).
 Repeat --kill for k independent failures; --kill ...:1 aims at the first
 REBUILD replacement (failure during recovery); --kill-pair crashes both
 ranks at once — on a retention pair this is reported as unrecoverable.
@@ -183,6 +185,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     cfg.block = flags.num("block", cfg.block)?;
     cfg.procs = flags.num("procs", cfg.procs)?;
     cfg.workers = flags.num("workers", cfg.workers)?;
+    cfg.par = flags.num("par", cfg.par)?;
     cfg.seed = flags.num("seed", cfg.seed)?;
     cfg.checkpoint_every = flags.num("checkpoint-every", cfg.checkpoint_every)?;
     if let Some(a) = flags.get("algorithm") {
@@ -235,6 +238,7 @@ fn cmd_tsqr(flags: &Flags) -> Result<()> {
     let block: usize = flags.num("block", 16)?;
     let procs: usize = flags.num("procs", 8)?;
     let workers: usize = flags.num("workers", 0)?;
+    ftcaqr::linalg::set_par_threads(flags.num("par", 1)?);
     let seed: u64 = flags.num("seed", 0)?;
     let mode_s = flags.get("mode").unwrap_or("ft");
     let a = Matrix::randn(rows, block, seed);

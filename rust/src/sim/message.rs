@@ -3,6 +3,14 @@
 //! The payload stays deliberately generic (`Matrix` bundles); the
 //! coordinator layers its own conventions (which matrix is C', which is
 //! Y, ...) on top via [`Tag`]s, exactly as MPI codes do with tags.
+//!
+//! Matrix payloads are [`Arc`]-shared: a message clone (router delivery,
+//! exchange retransmit buffers, checkpoint fan-out) bumps a refcount
+//! instead of deep-copying the buffer. The cost model still charges the
+//! full matrix size — [`MsgData::nbytes`] reads through the `Arc` — so
+//! simulated traffic accounting is unchanged by the sharing.
+
+use std::sync::Arc;
 
 use crate::linalg::Matrix;
 
@@ -52,43 +60,75 @@ impl Tag {
     }
 }
 
-/// Message payload: zero or more matrices (+ an optional small control
-/// word). Sizes are accounted from the matrix buffers.
+/// Message payload: zero or more shared matrices (+ an optional small
+/// control word). Sizes are accounted from the matrix buffers.
 #[derive(Clone, Debug)]
 pub enum MsgData {
-    /// A single matrix payload.
-    Mat(Matrix),
-    /// A bundle of matrices.
-    Mats(Vec<Matrix>),
+    /// A single (shared) matrix payload.
+    Mat(Arc<Matrix>),
+    /// A bundle of (shared) matrices.
+    Mats(Vec<Arc<Matrix>>),
     /// A small control word.
     Ctrl(u64),
 }
 
 impl MsgData {
-    /// Payload size for the cost model.
+    /// Wrap an owned matrix as a single-payload message.
+    pub fn mat(m: Matrix) -> Self {
+        MsgData::Mat(Arc::new(m))
+    }
+
+    /// Payload size for the cost model (full matrix bytes, regardless of
+    /// how many `Arc` holders share the buffer).
     pub fn nbytes(&self) -> usize {
         match self {
             MsgData::Mat(m) => m.nbytes(),
-            MsgData::Mats(v) => v.iter().map(Matrix::nbytes).sum(),
+            MsgData::Mats(v) => v.iter().map(|m| m.nbytes()).sum(),
             MsgData::Ctrl(_) => 8,
         }
     }
 
-    /// Unwrap a single matrix.
-    pub fn into_mat(self) -> Matrix {
+    /// Tag/shape summary for unwrap panics, so a protocol bug reports
+    /// *what* arrived instead of a bare enum variant.
+    fn describe(&self) -> String {
+        match self {
+            MsgData::Mat(m) => format!("Mat({}x{})", m.rows(), m.cols()),
+            MsgData::Mats(v) => {
+                let shapes: Vec<String> =
+                    v.iter().map(|m| format!("{}x{}", m.rows(), m.cols())).collect();
+                format!("Mats[{}] of shapes [{}]", v.len(), shapes.join(", "))
+            }
+            MsgData::Ctrl(c) => format!("Ctrl({c})"),
+        }
+    }
+
+    /// Unwrap a single shared matrix (zero-copy).
+    pub fn into_mat(self) -> Arc<Matrix> {
         match self {
             MsgData::Mat(m) => m,
-            MsgData::Mats(mut v) if v.len() == 1 => v.pop().unwrap(),
-            other => panic!("expected Mat, got {other:?}"),
+            MsgData::Mats(mut v) if v.len() == 1 => v.pop().expect("len checked"),
+            other => panic!(
+                "expected Mat payload (a single matrix), got {}",
+                other.describe()
+            ),
+        }
+    }
+
+    /// Unwrap a single matrix with ownership: free when the receiver
+    /// holds the last reference (sender moved it), one copy otherwise.
+    pub fn into_mat_owned(self) -> Matrix {
+        match Arc::try_unwrap(self.into_mat()) {
+            Ok(m) => m,
+            Err(shared) => shared.as_ref().clone(),
         }
     }
 
     /// Unwrap a matrix bundle.
-    pub fn into_mats(self) -> Vec<Matrix> {
+    pub fn into_mats(self) -> Vec<Arc<Matrix>> {
         match self {
             MsgData::Mat(m) => vec![m],
             MsgData::Mats(v) => v,
-            other => panic!("expected Mats, got {other:?}"),
+            other => panic!("expected Mats payload (a bundle), got {}", other.describe()),
         }
     }
 
@@ -96,7 +136,7 @@ impl MsgData {
     pub fn into_ctrl(self) -> u64 {
         match self {
             MsgData::Ctrl(c) => c,
-            other => panic!("expected Ctrl, got {other:?}"),
+            other => panic!("expected Ctrl payload, got {}", other.describe()),
         }
     }
 }
@@ -145,22 +185,42 @@ mod tests {
     #[test]
     fn msgdata_sizes() {
         let m = Matrix::zeros(4, 4);
-        assert_eq!(MsgData::Mat(m.clone()).nbytes(), 64);
-        assert_eq!(MsgData::Mats(vec![m.clone(), m]).nbytes(), 128);
+        assert_eq!(MsgData::mat(m.clone()).nbytes(), 64);
+        let shared = Arc::new(m);
+        assert_eq!(MsgData::Mats(vec![shared.clone(), shared]).nbytes(), 128);
         assert_eq!(MsgData::Ctrl(9).nbytes(), 8);
     }
 
     #[test]
     fn msgdata_unwrap() {
         let m = Matrix::eye(2);
-        assert_eq!(MsgData::Mat(m.clone()).into_mat(), m);
-        assert_eq!(MsgData::Mats(vec![m.clone()]).into_mat(), m);
+        assert_eq!(*MsgData::mat(m.clone()).into_mat(), m);
+        assert_eq!(MsgData::Mats(vec![Arc::new(m.clone())]).into_mat_owned(), m);
         assert_eq!(MsgData::Ctrl(5).into_ctrl(), 5);
+    }
+
+    #[test]
+    fn msgdata_owned_unwrap_is_move_when_unique() {
+        let m = Matrix::randn(3, 3, 1);
+        let owned = MsgData::mat(m.clone()).into_mat_owned();
+        assert_eq!(owned, m);
+        // Shared payloads fall back to one copy.
+        let arc = Arc::new(m.clone());
+        let keep = arc.clone();
+        assert_eq!(MsgData::Mat(arc).into_mat_owned(), m);
+        assert_eq!(*keep, m);
     }
 
     #[test]
     #[should_panic(expected = "expected Mat")]
     fn msgdata_wrong_unwrap_panics() {
         MsgData::Ctrl(1).into_mat();
+    }
+
+    #[test]
+    #[should_panic(expected = "Mats[2] of shapes [2x2, 4x4]")]
+    fn msgdata_bundle_unwrap_reports_shapes() {
+        let v = vec![Arc::new(Matrix::eye(2)), Arc::new(Matrix::eye(4))];
+        MsgData::Mats(v).into_mat();
     }
 }

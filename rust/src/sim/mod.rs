@@ -614,10 +614,10 @@ mod tests {
         let w = World::new(2, CostModel::default(), FaultPlan::none());
         let res = w.run_all(|mut ctx| {
             if ctx.rank == 0 {
-                ctx.send(1, tag(), MsgData::Mat(Matrix::eye(4)))?;
+                ctx.send(1, tag(), MsgData::mat(Matrix::eye(4)))?;
                 Ok(0usize)
             } else {
-                let m = ctx.recv(0, tag())?.into_mat();
+                let m = ctx.recv(0, tag())?.into_mat_owned();
                 assert_eq!(m, Matrix::eye(4));
                 Ok(1usize)
             }
@@ -636,7 +636,7 @@ mod tests {
             let me = ctx.rank;
             let peer = 1 - me;
             let mine = Matrix::randn(4, 4, me as u64);
-            let got = ctx.sendrecv(peer, tag(), MsgData::Mat(mine))?.into_mat();
+            let got = ctx.sendrecv(peer, tag(), MsgData::mat(mine))?.into_mat_owned();
             assert_eq!(got, Matrix::randn(4, 4, peer as u64));
             Ok(ctx.clock)
         });
