@@ -1,0 +1,218 @@
+//! Service-level throughput bench: many concurrent (FT-)CAQR/TSQR jobs
+//! multiplexed over one persistent pool.
+//!
+//! Sections:
+//! * Throughput sweep — a mixed workload (two CAQR shapes + one
+//!   tall-skinny TSQR shape) at several pool widths, failure-free and
+//!   with recoverable kills injected into a subset of the CAQR jobs;
+//!   reports jobs/sec and p50/p99 end-to-end job latency.
+//! * Batched lane — the same burst of same-shape TSQR jobs with
+//!   batching off vs on, showing the per-step message amortization.
+//!
+//! Every row is also emitted as a JSON record (`FTCAQR_BENCH_JSON`,
+//! CI's `service-smoke` artifact) in the same machine-readable format as
+//! `benches/kernels.rs`. `FTCAQR_BENCH_SMOKE=1` shrinks the sweep.
+//!
+//! ```text
+//! cargo bench --bench service
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::JsonVal::{F, I};
+
+use ftcaqr::config::RunConfig;
+use ftcaqr::coordinator::TsqrMode;
+use ftcaqr::fault::{Phase, ScheduledKill};
+use ftcaqr::service::{seed_for, JobOutcome, JobSpec, Service, ServiceConfig};
+
+/// Mixed workload: small 4-rank CAQR, medium 8-rank CAQR, 16-rank FT
+/// TSQR — seeds derived per job index so every run is reproducible.
+/// With `faults`, every fourth CAQR job gets one recoverable kill.
+fn mixed_jobs(n: usize, faults: bool) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| {
+            let seed = seed_for(0xC0FFEE, i as u64);
+            let kills = if faults && i % 4 == 0 {
+                vec![ScheduledKill::new(1, 0, 0, Phase::Update)]
+            } else {
+                Vec::new()
+            };
+            match i % 3 {
+                0 => JobSpec::Caqr {
+                    cfg: RunConfig {
+                        rows: 128,
+                        cols: 32,
+                        block: 16,
+                        procs: 4,
+                        seed,
+                        verify: false,
+                        ..Default::default()
+                    },
+                    kills,
+                },
+                1 => JobSpec::Caqr {
+                    cfg: RunConfig {
+                        rows: 256,
+                        cols: 64,
+                        block: 16,
+                        procs: 8,
+                        seed,
+                        verify: false,
+                        ..Default::default()
+                    },
+                    kills,
+                },
+                _ => JobSpec::Tsqr {
+                    rows: 128,
+                    block: 8,
+                    procs: 16,
+                    mode: TsqrMode::FaultTolerant,
+                    seed,
+                },
+            }
+        })
+        .collect()
+}
+
+fn pctl(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn run_workload(svc: &Service, specs: Vec<JobSpec>) -> (Vec<JobOutcome>, f64) {
+    let t0 = Instant::now();
+    let handles = svc.submit_all(specs).expect("submit workload");
+    let outcomes: Vec<JobOutcome> = handles.into_iter().map(|h| h.wait()).collect();
+    (outcomes, t0.elapsed().as_secs_f64())
+}
+
+fn throughput_sweep(sink: &mut common::JsonSink) {
+    let njobs = if common::smoke() { 12 } else { 48 };
+    let widths: &[usize] = if common::smoke() { &[2, 4] } else { &[1, 2, 4, 8] };
+    common::header(&format!(
+        "service throughput: {njobs} mixed jobs (CAQR 4/8 ranks + TSQR 16 ranks) vs pool width"
+    ));
+    println!(
+        "{:>7} {:>7} | {:>10} {:>9} | {:>10} {:>10} | {:>7} {:>7}",
+        "workers", "faults", "wall", "jobs/s", "p50 lat", "p99 lat", "fails", "recov"
+    );
+    for &w in widths {
+        for faults in [false, true] {
+            let specs = mixed_jobs(njobs, faults);
+            let svc = Service::new(ServiceConfig {
+                workers: w,
+                max_inflight_ranks: 64,
+                batch_max: 4,
+            });
+            let (outcomes, wall) = run_workload(&svc, specs);
+            let ok = outcomes.iter().filter(|o| o.output.is_ok()).count();
+            assert_eq!(
+                ok, njobs,
+                "all jobs must complete (injected kills are recoverable)"
+            );
+            let mut lat: Vec<f64> =
+                outcomes.iter().map(|o| o.queued_s + o.run_s).collect();
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let (p50, p99) = (pctl(&lat, 0.5), pctl(&lat, 0.99));
+            let jps = njobs as f64 / wall;
+            let totals = svc.totals();
+            println!(
+                "{w:>7} {:>7} | {:>10} {jps:>9.1} | {:>10} {:>10} | {:>7} {:>7}",
+                if faults { "yes" } else { "no" },
+                common::fmt_time(wall),
+                common::fmt_time(p50),
+                common::fmt_time(p99),
+                totals.report.failures,
+                totals.report.recoveries,
+            );
+            sink.rec(&[
+                ("bench", common::JsonVal::S("service-throughput")),
+                ("workers", I(w as i64)),
+                ("jobs", I(njobs as i64)),
+                ("faults", I(faults as i64)),
+                ("wall_s", F(wall)),
+                ("jobs_per_s", F(jps)),
+                ("p50_s", F(p50)),
+                ("p99_s", F(p99)),
+                ("messages", I(totals.report.messages as i64)),
+                ("exchanges", I(totals.report.exchanges as i64)),
+                ("bytes", I(totals.report.bytes as i64)),
+                ("failures", I(totals.report.failures as i64)),
+                ("recoveries", I(totals.report.recoveries as i64)),
+            ]);
+        }
+    }
+    println!("\nJob latency includes queueing: admission control bounds in-flight");
+    println!("simulated ranks at 64, so wide bursts wait instead of oversubscribing.");
+}
+
+fn batch_lane(sink: &mut common::JsonSink) {
+    let k = if common::smoke() { 4 } else { 12 };
+    common::header(&format!(
+        "batched TSQR lane: {k} same-shape jobs, batching off vs on"
+    ));
+    println!(
+        "{:>6} | {:>10} | {:>10} {:>12} | {:>9}",
+        "batch", "wall", "exchanges", "bytes", "sweeps"
+    );
+    let mut base_exchanges = 0u64;
+    for batch in [1usize, k] {
+        let specs: Vec<JobSpec> = (0..k)
+            .map(|i| JobSpec::Tsqr {
+                rows: 256,
+                block: 8,
+                procs: 32,
+                mode: TsqrMode::FaultTolerant,
+                seed: seed_for(0xBA7C4, i as u64),
+            })
+            .collect();
+        let svc = Service::new(ServiceConfig {
+            workers: 4,
+            max_inflight_ranks: 0,
+            batch_max: batch,
+        });
+        let (outcomes, wall) = run_workload(&svc, specs);
+        assert!(outcomes.iter().all(|o| o.output.is_ok()));
+        let totals = svc.totals();
+        if batch == 1 {
+            base_exchanges = totals.report.exchanges;
+        } else {
+            assert!(
+                totals.report.exchanges < base_exchanges,
+                "batching must amortize exchange counts ({} !< {base_exchanges})",
+                totals.report.exchanges
+            );
+        }
+        let sweeps = k.div_ceil(batch);
+        println!(
+            "{batch:>6} | {:>10} | {:>10} {:>12} | {sweeps:>9}",
+            common::fmt_time(wall),
+            totals.report.exchanges,
+            totals.report.bytes,
+        );
+        sink.rec(&[
+            ("bench", common::JsonVal::S("service-batch")),
+            ("batch", I(batch as i64)),
+            ("jobs", I(k as i64)),
+            ("wall_s", F(wall)),
+            ("exchanges", I(totals.report.exchanges as i64)),
+            ("bytes", I(totals.report.bytes as i64)),
+        ]);
+    }
+    println!("\nOne bundle exchange per tree step carries every job's R: the");
+    println!("per-step message budget is paid once per batch, bytes scale with k.");
+}
+
+fn main() {
+    let mut sink = common::JsonSink::new();
+    throughput_sweep(&mut sink);
+    batch_lane(&mut sink);
+    sink.finish("service");
+}

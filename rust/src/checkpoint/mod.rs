@@ -114,4 +114,81 @@ mod tests {
     fn zero_interval_panics() {
         CheckpointModel { interval: 0, ..model() }.rollback(1);
     }
+
+    #[test]
+    fn worst_case_recovery_cost_is_monotone_in_interval() {
+        // The worst case for interval I is a failure just before the next
+        // checkpoint: I-1 panels replayed. That cost must never shrink as
+        // the interval grows (the per-failure/per-panel trade the E7
+        // comparator plots rests on this).
+        let mut prev = f64::NEG_INFINITY;
+        for interval in 1..=16 {
+            let m = CheckpointModel { interval, ..model() };
+            let worst = m.rollback(interval - 1); // replay = interval - 1
+            assert_eq!(worst.replay_panels, interval - 1, "interval {interval}");
+            assert!(
+                worst.total_seconds >= prev,
+                "interval {interval}: worst-case {} < previous {prev}",
+                worst.total_seconds
+            );
+            prev = worst.total_seconds;
+        }
+    }
+
+    #[test]
+    fn mean_replay_grows_with_interval() {
+        // Averaged over equally-likely failure panels, longer intervals
+        // replay more: the mean of (p mod I) over a whole period is
+        // (I-1)/2, strictly increasing in I.
+        let mean = |interval: usize| {
+            let m = CheckpointModel { interval, ..model() };
+            let horizon = interval * 12;
+            let total: usize = (0..horizon).map(|p| m.rollback(p).replay_panels).sum();
+            total as f64 / horizon as f64
+        };
+        assert!(mean(2) < mean(4));
+        assert!(mean(4) < mean(8));
+    }
+
+    #[test]
+    fn interval_one_never_replays() {
+        let m = CheckpointModel { interval: 1, ..model() };
+        for p in 0..32 {
+            let c = m.rollback(p);
+            assert_eq!(c.replay_panels, 0, "panel {p}");
+            assert_eq!(c.restored_panel, p);
+            assert_eq!(c.total_seconds, c.restore_seconds);
+        }
+    }
+
+    #[test]
+    fn restore_transfer_edge_cases() {
+        // Zero state: the restore costs exactly one latency term.
+        let empty = CheckpointModel { state_bytes: 0, ..model() };
+        let c = empty.rollback(5);
+        assert_eq!(c.restore_seconds, empty.alpha);
+        // The transfer term scales linearly in the state size.
+        let small = CheckpointModel { state_bytes: 1 << 10, ..model() };
+        let large = CheckpointModel { state_bytes: 1 << 20, ..model() };
+        let (rs, rl) = (small.rollback(0).restore_seconds, large.rollback(0).restore_seconds);
+        let expected = (large.state_bytes - small.state_bytes) as f64 * model().beta;
+        assert!((rl - rs - expected).abs() < 1e-15);
+        // Failure at panel 0: nothing completed, nothing replayed, but
+        // the restore transfer is still paid.
+        let c0 = model().rollback(0);
+        assert_eq!(c0.restored_panel, 0);
+        assert_eq!(c0.replay_panels, 0);
+        assert!(c0.total_seconds > 0.0);
+    }
+
+    #[test]
+    fn memory_and_amortized_overhead_accounting() {
+        let m = model();
+        assert_eq!(m.memory_overhead_bytes(), m.state_bytes);
+        // Amortized per-panel overhead is the full transfer divided by
+        // the interval; interval 1 pays it every panel.
+        let per_panel = m.overhead_per_panel_seconds();
+        let every = CheckpointModel { interval: 1, ..model() };
+        assert!((every.overhead_per_panel_seconds() - per_panel * 4.0).abs() < 1e-12);
+    }
 }

@@ -1,0 +1,109 @@
+//! Minimal `--key value` CLI flag parser, shared by every `ftcaqr`
+//! subcommand (`run`, `tsqr`, `serve`, `info`).
+//!
+//! (Offline build: the crate set has no clap, so flag parsing is
+//! hand-rolled. The grammar is deliberately tiny: `--key value` pairs
+//! only, repeated keys accumulate, the last occurrence wins for scalar
+//! lookups.)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed `--key value` flags. Repeated keys accumulate.
+pub struct Flags {
+    values: HashMap<String, Vec<String>>,
+}
+
+impl Flags {
+    /// Parse an argument list of strict `--key value` pairs.
+    pub fn parse(args: &[String]) -> Result<Self> {
+        let mut values: HashMap<String, Vec<String>> = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument '{a}' (flags are --key value)");
+            };
+            let val = args
+                .get(i + 1)
+                .with_context(|| format!("--{key} needs a value"))?;
+            values.entry(key.to_string()).or_default().push(val.clone());
+            i += 2;
+        }
+        Ok(Self { values })
+    }
+
+    /// Last value given for `key`, if any.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// Every value given for `key`, in order (empty when absent).
+    pub fn all(&self, key: &str) -> Vec<String> {
+        self.values.get(key).cloned().unwrap_or_default()
+    }
+
+    /// Parse the last value of `key` as `T`, or return `default` when the
+    /// flag is absent. A present-but-unparsable value is an error, never
+    /// silently the default.
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_and_accumulates_repeats() {
+        let f = Flags::parse(&args(&[
+            "--rows", "128", "--kill", "1@0:0", "--kill", "2@1:0", "--rows", "256",
+        ]))
+        .unwrap();
+        assert_eq!(f.get("rows"), Some("256")); // last wins
+        assert_eq!(f.all("kill"), vec!["1@0:0".to_string(), "2@1:0".to_string()]);
+        assert_eq!(f.get("absent"), None);
+        assert!(f.all("absent").is_empty());
+    }
+
+    #[test]
+    fn num_defaults_and_parses() {
+        let f = Flags::parse(&args(&["--procs", "8"])).unwrap();
+        assert_eq!(f.num("procs", 4usize).unwrap(), 8);
+        assert_eq!(f.num("workers", 2usize).unwrap(), 2); // absent -> default
+    }
+
+    #[test]
+    fn num_rejects_garbage_instead_of_defaulting() {
+        let f = Flags::parse(&args(&["--procs", "eight"])).unwrap();
+        let err = f.num("procs", 4usize).unwrap_err().to_string();
+        assert!(err.contains("--procs eight"), "{err}");
+    }
+
+    #[test]
+    fn rejects_positional_and_dangling() {
+        assert!(Flags::parse(&args(&["oops"])).is_err());
+        let err = Flags::parse(&args(&["--rows"])).unwrap_err().to_string();
+        assert!(err.contains("--rows needs a value"), "{err}");
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let f = Flags::parse(&[]).unwrap();
+        assert_eq!(f.get("anything"), None);
+    }
+}

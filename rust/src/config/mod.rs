@@ -6,6 +6,10 @@
 //! (Offline build: no serde/toml — the config format is a flat
 //! `key = value` file with `#` comments, which covers every knob.)
 
+pub mod flags;
+
+pub use flags::Flags;
+
 use std::path::PathBuf;
 
 use anyhow::{bail, ensure, Result};

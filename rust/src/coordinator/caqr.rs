@@ -818,6 +818,143 @@ pub fn run_caqr_matrix(
     run_caqr_on(cfg, a, backend, fault, trace, t0)
 }
 
+/// A fully-prepared CAQR run: the world, the shared coordinator state
+/// and the initial rank tasks — everything needed to either drive it
+/// synchronously ([`run_caqr`]) or submit it into a caller-provided
+/// persistent [`crate::sim::Pool`] (the multi-tenant service). The input
+/// matrix rides along so [`CaqrJob::finalize`] can Gram-verify.
+pub(crate) struct CaqrJob {
+    pub(crate) cfg: RunConfig,
+    pub(crate) a: Matrix,
+    pub(crate) shared: Arc<Shared>,
+    pub(crate) world: Arc<World>,
+    pub(crate) tasks: Vec<(usize, Box<dyn RankTask>)>,
+    pub(crate) flops0: u64,
+    pub(crate) t0: std::time::Instant,
+}
+
+impl CaqrJob {
+    /// Build the world, shared state and initial rank tasks for one run.
+    /// `t0` is the wallclock origin reported in the outcome (callers that
+    /// time matrix generation pass an earlier instant).
+    pub(crate) fn prepare(
+        cfg: RunConfig,
+        a: Matrix,
+        backend: Arc<Backend>,
+        fault: Arc<FaultPlan>,
+        trace: Arc<Trace>,
+        t0: std::time::Instant,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            a.shape() == (cfg.rows, cfg.cols),
+            "input matrix shape mismatch: got {:?}, cfg says ({}, {})",
+            a.shape(),
+            cfg.rows,
+            cfg.cols
+        );
+        let m_local = cfg.local_rows();
+        let initial: Vec<Matrix> = (0..cfg.procs)
+            .map(|r| a.block(r * m_local, 0, m_local, cfg.cols))
+            .collect();
+
+        let world = World::new(cfg.procs, cfg.cost, fault);
+        let flops0 = backend.flops();
+        let shared = Arc::new(Shared {
+            cfg: cfg.clone(),
+            backend,
+            store: RecoveryStore::new(),
+            gate: RevivalGate::new(),
+            trace,
+            world: world.clone(),
+            initial,
+            results: Mutex::new(HashMap::new()),
+            poison: Mutex::new(None),
+            store_watchers: Mutex::new(HashSet::new()),
+        });
+
+        // The original incarnation of every rank; REBUILD replacements are
+        // spawned into the same job's task group mid-run. Each task owns a
+        // (necessarily deep) copy of its block — it mutates it — while
+        // `shared.initial` stays pristine for replays.
+        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..cfg.procs)
+            .map(|r| {
+                let t = Ranker::new(shared.clone(), false, shared.initial[r].clone());
+                (r, Box::new(t) as Box<dyn RankTask>)
+            })
+            .collect();
+        Ok(Self { cfg, a, shared, world, tasks, flops0, t0 })
+    }
+
+    /// Turn the raw task results into a [`CaqrOutcome`]: classify
+    /// failures, surface poisoning, assemble `[R; 0]` and verify. Runs
+    /// wherever the job completed — the submitting thread for the
+    /// synchronous drivers, a pool worker for service jobs.
+    pub(crate) fn finalize(
+        cfg: &RunConfig,
+        a: &Matrix,
+        shared: &Arc<Shared>,
+        world: &Arc<World>,
+        results: Vec<(usize, Result<(), Fail>)>,
+        flops0: u64,
+        t0: std::time::Instant,
+    ) -> Result<CaqrOutcome> {
+        let mut failures: Vec<Fail> = Vec::new();
+        for (_rank, res) in results {
+            match res {
+                Ok(()) => {}
+                Err(Fail::Killed) => {} // replaced via REBUILD (or aborted below)
+                Err(e) => failures.push(e),
+            }
+        }
+        if let Some(p) = shared.poisoned() {
+            anyhow::bail!(
+                "run unrecoverable: {p} (both copies of a step's redundancy lost; \
+                 other failures: {failures:?})"
+            );
+        }
+
+        let m_local = cfg.local_rows();
+        let results = shared.results.lock().unwrap();
+        if results.len() != cfg.procs {
+            let missing: Vec<usize> =
+                (0..cfg.procs).filter(|r| !results.contains_key(r)).collect();
+            anyhow::bail!(
+                "run did not complete: missing ranks {missing:?}, failures: {failures:?}"
+            );
+        }
+
+        // Assemble the reduced matrix [R; 0].
+        let mut reduced = Matrix::zeros(cfg.rows, cfg.cols);
+        for r in 0..cfg.procs {
+            reduced.set_block(r * m_local, 0, &results[&r]);
+        }
+        drop(results);
+
+        let r = reduced.crop_to(cfg.cols, cfg.cols).triu();
+        let lower_defect = {
+            let strict = reduced.sub(&{
+                let mut t = Matrix::zeros(cfg.rows, cfg.cols);
+                t.set_block(0, 0, &r);
+                t
+            });
+            strict.fro_norm()
+        };
+        let residual = cfg.verify.then(|| gram_residual(a, &r));
+
+        Ok(CaqrOutcome {
+            reduced,
+            r,
+            residual,
+            lower_defect,
+            report: world.metrics.snapshot(),
+            store_peak_bytes: shared.store.peak_bytes(),
+            elapsed: t0.elapsed(),
+            backend_flops: shared.backend.flops() - flops0,
+        })
+    }
+}
+
 fn run_caqr_on(
     cfg: RunConfig,
     a: Matrix,
@@ -826,7 +963,6 @@ fn run_caqr_on(
     trace: Arc<Trace>,
     t0: std::time::Instant,
 ) -> Result<CaqrOutcome> {
-    assert_eq!(a.shape(), (cfg.rows, cfg.cols), "input matrix shape mismatch");
     // The GEMM split knob is process-wide; apply this run's value and
     // restore the previous one on every exit path (including bail!).
     // Concurrent runs with different `par` race only on thread count,
@@ -839,91 +975,11 @@ fn run_caqr_on(
     }
     let _par_guard = ParGuard(crate::linalg::par_threads());
     crate::linalg::set_par_threads(cfg.par);
-    let m_local = cfg.local_rows();
-    let initial: Vec<Matrix> = (0..cfg.procs)
-        .map(|r| a.block(r * m_local, 0, m_local, cfg.cols))
-        .collect();
-
-    let world = World::new(cfg.procs, cfg.cost, fault);
-    let flops0 = backend.flops();
-    let shared = Arc::new(Shared {
-        cfg: cfg.clone(),
-        backend,
-        store: RecoveryStore::new(),
-        gate: RevivalGate::new(),
-        trace,
-        world: world.clone(),
-        initial,
-        results: Mutex::new(HashMap::new()),
-        poison: Mutex::new(None),
-        store_watchers: Mutex::new(HashSet::new()),
-    });
-
-    // The original incarnation of every rank, driven by the worker pool;
-    // REBUILD replacements are spawned into the same pool mid-run. Each
-    // task owns a (necessarily deep) copy of its block — it mutates it —
-    // while `shared.initial` stays pristine for replays.
-    let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..cfg.procs)
-        .map(|r| {
-            let t = Ranker::new(shared.clone(), false, shared.initial[r].clone());
-            (r, Box::new(t) as Box<dyn RankTask>)
-        })
-        .collect();
     let workers = cfg.effective_workers();
+    let CaqrJob { cfg, a, shared, world, tasks, flops0, t0 } =
+        CaqrJob::prepare(cfg, a, backend, fault, trace, t0)?;
     let results = world.run_tasks(workers, tasks);
-
-    let mut failures: Vec<Fail> = Vec::new();
-    for (_rank, res) in results {
-        match res {
-            Ok(()) => {}
-            Err(Fail::Killed) => {} // replaced via REBUILD (or aborted below)
-            Err(e) => failures.push(e),
-        }
-    }
-    if let Some(p) = shared.poisoned() {
-        anyhow::bail!(
-            "run unrecoverable: {p} (both copies of a step's redundancy lost; \
-             other failures: {failures:?})"
-        );
-    }
-
-    let results = shared.results.lock().unwrap();
-    if results.len() != cfg.procs {
-        let missing: Vec<usize> =
-            (0..cfg.procs).filter(|r| !results.contains_key(r)).collect();
-        anyhow::bail!(
-            "run did not complete: missing ranks {missing:?}, failures: {failures:?}"
-        );
-    }
-
-    // Assemble the reduced matrix [R; 0].
-    let mut reduced = Matrix::zeros(cfg.rows, cfg.cols);
-    for r in 0..cfg.procs {
-        reduced.set_block(r * m_local, 0, &results[&r]);
-    }
-    drop(results);
-
-    let r = reduced.crop_to(cfg.cols, cfg.cols).triu();
-    let lower_defect = {
-        let strict = reduced.sub(&{
-            let mut t = Matrix::zeros(cfg.rows, cfg.cols);
-            t.set_block(0, 0, &r);
-            t
-        });
-        strict.fro_norm()
-    };
-    let residual = cfg.verify.then(|| gram_residual(&a, &r));
-
-    Ok(CaqrOutcome {
-        reduced,
-        r,
-        residual,
-        lower_defect,
-        report: world.metrics.snapshot(),
-        store_peak_bytes: shared.store.peak_bytes(),
-        elapsed: t0.elapsed(),
-        backend_flops: shared.backend.flops() - flops0,
-    })
+    CaqrJob::finalize(&cfg, &a, &shared, &world, results, flops0, t0)
 }
 
 /// Convenience: run with default trace/no faults on the native backend.

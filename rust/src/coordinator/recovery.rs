@@ -4,8 +4,11 @@
 //! Detection is ULFM-style: a communication touching a dead rank returns
 //! [`Fail::RankFailed`]. Under `Semantics::Rebuild`, the first detector
 //! wins the `RevivalGate`, drops the dead rank's (lost) retained memory,
-//! revives its mailbox, and spawns a replacement *task* into the worker
-//! pool; the replacement replays from the rank's initial block: local
+//! revives its mailbox, and spawns a replacement *task* through the
+//! job-scoped [`Spawner`] — under the multi-tenant service the
+//! replacement therefore lands in its own job's task group on the shared
+//! pool, never in a neighbor's; the replacement replays from the rank's
+//! initial block: local
 //! factorizations are recomputed, completed pair steps are reconstructed
 //! from the buddy's retained `{W, T, Y₁, R̃}` via `Ĉ' = C' − Y W`, and
 //! the interrupted step is simply re-entered live — the detector's

@@ -208,9 +208,131 @@ impl RankTask for TsqrTask {
     }
 }
 
+/// Shape invariants shared by every standalone-TSQR entry point: the
+/// synchronous drivers here, the service's `JobSpec` validation, and
+/// the batched lane (`service::batch`) all call this one function so
+/// the checks — and their wording — cannot drift.
+pub(crate) fn validate_shape(rows: usize, block: usize, procs: usize) -> Result<()> {
+    anyhow::ensure!(procs >= 1, "need at least one process");
+    anyhow::ensure!(block >= 1, "block must be >= 1");
+    anyhow::ensure!(
+        rows % procs == 0,
+        "procs ({procs}) must divide rows ({rows}) evenly"
+    );
+    anyhow::ensure!(
+        rows / procs >= block,
+        "blocks must be tall (rows/procs >= block, got {}/{procs} < {block})",
+        rows
+    );
+    Ok(())
+}
+
+/// A fully-prepared standalone TSQR run: world + rank tasks + the shared
+/// result cells. Both synchronous entry points (`run_tsqr`,
+/// `run_tsqr_pooled`) drive this one object. NOTE: the service's batched
+/// lane (`service::batch::BatchTsqrTask`) is a *separate* tree walk that
+/// carries a bundle of R's per message — any change to the merge order
+/// or stacking convention here must be mirrored there, or batched
+/// results stop being bitwise-identical to solo runs (pinned by
+/// `tests/service.rs` and the batch module's own tests).
+pub(crate) struct TsqrJob {
+    pub(crate) world: Arc<World>,
+    pub(crate) tasks: Vec<(usize, Box<dyn RankTask>)>,
+    rs_by_step: Arc<Mutex<Vec<HashMap<usize, Arc<Matrix>>>>>,
+    finals: Arc<Mutex<HashMap<usize, Arc<Matrix>>>>,
+    nsteps: usize,
+    t0: std::time::Instant,
+}
+
+impl TsqrJob {
+    /// Distribute `a` into per-rank blocks and build the rank tasks.
+    pub(crate) fn prepare(
+        a: &Matrix,
+        procs: usize,
+        mode: TsqrMode,
+        backend: Arc<Backend>,
+        cost: CostModel,
+    ) -> Result<Self> {
+        let (rows, b) = a.shape();
+        validate_shape(rows, b, procs)?;
+        let m_local = rows / procs;
+
+        let t0 = std::time::Instant::now();
+        let world = World::new(procs, cost, FaultPlan::none());
+        let nsteps = tree::steps(procs);
+        let rs_by_step: Arc<Mutex<Vec<HashMap<usize, Arc<Matrix>>>>> =
+            Arc::new(Mutex::new(vec![HashMap::new(); nsteps + 1]));
+        let finals: Arc<Mutex<HashMap<usize, Arc<Matrix>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+
+        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..procs)
+            .map(|r| {
+                let task = TsqrTask {
+                    mode,
+                    backend: backend.clone(),
+                    q: procs,
+                    b,
+                    m_local,
+                    block: a.block(r * m_local, 0, m_local, b),
+                    rs_by_step: rs_by_step.clone(),
+                    finals: finals.clone(),
+                    r: None,
+                    s: 0,
+                    wait: TsqrWait::Leaf,
+                };
+                (r, Box::new(task) as Box<dyn RankTask>)
+            })
+            .collect();
+        Ok(Self { world, tasks, rs_by_step, finals, nsteps, t0 })
+    }
+
+    /// Assemble the outcome (root R, redundancy series, metrics) from the
+    /// per-rank results. `tasks` must have been drained and driven to
+    /// completion by a pool before this is called.
+    pub(crate) fn finalize(
+        world: &Arc<World>,
+        rs_by_step: &Arc<Mutex<Vec<HashMap<usize, Arc<Matrix>>>>>,
+        finals: &Arc<Mutex<HashMap<usize, Arc<Matrix>>>>,
+        nsteps: usize,
+        t0: std::time::Instant,
+        results: Vec<(usize, Result<(), Fail>)>,
+    ) -> Result<TsqrOutcome> {
+        for (rank, res) in results {
+            res.map_err(|e| anyhow::anyhow!("tsqr rank {rank} failed: {e}"))?;
+        }
+
+        let finals = finals.lock().unwrap();
+        let root_r = finals[&0].clone();
+
+        // Redundancy series: after step s, how many ranks hold the value
+        // the ROOT holds at that step (the root-path merge)? Compared by
+        // value — Arc sharing is an optimization, not the identity
+        // criterion.
+        let rs = rs_by_step.lock().unwrap();
+        let mut redundancy = Vec::with_capacity(nsteps);
+        for s in 1..=nsteps {
+            let root_val = &rs[s][&0];
+            let holders = rs[s].values().filter(|m| *m == root_val).count();
+            redundancy.push(holders);
+        }
+        let final_holders =
+            finals.values().filter(|m| m.as_ref() == root_r.as_ref()).count();
+
+        Ok(TsqrOutcome {
+            r: root_r.as_ref().clone(),
+            redundancy,
+            final_holders,
+            report: world.metrics.snapshot(),
+            elapsed: t0.elapsed(),
+        })
+    }
+
+}
+
 /// Run TSQR over `procs` ranks, each holding an `(m_local, b)` block of
 /// the stacked matrix `a` (`rows = procs * m_local`), with an
-/// automatically sized worker pool.
+/// automatically sized worker pool. Thin wrapper over the pooled path —
+/// the single driver body lives in [`TsqrJob`].
 pub fn run_tsqr(
     a: &Matrix,
     procs: usize,
@@ -231,65 +353,10 @@ pub fn run_tsqr_pooled(
     cost: CostModel,
     workers: usize,
 ) -> Result<TsqrOutcome> {
-    let (rows, b) = a.shape();
-    anyhow::ensure!(rows % procs == 0, "rows must divide procs");
-    let m_local = rows / procs;
-    anyhow::ensure!(m_local >= b, "blocks must be tall (m_local >= b)");
-
-    let t0 = std::time::Instant::now();
-    let world = World::new(procs, cost, FaultPlan::none());
-    let nsteps = tree::steps(procs);
-    let rs_by_step: Arc<Mutex<Vec<HashMap<usize, Arc<Matrix>>>>> =
-        Arc::new(Mutex::new(vec![HashMap::new(); nsteps + 1]));
-    let finals: Arc<Mutex<HashMap<usize, Arc<Matrix>>>> =
-        Arc::new(Mutex::new(HashMap::new()));
-
-    let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..procs)
-        .map(|r| {
-            let task = TsqrTask {
-                mode,
-                backend: backend.clone(),
-                q: procs,
-                b,
-                m_local,
-                block: a.block(r * m_local, 0, m_local, b),
-                rs_by_step: rs_by_step.clone(),
-                finals: finals.clone(),
-                r: None,
-                s: 0,
-                wait: TsqrWait::Leaf,
-            };
-            (r, Box::new(task) as Box<dyn RankTask>)
-        })
-        .collect();
-
-    for (rank, res) in world.run_tasks(workers, tasks) {
-        res.map_err(|e| anyhow::anyhow!("tsqr rank {rank} failed: {e}"))?;
-    }
-
-    let finals = finals.lock().unwrap();
-    let root_r = finals[&0].clone();
-
-    // Redundancy series: after step s, how many ranks hold the value the
-    // ROOT holds at that step (the root-path merge)? Compared by value —
-    // Arc sharing is an optimization, not the identity criterion.
-    let rs = rs_by_step.lock().unwrap();
-    let mut redundancy = Vec::with_capacity(nsteps);
-    for s in 1..=nsteps {
-        let root_val = &rs[s][&0];
-        let holders = rs[s].values().filter(|m| *m == root_val).count();
-        redundancy.push(holders);
-    }
-    let final_holders =
-        finals.values().filter(|m| m.as_ref() == root_r.as_ref()).count();
-
-    Ok(TsqrOutcome {
-        r: root_r.as_ref().clone(),
-        redundancy,
-        final_holders,
-        report: world.metrics.snapshot(),
-        elapsed: t0.elapsed(),
-    })
+    let TsqrJob { world, tasks, rs_by_step, finals, nsteps, t0 } =
+        TsqrJob::prepare(a, procs, mode, backend, cost)?;
+    let results = world.run_tasks(workers, tasks);
+    TsqrJob::finalize(&world, &rs_by_step, &finals, nsteps, t0, results)
 }
 
 #[cfg(test)]

@@ -21,6 +21,8 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use anyhow::{bail, Context, Result};
+
 use crate::linalg::Rng64;
 
 /// Where in the algorithm a rank currently is.
@@ -82,6 +84,70 @@ impl ScheduledKill {
         self.group = Some(group);
         self
     }
+
+    /// Parse `rank@panel:step[:phase[:incarnation]]` — the kill grammar
+    /// shared by the `ftcaqr run --kill` flag and the `serve` jobs file.
+    /// An incarnation of 1 aims the kill at the first REBUILD
+    /// replacement (a failure during recovery).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (rank, rest) = spec
+            .split_once('@')
+            .with_context(|| format!("kill spec '{spec}' must be rank@panel:step[...]"))?;
+        let (panel, step, phase, inc) = parse_site(spec, rest)?;
+        let mut k = ScheduledKill::new(rank.parse()?, panel, step, phase);
+        if let Some(i) = inc {
+            k = k.at_incarnation(i);
+        }
+        Ok(k)
+    }
+}
+
+/// Parse `panel:step[:tsqr|update[:incarnation]]`.
+fn parse_site(spec: &str, rest: &str) -> Result<(usize, usize, Phase, Option<u32>)> {
+    let mut it = rest.split(':');
+    let panel = it
+        .next()
+        .filter(|p| !p.is_empty())
+        .with_context(|| format!("kill spec '{spec}': missing panel"))?
+        .parse()?;
+    let step = it
+        .next()
+        .with_context(|| format!("kill spec '{spec}': missing step"))?
+        .parse()?;
+    let phase = match it.next() {
+        None | Some("update") => Phase::Update,
+        Some("tsqr") => Phase::Tsqr,
+        Some(other) => bail!("kill spec '{spec}': unknown phase '{other}' (tsqr|update)"),
+    };
+    let incarnation = it.next().map(str::parse).transpose()?;
+    if it.next().is_some() {
+        bail!("kill spec '{spec}': too many ':' fields");
+    }
+    Ok((panel, step, phase, incarnation))
+}
+
+/// Parse `a,b@panel:step[:phase]` into a correlated node-crash pair in
+/// group `group` — both ranks die at the same instant; aimed at a
+/// retention pair this destroys both redundancy copies and the run is
+/// reported unrecoverable.
+pub fn parse_kill_pair(spec: &str, group: u32) -> Result<[ScheduledKill; 2]> {
+    let (ranks, rest) = spec
+        .split_once('@')
+        .with_context(|| format!("kill-pair spec '{spec}' must be a,b@panel:step[...]"))?;
+    let (ra, rb) = ranks
+        .split_once(',')
+        .with_context(|| format!("kill-pair spec '{spec}': ranks must be a,b"))?;
+    let (panel, step, phase, inc) = parse_site(spec, rest)?;
+    if inc.is_some() {
+        // Rejected rather than silently dropped: a correlated crash has
+        // no incarnation targeting, and accepting ':N' would quietly run
+        // a different experiment than the one asked for.
+        bail!("kill-pair spec '{spec}': incarnation field not supported (a,b@panel:step[:phase])");
+    }
+    Ok([
+        ScheduledKill::new(ra.parse()?, panel, step, phase).in_group(group),
+        ScheduledKill::new(rb.parse()?, panel, step, phase).in_group(group),
+    ])
 }
 
 /// The failure model for a run.
@@ -284,6 +350,35 @@ mod tests {
             }
         }
         assert_eq!(fails, 2);
+    }
+
+    #[test]
+    fn kill_spec_parses() {
+        let k = ScheduledKill::parse("2@1:0:tsqr:1").unwrap();
+        assert_eq!(k.rank, 2);
+        assert_eq!(k.site, FailSite { panel: 1, step: 0, phase: Phase::Tsqr });
+        assert_eq!(k.incarnation, Some(1));
+        // Phase defaults to update; incarnation optional.
+        let k = ScheduledKill::parse("7@3:2").unwrap();
+        assert_eq!(k.site.phase, Phase::Update);
+        assert_eq!(k.incarnation, None);
+        assert!(ScheduledKill::parse("7").is_err());
+        assert!(ScheduledKill::parse("7@").is_err());
+        assert!(ScheduledKill::parse("7@1:2:bogus").is_err());
+        assert!(ScheduledKill::parse("7@1:2:tsqr:0:9").is_err());
+    }
+
+    #[test]
+    fn kill_pair_spec_parses() {
+        let [a, b] = parse_kill_pair("2,3@0:1:tsqr", 5).unwrap();
+        assert_eq!((a.rank, b.rank), (2, 3));
+        assert_eq!(a.group, Some(5));
+        assert_eq!(b.group, Some(5));
+        assert_eq!(a.site, FailSite { panel: 0, step: 1, phase: Phase::Tsqr });
+        assert!(parse_kill_pair("2@0:1", 0).is_err());
+        // Incarnation targeting is a single-kill feature; a pair spec
+        // carrying one must be rejected, not silently ignored.
+        assert!(parse_kill_pair("2,3@0:1:tsqr:1", 0).is_err());
     }
 
     #[test]

@@ -69,6 +69,10 @@ pub enum Fail {
     /// with no event in flight. A protocol bug surfaced as an error
     /// instead of a hang.
     Stalled,
+    /// The rank's task panicked mid-poll (an infrastructure bug, e.g. a
+    /// backend failure). The pool fails the task and kills the rank
+    /// instead of wedging every waiter on the job.
+    TaskPanicked,
     /// Recovery is impossible: rank `rank` completed a step whose
     /// retained redundancy was lost together with the step buddy — both
     /// copies of the paper's `{W, T, C', Y₁}` inventory are gone
@@ -88,6 +92,7 @@ impl std::fmt::Display for Fail {
             Fail::Aborted => write!(f, "run aborted"),
             Fail::WorldGone => write!(f, "world shut down"),
             Fail::Stalled => write!(f, "scheduler stall: every live task parked"),
+            Fail::TaskPanicked => write!(f, "rank task panicked (infrastructure bug)"),
             Fail::Unrecoverable { rank } => {
                 write!(f, "rank {rank} unrecoverable: buddy redundancy lost")
             }

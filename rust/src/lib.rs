@@ -42,6 +42,18 @@
 //! a correlated kill of both members of a retention pair is detected via
 //! the store's progress frontier and reported as
 //! [`ft::Fail::Unrecoverable`].
+//!
+//! ## Service: many jobs, one pool
+//!
+//! The [`service`] module turns the one-factorization-per-process
+//! drivers into a multi-tenant system: a persistent [`sim::Pool`] drives
+//! every tenant's rank tasks, a [`service::JobQueue`] admits jobs under
+//! a bounded in-flight-ranks budget, same-shape tall-skinny TSQR jobs
+//! are packed into batched tree sweeps, and each job completes through
+//! an async [`service::JobHandle`] with bitwise-deterministic factors
+//! and per-job metrics regardless of how tenants interleave. `ftcaqr
+//! serve --jobs <file>` is the CLI front end; `benches/service.rs`
+//! measures jobs/sec and p50/p99 latency against pool width.
 
 #![warn(missing_docs)]
 
@@ -54,6 +66,7 @@ pub mod ft;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod trace;
 

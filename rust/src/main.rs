@@ -4,6 +4,8 @@
 //! * `run`    — full (FT-)CAQR factorization with optional fault injection
 //! * `tsqr`   — standalone TSQR (plain vs FT), printing the redundancy
 //!   series of paper Fig 2
+//! * `serve`  — multi-tenant service: run a jobs file of concurrent
+//!   CAQR/TSQR jobs over one persistent scheduler pool
 //! * `info`   — show the AOT artifact manifest the runtime would load
 //!
 //! Examples:
@@ -11,113 +13,34 @@
 //! ftcaqr run --rows 1024 --cols 512 --block 32 --procs 8 --backend xla
 //! ftcaqr run --rows 512 --cols 128 --procs 4 --kill 2@1:0 --algorithm ft
 //! ftcaqr tsqr --rows 512 --block 16 --procs 8 --mode ft
+//! ftcaqr serve --jobs jobs.txt --workers 8 --max-ranks 256 --batch 4
 //! ```
 //!
-//! (Offline build: flag parsing is hand-rolled — the crate set has no
-//! clap. `--key value` pairs only.)
+//! (Offline build: flag parsing is the shared hand-rolled
+//! [`ftcaqr::config::Flags`] — the crate set has no clap. `--key value`
+//! pairs only.)
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use ftcaqr::backend::Backend;
-use ftcaqr::config::{Algorithm, BackendKind, RunConfig};
+use ftcaqr::config::{Algorithm, BackendKind, Flags, RunConfig};
 use ftcaqr::coordinator::{run_caqr, run_tsqr, run_tsqr_pooled, TsqrMode};
-use ftcaqr::fault::{FaultPlan, FaultSpec, Phase, ScheduledKill};
+use ftcaqr::fault::{self, FaultPlan, FaultSpec, ScheduledKill};
 use ftcaqr::ft::Semantics;
 use ftcaqr::linalg::Matrix;
 use ftcaqr::runtime::{Engine, Manifest};
+use ftcaqr::service::{self, JobOutput, Service, ServiceConfig};
 use ftcaqr::sim::CostModel;
 use ftcaqr::trace::Trace;
-
-/// Minimal `--key value` flag parser. Repeated keys accumulate.
-struct Flags {
-    values: HashMap<String, Vec<String>>,
-}
-
-impl Flags {
-    fn parse(args: &[String]) -> Result<Self> {
-        let mut values: HashMap<String, Vec<String>> = HashMap::new();
-        let mut i = 0;
-        while i < args.len() {
-            let a = &args[i];
-            let Some(key) = a.strip_prefix("--") else {
-                bail!("unexpected argument '{a}' (flags are --key value)");
-            };
-            let val = args
-                .get(i + 1)
-                .with_context(|| format!("--{key} needs a value"))?;
-            values.entry(key.to_string()).or_default().push(val.clone());
-            i += 2;
-        }
-        Ok(Self { values })
-    }
-
-    fn get(&self, key: &str) -> Option<&str> {
-        self.values.get(key).and_then(|v| v.last()).map(String::as_str)
-    }
-
-    fn all(&self, key: &str) -> Vec<String> {
-        self.values.get(key).cloned().unwrap_or_default()
-    }
-
-    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
-    where
-        T::Err: std::fmt::Display,
-    {
-        match self.get(key) {
-            Some(v) => v
-                .parse()
-                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
-            None => Ok(default),
-        }
-    }
-}
-
-/// Parse `panel:step[:tsqr|update[:incarnation]]`.
-fn parse_site(spec: &str, rest: &str) -> Result<(usize, usize, Phase, Option<u32>)> {
-    let mut it = rest.split(':');
-    let panel = it
-        .next()
-        .filter(|p| !p.is_empty())
-        .with_context(|| format!("kill spec '{spec}': missing panel"))?
-        .parse()?;
-    let step = it
-        .next()
-        .with_context(|| format!("kill spec '{spec}': missing step"))?
-        .parse()?;
-    let phase = match it.next() {
-        None | Some("update") => Phase::Update,
-        Some("tsqr") => Phase::Tsqr,
-        Some(other) => bail!("kill spec '{spec}': unknown phase '{other}' (tsqr|update)"),
-    };
-    let incarnation = it.next().map(str::parse).transpose()?;
-    if it.next().is_some() {
-        bail!("kill spec '{spec}': too many ':' fields");
-    }
-    Ok((panel, step, phase, incarnation))
-}
 
 /// `--kill rank@panel:step[:phase[:incarnation]]` — k independent kills
 /// compose by repeating the flag; an incarnation of 1 aims the kill at
 /// the first REBUILD replacement (a failure during recovery).
 fn parse_kills(specs: &[String]) -> Result<Vec<ScheduledKill>> {
-    specs
-        .iter()
-        .map(|s| {
-            let (rank, rest) = s
-                .split_once('@')
-                .with_context(|| format!("kill spec '{s}' must be rank@panel:step[...]"))?;
-            let (panel, step, phase, inc) = parse_site(s, rest)?;
-            let mut k = ScheduledKill::new(rank.parse()?, panel, step, phase);
-            if let Some(i) = inc {
-                k = k.at_incarnation(i);
-            }
-            Ok(k)
-        })
-        .collect()
+    specs.iter().map(|s| ScheduledKill::parse(s)).collect()
 }
 
 /// `--kill-pair a,b@panel:step[:phase]` — a correlated node crash taking
@@ -126,16 +49,7 @@ fn parse_kills(specs: &[String]) -> Result<Vec<ScheduledKill>> {
 fn parse_kill_pairs(specs: &[String], group0: u32) -> Result<Vec<ScheduledKill>> {
     let mut out = Vec::new();
     for (i, s) in specs.iter().enumerate() {
-        let (ranks, rest) = s
-            .split_once('@')
-            .with_context(|| format!("kill-pair spec '{s}' must be a,b@panel:step[...]"))?;
-        let (ra, rb) = ranks
-            .split_once(',')
-            .with_context(|| format!("kill-pair spec '{s}': ranks must be a,b"))?;
-        let (panel, step, phase, _) = parse_site(s, rest)?;
-        let g = group0 + i as u32;
-        out.push(ScheduledKill::new(ra.parse()?, panel, step, phase).in_group(g));
-        out.push(ScheduledKill::new(rb.parse()?, panel, step, phase).in_group(g));
+        out.extend(fault::parse_kill_pair(s, group0 + i as u32)?);
     }
     Ok(out)
 }
@@ -164,6 +78,7 @@ USAGE:
               [--checkpoint-every K] [--seed S] [--trace-out trace.json]
   ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W] [--par T]
               [--mode ft|plain] [--seed S]
+  ftcaqr serve --jobs FILE [--workers W] [--max-ranks R] [--batch K]
   ftcaqr info [--artifacts DIR]
 
 P is the number of simulated ranks (hundreds are fine: ranks are pooled
@@ -173,6 +88,13 @@ when the worker pool already owns the cores).
 Repeat --kill for k independent failures; --kill ...:1 aims at the first
 REBUILD replacement (failure during recovery); --kill-pair crashes both
 ranks at once — on a retention pair this is reported as unrecoverable.
+
+serve runs every job in FILE (one per line: 'caqr key=value ...' or
+'tsqr key=value ...', '#' comments; kills use the same spec grammar as
+--kill) concurrently over one persistent pool. --max-ranks bounds the
+simulated ranks in flight (admission control); --batch packs up to K
+same-shape TSQR jobs into one tree sweep. A job poisoned by a
+double-failure fails alone; its neighbors complete.
 ";
 
 fn cmd_run(flags: &Flags) -> Result<()> {
@@ -258,6 +180,73 @@ fn cmd_tsqr(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let jobs_path = flags
+        .get("jobs")
+        .context("serve needs --jobs FILE (one job per line)")?;
+    let text = std::fs::read_to_string(jobs_path)
+        .with_context(|| format!("reading jobs file '{jobs_path}'"))?;
+    let specs = service::parse_jobs(&text)?;
+    anyhow::ensure!(!specs.is_empty(), "jobs file '{jobs_path}' has no jobs");
+
+    let svc = Service::new(ServiceConfig {
+        workers: flags.num("workers", 0)?,
+        max_inflight_ranks: flags.num("max-ranks", 256)?,
+        batch_max: flags.num("batch", 4)?,
+    });
+    println!(
+        "== ftcaqr serve: {} jobs on a {}-worker pool ==",
+        specs.len(),
+        svc.workers()
+    );
+    let t0 = std::time::Instant::now();
+    // One burst enqueue: lets the batched lane pack same-shape TSQR jobs.
+    let handles = svc.submit_all(specs)?;
+    let mut failed = 0usize;
+    for h in handles {
+        let o = h.wait();
+        match &o.output {
+            Ok(JobOutput::Caqr(out)) => {
+                let verdict = match out.residual {
+                    Some(res) if res < 1e-3 => format!("residual {res:.2e} VERIFIED"),
+                    Some(res) => format!("residual {res:.2e} INVALID"),
+                    None => "unverified".to_string(),
+                };
+                println!(
+                    "job {:>4} caqr  ok  queued {:>8.3}s run {:>8.3}s  {}  [{}]",
+                    o.id, o.queued_s, o.run_s, verdict, o.report
+                );
+            }
+            Ok(JobOutput::Tsqr { r, batch_size }) => {
+                println!(
+                    "job {:>4} tsqr  ok  queued {:>8.3}s run {:>8.3}s  R {}x{} batch {batch_size}  [{}]",
+                    o.id,
+                    o.queued_s,
+                    o.run_s,
+                    r.rows(),
+                    r.cols(),
+                    o.report
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                let kind = if o.unrecoverable() { "UNRECOVERABLE" } else { "FAILED" };
+                println!("job {:>4} {kind}: {}", o.id, e.message);
+            }
+        }
+    }
+    let totals = svc.totals();
+    println!(
+        "totals: {} ok, {} failed in {:.3}s  [{}]",
+        totals.jobs_ok,
+        totals.jobs_failed,
+        t0.elapsed().as_secs_f64(),
+        totals.report
+    );
+    anyhow::ensure!(failed == totals.jobs_failed as usize, "outcome accounting mismatch");
+    Ok(())
+}
+
 fn cmd_info(flags: &Flags) -> Result<()> {
     let artifacts = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
     let m = Manifest::load(&artifacts)?;
@@ -279,6 +268,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&flags),
         "tsqr" => cmd_tsqr(&flags),
+        "serve" => cmd_serve(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

@@ -103,6 +103,21 @@ pub struct Report {
 }
 
 impl Report {
+    /// Fold another job's counters into this one — the service's
+    /// per-tenant [`Metrics`] stay isolated, and its *totals* row is the
+    /// sum of every completed job's report. Counters add; the critical
+    /// path of a set of concurrent jobs is the max over jobs (each job's
+    /// logical clock starts at zero in its own world).
+    pub fn absorb(&mut self, other: &Report) {
+        self.messages += other.messages;
+        self.exchanges += other.exchanges;
+        self.bytes += other.bytes;
+        self.flops += other.flops;
+        self.recoveries += other.recoveries;
+        self.failures += other.failures;
+        self.critical_path = self.critical_path.max(other.critical_path);
+    }
+
     /// Difference against an earlier snapshot (for per-phase accounting).
     pub fn since(&self, earlier: &Report) -> Report {
         Report {
@@ -158,6 +173,20 @@ mod tests {
         m.set_clock(2, 5.0);
         m.set_clock(1, 3.0);
         assert_eq!(m.critical_path(), 5.0);
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_maxes_clock() {
+        let mut total = Report::default();
+        let a = Report { messages: 3, bytes: 100, flops: 10, critical_path: 2.0, ..Default::default() };
+        let b = Report { messages: 2, bytes: 50, failures: 1, critical_path: 5.0, ..Default::default() };
+        total.absorb(&a);
+        total.absorb(&b);
+        assert_eq!(total.messages, 5);
+        assert_eq!(total.bytes, 150);
+        assert_eq!(total.flops, 10);
+        assert_eq!(total.failures, 1);
+        assert_eq!(total.critical_path, 5.0);
     }
 
     #[test]

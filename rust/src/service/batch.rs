@@ -1,0 +1,302 @@
+//! Batched TSQR lane: k same-shape tall-skinny jobs packed into one tree
+//! sweep.
+//!
+//! Real workloads (the Demmel et al. CAQR setting, arXiv:0809.2407) are
+//! dominated by many small/medium tall-skinny panels arriving
+//! concurrently. Factorizing each with its own P-rank tree pays the full
+//! per-step message budget k times; but the tree *shape* depends only on
+//! `(rows, block, procs, mode)`, so jobs with identical shapes can ride
+//! the same sweep: each rank holds one leaf block per job, and each tree
+//! step exchanges a single [`MsgData::Mats`] bundle carrying every job's
+//! intermediate R. Message/exchange *counts* are paid once per batch;
+//! bytes and flops still scale with k.
+//!
+//! Numerics are untouched: per job, the leaf factorization and the merge
+//! sequence (pairings, top/bottom stacking order) are exactly those of
+//! the standalone driver ([`crate::coordinator::tsqr`]), so every job's
+//! final R is **bitwise identical** to running that job alone — packing
+//! changes who shares an envelope, never what gets merged.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::backend::Backend;
+use crate::coordinator::tree::{self, Role};
+use crate::coordinator::TsqrMode;
+use crate::fault::FaultPlan;
+use crate::ft::Fail;
+use crate::linalg::Matrix;
+use crate::sim::{
+    CostModel, ExchangeOp, MsgData, RankCtx, RankTask, Spawner, Tag, TagKind, TaskPoll, World,
+};
+
+/// rank -> that rank's final R per job (index parallel to the batch).
+pub(crate) type BatchFinals = Arc<Mutex<HashMap<usize, Vec<Arc<Matrix>>>>>;
+
+/// Build the world + rank tasks for one batched sweep over `inputs`
+/// (one stacked `rows x b` matrix per job; all shapes must match).
+#[allow(clippy::type_complexity)]
+pub(crate) fn prepare(
+    inputs: &[Matrix],
+    procs: usize,
+    mode: TsqrMode,
+    backend: Arc<Backend>,
+    cost: CostModel,
+) -> Result<(Arc<World>, Vec<(usize, Box<dyn RankTask>)>, BatchFinals)> {
+    anyhow::ensure!(!inputs.is_empty(), "batch needs at least one job");
+    let (rows, b) = inputs[0].shape();
+    for (j, m) in inputs.iter().enumerate() {
+        anyhow::ensure!(
+            m.shape() == (rows, b),
+            "batch job {j} shape {:?} does not match the lane shape ({rows}, {b})",
+            m.shape()
+        );
+    }
+    crate::coordinator::tsqr::validate_shape(rows, b, procs)?;
+    let m_local = rows / procs;
+
+    let world = World::new(procs, cost, FaultPlan::none());
+    let finals: BatchFinals = Arc::new(Mutex::new(HashMap::new()));
+    let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..procs)
+        .map(|r| {
+            let task = BatchTsqrTask {
+                mode,
+                backend: backend.clone(),
+                q: procs,
+                b,
+                m_local,
+                blocks: inputs.iter().map(|a| a.block(r * m_local, 0, m_local, b)).collect(),
+                rs: Vec::new(),
+                finals: finals.clone(),
+                s: 0,
+                wait: Wait::Leaf,
+            };
+            (r, Box::new(task) as Box<dyn RankTask>)
+        })
+        .collect();
+    Ok((world, tasks, finals))
+}
+
+/// Where one batched rank task is parked (or about to run next).
+enum Wait {
+    /// Per-job leaf factorizations not done yet.
+    Leaf,
+    /// Ready to enter tree step `s`.
+    Enter,
+    /// FT bundle exchange in flight.
+    Exch(ExchangeOp),
+    /// Plain upper member waiting for the lower member's bundle.
+    Recv { buddy: usize, tag: Tag },
+}
+
+/// One rank's resumable body for the whole batch: the per-job state is a
+/// vector of intermediate R factors advanced in lockstep through the
+/// shared tree.
+struct BatchTsqrTask {
+    mode: TsqrMode,
+    backend: Arc<Backend>,
+    q: usize,
+    b: usize,
+    m_local: usize,
+    /// One leaf block per job; drained after the leaf factorizations.
+    blocks: Vec<Matrix>,
+    /// Current intermediate R per job.
+    rs: Vec<Arc<Matrix>>,
+    finals: BatchFinals,
+    s: usize,
+    wait: Wait,
+}
+
+impl BatchTsqrTask {
+    /// Merge the peer's bundle into ours, one job at a time, preserving
+    /// the standalone driver's stacking order.
+    fn merge_all(
+        &mut self,
+        ctx: &mut RankCtx,
+        peer: Vec<Arc<Matrix>>,
+        self_is_top: bool,
+    ) -> Result<(), Fail> {
+        assert_eq!(
+            peer.len(),
+            self.rs.len(),
+            "batch bundle size mismatch (peer {} vs local {})",
+            peer.len(),
+            self.rs.len()
+        );
+        for (j, pr) in peer.iter().enumerate() {
+            let mf = {
+                let mine = self.rs[j].as_ref();
+                let (rt, rb) = if self_is_top { (mine, pr.as_ref()) } else { (pr.as_ref(), mine) };
+                self.backend.tsqr_merge(rt, rb).map_err(|_| Fail::WorldGone)?
+            };
+            ctx.compute(crate::backend::flops::tsqr_merge(self.b));
+            self.rs[j] = Arc::new(mf.r);
+        }
+        Ok(())
+    }
+
+    fn drive(&mut self, ctx: &mut RankCtx) -> Result<bool, Fail> {
+        loop {
+            match std::mem::replace(&mut self.wait, Wait::Enter) {
+                Wait::Leaf => {
+                    for block in &self.blocks {
+                        let f = self.backend.panel_qr(block).map_err(|_| Fail::WorldGone)?;
+                        ctx.compute(crate::backend::flops::panel_qr(self.m_local, self.b));
+                        self.rs.push(Arc::new(f.r));
+                    }
+                    self.blocks = Vec::new(); // inputs no longer needed
+                    self.s = 0;
+                }
+                Wait::Enter => {
+                    if self.s == tree::steps(self.q) {
+                        self.finals.lock().unwrap().insert(ctx.rank, self.rs.clone());
+                        return Ok(true);
+                    }
+                    let s = self.s;
+                    let idx = ctx.rank;
+                    let tag = Tag::new(TagKind::TsqrR, 0, s);
+                    match self.mode {
+                        TsqrMode::FaultTolerant => {
+                            if let Some(bidx) = tree::exchange_pair(idx, s, self.q) {
+                                let op = ctx.begin_exchange(
+                                    bidx,
+                                    tag,
+                                    MsgData::Mats(self.rs.clone()),
+                                )?;
+                                self.wait = Wait::Exch(op);
+                            } else {
+                                self.s += 1;
+                            }
+                        }
+                        TsqrMode::Plain => {
+                            if tree::reduce_active(idx, s) {
+                                let (role, bidx) = tree::reduce_pair(idx, s, self.q);
+                                match role {
+                                    Role::Idle => self.s += 1,
+                                    Role::Upper => self.wait = Wait::Recv { buddy: bidx, tag },
+                                    Role::Lower => {
+                                        ctx.send(bidx, tag, MsgData::Mats(self.rs.clone()))?;
+                                        self.s += 1;
+                                    }
+                                }
+                            } else {
+                                self.s += 1;
+                            }
+                        }
+                    }
+                }
+                Wait::Exch(mut op) => match ctx.poll_exchange(&mut op)? {
+                    None => {
+                        self.wait = Wait::Exch(op);
+                        return Ok(false);
+                    }
+                    Some(d) => {
+                        let bidx = op.peer();
+                        let top = tree::is_top(ctx.rank, bidx);
+                        self.merge_all(ctx, d.into_mats(), top)?;
+                        self.s += 1;
+                    }
+                },
+                Wait::Recv { buddy, tag } => match ctx.try_recv(buddy, tag)? {
+                    None => {
+                        self.wait = Wait::Recv { buddy, tag };
+                        return Ok(false);
+                    }
+                    Some(d) => {
+                        // Plain-tree upper member: our rows stack on top.
+                        self.merge_all(ctx, d.into_mats(), true)?;
+                        self.s += 1;
+                    }
+                },
+            }
+        }
+    }
+}
+
+impl RankTask for BatchTsqrTask {
+    fn poll(&mut self, ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+        match self.drive(ctx) {
+            Ok(true) => TaskPoll::Ready(Ok(())),
+            Ok(false) => TaskPoll::Pending,
+            Err(e) => TaskPoll::Ready(Err(e)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_tsqr_pooled, TsqrMode};
+    use crate::linalg::gram_residual;
+    use crate::sim::Pool;
+
+    fn run_batch(
+        inputs: &[Matrix],
+        procs: usize,
+        mode: TsqrMode,
+    ) -> (Vec<Matrix>, crate::metrics::Report) {
+        let (world, tasks, finals) =
+            prepare(inputs, procs, mode, Backend::native(), CostModel::default()).unwrap();
+        let pool = Pool::new(2);
+        let results = pool.run(&world, tasks);
+        assert!(results.iter().all(|(_, r)| r.is_ok()), "{results:?}");
+        let finals = finals.lock().unwrap();
+        let root = finals[&0].iter().map(|r| r.as_ref().clone()).collect();
+        (root, world.metrics.snapshot())
+    }
+
+    #[test]
+    fn batched_jobs_match_solo_bitwise() {
+        let procs = 8;
+        let inputs: Vec<Matrix> =
+            (0..4).map(|j| Matrix::randn(procs * 8, 8, 100 + j)).collect();
+        for mode in [TsqrMode::FaultTolerant, TsqrMode::Plain] {
+            let (rs, _) = run_batch(&inputs, procs, mode);
+            for (j, a) in inputs.iter().enumerate() {
+                let solo = run_tsqr_pooled(
+                    a,
+                    procs,
+                    mode,
+                    Backend::native(),
+                    CostModel::default(),
+                    2,
+                )
+                .unwrap();
+                assert_eq!(rs[j], solo.r, "job {j} mode {mode:?}");
+                assert!(gram_residual(a, &rs[j]) < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_message_counts() {
+        let procs = 8;
+        let k = 6;
+        let inputs: Vec<Matrix> =
+            (0..k).map(|j| Matrix::randn(procs * 8, 8, 200 + j)).collect();
+        let (_, batched) = run_batch(&inputs, procs, TsqrMode::FaultTolerant);
+        let solo = run_tsqr_pooled(
+            &inputs[0],
+            procs,
+            TsqrMode::FaultTolerant,
+            Backend::native(),
+            CostModel::default(),
+            2,
+        )
+        .unwrap();
+        // One sweep's worth of exchanges regardless of k...
+        assert_eq!(batched.exchanges, solo.report.exchanges);
+        // ...while the bytes scale with the batch width.
+        assert_eq!(batched.bytes, solo.report.bytes * k as u64);
+    }
+
+    #[test]
+    fn mismatched_shapes_rejected() {
+        let a = Matrix::randn(64, 8, 1);
+        let b = Matrix::randn(64, 4, 2);
+        assert!(prepare(&[a, b], 8, TsqrMode::FaultTolerant, Backend::native(), CostModel::default())
+            .is_err());
+    }
+}

@@ -1,0 +1,818 @@
+//! Multi-tenant factorization service: many concurrent (FT-)CAQR/TSQR
+//! jobs multiplexed over one persistent scheduler pool.
+//!
+//! The one-shot drivers (`run_caqr`, `run_tsqr`) build and tear down a
+//! private worker pool per call, so a process could only ever run one
+//! factorization at a time. The [`Service`] instead owns a single
+//! long-lived [`Pool`] and treats each factorization as a *job*:
+//!
+//! 1. **Submit** — [`Service::submit`] validates a [`JobSpec`], enqueues
+//!    it and returns an async [`JobHandle`] immediately.
+//! 2. **Admit** — the [`JobQueue`] releases jobs FIFO under an admission
+//!    cap on *in-flight simulated ranks* (`max_inflight_ranks`), so a
+//!    burst of large jobs cannot oversubscribe memory; a job wider than
+//!    the cap is still admitted when the service is idle.
+//! 3. **Run** — the job's world + rank tasks are submitted into the
+//!    shared pool, interleaving with every other tenant's tasks.
+//!    Same-shape tall-skinny TSQR jobs can be packed into one batched
+//!    tree sweep ([`batch`]) that pays the per-step message count once.
+//! 4. **Complete** — the job finalizes on a pool worker and its
+//!    [`JobOutcome`] is delivered through the handle; per-job metrics are
+//!    folded into the service totals and the queue is pumped again.
+//!
+//! **Isolation.** Every job gets its own [`World`] (mailboxes, router,
+//! metrics, fault plan, recovery store) and its own compute backend, and
+//! its input matrix and fault schedule are derived from the job's own
+//! seed/spec — so a job's factors are **bitwise identical** no matter
+//! how its tasks interleave with neighbors, and a job poisoned by
+//! [`Fail::Unrecoverable`] (both copies of a redundancy pair lost) fails
+//! *individually* while every other tenant keeps running. A job that
+//! deadlocks is failed with [`Fail::Stalled`] by the pool's per-job
+//! stall detector, never wedging the service.
+
+pub mod batch;
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::Backend;
+use crate::config::RunConfig;
+use crate::coordinator::caqr::CaqrJob;
+use crate::coordinator::{CaqrOutcome, TsqrMode};
+use crate::fault::{self, FaultPlan, ScheduledKill};
+use crate::ft::Fail;
+use crate::linalg::Matrix;
+use crate::metrics::Report;
+use crate::sim::{default_workers, CostModel, Pool};
+use crate::trace::Trace;
+
+/// Service-wide knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads in the shared pool (0 = machine core count).
+    pub workers: usize,
+    /// Admission cap: total simulated ranks in flight (0 = unbounded).
+    /// A single job wider than the cap still runs — alone.
+    pub max_inflight_ranks: usize,
+    /// Max same-shape TSQR jobs packed into one batched sweep
+    /// (<= 1 disables batching).
+    pub batch_max: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { workers: 0, max_inflight_ranks: 256, batch_max: 1 }
+    }
+}
+
+/// One job's description. Matrices are generated from the spec's seed at
+/// launch time, so a spec fully determines the job's inputs and faults —
+/// the bitwise-determinism contract rests on this.
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    /// A full (FT-)CAQR factorization, with optional injected kills.
+    Caqr {
+        /// The run description (matrix shape, procs, algorithm, seed...).
+        cfg: RunConfig,
+        /// Failure schedule for this job only.
+        kills: Vec<ScheduledKill>,
+    },
+    /// A standalone tall-skinny TSQR sweep (batchable when same-shape).
+    Tsqr {
+        /// Stacked panel rows.
+        rows: usize,
+        /// Panel width.
+        block: usize,
+        /// Simulated ranks.
+        procs: usize,
+        /// Plain binary tree vs FT all-exchange.
+        mode: TsqrMode,
+        /// Input-matrix RNG seed.
+        seed: u64,
+    },
+}
+
+impl JobSpec {
+    /// Simulated ranks this job occupies while in flight.
+    pub fn procs(&self) -> usize {
+        match self {
+            JobSpec::Caqr { cfg, .. } => cfg.procs,
+            JobSpec::Tsqr { procs, .. } => *procs,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        match self {
+            JobSpec::Caqr { cfg, .. } => {
+                cfg.validate()?;
+                anyhow::ensure!(
+                    cfg.par == 1,
+                    "service jobs must use par = 1: the GEMM split knob is \
+                     process-wide and would race across tenants"
+                );
+                Ok(())
+            }
+            JobSpec::Tsqr { rows, block, procs, .. } => {
+                crate::coordinator::tsqr::validate_shape(*rows, *block, *procs)
+            }
+        }
+    }
+
+    /// Batch key: jobs sharing it can ride one tree sweep.
+    fn lane(&self) -> Option<(usize, usize, usize, TsqrMode)> {
+        match self {
+            JobSpec::Tsqr { rows, block, procs, mode, .. } => {
+                Some((*rows, *block, *procs, *mode))
+            }
+            JobSpec::Caqr { .. } => None,
+        }
+    }
+}
+
+/// Successful job payload.
+#[derive(Debug)]
+pub enum JobOutput {
+    /// Full CAQR outcome (factors, residual, per-job report).
+    Caqr(CaqrOutcome),
+    /// Standalone TSQR outcome.
+    Tsqr {
+        /// Final R factor (bitwise identical to a solo run of the job).
+        r: Matrix,
+        /// How many jobs shared the sweep (1 = unbatched).
+        batch_size: usize,
+    },
+}
+
+/// Why a job failed. `fail` is `Some(Fail::Unrecoverable { .. })` for a
+/// poisoned job — both copies of a redundancy pair were lost and the
+/// paper's single-buddy protocol cannot reconstruct the state.
+#[derive(Clone, Debug)]
+pub struct JobError {
+    /// The simulated failure condition, when one poisoned the job.
+    pub fail: Option<Fail>,
+    /// Human-readable description.
+    pub message: String,
+}
+
+/// Delivered once per job through its [`JobHandle`].
+#[derive(Debug)]
+pub struct JobOutcome {
+    /// The id [`Service::submit`] returned.
+    pub id: u64,
+    /// The factors, or the per-job failure (neighbors are unaffected).
+    pub output: Result<JobOutput, JobError>,
+    /// This job's own metrics (its world's counters; batched TSQR jobs
+    /// share their sweep's report).
+    pub report: Report,
+    /// Seconds spent queued before admission.
+    pub queued_s: f64,
+    /// Seconds from admission to completion.
+    pub run_s: f64,
+}
+
+impl JobOutcome {
+    /// True when the job was poisoned by lost redundancy.
+    pub fn unrecoverable(&self) -> bool {
+        matches!(
+            &self.output,
+            Err(JobError { fail: Some(Fail::Unrecoverable { .. }), .. })
+        )
+    }
+}
+
+/// Async result handle returned by [`Service::submit`].
+pub struct JobHandle {
+    id: u64,
+    rx: Receiver<JobOutcome>,
+}
+
+impl JobHandle {
+    /// The job's service-assigned id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the job completes. In-flight jobs finish even while
+    /// the service is being dropped; jobs still *pending admission* when
+    /// the service is dropped are cancelled, and waiting on one of those
+    /// panics — wait on every handle before dropping the service.
+    pub fn wait(self) -> JobOutcome {
+        self.rx.recv().expect("job was cancelled: service dropped before it was admitted")
+    }
+
+    /// Non-blocking poll: the outcome if the job already completed.
+    pub fn try_wait(&self) -> Option<JobOutcome> {
+        self.rx.try_recv().ok()
+    }
+}
+
+struct Pending {
+    id: u64,
+    spec: JobSpec,
+    tx: Sender<JobOutcome>,
+    enqueued: Instant,
+}
+
+/// Admission-control state: FIFO pending queue + in-flight accounting.
+pub struct JobQueue {
+    pending: VecDeque<Pending>,
+    inflight_ranks: usize,
+    inflight_jobs: usize,
+    next_id: u64,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        Self { pending: VecDeque::new(), inflight_ranks: 0, inflight_jobs: 0, next_id: 0 }
+    }
+
+    /// Would a job of `procs` simulated ranks be admitted now under
+    /// `cap`? An idle service admits anything (a job wider than the cap
+    /// must not starve); otherwise the rank budget is enforced.
+    fn admits(&self, procs: usize, cap: usize) -> bool {
+        self.inflight_jobs == 0 || cap == 0 || self.inflight_ranks + procs <= cap
+    }
+}
+
+/// Point-in-time queue observability snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Jobs waiting for admission.
+    pub pending: usize,
+    /// Jobs currently running on the pool.
+    pub inflight_jobs: usize,
+    /// Simulated ranks currently in flight.
+    pub inflight_ranks: usize,
+}
+
+#[derive(Default)]
+struct Totals {
+    jobs_ok: u64,
+    jobs_failed: u64,
+    report: Report,
+}
+
+/// Aggregated service counters (sum over completed jobs).
+#[derive(Clone, Debug, Default)]
+pub struct ServiceTotals {
+    /// Jobs that completed successfully.
+    pub jobs_ok: u64,
+    /// Jobs that failed (poisoned, stalled, invalid).
+    pub jobs_failed: u64,
+    /// Summed per-job reports (critical path = max over jobs).
+    pub report: Report,
+}
+
+/// The multi-tenant factorization service. See the module docs for the
+/// job lifecycle. Cloneable handles are not needed — submit from one
+/// owner, wait on the [`JobHandle`]s anywhere.
+pub struct Service {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    cfg: ServiceConfig,
+    pool: Pool,
+    q: Mutex<JobQueue>,
+    totals: Mutex<Totals>,
+}
+
+/// What the pump decided to start (admission already accounted).
+enum Admitted {
+    Caqr(Pending),
+    /// 1..=batch_max same-lane TSQR jobs sharing one sweep.
+    TsqrLane(Vec<Pending>),
+}
+
+impl Service {
+    /// Start a service: spins up the persistent pool immediately.
+    pub fn new(cfg: ServiceConfig) -> Self {
+        let workers =
+            if cfg.workers > 0 { cfg.workers } else { default_workers(usize::MAX) };
+        let inner = Inner {
+            cfg,
+            pool: Pool::new(workers),
+            q: Mutex::new(JobQueue::new()),
+            totals: Mutex::new(Totals::default()),
+        };
+        Service { inner: Arc::new(inner) }
+    }
+
+    /// The shared pool's worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.inner.pool.workers()
+    }
+
+    /// Validate and enqueue a job; returns its async handle. The job
+    /// starts as soon as admission control allows.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        spec.validate()?;
+        let (tx, rx) = channel();
+        let id = {
+            let mut q = self.inner.q.lock().unwrap();
+            let id = q.next_id;
+            q.next_id += 1;
+            q.pending.push_back(Pending { id, spec, tx, enqueued: Instant::now() });
+            id
+        };
+        Inner::pump(&self.inner);
+        Ok(JobHandle { id, rx })
+    }
+
+    /// Enqueue a burst of jobs under one queue lock before the first
+    /// admission pump runs — this is what lets the batched TSQR lane see
+    /// the whole burst at once instead of launching the head solo.
+    /// Handles are returned in submission order.
+    pub fn submit_all(&self, specs: Vec<JobSpec>) -> Result<Vec<JobHandle>> {
+        for s in &specs {
+            s.validate()?;
+        }
+        let handles = {
+            let mut q = self.inner.q.lock().unwrap();
+            specs
+                .into_iter()
+                .map(|spec| {
+                    let (tx, rx) = channel();
+                    let id = q.next_id;
+                    q.next_id += 1;
+                    q.pending.push_back(Pending { id, spec, tx, enqueued: Instant::now() });
+                    JobHandle { id, rx }
+                })
+                .collect()
+        };
+        Inner::pump(&self.inner);
+        Ok(handles)
+    }
+
+    /// Aggregated counters over all completed jobs.
+    pub fn totals(&self) -> ServiceTotals {
+        let t = self.inner.totals.lock().unwrap();
+        ServiceTotals {
+            jobs_ok: t.jobs_ok,
+            jobs_failed: t.jobs_failed,
+            report: t.report.clone(),
+        }
+    }
+
+    /// Current queue/in-flight occupancy.
+    pub fn queue_stats(&self) -> QueueStats {
+        let q = self.inner.q.lock().unwrap();
+        QueueStats {
+            pending: q.pending.len(),
+            inflight_jobs: q.inflight_jobs,
+            inflight_ranks: q.inflight_ranks,
+        }
+    }
+}
+
+impl Inner {
+    /// Admit and launch jobs until the head of the queue no longer fits.
+    /// Called after every submit and every completion; safe from pool
+    /// worker threads (never holds the queue lock across a launch).
+    ///
+    /// Launch work (input generation, block slicing) deliberately runs
+    /// at admission time — on the submitting thread or the completing
+    /// worker — rather than at enqueue: materializing inputs only for
+    /// *admitted* jobs is what lets `max_inflight_ranks` bound memory
+    /// for a deep pending queue. The cost is that a completion on a
+    /// narrow pool spends one worker preparing the next tenant; that
+    /// time is honestly part of the end-to-end latency the bench
+    /// reports.
+    fn pump(self: &Arc<Self>) {
+        loop {
+            let admitted = {
+                let mut q = self.q.lock().unwrap();
+                let Some(front) = q.pending.front() else { return };
+                let procs = front.spec.procs();
+                if !q.admits(procs, self.cfg.max_inflight_ranks) {
+                    return;
+                }
+                let p = q.pending.pop_front().expect("front checked");
+                match p.spec.lane() {
+                    Some(lane) => {
+                        // Batched lane: pull later same-shape TSQR jobs
+                        // forward to share this sweep (bounded by
+                        // batch_max; other jobs keep their order).
+                        let mut group = vec![p];
+                        if self.cfg.batch_max > 1 {
+                            let mut i = 0;
+                            while i < q.pending.len() && group.len() < self.cfg.batch_max {
+                                if q.pending[i].spec.lane() == Some(lane) {
+                                    group.push(q.pending.remove(i).expect("index checked"));
+                                } else {
+                                    i += 1;
+                                }
+                            }
+                        }
+                        q.inflight_ranks += procs;
+                        q.inflight_jobs += group.len();
+                        Admitted::TsqrLane(group)
+                    }
+                    None => {
+                        q.inflight_ranks += procs;
+                        q.inflight_jobs += 1;
+                        Admitted::Caqr(p)
+                    }
+                }
+            };
+            match admitted {
+                Admitted::Caqr(p) => self.launch_caqr(p),
+                Admitted::TsqrLane(group) => self.launch_tsqr_lane(group),
+            }
+        }
+    }
+
+    /// Fold a completed world's report into the totals.
+    fn account(&self, report: &Report, ok: u64, failed: u64) {
+        let mut t = self.totals.lock().unwrap();
+        t.report.absorb(report);
+        t.jobs_ok += ok;
+        t.jobs_failed += failed;
+    }
+
+    /// Release a finished job group's admission budget. Must happen
+    /// BEFORE the group's outcomes are sent: a caller synchronized on
+    /// `JobHandle::wait` may read `queue_stats`/`totals` immediately,
+    /// and must not observe the finished job still in flight.
+    fn release(&self, procs: usize, njobs: usize) {
+        let mut q = self.q.lock().unwrap();
+        q.inflight_ranks -= procs;
+        q.inflight_jobs -= njobs;
+    }
+
+    /// Release a finished job group's admission budget and re-pump.
+    fn release_and_pump(self: &Arc<Self>, procs: usize, njobs: usize) {
+        self.release(procs, njobs);
+        self.pump();
+    }
+
+    fn launch_caqr(self: &Arc<Self>, p: Pending) {
+        let Pending { id, spec, tx, enqueued } = p;
+        let JobSpec::Caqr { cfg, kills } = spec else { unreachable!("caqr lane") };
+        let procs = cfg.procs;
+        let queued_s = enqueued.elapsed().as_secs_f64();
+        let t_run = Instant::now();
+        let fault =
+            if kills.is_empty() { FaultPlan::none() } else { FaultPlan::schedule(kills) };
+        // Per-job backend + input derived from the job's own seed: flop
+        // accounting and numerics are isolated from every other tenant.
+        let a = Matrix::randn(cfg.rows, cfg.cols, cfg.seed);
+        let prep =
+            CaqrJob::prepare(cfg, a, Backend::native(), fault, Trace::disabled(), t_run);
+        let job = match prep {
+            Ok(j) => j,
+            Err(e) => {
+                self.account(&Report::default(), 0, 1);
+                let _ = tx.send(JobOutcome {
+                    id,
+                    output: Err(JobError { fail: None, message: format!("{e:#}") }),
+                    report: Report::default(),
+                    queued_s,
+                    run_s: 0.0,
+                });
+                self.release_and_pump(procs, 1);
+                return;
+            }
+        };
+        let CaqrJob { cfg, a, shared, world, tasks, flops0, t0 } = job;
+        // Weak: completion closures live inside the pool that this
+        // service owns — a strong Arc here would be a cycle and would
+        // run the pool's Drop on one of its own workers.
+        let inner = Arc::downgrade(self);
+        let world_arg = world.clone();
+        self.pool.submit(&world_arg, tasks, move |results| {
+            let report = world.metrics.snapshot();
+            let poisoned = shared.poisoned();
+            let output =
+                match CaqrJob::finalize(&cfg, &a, &shared, &world, results, flops0, t0) {
+                    Ok(o) => Ok(JobOutput::Caqr(o)),
+                    Err(e) => {
+                        Err(JobError { fail: poisoned, message: format!("{e:#}") })
+                    }
+                };
+            let (ok, failed) = if output.is_ok() { (1, 0) } else { (0, 1) };
+            // Order matters: totals and the admission budget must be
+            // settled before the outcome is delivered (a waiter may read
+            // them the moment `wait` returns); the pump — which may do
+            // heavy launch work for the next tenant — runs after.
+            let inner = inner.upgrade();
+            if let Some(inner) = &inner {
+                inner.account(&report, ok, failed);
+                inner.release(procs, 1);
+            }
+            let _ = tx.send(JobOutcome {
+                id,
+                output,
+                report,
+                queued_s,
+                run_s: t_run.elapsed().as_secs_f64(),
+            });
+            if let Some(inner) = &inner {
+                inner.pump();
+            }
+        });
+    }
+
+    fn launch_tsqr_lane(self: &Arc<Self>, group: Vec<Pending>) {
+        let (rows, block, procs, mode) = match &group[0].spec {
+            JobSpec::Tsqr { rows, block, procs, mode, .. } => (*rows, *block, *procs, *mode),
+            JobSpec::Caqr { .. } => unreachable!("tsqr lane"),
+        };
+        let n = group.len();
+        let t_run = Instant::now();
+        let inputs: Vec<Matrix> = group
+            .iter()
+            .map(|p| match &p.spec {
+                JobSpec::Tsqr { seed, .. } => Matrix::randn(rows, block, *seed),
+                JobSpec::Caqr { .. } => unreachable!("tsqr lane"),
+            })
+            .collect();
+        let meta: Vec<(u64, Sender<JobOutcome>, f64)> = group
+            .into_iter()
+            .map(|p| (p.id, p.tx, p.enqueued.elapsed().as_secs_f64()))
+            .collect();
+        let prep =
+            batch::prepare(&inputs, procs, mode, Backend::native(), CostModel::default());
+        let (world, tasks, finals) = match prep {
+            Ok(parts) => parts,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                self.account(&Report::default(), 0, n as u64);
+                for (id, tx, queued_s) in meta {
+                    let _ = tx.send(JobOutcome {
+                        id,
+                        output: Err(JobError { fail: None, message: msg.clone() }),
+                        report: Report::default(),
+                        queued_s,
+                        run_s: 0.0,
+                    });
+                }
+                self.release_and_pump(procs, n);
+                return;
+            }
+        };
+        // Weak for the same cycle-avoidance reason as the CAQR lane.
+        let inner = Arc::downgrade(self);
+        let world_arg = world.clone();
+        self.pool.submit(&world_arg, tasks, move |results| {
+            let report = world.metrics.snapshot();
+            let first_err =
+                results.into_iter().find_map(|(rank, r)| r.err().map(|e| (rank, e)));
+            let finals = finals.lock().unwrap();
+            let root = finals.get(&0);
+            let run_s = t_run.elapsed().as_secs_f64();
+            let (mut ok, mut failed) = (0u64, 0u64);
+            // Build every outcome first so totals/budget can settle
+            // before any waiter is unblocked by a send (same ordering
+            // contract as the CAQR lane).
+            let deliveries: Vec<(Sender<JobOutcome>, JobOutcome)> = meta
+                .into_iter()
+                .enumerate()
+                .map(|(j, (id, tx, queued_s))| {
+                    let output = match (&first_err, root) {
+                        (None, Some(rs)) => {
+                            ok += 1;
+                            Ok(JobOutput::Tsqr {
+                                r: rs[j].as_ref().clone(),
+                                batch_size: n,
+                            })
+                        }
+                        _ => {
+                            failed += 1;
+                            let message = match &first_err {
+                                Some((rank, e)) => format!("tsqr rank {rank} failed: {e}"),
+                                None => "tsqr sweep produced no root result".to_string(),
+                            };
+                            Err(JobError {
+                                fail: first_err.as_ref().map(|(_, e)| e.clone()),
+                                message,
+                            })
+                        }
+                    };
+                    let outcome =
+                        JobOutcome { id, output, report: report.clone(), queued_s, run_s };
+                    (tx, outcome)
+                })
+                .collect();
+            let inner = inner.upgrade();
+            if let Some(inner) = &inner {
+                inner.account(&report, ok, failed);
+                inner.release(procs, n);
+            }
+            for (tx, outcome) in deliveries {
+                let _ = tx.send(outcome);
+            }
+            if let Some(inner) = &inner {
+                inner.pump();
+            }
+        });
+    }
+}
+
+/// Derive a per-job RNG seed from a base seed and a job index
+/// (splitmix64): deterministic, well-mixed streams for generated
+/// workloads (the `serve` jobs file and the throughput bench).
+pub fn seed_for(base: u64, job_index: u64) -> u64 {
+    let mut z = base
+        .wrapping_add(job_index.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Parse a `serve` jobs file: one job per line, `#` comments.
+///
+/// ```text
+/// caqr rows=256 cols=64 block=16 procs=4 seed=1 kill=1@0:0:update
+/// tsqr rows=128 block=8 procs=8 mode=ft seed=7
+/// ```
+pub fn parse_jobs(text: &str) -> Result<Vec<JobSpec>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        out.push(
+            parse_job_line(line)
+                .with_context(|| format!("jobs file line {}", lineno + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Parse one jobs-file line (`caqr ...` or `tsqr ...`, `key=value`
+/// tokens; kills use the shared [`ScheduledKill::parse`] grammar).
+pub fn parse_job_line(line: &str) -> Result<JobSpec> {
+    let mut it = line.split_whitespace();
+    let kind = it.next().context("empty job line")?;
+    let mut kv: Vec<(&str, &str)> = Vec::new();
+    for tok in it {
+        let pair = tok
+            .split_once('=')
+            .with_context(|| format!("token '{tok}' must be key=value"))?;
+        kv.push(pair);
+    }
+    match kind {
+        "caqr" => {
+            let mut cfg = RunConfig::default();
+            let mut kills = Vec::new();
+            let mut pair_group = 0u32;
+            for (k, v) in kv {
+                match k {
+                    "rows" => cfg.rows = v.parse()?,
+                    "cols" => cfg.cols = v.parse()?,
+                    "block" => cfg.block = v.parse()?,
+                    "procs" => cfg.procs = v.parse()?,
+                    "seed" => cfg.seed = v.parse()?,
+                    "verify" => cfg.verify = v.parse()?,
+                    "checkpoint-every" => cfg.checkpoint_every = v.parse()?,
+                    "algorithm" => {
+                        cfg.algorithm = v.parse().map_err(anyhow::Error::msg)?
+                    }
+                    "kill" => kills.push(ScheduledKill::parse(v)?),
+                    "kill-pair" => {
+                        let pair = fault::parse_kill_pair(v, pair_group)?;
+                        pair_group += 1;
+                        kills.extend(pair);
+                    }
+                    other => bail!("unknown caqr job key '{other}'"),
+                }
+            }
+            Ok(JobSpec::Caqr { cfg, kills })
+        }
+        "tsqr" => {
+            let (mut rows, mut block, mut procs) = (512usize, 16usize, 8usize);
+            let mut mode = TsqrMode::FaultTolerant;
+            let mut seed = 0u64;
+            for (k, v) in kv {
+                match k {
+                    "rows" => rows = v.parse()?,
+                    "block" => block = v.parse()?,
+                    "procs" => procs = v.parse()?,
+                    "seed" => seed = v.parse()?,
+                    "mode" => {
+                        mode = match v {
+                            "plain" => TsqrMode::Plain,
+                            "ft" => TsqrMode::FaultTolerant,
+                            other => bail!("unknown tsqr mode '{other}' (ft|plain)"),
+                        }
+                    }
+                    other => bail!("unknown tsqr job key '{other}'"),
+                }
+            }
+            Ok(JobSpec::Tsqr { rows, block, procs, mode, seed })
+        }
+        other => bail!("unknown job kind '{other}' (caqr|tsqr)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+
+    #[test]
+    fn admission_math() {
+        let mut q = JobQueue::new();
+        // Idle service admits anything, even wider than the cap.
+        assert!(q.admits(512, 64));
+        q.inflight_jobs = 1;
+        q.inflight_ranks = 48;
+        assert!(q.admits(16, 64)); // 48 + 16 == 64: fits
+        assert!(!q.admits(17, 64)); // would exceed
+        assert!(q.admits(1000, 0)); // cap 0 = unbounded
+    }
+
+    #[test]
+    fn job_line_parses_caqr_with_kills() {
+        let spec =
+            parse_job_line("caqr rows=256 cols=64 block=16 procs=4 seed=9 kill=1@0:0:update")
+                .unwrap();
+        let JobSpec::Caqr { cfg, kills } = spec else { panic!("caqr expected") };
+        assert_eq!((cfg.rows, cfg.cols, cfg.block, cfg.procs, cfg.seed), (256, 64, 16, 4, 9));
+        assert_eq!(cfg.algorithm, Algorithm::FaultTolerant);
+        assert_eq!(kills.len(), 1);
+        assert_eq!(kills[0].rank, 1);
+    }
+
+    #[test]
+    fn job_line_parses_tsqr_and_rejects_garbage() {
+        let spec = parse_job_line("tsqr rows=128 block=8 procs=8 mode=plain seed=3").unwrap();
+        let JobSpec::Tsqr { rows, block, procs, mode, seed } = spec else {
+            panic!("tsqr expected")
+        };
+        assert_eq!((rows, block, procs, seed), (128, 8, 8, 3));
+        assert_eq!(mode, TsqrMode::Plain);
+        assert!(parse_job_line("tsqr rows").is_err());
+        assert!(parse_job_line("qr rows=1").is_err());
+        assert!(parse_job_line("tsqr bogus=1").is_err());
+    }
+
+    #[test]
+    fn jobs_file_skips_comments_and_reports_line_numbers() {
+        let text = "# header\n\ncaqr procs=4 rows=128 cols=32 block=16\ntsqr procs=8 rows=64 block=8\n";
+        let specs = parse_jobs(text).unwrap();
+        assert_eq!(specs.len(), 2);
+        let err = parse_jobs("caqr rows=128\nbroken line\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+
+    #[test]
+    fn seeds_are_deterministic_and_distinct() {
+        assert_eq!(seed_for(7, 3), seed_for(7, 3));
+        let s: std::collections::HashSet<u64> =
+            (0..64).map(|i| seed_for(42, i)).collect();
+        assert_eq!(s.len(), 64);
+    }
+
+    #[test]
+    fn spec_validation_catches_bad_shapes() {
+        let bad = JobSpec::Tsqr {
+            rows: 100,
+            block: 8,
+            procs: 8, // 100 % 8 != 0
+            mode: TsqrMode::FaultTolerant,
+            seed: 0,
+        };
+        assert!(bad.validate().is_err());
+        let cfg = RunConfig { par: 2, ..Default::default() };
+        assert!(JobSpec::Caqr { cfg, kills: vec![] }.validate().is_err());
+    }
+
+    #[test]
+    fn two_tenants_end_to_end() {
+        // Smoke: one CAQR + one TSQR job through a 2-worker service.
+        let svc = Service::new(ServiceConfig {
+            workers: 2,
+            max_inflight_ranks: 64,
+            batch_max: 1,
+        });
+        let h1 = svc
+            .submit(JobSpec::Caqr { cfg: RunConfig::default(), kills: vec![] })
+            .unwrap();
+        let h2 = svc
+            .submit(JobSpec::Tsqr {
+                rows: 64,
+                block: 8,
+                procs: 8,
+                mode: TsqrMode::FaultTolerant,
+                seed: 5,
+            })
+            .unwrap();
+        let o1 = h1.wait();
+        let o2 = h2.wait();
+        assert!(o1.output.is_ok(), "{:?}", o1.output.err());
+        assert!(o2.output.is_ok(), "{:?}", o2.output.err());
+        let t = svc.totals();
+        assert_eq!(t.jobs_ok, 2);
+        assert_eq!(t.jobs_failed, 0);
+        assert!(t.report.messages + t.report.exchanges > 0);
+        assert_eq!(svc.queue_stats(), QueueStats { pending: 0, inflight_jobs: 0, inflight_ranks: 0 });
+    }
+}

@@ -9,6 +9,11 @@
 //! instead of deep-copying the buffer. The cost model still charges the
 //! full matrix size — [`MsgData::nbytes`] reads through the `Arc` — so
 //! simulated traffic accounting is unchanged by the sharing.
+//!
+//! [`MsgData::Mats`] bundles are how the service's batched TSQR lane
+//! amortizes tree traffic: one exchange per step carries the
+//! intermediate R of every job packed into the batch, so k same-shape
+//! jobs pay one message-count budget (bytes still scale with k).
 
 use std::sync::Arc;
 

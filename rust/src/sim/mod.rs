@@ -20,6 +20,11 @@
 //!   [`RankCtx::poll_exchange`] primitives and are woken by message
 //!   delivery. P = 512–1024 ranks run comfortably on a laptop core count.
 //!
+//! The pool itself is a first-class, persistent object ([`sched::Pool`]):
+//! `run_tasks` spins up an ephemeral one, while the multi-tenant service
+//! ([`crate::service`]) keeps a single long-lived pool and submits many
+//! concurrent jobs (each a `World` + task group) into it.
+//!
 //! Per-rank logical clocks implement the dual-channel cost model of
 //! [`clock::CostModel`], which is what the overhead experiments (E2)
 //! report as "critical path".
@@ -30,7 +35,7 @@ pub mod sched;
 
 pub use clock::CostModel;
 pub use message::{Envelope, Event, MsgData, Tag, TagKind};
-pub use sched::{default_workers, RankTask, Spawner, TaskPoll};
+pub use sched::{default_workers, JobId, JobResults, Pool, RankTask, Spawner, TaskPoll};
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -584,13 +589,15 @@ impl World {
             .collect()
     }
 
-    /// Drive resumable rank tasks on a bounded worker pool (the engine
-    /// behind the large-P sweeps and the CAQR driver). `tasks` pairs each
-    /// initial task with its rank; further tasks (REBUILD replacements)
-    /// can be added mid-run through the [`Spawner`] passed to every
-    /// `poll`. Returns one `(rank, result)` per task ever run, in spawn
-    /// order. A global stall (every live task parked with nothing in
-    /// flight) is reported as [`Fail::Stalled`] instead of hanging.
+    /// Drive resumable rank tasks on an ephemeral bounded worker pool
+    /// (the engine behind the large-P sweeps and the one-shot CAQR
+    /// driver). `tasks` pairs each initial task with its rank; further
+    /// tasks (REBUILD replacements) can be added mid-run through the
+    /// [`Spawner`] passed to every `poll`. Returns one `(rank, result)`
+    /// per task ever run, in spawn order. A global stall (every live
+    /// task parked with nothing in flight) is reported as
+    /// [`Fail::Stalled`] instead of hanging. To share one pool across
+    /// many concurrent worlds, use [`Pool::submit`] instead.
     pub fn run_tasks(
         self: &Arc<Self>,
         workers: usize,

@@ -1,5 +1,6 @@
 //! Bounded worker-pool scheduler: the engine that lets one process
-//! simulate P >= 512 ranks.
+//! simulate P >= 512 ranks — and, since the service refactor, many
+//! concurrent *jobs* (whole simulated worlds) on one persistent pool.
 //!
 //! The thread-per-rank engine ([`super::World::run_all`]) burns an OS
 //! thread per simulated process, which caps experiments at a few dozen
@@ -9,23 +10,33 @@
 //! [`TaskPoll::Pending`] and **parks**. A fixed set of workers (default:
 //! the machine's core count) drains a run queue of unparked tasks.
 //!
+//! A [`Pool`] is long-lived: jobs are *submitted* into it ([`Pool::submit`])
+//! as task groups, each bound to its own [`World`], and complete through a
+//! caller-supplied callback — the multi-tenant factorization service
+//! ([`crate::service`]) multiplexes many (FT-)CAQR/TSQR jobs over one
+//! pool this way. Tasks from different jobs interleave freely on the
+//! workers; mailboxes, metrics, fault plans and retained recovery state
+//! are all per-[`World`], so jobs cannot observe each other.
+//!
 //! Wakeup protocol (see `DESIGN.md` "Scheduler: parking and wakeup"):
 //!
 //! * every event delivered to rank `r`'s mailbox (message, death notice,
 //!   revive notice) calls the [`super::Router`]'s registered waker, which
-//!   re-queues `r`'s task if it is parked;
+//!   re-queues `r`'s task in its owning job if it is parked;
 //! * a wake that lands while the task is mid-poll sets a *dirty* flag so
 //!   the task is immediately re-queued when its poll parks — the classic
 //!   lost-wakeup guard;
 //! * REBUILD replacements are injected mid-run through the [`Spawner`]
-//!   handed to every poll, and their results are collected with
-//!   everyone else's.
+//!   handed to every poll; the spawner carries the job identity, so a
+//!   replacement always lands in the task group of the world it belongs
+//!   to, and its result is collected with the rest of that job's.
 //!
-//! Because events are only ever produced by running tasks, "run queue
-//! empty and nothing running but live tasks remain" is a proof of global
-//! deadlock; the pool then fails every parked task with
-//! [`Fail::Stalled`] instead of hanging the process — protocol bugs
-//! surface as crisp errors even at P = 1024.
+//! Because a job's events are only ever produced by that job's running
+//! tasks, "none of the job's tasks queued or running but live tasks
+//! remain" is a proof of deadlock *for that job*; the pool then fails the
+//! job's parked tasks with [`Fail::Stalled`] and completes the job —
+//! protocol bugs surface as crisp per-job errors without stalling
+//! unrelated tenants.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -60,6 +71,14 @@ pub fn default_workers(n_tasks: usize) -> usize {
     hw.clamp(1, n_tasks.max(1))
 }
 
+/// Identifier of one job (task group) inside a [`Pool`].
+pub type JobId = u64;
+
+/// Per-job results: one `(rank, result)` per task ever run, spawn order.
+pub type JobResults = Vec<(usize, Result<(), Fail>)>;
+
+type OnDone = Box<dyn FnOnce(JobResults) + Send + 'static>;
+
 enum RunState {
     /// In the run queue.
     Queued,
@@ -81,15 +100,49 @@ struct Slot {
     result: Option<Result<(), Fail>>,
 }
 
-struct CoreState {
+/// One submitted job: a group of task slots bound to one [`World`].
+struct JobState {
     slots: Vec<Slot>,
-    queue: VecDeque<usize>,
     /// rank -> live task id (the latest incarnation's task).
     rank_task: HashMap<usize, usize>,
     /// Tasks not yet Done.
     active: usize,
     /// Tasks currently being polled.
     running: usize,
+    /// Tasks sitting in the run queue.
+    queued: usize,
+    /// Completion callback; invoked exactly once, off the core lock.
+    on_done: Option<OnDone>,
+}
+
+impl JobState {
+    fn take_results(&mut self) -> JobResults {
+        self.slots
+            .iter_mut()
+            .map(|s| (s.rank, s.result.take().unwrap_or(Err(Fail::Stalled))))
+            .collect()
+    }
+
+    /// Fail every unfinished task (the job can make no further progress).
+    fn stall_remaining(&mut self) {
+        for slot in self.slots.iter_mut() {
+            if !matches!(slot.run, RunState::Done) {
+                slot.cell = None; // drop ctx -> publish final clock
+                slot.run = RunState::Done;
+                slot.result = Some(Err(Fail::Stalled));
+            }
+        }
+        self.active = 0;
+        self.rank_task.clear();
+    }
+}
+
+struct CoreState {
+    jobs: HashMap<JobId, JobState>,
+    /// Global run queue of (job, slot) pairs, shared by all tenants.
+    queue: VecDeque<(JobId, usize)>,
+    next_job: JobId,
+    shutdown: bool,
 }
 
 struct Core {
@@ -101,63 +154,109 @@ impl Core {
     fn new() -> Arc<Self> {
         Arc::new(Self {
             state: Mutex::new(CoreState {
-                slots: Vec::new(),
+                jobs: HashMap::new(),
                 queue: VecDeque::new(),
-                rank_task: HashMap::new(),
-                active: 0,
-                running: 0,
+                next_job: 0,
+                shutdown: false,
             }),
             cv: Condvar::new(),
         })
     }
 
-    /// Router waker target: unpark rank `rank`'s live task.
-    fn wake(&self, rank: usize) {
+    /// Router waker target: unpark rank `rank`'s live task in `job`.
+    /// Wakes for already-completed jobs are no-ops.
+    fn wake(&self, job: JobId, rank: usize) {
         let mut g = self.state.lock().unwrap();
-        if let Some(&id) = g.rank_task.get(&rank) {
-            match g.slots[id].run {
+        let gs = &mut *g;
+        let Some(js) = gs.jobs.get_mut(&job) else { return };
+        if let Some(&id) = js.rank_task.get(&rank) {
+            match js.slots[id].run {
                 RunState::Parked => {
-                    g.slots[id].run = RunState::Queued;
-                    g.queue.push_back(id);
+                    js.slots[id].run = RunState::Queued;
+                    js.queued += 1;
+                    gs.queue.push_back((job, id));
                     self.cv.notify_one();
                 }
                 RunState::Running { .. } => {
-                    g.slots[id].run = RunState::Running { dirty: true };
+                    js.slots[id].run = RunState::Running { dirty: true };
                 }
                 RunState::Queued | RunState::Done => {}
             }
         }
     }
+}
 
-    fn results(&self) -> Vec<(usize, Result<(), Fail>)> {
-        let mut g = self.state.lock().unwrap();
-        g.slots
-            .iter_mut()
-            .map(|s| (s.rank, s.result.take().unwrap_or(Err(Fail::Stalled))))
-            .collect()
+/// If `job` can no longer make progress (finished or stalled), remove it
+/// and hand back its results + completion callback — the caller invokes
+/// the callback AFTER releasing the core lock (it may re-enter the pool,
+/// e.g. a service admission pump submitting the next queued job).
+fn settle_job(gs: &mut CoreState, job: JobId) -> Option<(JobResults, OnDone)> {
+    let js = gs.jobs.get_mut(&job)?;
+    if js.active > 0 && (js.running > 0 || js.queued > 0) {
+        return None; // still runnable
+    }
+    if js.active > 0 {
+        // Per-job deadlock: every live task parked, none queued, no poll
+        // in flight — and a job's events are only produced by its own
+        // running tasks. Fail crisply instead of hanging the tenant.
+        js.stall_remaining();
+    }
+    let mut js = gs.jobs.remove(&job).expect("job present");
+    let results = js.take_results();
+    let on_done = js.on_done.take().expect("on_done invoked once");
+    Some((results, on_done))
+}
+
+/// Human-readable message from a caught panic payload.
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Invoke a job's completion callback, containing its panics: a
+/// panicking `on_done` (e.g. a finalizer tripping on a protocol bug)
+/// must not take down the worker thread and starve unrelated tenants.
+fn run_on_done(job: JobId, on_done: OnDone, results: JobResults) {
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || on_done(results)));
+    if let Err(payload) = res {
+        eprintln!(
+            "sim worker: completion callback for job {job} panicked: {}",
+            panic_msg(payload.as_ref())
+        );
     }
 }
 
-/// Handle for adding tasks to a running pool (REBUILD replacements).
-/// Cloneable and passed to every [`RankTask::poll`].
+/// Handle for adding tasks to a running job (REBUILD replacements).
+/// Cloneable and passed to every [`RankTask::poll`]; spawns always land
+/// in the job the polled task belongs to.
 #[derive(Clone)]
 pub struct Spawner {
     core: Arc<Core>,
+    job: JobId,
 }
 
 impl Spawner {
-    /// Register `task` as rank `ctx.rank`'s live task and queue it. The
-    /// rank's previous task (if any) keeps running to completion but no
-    /// longer receives wakeups — it is expected to be dead/superseded
-    /// (see [`RankCtx::check_self`]).
+    /// Register `task` as rank `ctx.rank`'s live task in this job and
+    /// queue it. The rank's previous task (if any) keeps running to
+    /// completion but no longer receives wakeups — it is expected to be
+    /// dead/superseded (see [`RankCtx::check_self`]).
     pub fn spawn(&self, ctx: RankCtx, task: Box<dyn RankTask>) {
         let mut g = self.core.state.lock().unwrap();
-        let id = g.slots.len();
+        let gs = &mut *g;
+        let js = gs
+            .jobs
+            .get_mut(&self.job)
+            .expect("spawn into a live job (a polled task's job cannot complete)");
+        let id = js.slots.len();
         let rank = ctx.rank;
-        g.slots.push(Slot { rank, run: RunState::Queued, cell: Some((ctx, task)), result: None });
-        g.rank_task.insert(rank, id);
-        g.active += 1;
-        g.queue.push_back(id);
+        js.slots.push(Slot { rank, run: RunState::Queued, cell: Some((ctx, task)), result: None });
+        js.rank_task.insert(rank, id);
+        js.active += 1;
+        js.queued += 1;
+        gs.queue.push_back((self.job, id));
         self.core.cv.notify_one();
     }
 }
@@ -167,110 +266,277 @@ enum PollOutcome {
     Parked(RankCtx, Box<dyn RankTask>),
 }
 
-fn worker_loop(core: &Arc<Core>, sp: &Spawner) {
+fn worker_loop(core: &Arc<Core>) {
     let mut g = core.state.lock().unwrap();
     loop {
-        if let Some(id) = g.queue.pop_front() {
-            let Some((mut ctx, mut task)) = g.slots[id].cell.take() else {
-                continue; // stale queue entry for a finished task
-            };
-            g.slots[id].run = RunState::Running { dirty: false };
-            g.running += 1;
-            drop(g);
+        if let Some((job, id)) = g.queue.pop_front() {
+            let settled = {
+                let gs = &mut *g;
+                let Some(js) = gs.jobs.get_mut(&job) else {
+                    continue; // stale entry for a completed job
+                };
+                js.queued -= 1;
+                let Some((mut ctx, mut task)) = js.slots[id].cell.take() else {
+                    continue; // stale entry for a finished task
+                };
+                js.slots[id].run = RunState::Running { dirty: false };
+                js.running += 1;
+                drop(g);
 
-            let outcome = match task.poll(&mut ctx, sp) {
-                TaskPoll::Ready(res) => {
-                    // Dropping the ctx publishes the final logical clock.
-                    drop(ctx);
-                    drop(task);
-                    PollOutcome::Finished(res)
-                }
-                TaskPoll::Pending => PollOutcome::Parked(ctx, task),
-            };
+                let sp = Spawner { core: core.clone(), job };
+                let polled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    task.poll(&mut ctx, &sp)
+                }));
+                let outcome = match polled {
+                    Ok(TaskPoll::Ready(res)) => {
+                        // Dropping the ctx publishes the final logical clock.
+                        drop(ctx);
+                        drop(task);
+                        PollOutcome::Finished(res)
+                    }
+                    Ok(TaskPoll::Pending) => PollOutcome::Parked(ctx, task),
+                    Err(payload) => {
+                        // A panicking task must not wedge the pool: without
+                        // this, the job's running count never drops, it never
+                        // settles, and every waiter (JobHandle::wait,
+                        // Pool::run, Pool::drop's joins) hangs forever. Fail
+                        // the task, and kill its rank so same-job peers see a
+                        // death notice instead of parking indefinitely.
+                        eprintln!(
+                            "sim worker: task for rank {} (job {job}) panicked: {}",
+                            ctx.rank,
+                            panic_msg(payload.as_ref())
+                        );
+                        ctx.router().kill(ctx.rank);
+                        drop(ctx);
+                        drop(task);
+                        PollOutcome::Finished(Err(Fail::TaskPanicked))
+                    }
+                };
 
-            g = core.state.lock().unwrap();
-            g.running -= 1;
-            match outcome {
-                PollOutcome::Finished(res) => {
-                    let rank = g.slots[id].rank;
-                    g.slots[id].run = RunState::Done;
-                    g.slots[id].result = Some(res);
-                    if g.rank_task.get(&rank) == Some(&id) {
-                        g.rank_task.remove(&rank);
+                g = core.state.lock().unwrap();
+                let gs = &mut *g;
+                let js = gs.jobs.get_mut(&job).expect("job pinned by running task");
+                js.running -= 1;
+                match outcome {
+                    PollOutcome::Finished(res) => {
+                        let rank = js.slots[id].rank;
+                        js.slots[id].run = RunState::Done;
+                        js.slots[id].result = Some(res);
+                        if js.rank_task.get(&rank) == Some(&id) {
+                            js.rank_task.remove(&rank);
+                        }
+                        js.active -= 1;
                     }
-                    g.active -= 1;
-                    if g.active == 0 {
-                        core.cv.notify_all();
+                    PollOutcome::Parked(ctx, task) => {
+                        let dirty = matches!(js.slots[id].run, RunState::Running { dirty: true });
+                        js.slots[id].cell = Some((ctx, task));
+                        if dirty {
+                            js.slots[id].run = RunState::Queued;
+                            js.queued += 1;
+                            gs.queue.push_back((job, id));
+                            core.cv.notify_one();
+                        } else {
+                            js.slots[id].run = RunState::Parked;
+                        }
                     }
                 }
-                PollOutcome::Parked(ctx, task) => {
-                    let dirty = matches!(g.slots[id].run, RunState::Running { dirty: true });
-                    g.slots[id].cell = Some((ctx, task));
-                    if dirty {
-                        g.slots[id].run = RunState::Queued;
-                        g.queue.push_back(id);
-                        core.cv.notify_one();
-                    } else {
-                        g.slots[id].run = RunState::Parked;
-                    }
-                }
+                settle_job(gs, job)
+            };
+            if let Some((results, on_done)) = settled {
+                drop(g);
+                run_on_done(job, on_done, results);
+                g = core.state.lock().unwrap();
+            }
+            if g.shutdown {
+                core.cv.notify_all();
             }
             continue;
         }
-        if g.active == 0 {
-            core.cv.notify_all();
-            return;
-        }
-        if g.running == 0 {
-            // Global stall: every live task is parked, no poll is in
-            // flight, and events are only produced by running tasks —
-            // nothing can ever wake anyone again. Fail crisply.
-            for slot in g.slots.iter_mut() {
-                if !matches!(slot.run, RunState::Done) {
-                    slot.cell = None; // drop ctx -> publish final clock
-                    slot.run = RunState::Done;
-                    slot.result = Some(Err(Fail::Stalled));
+        if g.shutdown {
+            // Queue drained. Jobs with a poll still in flight will come
+            // back through the loop above; anything else can never run
+            // again — fail it so no submitter waits forever.
+            let stuck: Vec<JobId> = g
+                .jobs
+                .iter()
+                .filter(|(_, js)| js.running == 0)
+                .map(|(id, _)| *id)
+                .collect();
+            for job in stuck {
+                let settled = {
+                    let gs = &mut *g;
+                    // Another idle worker may have drained this job while
+                    // we released the lock for a previous callback.
+                    let Some(js) = gs.jobs.get_mut(&job) else { continue };
+                    js.stall_remaining();
+                    settle_job(gs, job)
+                };
+                if let Some((results, on_done)) = settled {
+                    drop(g);
+                    run_on_done(job, on_done, results);
+                    g = core.state.lock().unwrap();
                 }
             }
-            g.active = 0;
-            g.rank_task.clear();
-            core.cv.notify_all();
-            return;
+            if g.jobs.is_empty() && g.queue.is_empty() {
+                core.cv.notify_all();
+                return;
+            }
         }
         g = core.cv.wait(g).unwrap();
     }
 }
 
-/// Run `tasks` to completion on `workers` pool threads (see
-/// [`World::run_tasks`]).
+/// A persistent, multi-tenant worker pool driving [`RankTask`] groups.
+///
+/// One `Pool` outlives many jobs: each [`Pool::submit`] registers a task
+/// group bound to one [`World`] and returns immediately; the job's
+/// results are delivered to its `on_done` callback on a worker thread
+/// when the last task finishes (or the job stalls). [`Pool::run`] is the
+/// blocking convenience used by the one-shot drivers.
+///
+/// Dropping the pool stops the workers: queued work is drained first,
+/// and any job that can no longer progress is failed with
+/// [`Fail::Stalled`] (its callback still fires).
+pub struct Pool {
+    core: Arc<Core>,
+    workers: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Start a pool with `workers` threads (minimum 1).
+    pub fn new(workers: usize) -> Self {
+        let core = Core::new();
+        let n = workers.max(1);
+        let handles = (0..n)
+            .map(|i| {
+                let core = core.clone();
+                std::thread::Builder::new()
+                    .name(format!("sim-worker-{i}"))
+                    .spawn(move || worker_loop(&core))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { core, workers: n, handles }
+    }
+
+    /// The pool's worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Submit a job: drive `tasks` (each paired with its rank in
+    /// `world`) to completion, then invoke `on_done` with one
+    /// `(rank, result)` per task ever run, in spawn order — REBUILD
+    /// replacements spawned mid-run through the [`Spawner`] are included.
+    /// Installs the pool as `world`'s waker; the world must be dedicated
+    /// to this job. `on_done` runs on a worker thread and may call back
+    /// into the pool (e.g. submit a follow-up job), but must not block
+    /// on this pool's own results.
+    pub fn submit(
+        &self,
+        world: &Arc<World>,
+        tasks: Vec<(usize, Box<dyn RankTask>)>,
+        on_done: impl FnOnce(JobResults) + Send + 'static,
+    ) -> JobId {
+        // Register the (empty) job first so the waker target exists
+        // before any task can run.
+        let job = {
+            let mut g = self.core.state.lock().unwrap();
+            let job = g.next_job;
+            g.next_job += 1;
+            g.jobs.insert(
+                job,
+                JobState {
+                    slots: Vec::new(),
+                    rank_task: HashMap::new(),
+                    active: 0,
+                    running: 0,
+                    queued: 0,
+                    on_done: Some(Box::new(on_done)),
+                },
+            );
+            job
+        };
+        {
+            let c = self.core.clone();
+            let waker: super::Waker = Arc::new(move |rank| c.wake(job, rank));
+            world.router().set_waker(Some(waker));
+        }
+        // Take contexts outside the core lock (the world has its own).
+        let cells: Vec<(RankCtx, Box<dyn RankTask>)> =
+            tasks.into_iter().map(|(rank, task)| (world.ctx(rank), task)).collect();
+        let settled = {
+            let mut g = self.core.state.lock().unwrap();
+            let gs = &mut *g;
+            let js = gs.jobs.get_mut(&job).expect("just inserted");
+            for (ctx, task) in cells {
+                let id = js.slots.len();
+                let rank = ctx.rank;
+                js.slots.push(Slot {
+                    rank,
+                    run: RunState::Queued,
+                    cell: Some((ctx, task)),
+                    result: None,
+                });
+                js.rank_task.insert(rank, id);
+                js.active += 1;
+                js.queued += 1;
+                gs.queue.push_back((job, id));
+            }
+            self.core.cv.notify_all();
+            // Degenerate empty submission: complete immediately.
+            settle_job(gs, job)
+        };
+        if let Some((results, on_done)) = settled {
+            run_on_done(job, on_done, results);
+        }
+        job
+    }
+
+    /// Submit `tasks` and block until the job completes; returns its
+    /// results (see [`Pool::submit`] for the contract).
+    pub fn run(
+        &self,
+        world: &Arc<World>,
+        tasks: Vec<(usize, Box<dyn RankTask>)>,
+    ) -> JobResults {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(world, tasks, move |results| {
+            let _ = tx.send(results);
+        });
+        rx.recv().expect("pool delivers job results")
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.core.state.lock().unwrap();
+            g.shutdown = true;
+        }
+        self.core.cv.notify_all();
+        for h in self.handles.drain(..) {
+            // Workers contain task/callback panics (catch_unwind in
+            // worker_loop), so joins terminate once the jobs drain.
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `tasks` to completion on an ephemeral `workers`-thread pool (see
+/// [`World::run_tasks`]). One-shot drivers use this; the multi-tenant
+/// service keeps a persistent [`Pool`] instead.
 pub(crate) fn run_pool(
     world: &Arc<World>,
     workers: usize,
     tasks: Vec<(usize, Box<dyn RankTask>)>,
-) -> Vec<(usize, Result<(), Fail>)> {
-    let core = Core::new();
-    {
-        let c = core.clone();
-        let waker: super::Waker = Arc::new(move |rank| c.wake(rank));
-        world.router().set_waker(Some(waker));
-    }
-    let sp = Spawner { core: core.clone() };
-    for (rank, task) in tasks {
-        sp.spawn(world.ctx(rank), task);
-    }
-    let nworkers = workers.max(1);
-    std::thread::scope(|s| {
-        for i in 0..nworkers {
-            let core = core.clone();
-            let sp = sp.clone();
-            std::thread::Builder::new()
-                .name(format!("sim-worker-{i}"))
-                .spawn_scoped(s, move || worker_loop(&core, &sp))
-                .expect("spawn pool worker");
-        }
-    });
+) -> JobResults {
+    let pool = Pool::new(workers);
+    let results = pool.run(world, tasks);
     world.router().set_waker(None);
-    core.results()
+    results
 }
 
 #[cfg(test)]
@@ -323,14 +589,17 @@ mod tests {
         }
     }
 
+    fn pingpong_tasks(n: usize) -> Vec<(usize, Box<dyn RankTask>)> {
+        (0..n)
+            .map(|r| (r, Box::new(PingPong { sent: false }) as Box<dyn RankTask>))
+            .collect()
+    }
+
     #[test]
     fn pool_runs_many_ranks_on_few_workers() {
         let n = 128;
         let w = World::new(n, CostModel::default(), FaultPlan::none());
-        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..n)
-            .map(|r| (r, Box::new(PingPong { sent: false }) as Box<dyn RankTask>))
-            .collect();
-        let results = w.run_tasks(4, tasks);
+        let results = w.run_tasks(4, pingpong_tasks(n));
         assert_eq!(results.len(), n);
         for (rank, res) in results {
             assert_eq!(res, Ok(()), "rank {rank}");
@@ -400,13 +669,14 @@ mod tests {
         }
     }
 
+    fn forever_tasks(n: usize) -> Vec<(usize, Box<dyn RankTask>)> {
+        (0..n).map(|r| (r, Box::new(Forever) as Box<dyn RankTask>)).collect()
+    }
+
     #[test]
     fn global_stall_is_detected_not_hung() {
         let w = World::new(2, CostModel::default(), FaultPlan::none());
-        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..2)
-            .map(|r| (r, Box::new(Forever) as Box<dyn RankTask>))
-            .collect();
-        let results = w.run_tasks(2, tasks);
+        let results = w.run_tasks(2, forever_tasks(2));
         for (_, res) in results {
             assert_eq!(res, Err(Fail::Stalled));
         }
@@ -451,5 +721,63 @@ mod tests {
         assert_eq!(results.len(), 2);
         assert!(results.iter().all(|(_, r)| r.is_ok()));
         assert_eq!(results[1].0, 1);
+    }
+
+    #[test]
+    fn one_pool_drives_many_jobs_concurrently() {
+        // The multi-tenant contract in miniature: 8 independent worlds
+        // submitted into one 3-worker pool, all complete, and each job's
+        // per-world metrics see exactly its own traffic.
+        let pool = Pool::new(3);
+        let n = 16;
+        let worlds: Vec<_> =
+            (0..8).map(|_| World::new(n, CostModel::default(), FaultPlan::none())).collect();
+        let (tx, rx) = std::sync::mpsc::channel();
+        for (j, w) in worlds.iter().enumerate() {
+            let tx = tx.clone();
+            pool.submit(w, pingpong_tasks(n), move |results| {
+                let _ = tx.send((j, results));
+            });
+        }
+        drop(tx);
+        let mut done = 0;
+        while let Ok((j, results)) = rx.recv() {
+            assert_eq!(results.len(), n, "job {j}");
+            assert!(results.iter().all(|(_, r)| r.is_ok()), "job {j}");
+            done += 1;
+        }
+        assert_eq!(done, 8);
+        for w in &worlds {
+            assert_eq!(w.metrics.snapshot().messages, n as u64);
+        }
+    }
+
+    #[test]
+    fn stalled_job_does_not_block_neighbors() {
+        // One tenant deadlocks; the pool fails it with Stalled while the
+        // healthy tenant completes normally.
+        let pool = Pool::new(2);
+        let bad = World::new(2, CostModel::default(), FaultPlan::none());
+        let good = World::new(8, CostModel::default(), FaultPlan::none());
+        let (tx_b, rx_b) = std::sync::mpsc::channel();
+        let (tx_g, rx_g) = std::sync::mpsc::channel();
+        pool.submit(&bad, forever_tasks(2), move |r| {
+            let _ = tx_b.send(r);
+        });
+        pool.submit(&good, pingpong_tasks(8), move |r| {
+            let _ = tx_g.send(r);
+        });
+        let good_res = rx_g.recv().unwrap();
+        assert!(good_res.iter().all(|(_, r)| r.is_ok()));
+        let bad_res = rx_b.recv().unwrap();
+        assert!(bad_res.iter().all(|(_, r)| *r == Err(Fail::Stalled)));
+    }
+
+    #[test]
+    fn empty_submission_completes_immediately() {
+        let pool = Pool::new(1);
+        let w = World::new(1, CostModel::default(), FaultPlan::none());
+        let results = pool.run(&w, Vec::new());
+        assert!(results.is_empty());
     }
 }

@@ -1,0 +1,288 @@
+//! Service-level integration: many concurrent tenants on one pool.
+//!
+//! The contract under test (ISSUE 4 acceptance):
+//! * >= 32 concurrent jobs of mixed CAQR and TSQR shapes, with faults
+//!   injected into a subset, run on a pool far narrower than the total
+//!   simulated rank count — and every job's factor output is **bitwise
+//!   identical** to the same job run alone;
+//! * a job poisoned by a correlated buddy-pair kill fails individually
+//!   with `Fail::Unrecoverable` while its neighbors complete;
+//! * per-job metrics are isolated: a job's message/byte/flop counts are
+//!   the same whether it runs concurrently or serially;
+//! * the batched TSQR lane amortizes message counts without changing
+//!   any job's result.
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::RunConfig;
+use ftcaqr::coordinator::{run_caqr, run_tsqr_pooled, TsqrMode};
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
+use ftcaqr::ft::Fail;
+use ftcaqr::linalg::Matrix;
+use ftcaqr::service::{seed_for, JobOutput, JobSpec, Service, ServiceConfig};
+use ftcaqr::sim::CostModel;
+use ftcaqr::trace::Trace;
+
+fn caqr_spec(procs: usize, cols: usize, seed: u64, kills: Vec<ScheduledKill>) -> JobSpec {
+    JobSpec::Caqr {
+        cfg: RunConfig {
+            rows: procs * 32,
+            cols,
+            block: 16,
+            procs,
+            seed,
+            verify: false,
+            ..Default::default()
+        },
+        kills,
+    }
+}
+
+fn tsqr_spec(procs: usize, seed: u64) -> JobSpec {
+    JobSpec::Tsqr { rows: procs * 8, block: 8, procs, mode: TsqrMode::FaultTolerant, seed }
+}
+
+/// Run the same job alone (its own private pool) and return its factors.
+fn solo_factors(spec: &JobSpec) -> (Matrix, ftcaqr::metrics::Report) {
+    match spec {
+        JobSpec::Caqr { cfg, kills } => {
+            let fault = if kills.is_empty() {
+                FaultPlan::none()
+            } else {
+                FaultPlan::schedule(kills.clone())
+            };
+            let out =
+                run_caqr(cfg.clone(), Backend::native(), fault, Trace::disabled())
+                    .expect("solo caqr");
+            (out.r, out.report)
+        }
+        JobSpec::Tsqr { rows, block, procs, mode, seed } => {
+            let a = Matrix::randn(*rows, *block, *seed);
+            let out = run_tsqr_pooled(
+                &a,
+                *procs,
+                *mode,
+                Backend::native(),
+                CostModel::default(),
+                2,
+            )
+            .expect("solo tsqr");
+            (out.r, out.report)
+        }
+    }
+}
+
+fn job_r(output: &JobOutput) -> &Matrix {
+    match output {
+        JobOutput::Caqr(out) => &out.r,
+        JobOutput::Tsqr { r, .. } => r,
+    }
+}
+
+#[test]
+fn thirty_two_concurrent_mixed_jobs_match_solo_bitwise() {
+    // 33 jobs, three shapes, faults in every sixth job; the pool is 4
+    // threads wide while the workload simulates ~230 ranks in total.
+    let specs: Vec<JobSpec> = (0..33u64)
+        .map(|i| {
+            let seed = seed_for(7, i);
+            let kills = if i % 6 == 0 {
+                vec![ScheduledKill::new(1, 0, 0, Phase::Update)]
+            } else {
+                Vec::new()
+            };
+            match i % 3 {
+                0 => caqr_spec(4, 32, seed, kills),
+                1 => caqr_spec(8, 64, seed, kills),
+                _ => tsqr_spec(16, seed),
+            }
+        })
+        .collect();
+    let total_ranks: usize = specs.iter().map(|s| s.procs()).sum();
+    let workers = 4;
+    assert!(workers * 8 < total_ranks, "pool must be << total simulated ranks");
+
+    let svc = Service::new(ServiceConfig {
+        workers,
+        max_inflight_ranks: 48,
+        batch_max: 4,
+    });
+    let handles = svc.submit_all(specs.clone()).unwrap();
+    let outcomes: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+
+    for (i, (spec, outcome)) in specs.iter().zip(&outcomes).enumerate() {
+        let output = outcome
+            .output
+            .as_ref()
+            .unwrap_or_else(|e| panic!("job {i} failed: {e:?}"));
+        match spec {
+            JobSpec::Caqr { cfg, kills } => {
+                // The reduced matrix too, not just R — and failure
+                // accounting stays per-job.
+                let JobOutput::Caqr(out) = output else { panic!("job {i}: caqr expected") };
+                let fault = if kills.is_empty() {
+                    FaultPlan::none()
+                } else {
+                    FaultPlan::schedule(kills.clone())
+                };
+                let solo =
+                    run_caqr(cfg.clone(), Backend::native(), fault, Trace::disabled())
+                        .unwrap();
+                assert_eq!(out.r, solo.r, "job {i}: R must be bitwise-identical");
+                assert_eq!(out.reduced, solo.reduced, "job {i}");
+                assert_eq!(out.report.failures, kills.len() as u64, "job {i}");
+            }
+            JobSpec::Tsqr { .. } => {
+                let (solo_r, _) = solo_factors(spec);
+                assert_eq!(
+                    job_r(output),
+                    &solo_r,
+                    "job {i}: factors must be bitwise-identical"
+                );
+            }
+        }
+    }
+    let totals = svc.totals();
+    assert_eq!(totals.jobs_ok, 33);
+    assert_eq!(totals.jobs_failed, 0);
+    // Faulted jobs recovered (6 faulted CAQR jobs: i = 0,6,12,18,24,30).
+    assert_eq!(totals.report.failures, 6);
+    assert_eq!(totals.report.recoveries, 6);
+}
+
+#[test]
+fn poisoned_job_fails_alone_with_unrecoverable() {
+    // Job 1 gets a correlated buddy-pair kill at a step whose retained
+    // redundancy both victims hold: unrecoverable by the single-buddy
+    // protocol. Its neighbors (including a faulted-but-recoverable job)
+    // must complete untouched.
+    let pair = vec![
+        ScheduledKill::new(2, 0, 1, Phase::Tsqr).in_group(0),
+        ScheduledKill::new(3, 0, 1, Phase::Tsqr).in_group(0),
+    ];
+    let specs = vec![
+        caqr_spec(4, 64, seed_for(11, 0), Vec::new()),
+        JobSpec::Caqr {
+            cfg: RunConfig {
+                rows: 256,
+                cols: 64,
+                block: 16,
+                procs: 4,
+                seed: seed_for(11, 1),
+                verify: false,
+                ..Default::default()
+            },
+            kills: pair,
+        },
+        caqr_spec(8, 64, seed_for(11, 2), vec![ScheduledKill::new(1, 0, 0, Phase::Update)]),
+        tsqr_spec(8, seed_for(11, 3)),
+    ];
+    let svc = Service::new(ServiceConfig {
+        workers: 3,
+        max_inflight_ranks: 64,
+        batch_max: 1,
+    });
+    let outcomes: Vec<_> =
+        svc.submit_all(specs).unwrap().into_iter().map(|h| h.wait()).collect();
+
+    let poisoned = &outcomes[1];
+    let err = poisoned.output.as_ref().expect_err("buddy-pair kill must poison the job");
+    assert!(
+        matches!(err.fail, Some(Fail::Unrecoverable { .. })),
+        "expected Unrecoverable, got {:?}",
+        err.fail
+    );
+    assert!(poisoned.unrecoverable());
+    assert!(err.message.contains("unrecoverable"), "{}", err.message);
+    for (i, o) in outcomes.iter().enumerate() {
+        if i != 1 {
+            assert!(o.output.is_ok(), "job {i} must be unaffected: {:?}", o.output);
+        }
+    }
+    let totals = svc.totals();
+    assert_eq!(totals.jobs_ok, 3);
+    assert_eq!(totals.jobs_failed, 1);
+}
+
+#[test]
+fn per_job_metrics_are_isolated_under_concurrency() {
+    // Failure-free jobs report exactly the same per-job message/byte/
+    // flop counts whether they share the pool with five neighbors or run
+    // alone on a private pool.
+    let specs: Vec<JobSpec> = (0..6u64)
+        .map(|i| match i % 3 {
+            0 => caqr_spec(4, 32, seed_for(23, i), Vec::new()),
+            1 => caqr_spec(8, 64, seed_for(23, i), Vec::new()),
+            _ => tsqr_spec(8, seed_for(23, i)),
+        })
+        .collect();
+    let svc = Service::new(ServiceConfig {
+        workers: 4,
+        max_inflight_ranks: 0,
+        batch_max: 1, // unbatched so every job has its own world/report
+    });
+    let outcomes: Vec<_> =
+        svc.submit_all(specs.clone()).unwrap().into_iter().map(|h| h.wait()).collect();
+    for (i, (spec, o)) in specs.iter().zip(&outcomes).enumerate() {
+        assert!(o.output.is_ok(), "job {i}: {:?}", o.output);
+        let (_, solo_report) = solo_factors(spec);
+        assert_eq!(o.report.messages, solo_report.messages, "job {i} messages");
+        assert_eq!(o.report.exchanges, solo_report.exchanges, "job {i} exchanges");
+        assert_eq!(o.report.bytes, solo_report.bytes, "job {i} bytes");
+        assert_eq!(o.report.flops, solo_report.flops, "job {i} flops");
+    }
+    // And the service totals are exactly the sum of the per-job reports.
+    let totals = svc.totals();
+    let sum_msgs: u64 = outcomes.iter().map(|o| o.report.messages).sum();
+    let sum_bytes: u64 = outcomes.iter().map(|o| o.report.bytes).sum();
+    assert_eq!(totals.report.messages, sum_msgs);
+    assert_eq!(totals.report.bytes, sum_bytes);
+}
+
+#[test]
+fn batched_lane_amortizes_without_changing_results() {
+    let k = 8u64;
+    let specs: Vec<JobSpec> = (0..k).map(|i| tsqr_spec(16, seed_for(31, i))).collect();
+    let svc = Service::new(ServiceConfig {
+        workers: 4,
+        max_inflight_ranks: 0,
+        batch_max: k as usize,
+    });
+    let outcomes: Vec<_> =
+        svc.submit_all(specs.clone()).unwrap().into_iter().map(|h| h.wait()).collect();
+    let mut batch_sizes = Vec::new();
+    for (i, (spec, o)) in specs.iter().zip(&outcomes).enumerate() {
+        let output = o.output.as_ref().unwrap_or_else(|e| panic!("job {i}: {e:?}"));
+        let JobOutput::Tsqr { r, batch_size } = output else { panic!("tsqr expected") };
+        let (solo_r, _) = solo_factors(spec);
+        assert_eq!(r, &solo_r, "job {i}: batched R must equal solo R bitwise");
+        batch_sizes.push(*batch_size);
+    }
+    // The whole burst rode one sweep...
+    assert!(batch_sizes.iter().all(|&b| b == k as usize), "{batch_sizes:?}");
+    // ...so the exchange count is one sweep's worth, not k sweeps'.
+    let (_, solo_report) = solo_factors(&specs[0]);
+    assert_eq!(svc.totals().report.exchanges, solo_report.exchanges);
+}
+
+#[test]
+fn admission_cap_narrower_than_workload_still_completes_fifo() {
+    // Cap of 8 in-flight ranks with 8-rank jobs: strictly one at a time,
+    // plus a 16-rank job wider than the cap that must run (alone) rather
+    // than starve.
+    let specs = vec![
+        caqr_spec(8, 32, seed_for(41, 0), Vec::new()),
+        tsqr_spec(16, seed_for(41, 1)), // wider than the cap
+        caqr_spec(8, 32, seed_for(41, 2), Vec::new()),
+    ];
+    let svc = Service::new(ServiceConfig {
+        workers: 2,
+        max_inflight_ranks: 8,
+        batch_max: 1,
+    });
+    let outcomes: Vec<_> =
+        svc.submit_all(specs).unwrap().into_iter().map(|h| h.wait()).collect();
+    assert!(outcomes.iter().all(|o| o.output.is_ok()));
+    assert_eq!(svc.totals().jobs_ok, 3);
+    let stats = svc.queue_stats();
+    assert_eq!((stats.pending, stats.inflight_jobs, stats.inflight_ranks), (0, 0, 0));
+}
