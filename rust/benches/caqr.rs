@@ -1,15 +1,19 @@
 //! E6 bench: end-to-end CAQR throughput — native vs XLA backends, plain
-//! vs FT, with scaling over P. This is the headline table.
+//! vs FT, with scaling over P — plus the lookahead-pipeline sweep
+//! (simulated makespan vs depth L, failure-free and single-kill),
+//! emitting kernels.rs-style JSON for the CI perf trail.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use std::sync::Arc;
 
+use common::JsonVal;
 use ftcaqr::backend::Backend;
 use ftcaqr::config::{Algorithm, RunConfig};
 use ftcaqr::coordinator::caqr::run_caqr;
-use ftcaqr::fault::FaultPlan;
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
+use ftcaqr::linalg::Matrix;
 use ftcaqr::runtime::Engine;
 use ftcaqr::trace::Trace;
 
@@ -18,7 +22,12 @@ fn bench_backend(name: &str, be: impl Fn() -> Arc<Backend>) {
         "{:>8} {:>5} {:>11} | {:>12} {:>12} {:>14}",
         "backend", "P", "matrix", "wall (ms)", "cp (us)", "host GFLOP/s"
     );
-    for (procs, rows, cols) in [(4usize, 512usize, 128usize), (8, 1024, 256), (8, 1024, 512)] {
+    let shapes: &[(usize, usize, usize)] = if common::smoke() {
+        &[(4, 512, 128)]
+    } else {
+        &[(4, 512, 128), (8, 1024, 256), (8, 1024, 512)]
+    };
+    for &(procs, rows, cols) in shapes {
         for alg in [Algorithm::Plain, Algorithm::FaultTolerant] {
             let cfg = RunConfig {
                 rows,
@@ -45,6 +54,92 @@ fn bench_backend(name: &str, be: impl Fn() -> Arc<Backend>) {
     }
 }
 
+/// Lookahead sweep: L in {0, 1, 2, 4} at two matrix shapes, failure-free
+/// and with one mid-run kill + REBUILD. Asserts the pipeline's bitwise
+/// determinism contract (factors identical to L = 0) and reports the
+/// simulated makespan (critical path) each depth achieves.
+fn bench_lookahead(sink: &mut common::JsonSink) {
+    common::header("E6c: lookahead pipeline (simulated makespan vs depth L)");
+    let shapes: &[(usize, usize, usize, usize)] = if common::smoke() {
+        &[(256, 64, 16, 4)]
+    } else {
+        &[(512, 128, 32, 4), (1024, 256, 32, 8)]
+    };
+    println!(
+        "{:>11} {:>5} {:>2} {:>6} | {:>12} {:>12} {:>12} {:>10}",
+        "matrix", "P", "L", "kill", "makespan(us)", "compute(us)", "comm(us)", "wall(ms)"
+    );
+    for &(rows, cols, block, procs) in shapes {
+        for faulted in [false, true] {
+            let mut r0: Option<Matrix> = None;
+            for lookahead in [0usize, 1, 2, 4] {
+                let cfg = RunConfig {
+                    rows,
+                    cols,
+                    block,
+                    procs,
+                    lookahead,
+                    algorithm: Algorithm::FaultTolerant,
+                    verify: false,
+                    ..Default::default()
+                };
+                let fault = if faulted {
+                    FaultPlan::schedule(vec![ScheduledKill::new(
+                        procs - 1,
+                        1,
+                        0,
+                        Phase::Update,
+                    )])
+                } else {
+                    FaultPlan::none()
+                };
+                let a = Matrix::randn(rows, cols, 7);
+                let (out, wall) = common::wall(|| {
+                    ftcaqr::coordinator::run_caqr_matrix(
+                        cfg,
+                        a.clone(),
+                        Backend::native(),
+                        fault,
+                        Trace::disabled(),
+                    )
+                    .unwrap()
+                });
+                match &r0 {
+                    None => r0 = Some(out.r.clone()),
+                    Some(base) => assert_eq!(
+                        base, &out.r,
+                        "L={lookahead} changed the factors ({rows}x{cols} faulted={faulted})"
+                    ),
+                }
+                println!(
+                    "{:>11} {procs:>5} {lookahead:>2} {:>6} | {:>12.3} {:>12.3} {:>12.3} {:>10.2}",
+                    format!("{rows}x{cols}"),
+                    if faulted { "1" } else { "-" },
+                    out.report.critical_path * 1e6,
+                    out.report.compute_path * 1e6,
+                    out.report.comm_path * 1e6,
+                    wall * 1e3,
+                );
+                sink.rec(&[
+                    ("bench", JsonVal::S("caqr_lookahead")),
+                    ("rows", JsonVal::I(rows as i64)),
+                    ("cols", JsonVal::I(cols as i64)),
+                    ("block", JsonVal::I(block as i64)),
+                    ("procs", JsonVal::I(procs as i64)),
+                    ("lookahead", JsonVal::I(lookahead as i64)),
+                    ("faulted", JsonVal::I(faulted as i64)),
+                    ("makespan_s", JsonVal::F(out.report.critical_path)),
+                    ("compute_path_s", JsonVal::F(out.report.compute_path)),
+                    ("comm_path_s", JsonVal::F(out.report.comm_path)),
+                    ("exchanges", JsonVal::I(out.report.exchanges as i64)),
+                    ("bytes", JsonVal::I(out.report.bytes as i64)),
+                    ("wall_s", JsonVal::F(wall)),
+                ]);
+            }
+        }
+    }
+}
+
 fn main() {
     common::header("E6: end-to-end CAQR (native backend)");
     bench_backend("nat", Backend::native);
@@ -61,9 +156,10 @@ fn main() {
     }
 
     common::header("E6b: repeat-run stability (native, FT, P=8, 1024x256)");
-    let (med, mean, sd) = common::time_case(2, 7, || {
+    let (warm, iters, rows) = if common::smoke() { (1, 2, 512) } else { (2, 7, 1024) };
+    let (med, mean, sd) = common::time_case(warm, iters, || {
         let cfg = RunConfig {
-            rows: 1024,
+            rows,
             cols: 256,
             block: 32,
             procs: 8,
@@ -72,5 +168,9 @@ fn main() {
         };
         let _ = run_caqr(cfg, Backend::native(), FaultPlan::none(), Trace::disabled()).unwrap();
     });
-    common::row("caqr/ft/P8/1024x256", med, mean, sd, "");
+    common::row("caqr/ft/P8", med, mean, sd, "");
+
+    let mut sink = common::JsonSink::new();
+    bench_lookahead(&mut sink);
+    sink.finish("caqr");
 }

@@ -171,11 +171,28 @@ impl Backend {
     /// XLA path necessarily materializes the artifact output and writes
     /// it back).
     pub fn leaf_apply_into(&self, y: &Matrix, t: &Matrix, c: &mut Matrix) -> Result<()> {
+        let n = c.cols();
+        self.leaf_apply_cols_into(y, t, c, n)
+    }
+
+    /// [`Backend::leaf_apply_into`] on a column segment of a logically
+    /// `full_n`-wide trailing block, kernel dispatch pinned to the
+    /// full-width op — the lookahead pipeline's segment-by-segment
+    /// application is bitwise identical to one full-width call on the
+    /// native backend. (The XLA path pads to its shape ladder instead;
+    /// cross-`L` bitwise equality is a native-backend guarantee.)
+    pub fn leaf_apply_cols_into(
+        &self,
+        y: &Matrix,
+        t: &Matrix,
+        c: &mut Matrix,
+        full_n: usize,
+    ) -> Result<()> {
         match self {
             Backend::Native(_) => {
                 let (m, b) = y.shape();
                 self.add_flops(flops::leaf_apply(m, b, c.cols()));
-                linalg::leaf_apply_into(y, t, c);
+                linalg::leaf_apply_cols_into(y, t, c, full_n);
                 Ok(())
             }
             Backend::Xla(_) => {
@@ -199,11 +216,28 @@ impl Backend {
         t: &Matrix,
         is_top: bool,
     ) -> Result<Matrix> {
+        let n = cp.cols();
+        self.tree_update_half_cols(cp, peer, y1, t, is_top, n)
+    }
+
+    /// [`Backend::tree_update_half`] on a column segment of a logically
+    /// `full_n`-wide update, dispatch pinned to the full-width op (see
+    /// [`Backend::leaf_apply_cols_into`] for the bitwise contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn tree_update_half_cols(
+        &self,
+        cp: &mut Matrix,
+        peer: &Matrix,
+        y1: &Matrix,
+        t: &Matrix,
+        is_top: bool,
+        full_n: usize,
+    ) -> Result<Matrix> {
         match self {
             Backend::Native(_) => {
                 let (b, n) = cp.shape();
                 self.add_flops(flops::tree_update(b, n));
-                Ok(linalg::tree_update_half(cp, peer, y1, t, is_top))
+                Ok(linalg::tree_update_half_cols(cp, peer, y1, t, is_top, full_n))
             }
             Backend::Xla(_) => {
                 let st = if is_top {
@@ -227,11 +261,26 @@ impl Backend {
         y1: &Matrix,
         t: &Matrix,
     ) -> Result<Matrix> {
+        let n = c0.cols();
+        self.tree_update_into_cols(c0, c1, y1, t, n)
+    }
+
+    /// [`Backend::tree_update_into`] on a column segment of a logically
+    /// `full_n`-wide update, dispatch pinned to the full-width op (see
+    /// [`Backend::leaf_apply_cols_into`] for the bitwise contract).
+    pub fn tree_update_into_cols(
+        &self,
+        c0: &mut Matrix,
+        c1: &mut Matrix,
+        y1: &Matrix,
+        t: &Matrix,
+        full_n: usize,
+    ) -> Result<Matrix> {
         match self {
             Backend::Native(_) => {
                 let (b, n) = c0.shape();
                 self.add_flops(flops::tree_update(b, n));
-                Ok(linalg::tree_update_into(c0, c1, y1, t))
+                Ok(linalg::tree_update_into_cols(c0, c1, y1, t, full_n))
             }
             Backend::Xla(_) => {
                 let st = self.tree_update(c0, c1, y1, t)?;
@@ -267,11 +316,25 @@ impl Backend {
     /// III-C). Shares the kernel with the live bottom-half update, so
     /// replayed blocks are bit-identical to the originals.
     pub fn recover_into(&self, c: &mut Matrix, y: &Matrix, w: &Matrix) -> Result<()> {
+        let n = c.cols();
+        self.recover_into_cols(c, y, w, n)
+    }
+
+    /// [`Backend::recover_into`] on a column segment of a logically
+    /// `full_n`-wide update — replay takes the exact kernel path the live
+    /// segmented update took (see [`Backend::leaf_apply_cols_into`]).
+    pub fn recover_into_cols(
+        &self,
+        c: &mut Matrix,
+        y: &Matrix,
+        w: &Matrix,
+        full_n: usize,
+    ) -> Result<()> {
         match self {
             Backend::Native(_) => {
                 let (b, n) = c.shape();
                 self.add_flops(flops::recover(b, n));
-                linalg::recover_block_into(c, y, w);
+                linalg::recover_block_cols_into(c, y, w, full_n);
                 Ok(())
             }
             Backend::Xla(_) => {

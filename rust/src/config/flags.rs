@@ -102,6 +102,26 @@ mod tests {
     }
 
     #[test]
+    fn lookahead_flag_parses_with_lockstep_default() {
+        // Absent: the pipelined panel loop defaults to lockstep (L = 0).
+        let f = Flags::parse(&args(&[])).unwrap();
+        assert_eq!(f.num("lookahead", 0usize).unwrap(), 0);
+        // Present: parsed as a depth.
+        let f = Flags::parse(&args(&["--lookahead", "2"])).unwrap();
+        assert_eq!(f.num("lookahead", 0usize).unwrap(), 2);
+    }
+
+    #[test]
+    fn lookahead_flag_rejects_garbage_and_negatives() {
+        let f = Flags::parse(&args(&["--lookahead", "deep"])).unwrap();
+        let err = f.num("lookahead", 0usize).unwrap_err().to_string();
+        assert!(err.contains("--lookahead deep"), "{err}");
+        // usize parsing rejects negative depths rather than wrapping.
+        let f = Flags::parse(&args(&["--lookahead", "-1"])).unwrap();
+        assert!(f.num("lookahead", 0usize).is_err());
+    }
+
+    #[test]
     fn empty_is_fine() {
         let f = Flags::parse(&[]).unwrap();
         assert_eq!(f.get("anything"), None);

@@ -96,6 +96,12 @@ pub struct RunConfig {
     /// Diskless-checkpoint interval in panels (0 = off) — the §II
     /// comparator baseline, experiment E7.
     pub checkpoint_every: usize,
+    /// Lookahead depth L of the pipelined panel loop: up to L + 1 panels
+    /// in flight per rank. 0 = lockstep (bitwise the pre-pipeline
+    /// schedule); L >= 1 overlaps the next panel's TSQR with the current
+    /// panel's far-trailing update (factors stay bitwise identical on
+    /// the native backend). Checkpoint boundaries act as barriers.
+    pub lookahead: usize,
     /// RNG seed for the input matrix.
     pub seed: u64,
     /// Verify the factorization against the Gram identity after the run.
@@ -117,6 +123,7 @@ impl Default for RunConfig {
             cost: CostModel::default(),
             fault: FaultSpec::default(),
             checkpoint_every: 0,
+            lookahead: 0,
             seed: 0,
             verify: true,
         }
@@ -208,6 +215,7 @@ impl RunConfig {
                 "algorithm" => c.algorithm = v.parse().map_err(anyhow::Error::msg)?,
                 "semantics" => c.semantics = v.parse().map_err(anyhow::Error::msg)?,
                 "checkpoint_every" => c.checkpoint_every = v.parse()?,
+                "lookahead" => c.lookahead = v.parse()?,
                 "seed" => c.seed = v.parse()?,
                 "verify" => c.verify = v.parse()?,
                 "artifact_dir" => c.backend = BackendKind::Xla { artifact_dir: v.into() },
@@ -235,6 +243,7 @@ impl RunConfig {
         out.push_str(&format!("algorithm = {}\n", self.algorithm));
         out.push_str(&format!("semantics = {}\n", self.semantics));
         out.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));
+        out.push_str(&format!("lookahead = {}\n", self.lookahead));
         out.push_str(&format!("seed = {}\n", self.seed));
         out.push_str(&format!("verify = {}\n", self.verify));
         if let BackendKind::Xla { artifact_dir } = &self.backend {
@@ -265,6 +274,7 @@ mod tests {
             cols: 512,
             block: 32,
             procs: 8,
+            lookahead: 2,
             ..Default::default()
         };
         let t = c.to_kv();
@@ -272,7 +282,17 @@ mod tests {
         assert_eq!(c2.rows, 1024);
         assert_eq!(c2.procs, 8);
         assert_eq!(c2.algorithm, Algorithm::FaultTolerant);
+        assert_eq!(c2.lookahead, 2);
         assert_eq!(c2.cost.dual_channel, c.cost.dual_channel);
+    }
+
+    #[test]
+    fn lookahead_defaults_to_lockstep_and_parses() {
+        assert_eq!(RunConfig::default().lookahead, 0);
+        let c = RunConfig::from_kv("rows = 256\ncols = 64\nlookahead = 4\n").unwrap();
+        assert_eq!(c.lookahead, 4);
+        assert!(RunConfig::from_kv("lookahead = nope\n").is_err());
+        assert!(RunConfig::from_kv("lookahead = -1\n").is_err());
     }
 
     #[test]

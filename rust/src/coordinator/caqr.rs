@@ -4,10 +4,17 @@
 //! every rank's panel loop (TSQR + trailing update, plain or FT) as a
 //! resumable task on the bounded worker pool — including any REBUILD
 //! replacement tasks spawned by recovery — assembles the reduced matrix,
-//! and verifies the Gram identity. Rank bodies are explicit state
-//! machines ([`Ranker`]): they park on in-flight exchanges/receives
-//! instead of blocking an OS thread, so P = 256–1024 rank runs fit on a
-//! laptop core count (see `DESIGN.md` "Scheduler: parking and wakeup").
+//! and verifies the Gram identity. Rank bodies are *lookahead dataflow
+//! engines* ([`Ranker`]): up to `RunConfig::lookahead + 1` panels are in
+//! flight per rank, each an independent sub-machine that parks on its
+//! own exchanges/receives instead of blocking an OS thread — so
+//! P = 256–1024 rank runs fit on a laptop core count, and with
+//! `lookahead >= 1` a rank starts panel `k+1`'s TSQR as soon as panel
+//! `k`'s reflectors have reached its next-panel column block, while the
+//! far-trailing update segments drain concurrently (see `DESIGN.md`
+//! "Lookahead dataflow engine" and "Scheduler: parking and wakeup").
+//! `lookahead = 0` reproduces the lockstep schedule bitwise; any depth
+//! produces bitwise-identical factors on the native backend.
 //!
 //! Conventions (see `DESIGN.md` "Pair stacking and message patterns"):
 //! * pair stacking: the smaller tree index owns the globally-upper rows
@@ -143,12 +150,18 @@ enum TsqrWait {
     PlainRecv { buddy: usize, tag: Tag },
 }
 
-/// Update-phase working state for one panel on one rank.
-pub(crate) struct UpdatePhase {
-    g: PanelGeom,
-    merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
-    /// The top-b rows of this rank's active trailing block, updated in
-    /// place by each tree step (never cloned into the step kernels).
+/// One column segment of a panel's trailing update in flight: the tree
+/// runs over the top-b rows of columns `[col0, col0 + ncols)`, routed on
+/// `lane`. Under the lockstep schedule (`lookahead = 0`) there is exactly
+/// one segment spanning the whole trailing width on lane 0 — bitwise the
+/// pre-pipeline update; under lookahead each trailing column block is its
+/// own segment (lane = global column-block index).
+pub(crate) struct SegRun {
+    col0: usize,
+    ncols: usize,
+    lane: u32,
+    /// The top-b rows of this segment of the rank's active trailing
+    /// block, updated in place by each tree step.
     cp: Matrix,
     s: usize,
     wait: UpdateWait,
@@ -161,14 +174,82 @@ enum UpdateWait {
     PlainLowerW { buddy: usize, tag: Tag },
 }
 
-/// Where one rank task currently is in the panel loop.
-enum State {
-    /// About to start panel `k` (or finish, when `k == panels`).
-    Panel { k: usize },
+/// Update-phase working state for one panel on one rank: the leaf
+/// factors (applied segment by segment), the per-step merge factors, and
+/// the segment queue. Segments run in ascending column order; the engine
+/// releases the panel's *near* segment first, which is what unlocks the
+/// next panel's TSQR under lookahead.
+pub(crate) struct UpdatePhase {
+    leaf_y: Matrix,
+    leaf_t: Matrix,
+    /// (Y1, T) per tree step where this rank is a reduce-tree member.
+    merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
+    /// Segments not yet started: (first column, width, lane), ascending.
+    todo: std::collections::VecDeque<(usize, usize, u32)>,
+    /// The segment in progress, if any.
+    cur: Option<SegRun>,
+    /// First column NOT yet fully updated by this panel — the in-rank
+    /// dataflow frontier the next panel's stages gate on.
+    covered_end: usize,
+}
+
+/// Pipeline stage of one in-flight panel on one rank.
+enum Stage {
+    /// Panel factorization tree in progress.
     Tsqr(TsqrPhase),
+    /// Trailing update draining segment by segment.
     Update(UpdatePhase),
-    Checkpoint { g: PanelGeom, op: FtOp },
-    Done,
+    /// Diskless-checkpoint exchange in flight (always the oldest unit —
+    /// checkpoints are admission barriers).
+    Checkpoint(FtOp),
+    /// All of this panel's work on this rank is done.
+    Complete,
+}
+
+/// One in-flight panel on one rank: its geometry plus the stage the
+/// rank's work on it has reached. Units live in [`Ranker::units`] oldest
+/// first and — because every segment gates on the previous panel's same
+/// segment — complete strictly in panel order.
+struct Unit {
+    g: PanelGeom,
+    stage: Stage,
+}
+
+impl Unit {
+    /// Has this panel's trailing update fully reached column block
+    /// `jblock` (columns `[jblock*b, (jblock+1)*b)`) — i.e. may the next
+    /// panel touch those columns?
+    fn covers_done(&self, jblock: usize, b: usize) -> bool {
+        match &self.stage {
+            Stage::Complete | Stage::Checkpoint(_) => true,
+            Stage::Tsqr(_) => false,
+            Stage::Update(up) => up.covered_end >= (jblock + 1) * b,
+        }
+    }
+}
+
+/// The trailing-update segment list for one panel (see [`SegRun`]).
+fn update_segments(
+    cfg: &RunConfig,
+    g: &PanelGeom,
+) -> std::collections::VecDeque<(usize, usize, u32)> {
+    let mut out = std::collections::VecDeque::new();
+    if g.n_trail == 0 {
+        return out;
+    }
+    if cfg.lookahead == 0 {
+        // Lockstep: one whole-width segment on lane 0 — bitwise the
+        // pre-pipeline schedule (same message sizes, tags and kernel
+        // call shapes).
+        out.push_back((g.trail_col, g.n_trail, 0));
+    } else {
+        let b = cfg.block;
+        for i in 0..g.n_trail / b {
+            let col0 = g.trail_col + i * b;
+            out.push_back((col0, b, (col0 / b) as u32));
+        }
+    }
+    out
 }
 
 /// Outcome of stepping a phase state machine.
@@ -179,14 +260,27 @@ enum Stepped {
     Finished,
 }
 
-/// One rank's resumable panel-loop body (original or REBUILD replacement).
+/// One rank's resumable panel-loop body (original or REBUILD
+/// replacement): a lookahead dataflow engine over in-flight panel
+/// [`Unit`]s. With `RunConfig::lookahead = L`, up to `L + 1` panels are
+/// in flight per rank: a rank that has applied panel `k`'s reflectors to
+/// its next-panel column block (the *near* segment) starts panel
+/// `k + 1`'s TSQR immediately while the far-trailing segments drain
+/// concurrently. `L = 0` reproduces the lockstep schedule bitwise; for
+/// any `L` the factors are bitwise identical (see DESIGN.md "Lookahead
+/// dataflow engine").
 pub(crate) struct Ranker {
     pub(crate) shared: Arc<Shared>,
     /// True for a REBUILD replacement replaying history.
     pub(crate) resume: bool,
     /// The local block-row (m_local x cols), updated in place.
     pub(crate) local: Matrix,
-    state: State,
+    /// In-flight panels, oldest first (consecutive panel indices).
+    units: std::collections::VecDeque<Unit>,
+    /// Next panel index not yet admitted.
+    next_k: usize,
+    /// Completion latch (drive must not run after finish).
+    done: bool,
 }
 
 impl RankTask for Ranker {
@@ -214,77 +308,165 @@ impl RankTask for Ranker {
 
 impl Ranker {
     pub(crate) fn new(shared: Arc<Shared>, resume: bool, local: Matrix) -> Self {
-        Self { shared, resume, local, state: State::Panel { k: 0 } }
+        Self {
+            shared,
+            resume,
+            local,
+            units: std::collections::VecDeque::new(),
+            next_k: 0,
+            done: false,
+        }
     }
 
     fn cfg(&self) -> &RunConfig {
         &self.shared.cfg
     }
 
-    /// Run the state machine forward as far as possible.
-    /// `Ok(true)` = the rank completed; `Ok(false)` = parked.
+    /// Run the dataflow engine forward as far as possible: retire
+    /// completed panels, admit new ones while the pipeline has room, and
+    /// advance every in-flight unit (oldest first) until a full pass
+    /// makes no progress. `Ok(true)` = the rank completed; `Ok(false)` =
+    /// parked (every runnable sub-machine is waiting on a message).
     fn drive(&mut self, ctx: &mut RankCtx, sp: &Spawner) -> Result<bool, Fail> {
+        assert!(!self.done, "drive called after completion");
         loop {
-            let state = std::mem::replace(&mut self.state, State::Done);
-            match state {
-                State::Panel { k } => {
-                    if k == self.cfg().panels() {
-                        self.finish(ctx);
-                        return Ok(true);
-                    }
-                    let g = geometry(self.cfg(), ctx.rank, k);
-                    crate::simlog!(
-                        "[r{} inc] panel {k} start (resume={})",
-                        ctx.rank,
-                        self.resume
-                    );
-                    if !g.participates {
-                        self.state = State::Panel { k: k + 1 };
-                        continue;
-                    }
-                    let ph = self.begin_tsqr(ctx, g);
-                    self.state = State::Tsqr(ph);
-                }
-                State::Tsqr(mut ph) => match self.step_tsqr(&mut ph, ctx, sp)? {
-                    Stepped::Parked => {
-                        self.state = State::Tsqr(ph);
-                        return Ok(false);
-                    }
-                    Stepped::Finished => {
-                        self.state = self.after_tsqr(ctx, ph);
-                    }
-                },
-                State::Update(mut ph) => match self.step_update(&mut ph, ctx, sp)? {
-                    Stepped::Parked => {
-                        self.state = State::Update(ph);
-                        return Ok(false);
-                    }
-                    Stepped::Finished => {
-                        let g = ph.g;
-                        self.local.set_block(g.start, g.trail_col, &ph.cp);
-                        self.state = self.next_after_panel(ctx.rank, g);
-                    }
-                },
-                State::Checkpoint { g, mut op } => match self.poll_ft(&mut op, ctx, sp)? {
-                    None => {
-                        self.state = State::Checkpoint { g, op };
-                        return Ok(false);
-                    }
-                    Some(_peer_copy) => {
-                        self.shared.trace.emit(
-                            ctx.clock,
-                            ctx.rank,
-                            g.k,
-                            0,
-                            "checkpoint",
-                            op.peer() as f64,
-                        );
-                        self.state = State::Panel { k: g.k + 1 };
-                    }
-                },
-                State::Done => unreachable!("drive called after completion"),
+            let mut progressed = false;
+            self.retire_front();
+            while self.can_admit() {
+                self.admit(ctx);
+                self.retire_front();
+                progressed = true;
+            }
+            if self.units.is_empty() {
+                // No work in flight and nothing left to admit: done.
+                debug_assert!(self.next_k >= self.cfg().panels());
+                self.finish(ctx);
+                self.done = true;
+                return Ok(true);
+            }
+            // Newest unit first: the panel factorization and the near
+            // segment produce the messages other ranks wait on, so they
+            // get the clock before the far-trailing drain — the classic
+            // lookahead priority. (Order never affects the numerics,
+            // only which work a rank's serial clock charges first.)
+            for i in (0..self.units.len()).rev() {
+                progressed |= self.step_unit(i, ctx, sp)?;
+            }
+            if !progressed {
+                return Ok(false);
             }
         }
+    }
+
+    /// Pop completed panels off the front of the pipeline (units
+    /// complete strictly in panel order, so only the front can retire).
+    fn retire_front(&mut self) {
+        while matches!(self.units.front().map(|u| &u.stage), Some(Stage::Complete)) {
+            self.units.pop_front();
+        }
+    }
+
+    /// May panel `next_k` enter the pipeline now? Gates: panels remain;
+    /// pipeline depth `L + 1` not exceeded; no pending checkpoint
+    /// barrier; and the previous panel's update has reached the new
+    /// panel's column block (the lookahead dataflow dependency).
+    fn can_admit(&self) -> bool {
+        let cfg = self.cfg();
+        if self.next_k >= cfg.panels() {
+            return false;
+        }
+        if self.units.len() > cfg.lookahead {
+            return false;
+        }
+        // Checkpoint barrier: a checkpoint-due panel must complete (and
+        // exchange its snapshot) before any later panel starts, so the
+        // snapshot bytes match the lockstep schedule exactly.
+        let every = cfg.checkpoint_every;
+        if every > 0 && self.units.iter().any(|u| (u.g.k + 1) % every == 0) {
+            return false;
+        }
+        match self.units.back() {
+            None => true,
+            Some(prev) => prev.covers_done(self.next_k, cfg.block),
+        }
+    }
+
+    /// Enter panel `next_k`: start its TSQR leaf factorization, or — for
+    /// a retired rank (participation is monotone) — leave the loop.
+    fn admit(&mut self, ctx: &mut RankCtx) {
+        let k = self.next_k;
+        let g = geometry(self.cfg(), ctx.rank, k);
+        if !g.participates {
+            // Owner indices only grow: once retired, retired for good.
+            self.next_k = self.cfg().panels();
+            return;
+        }
+        self.next_k = k + 1;
+        crate::simlog!(
+            "[r{} inc] panel {k} start (resume={}, inflight={})",
+            ctx.rank,
+            self.resume,
+            self.units.len()
+        );
+        let ph = self.begin_tsqr(ctx, g);
+        self.units.push_back(Unit { g, stage: Stage::Tsqr(ph) });
+    }
+
+    /// Advance one in-flight unit as far as it can go. Returns whether
+    /// any state changed (message consumed, compute done, stage moved).
+    fn step_unit(&mut self, i: usize, ctx: &mut RankCtx, sp: &Spawner) -> Result<bool, Fail> {
+        let g = self.units[i].g;
+        let stage = std::mem::replace(&mut self.units[i].stage, Stage::Complete);
+        let mut moved = false;
+        let next = match stage {
+            Stage::Tsqr(mut ph) => match self.step_tsqr(&mut ph, ctx, sp, &mut moved)? {
+                Stepped::Parked => Stage::Tsqr(ph),
+                Stepped::Finished => {
+                    moved = true;
+                    self.after_tsqr(ctx, ph)
+                }
+            },
+            Stage::Update(mut up) => {
+                if self.step_update(i, g, &mut up, ctx, sp, &mut moved)? {
+                    moved = true;
+                    self.after_update(ctx, g)
+                } else {
+                    Stage::Update(up)
+                }
+            }
+            Stage::Checkpoint(mut op) => {
+                if i != 0 {
+                    // Older panels are still unpopped; the checkpoint
+                    // pairs within a quiesced pipeline — wait for the
+                    // front to retire (next engine pass).
+                    Stage::Checkpoint(op)
+                } else {
+                    match self.poll_ft(&mut op, ctx, sp)? {
+                        None => Stage::Checkpoint(op),
+                        Some(_peer_copy) => {
+                            moved = true;
+                            // Runtime metadata: lets a replacement of a
+                            // rank killed right after this exchange skip
+                            // it instead of re-pairing with a partner
+                            // that has moved on.
+                            self.shared.store.note_checkpoint(ctx.rank, g.k);
+                            self.shared.trace.emit(
+                                ctx.clock,
+                                ctx.rank,
+                                g.k,
+                                0,
+                                "checkpoint",
+                                op.peer() as f64,
+                            );
+                            Stage::Complete
+                        }
+                    }
+                }
+            }
+            Stage::Complete => Stage::Complete,
+        };
+        self.units[i].stage = next;
+        Ok(moved)
     }
 
     fn finish(&mut self, ctx: &mut RankCtx) {
@@ -301,7 +483,7 @@ impl Ranker {
 
     /// Leaf factorization of the active panel rows (zero-row padded) —
     /// the local, non-blocking prologue of the TSQR phase.
-    fn begin_tsqr(&mut self, ctx: &mut RankCtx, g: PanelGeom) -> TsqrPhase {
+    fn begin_tsqr(&self, ctx: &mut RankCtx, g: PanelGeom) -> TsqrPhase {
         let b = self.cfg().block;
         let m_local = self.cfg().local_rows();
         let apanel =
@@ -327,10 +509,11 @@ impl Ranker {
     /// Panel factorization tree: plain reduction or FT all-exchange
     /// (paper §III-B), with the replay shortcut for REBUILD replacements.
     fn step_tsqr(
-        &mut self,
+        &self,
         ph: &mut TsqrPhase,
         ctx: &mut RankCtx,
         sp: &Spawner,
+        moved: &mut bool,
     ) -> Result<Stepped, Fail> {
         let b = self.cfg().block;
         let nsteps = tree::steps(ph.g.q);
@@ -348,6 +531,7 @@ impl Ranker {
                             self.maybe_fail(ctx, site)?;
                             let Some(bidx) = tree::exchange_pair(g.idx, s, g.q) else {
                                 ph.s += 1;
+                                *moved = true;
                                 continue;
                             };
                             let buddy = bidx + g.owner;
@@ -356,7 +540,9 @@ impl Ranker {
                             // Replay path: take the completed merge from
                             // the buddy's retained memory (paper III-C).
                             if self.resume {
-                                match self.fetch_retained(ctx, sp, buddy, g.k, Phase::Tsqr, s)? {
+                                match self
+                                    .fetch_retained(ctx, sp, buddy, g.k, Phase::Tsqr, s, 0)?
+                                {
                                     Fetch::Hit(ret) => {
                                         if tree::reduce_active(g.idx, s) {
                                             ph.merges[s] =
@@ -377,6 +563,7 @@ impl Ranker {
                                         // construction.
                                         ph.r = ret.r_merged;
                                         ph.s += 1;
+                                        *moved = true;
                                         continue;
                                     }
                                     Fetch::Wait => return Ok(Stepped::Parked),
@@ -385,6 +572,7 @@ impl Ranker {
                             }
                             ph.wait =
                                 TsqrWait::Ft(FtOp::new(buddy, tag, MsgData::Mat(ph.r.clone())));
+                            *moved = true;
                         }
                         Algorithm::Plain => {
                             if !tree::reduce_active(g.idx, s) {
@@ -398,9 +586,11 @@ impl Ranker {
                             match role {
                                 Role::Idle => {
                                     ph.s += 1;
+                                    *moved = true;
                                 }
                                 Role::Upper => {
                                     ph.wait = TsqrWait::PlainRecv { buddy, tag };
+                                    *moved = true;
                                 }
                                 Role::Lower => {
                                     self.send_plain(
@@ -409,6 +599,7 @@ impl Ranker {
                                         tag,
                                         MsgData::Mat(ph.r.clone()),
                                     )?;
+                                    *moved = true;
                                     return Ok(Stepped::Finished);
                                 }
                             }
@@ -467,6 +658,7 @@ impl Ranker {
                         );
                         ph.r = r;
                         ph.s += 1;
+                        *moved = true;
                     }
                 },
                 TsqrWait::PlainRecv { buddy, tag } => {
@@ -486,6 +678,7 @@ impl Ranker {
                             ph.merges[ph.s] = Some((Arc::new(mf.y1), Arc::new(mf.t)));
                             ph.r = Arc::new(mf.r);
                             ph.s += 1;
+                            *moved = true;
                         }
                     }
                 }
@@ -494,9 +687,9 @@ impl Ranker {
     }
 
     /// Write the panel columns of the reduced matrix (the owner holds R;
-    /// everyone else's active panel rows are eliminated), then move on to
-    /// the trailing update / checkpoint / next panel.
-    fn after_tsqr(&mut self, ctx: &mut RankCtx, ph: TsqrPhase) -> State {
+    /// everyone else's active panel rows are eliminated), then hand over
+    /// to the trailing update / checkpoint / completion.
+    fn after_tsqr(&mut self, ctx: &mut RankCtx, ph: TsqrPhase) -> Stage {
         let g = ph.g;
         let b = self.cfg().block;
         let mut panel_out = Matrix::zeros(g.active_m, b);
@@ -506,16 +699,22 @@ impl Ranker {
         self.local.set_block(g.start, g.k * b, &panel_out);
 
         if g.n_trail > 0 {
-            let ph2 = self.begin_update(ctx, g, &ph.leaf_y, &ph.leaf_t, ph.merges);
-            State::Update(ph2)
+            Stage::Update(UpdatePhase {
+                leaf_y: ph.leaf_y,
+                leaf_t: ph.leaf_t,
+                merges: ph.merges,
+                todo: update_segments(self.cfg(), &g),
+                cur: None,
+                covered_end: g.trail_col,
+            })
         } else {
-            self.next_after_panel(ctx.rank, g)
+            self.after_update(ctx, g)
         }
     }
 
-    /// Diskless-checkpoint baseline traffic (E7), if configured; else
-    /// straight to the next panel.
-    fn next_after_panel(&mut self, rank: usize, g: PanelGeom) -> State {
+    /// Diskless-checkpoint baseline traffic (E7), if configured; else the
+    /// panel is complete.
+    fn after_update(&mut self, ctx: &RankCtx, g: PanelGeom) -> Stage {
         // NOTE: retained state is kept for the whole run. Replay of a
         // failed rank walks its entire history (paper III-C recovers one
         // step from one buddy; the full-state rebuild composes those
@@ -524,94 +723,130 @@ impl Ranker {
         // memory cost vs diskless checkpointing.
         let every = self.cfg().checkpoint_every;
         if every == 0 || (g.k + 1) % every != 0 {
-            return State::Panel { k: g.k + 1 };
+            return Stage::Complete;
         }
         // Pair within the ranks still participating in this panel —
         // retired ranks have left the computation and exchange nothing.
         let pidx = g.idx ^ 1;
         if pidx >= g.q {
-            return State::Panel { k: g.k + 1 };
+            return Stage::Complete;
         }
-        // Replay shortcut: if the pre-death incarnation had already moved
-        // past this panel (its frontier shows a later-panel step), the
-        // partner completed its half of this checkpoint long ago and will
-        // never exchange it again — re-entering would park forever.
-        if self.resume && self.shared.store.has_completed(rank, g.k + 1, Phase::Tsqr, 0) {
-            return State::Panel { k: g.k + 1 };
+        // Replay shortcut: if the pre-death incarnation had already
+        // exchanged this checkpoint — recorded directly, or implied by
+        // any progress in a later panel (checkpoints are admission
+        // barriers in both schedules) — the partner completed its half
+        // long ago and will never exchange it again; re-entering would
+        // park forever.
+        if self.resume
+            && (self.shared.store.has_checkpointed(ctx.rank, g.k)
+                || self.shared.store.has_progress_at_or_after(ctx.rank, g.k + 1))
+        {
+            return Stage::Complete;
         }
         let partner = g.owner + pidx;
         let tag = Tag::new(TagKind::Checkpoint, g.k, 0);
         // One snapshot copy into an Arc; the exchange's retransmit buffer
         // and the routed envelope share it instead of re-copying.
         let op = FtOp::new(partner, tag, MsgData::mat(self.local.clone()));
-        State::Checkpoint { g, op }
+        Stage::Checkpoint(op)
     }
 
-    /// Leaf: apply the local reflectors to the whole trailing block —
-    /// the local, non-blocking prologue of the update phase. The trailing
-    /// block is extracted once (zero-row padded), updated in place, and
-    /// written back through a view — no `crop_to` round-trip copy.
-    fn begin_update(
-        &mut self,
-        ctx: &mut RankCtx,
-        g: PanelGeom,
-        leaf_y: &Matrix,
-        leaf_t: &Matrix,
-        merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
-    ) -> UpdatePhase {
-        let b = self.cfg().block;
-        let m_local = self.cfg().local_rows();
-        let mut c = self.local.block_padded(
-            g.start,
-            g.trail_col,
-            g.active_m,
-            g.n_trail,
-            m_local,
-            g.n_trail,
-        );
-        self.shared
-            .backend
-            .leaf_apply_into(leaf_y, leaf_t, &mut c)
-            .unwrap_or_else(|e| self.backend_err(ctx.rank, "leaf_apply", e));
-        ctx.compute(crate::backend::flops::leaf_apply(m_local, b, g.n_trail));
-        self.local
-            .set_block_view(g.start, g.trail_col, c.view(0, 0, g.active_m, g.n_trail));
-
-        // Tree over the top-b rows of each participant's active block.
-        let cp = self.local.block(g.start, g.trail_col, b, g.n_trail);
-        UpdatePhase { g, merges, cp, s: 0, wait: UpdateWait::Enter }
-    }
-
-    /// Trailing-matrix update tree (paper Algorithms 1 and 2), with the
-    /// replay shortcut (`Ĉ' = C' − Y W`) for REBUILD replacements.
+    /// Drain the panel's trailing update segment by segment: each segment
+    /// applies the leaf reflectors to its columns (kernel dispatch pinned
+    /// to the full trailing width — bitwise identical to one whole-width
+    /// application), then runs the pair tree over its top-b rows.
+    /// Returns `Ok(true)` when every segment has completed.
+    #[allow(clippy::too_many_arguments)]
     fn step_update(
         &mut self,
-        ph: &mut UpdatePhase,
+        i: usize,
+        g: PanelGeom,
+        up: &mut UpdatePhase,
         ctx: &mut RankCtx,
         sp: &Spawner,
+        moved: &mut bool,
+    ) -> Result<bool, Fail> {
+        let b = self.cfg().block;
+        loop {
+            if up.cur.is_none() {
+                let Some(&(col0, ncols, lane)) = up.todo.front() else {
+                    return Ok(true);
+                };
+                // In-rank dataflow gate: the previous panel's update must
+                // have fully reached this segment's columns before panel
+                // `g.k`'s transform touches them.
+                let jlast = (col0 + ncols) / b - 1;
+                if i > 0 && !self.units[i - 1].covers_done(jlast, b) {
+                    return Ok(false);
+                }
+                // Segment prologue: leaf reflectors onto its columns,
+                // then extract the top-b rows for the tree.
+                let m_local = self.cfg().local_rows();
+                let mut cseg = self
+                    .local
+                    .block_padded(g.start, col0, g.active_m, ncols, m_local, ncols);
+                self.shared
+                    .backend
+                    .leaf_apply_cols_into(&up.leaf_y, &up.leaf_t, &mut cseg, g.n_trail)
+                    .unwrap_or_else(|e| self.backend_err(ctx.rank, "leaf_apply", e));
+                ctx.compute(crate::backend::flops::leaf_apply(m_local, b, ncols));
+                self.local
+                    .set_block_view(g.start, col0, cseg.view(0, 0, g.active_m, ncols));
+                let cp = self.local.block(g.start, col0, b, ncols);
+                up.todo.pop_front();
+                up.cur = Some(SegRun { col0, ncols, lane, cp, s: 0, wait: UpdateWait::Enter });
+                *moved = true;
+            }
+            let merges = &up.merges;
+            let seg = up.cur.as_mut().expect("segment in flight");
+            match self.step_segment(g, merges, seg, ctx, sp, moved)? {
+                Stepped::Parked => return Ok(false),
+                Stepped::Finished => {
+                    let seg = up.cur.take().expect("segment in flight");
+                    self.local.set_block(g.start, seg.col0, &seg.cp);
+                    up.covered_end = seg.col0 + seg.ncols;
+                    *moved = true;
+                }
+            }
+        }
+    }
+
+    /// Trailing-matrix update tree over one column segment (paper
+    /// Algorithms 1 and 2), with the replay shortcut (`Ĉ' = C' − Y W`)
+    /// for REBUILD replacements. Tags and retained state are routed on
+    /// the segment's lane so concurrent segments never cross-talk.
+    #[allow(clippy::too_many_arguments)]
+    fn step_segment(
+        &self,
+        g: PanelGeom,
+        merges: &[Option<(Arc<Matrix>, Arc<Matrix>)>],
+        seg: &mut SegRun,
+        ctx: &mut RankCtx,
+        sp: &Spawner,
+        moved: &mut bool,
     ) -> Result<Stepped, Fail> {
         let b = self.cfg().block;
         loop {
-            match std::mem::replace(&mut ph.wait, UpdateWait::Enter) {
+            match std::mem::replace(&mut seg.wait, UpdateWait::Enter) {
                 UpdateWait::Enter => {
-                    let g = ph.g;
-                    let s = ph.s;
+                    let s = seg.s;
                     if s == tree::steps(g.q) || !tree::reduce_active(g.idx, s) {
                         return Ok(Stepped::Finished);
                     }
                     let (role, bidx) = tree::reduce_pair(g.idx, s, g.q);
                     if role == Role::Idle {
-                        ph.s += 1;
+                        seg.s += 1;
+                        *moved = true;
                         continue;
                     }
                     let site = FailSite { panel: g.k, step: s, phase: Phase::Update };
                     self.maybe_fail(ctx, site)?;
                     let buddy = bidx + g.owner;
-                    let tag = Tag::new(TagKind::UpdateC, g.k, s);
+                    let tag = Tag::with_lane(TagKind::UpdateC, g.k, s, seg.lane);
 
                     match self.cfg().algorithm {
                         Algorithm::FaultTolerant => {
-                            let (y1, t) = ph.merges[s]
+                            let (y1, t) = merges[s]
                                 .clone()
                                 .expect("FT rank holds merge factors for its tree steps");
 
@@ -619,23 +854,39 @@ impl Ranker {
                             // buddy's retained {W, Y1} — the paper's
                             // recovery equation, applied in place.
                             if self.resume {
-                                match self.fetch_retained(ctx, sp, buddy, g.k, Phase::Update, s)? {
+                                match self.fetch_retained(
+                                    ctx,
+                                    sp,
+                                    buddy,
+                                    g.k,
+                                    Phase::Update,
+                                    s,
+                                    seg.lane,
+                                )? {
                                     Fetch::Hit(ret) => {
-                                        self.recover_rows(ctx, &mut ph.cp, role, &ret);
+                                        self.recover_rows(
+                                            ctx,
+                                            &mut seg.cp,
+                                            role,
+                                            &ret,
+                                            g.n_trail,
+                                        );
                                         self.retain_update(
                                             ctx.rank,
                                             ctx.incarnation(),
                                             &g,
                                             s,
+                                            seg.lane,
                                             buddy,
                                             &ret.w,
                                             &y1,
                                             &t,
                                         );
+                                        *moved = true;
                                         if role == Role::Lower {
                                             return Ok(Stepped::Finished);
                                         }
-                                        ph.s += 1;
+                                        seg.s += 1;
                                         continue;
                                     }
                                     Fetch::Wait => return Ok(Stepped::Parked),
@@ -645,27 +896,30 @@ impl Ranker {
                             // One snapshot copy of our rows into the
                             // shared payload (the exchange may have to
                             // retransmit it after a peer REBUILD).
-                            let op = FtOp::new(buddy, tag, MsgData::mat(ph.cp.clone()));
-                            ph.wait = UpdateWait::Ft { op, role, y1, t };
+                            let op = FtOp::new(buddy, tag, MsgData::mat(seg.cp.clone()));
+                            seg.wait = UpdateWait::Ft { op, role, y1, t };
+                            *moved = true;
                         }
                         Algorithm::Plain => match role {
                             Role::Idle => unreachable!("idle handled above"),
                             Role::Upper => {
-                                let (y1, t) = ph.merges[s]
+                                let (y1, t) = merges[s]
                                     .clone()
                                     .expect("plain upper holds merge factors");
-                                ph.wait = UpdateWait::PlainUpper { buddy, tag, y1, t };
+                                seg.wait = UpdateWait::PlainUpper { buddy, tag, y1, t };
+                                *moved = true;
                             }
                             Role::Lower => {
                                 // Our rows travel to the top member and
                                 // come back updated — move them into the
                                 // message instead of cloning.
-                                let cp = std::mem::replace(&mut ph.cp, Matrix::zeros(0, 0));
+                                let cp = std::mem::replace(&mut seg.cp, Matrix::zeros(0, 0));
                                 self.send_plain(ctx, buddy, tag, MsgData::mat(cp))?;
-                                ph.wait = UpdateWait::PlainLowerW {
+                                seg.wait = UpdateWait::PlainLowerW {
                                     buddy,
-                                    tag: Tag::new(TagKind::UpdateW, g.k, s),
+                                    tag: Tag::with_lane(TagKind::UpdateW, g.k, s, seg.lane),
                                 };
+                                *moved = true;
                             }
                         },
                     }
@@ -673,7 +927,7 @@ impl Ranker {
                 UpdateWait::Ft { mut op, role, y1, t } => {
                     match self.poll_ft(&mut op, ctx, sp)? {
                         None => {
-                            ph.wait = UpdateWait::Ft { op, role, y1, t };
+                            seg.wait = UpdateWait::Ft { op, role, y1, t };
                             return Ok(Stepped::Parked);
                         }
                         Some(d) => {
@@ -681,17 +935,17 @@ impl Ranker {
                             // pair step: borrow them straight out of the
                             // message, update our rows in place.
                             let peer_c = d.into_mat();
-                            let g = ph.g;
-                            let s = ph.s;
+                            let s = seg.s;
                             let w = self
                                 .shared
                                 .backend
-                                .tree_update_half(
-                                    &mut ph.cp,
+                                .tree_update_half_cols(
+                                    &mut seg.cp,
                                     peer_c.as_ref(),
                                     &y1,
                                     &t,
                                     role == Role::Upper,
+                                    g.n_trail,
                                 )
                                 .unwrap_or_else(|e| {
                                     self.backend_err(ctx.rank, "tree_update", e)
@@ -700,7 +954,7 @@ impl Ranker {
                             // computation — the paper's traded energy
                             // cost (E4) — regardless of the host-side
                             // half-update optimization.
-                            ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
+                            ctx.compute(crate::backend::flops::tree_update(b, seg.ncols));
                             self.shared.trace.emit(
                                 ctx.clock,
                                 ctx.rank,
@@ -715,22 +969,24 @@ impl Ranker {
                                 ctx.incarnation(),
                                 &g,
                                 s,
+                                seg.lane,
                                 op.peer(),
                                 &w,
                                 &y1,
                                 &t,
                             );
+                            *moved = true;
                             if role == Role::Lower {
                                 return Ok(Stepped::Finished);
                             }
-                            ph.s += 1;
+                            seg.s += 1;
                         }
                     }
                 }
                 UpdateWait::PlainUpper { buddy, tag, y1, t } => {
                     match self.recv_plain_poll(ctx, buddy, tag)? {
                         None => {
-                            ph.wait = UpdateWait::PlainUpper { buddy, tag, y1, t };
+                            seg.wait = UpdateWait::PlainUpper { buddy, tag, y1, t };
                             return Ok(Stepped::Parked);
                         }
                         Some(d) => {
@@ -738,35 +994,42 @@ impl Ranker {
                             // message, so this unwrap is copy-free; both
                             // halves update in place.
                             let mut peer_c = d.into_mat_owned();
-                            let g = ph.g;
-                            let s = ph.s;
+                            let s = seg.s;
                             let _w = self
                                 .shared
                                 .backend
-                                .tree_update_into(&mut ph.cp, &mut peer_c, &y1, &t)
+                                .tree_update_into_cols(
+                                    &mut seg.cp,
+                                    &mut peer_c,
+                                    &y1,
+                                    &t,
+                                    g.n_trail,
+                                )
                                 .unwrap_or_else(|e| self.backend_err(ctx.rank, "tree_update", e));
-                            ctx.compute(crate::backend::flops::tree_update(b, g.n_trail));
+                            ctx.compute(crate::backend::flops::tree_update(b, seg.ncols));
                             // Return the buddy's updated rows (Ĉ'₁ =
                             // C'₁−Y₁W; same bytes as the paper's W
                             // message), moved into the reply.
                             self.send_plain(
                                 ctx,
                                 buddy,
-                                Tag::new(TagKind::UpdateW, g.k, s),
+                                Tag::with_lane(TagKind::UpdateW, g.k, s, seg.lane),
                                 MsgData::mat(peer_c),
                             )?;
-                            ph.s += 1;
+                            seg.s += 1;
+                            *moved = true;
                         }
                     }
                 }
                 UpdateWait::PlainLowerW { buddy, tag } => {
                     match self.recv_plain_poll(ctx, buddy, tag)? {
                         None => {
-                            ph.wait = UpdateWait::PlainLowerW { buddy, tag };
+                            seg.wait = UpdateWait::PlainLowerW { buddy, tag };
                             return Ok(Stepped::Parked);
                         }
                         Some(d) => {
-                            ph.cp = d.into_mat_owned();
+                            seg.cp = d.into_mat_owned();
+                            *moved = true;
                             return Ok(Stepped::Finished);
                         }
                     }

@@ -253,7 +253,10 @@ impl Ranker {
 
     /// Read a buddy's retained step data during replay, charging the
     /// simulated transfer (one message from one process — paper III-C).
-    /// See the module docs for the three miss cases.
+    /// See the module docs for the three miss cases. `lane` is the
+    /// update-segment lane of the lookahead pipeline (0 for TSQR steps
+    /// and the lockstep whole-width update).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn fetch_retained(
         &self,
         ctx: &mut RankCtx,
@@ -262,13 +265,14 @@ impl Ranker {
         panel: usize,
         phase: Phase,
         step: usize,
+        lane: u32,
     ) -> Result<Fetch, Fail> {
-        if let Some(ret) = self.shared.store.get(buddy, panel, phase, step) {
+        if let Some(ret) = self.shared.store.get(buddy, panel, phase, step, lane) {
             self.charge_fetch(ctx, buddy, panel, phase, step, &ret);
             return Ok(Fetch::Hit(ret));
         }
-        if self.shared.store.has_completed(ctx.rank, panel, phase, step) {
-            if self.shared.store.has_completed(buddy, panel, phase, step) {
+        if self.shared.store.has_completed(ctx.rank, panel, phase, step, lane) {
+            if self.shared.store.has_completed(buddy, panel, phase, step, lane) {
                 // The buddy completed this step too, yet its entry is
                 // missing — only a death removes entries, so BOTH copies
                 // of the redundancy are gone. Unrecoverable (paper III-C
@@ -283,13 +287,14 @@ impl Ranker {
             // has already pushed us a live half for this step, join the
             // live exchange; otherwise wait for the buddy to either
             // retain the step or die trying.
-            let live_tag = Tag::new(
+            let live_tag = Tag::with_lane(
                 match phase {
                     Phase::Tsqr => TagKind::TsqrR,
                     Phase::Update => TagKind::UpdateC,
                 },
                 panel,
                 step,
+                lane,
             );
             if ctx.has_pending(buddy, live_tag) {
                 crate::simlog!(
@@ -306,7 +311,7 @@ impl Ranker {
             self.shared.watch_store(ctx.rank);
             // Close the insert/watch race: the buddy may have retained
             // between our miss and the registration.
-            if let Some(ret) = self.shared.store.get(buddy, panel, phase, step) {
+            if let Some(ret) = self.shared.store.get(buddy, panel, phase, step, lane) {
                 self.charge_fetch(ctx, buddy, panel, phase, step, &ret);
                 return Ok(Fetch::Hit(ret));
             }
@@ -333,8 +338,7 @@ impl Ranker {
         ret: &Retained,
     ) {
         let bytes = ret.nbytes();
-        ctx.clock = ctx.cost.recv_time(ctx.clock, ctx.clock, bytes);
-        ctx.metrics.record_message(bytes);
+        ctx.charge_local_recv(bytes);
         self.shared.trace.emit(
             ctx.clock,
             ctx.rank,
@@ -348,13 +352,16 @@ impl Ranker {
 
     /// Recompute this rank's update rows from buddy-retained `{W, Y1}`
     /// **in place**: `C' ← C' − Y W` with `Y = I` for the top member
-    /// (paper III-C). No copy of the `C'` rows is taken.
+    /// (paper III-C). No copy of the `C'` rows is taken. `full_n` pins
+    /// the kernel dispatch to the panel's full trailing width so a
+    /// replayed pipeline segment is bit-identical to the live one.
     pub(crate) fn recover_rows(
         &self,
         ctx: &mut RankCtx,
         cp: &mut Matrix,
         role: Role,
         ret: &Retained,
+        full_n: usize,
     ) {
         let (b, n) = cp.shape();
         match role {
@@ -368,7 +375,7 @@ impl Ranker {
             Role::Lower => self
                 .shared
                 .backend
-                .recover_into(cp, &ret.y1, &ret.w)
+                .recover_into_cols(cp, &ret.y1, &ret.w, full_n)
                 .unwrap_or_else(|e| panic!("recover op failed: {e:#}")),
             Role::Idle => unreachable!("idle roles never reach recovery"),
         }
@@ -397,6 +404,7 @@ impl Ranker {
             g.k,
             Phase::Tsqr,
             step,
+            0,
             Retained {
                 buddy,
                 w: Arc::new(Matrix::zeros(0, 0)),
@@ -419,6 +427,7 @@ impl Ranker {
         inc: u32,
         g: &PanelGeom,
         step: usize,
+        lane: u32,
         buddy: usize,
         w: &Arc<Matrix>,
         y1: &Arc<Matrix>,
@@ -430,6 +439,7 @@ impl Ranker {
             g.k,
             Phase::Update,
             step,
+            lane,
             Retained {
                 buddy,
                 w: w.clone(),

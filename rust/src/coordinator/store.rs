@@ -5,17 +5,25 @@
 //! buddy's state recomputable from *one* process. [`RecoveryStore`]
 //! models that per-process retained memory: entries are written by their
 //! owning rank as it executes and read (with simulated communication
-//! charged) by a rebuilt rank during replay.
+//! charged) by a rebuilt rank during replay. Update-phase entries are
+//! keyed by a *lane* as well — the column-block segment of the lookahead
+//! pipeline (lane 0 for the whole-width lockstep update).
 //!
 //! [`RevivalGate`] arbitrates REBUILD: the first detector of a dead
 //! rank revives it and spawns the replay task; concurrent detectors just
 //! retry their operation once the revival is visible. The store also
-//! tracks each rank's *progress frontier* (completed steps, surviving
-//! the rank's death) — the runtime metadata that lets a replay tell a
-//! slow buddy from lost redundancy (see `DESIGN.md` "Multi-failure
-//! recovery semantics").
+//! tracks each rank's *progress frontier* — which steps a rank ever
+//! completed, surviving the rank's death — the runtime metadata that
+//! lets a replay tell a slow buddy from lost redundancy (see `DESIGN.md`
+//! "Multi-failure recovery semantics"). Since the lookahead refactor the
+//! frontier is a **per-panel vector**, not a single scalar: a pipelined
+//! rank completes panel `k+1` TSQR steps while panel `k` far-trailing
+//! segments are still in flight, so cross-panel "earlier sites covered"
+//! inference is only valid *within* a panel (where each rank's execution
+//! stays totally ordered: TSQR steps, then update lanes in ascending
+//! column order).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -24,8 +32,8 @@ use std::sync::Mutex;
 use crate::fault::Phase;
 use crate::linalg::Matrix;
 
-/// Key: (owning rank, panel, phase, tree step).
-pub type StepKey = (usize, usize, Phase, usize);
+/// Key: (owning rank, panel, phase, tree step, update lane).
+pub type StepKey = (usize, usize, Phase, usize, u32);
 
 /// What a rank retains after an FT exchange step (paper III-C).
 ///
@@ -70,12 +78,22 @@ pub struct RecoveryStore {
     peak_bytes: AtomicU64,
     /// Recovery reads served.
     reads: AtomicU64,
-    /// Per-rank execution frontier: the highest step each rank has ever
-    /// *completed* (monotone across incarnations — this is runtime
-    /// metadata, so unlike `entries` it survives the rank's death). A
-    /// replay that misses an entry *below* its own frontier has lost
-    /// both copies of the step's redundancy: unrecoverable.
-    progress: Mutex<HashMap<usize, u64>>,
+    /// Per-rank, per-panel execution frontier: the highest within-panel
+    /// site each rank has ever *completed* (monotone across incarnations
+    /// — runtime metadata, so unlike `entries` it survives the rank's
+    /// death). Per-panel because the lookahead pipeline interleaves
+    /// panels: completing a step of panel `k+1` says nothing about panel
+    /// `k`'s still-draining far segments. A replay that misses an entry
+    /// at or below its own frontier for that panel has lost both copies
+    /// of the step's redundancy: unrecoverable.
+    progress: Mutex<HashMap<usize, HashMap<usize, u64>>>,
+    /// Checkpoints each rank has completed (runtime metadata, survives
+    /// the rank's death like `progress`): closes the replay window where
+    /// a rank dies after exchanging a checkpoint but before retaining
+    /// anything in the next panel — without this its replacement would
+    /// re-enter the checkpoint against a partner that has long moved on
+    /// and park forever.
+    checkpoints: Mutex<HashMap<usize, HashSet<usize>>>,
     /// Lowest incarnation per rank whose inserts are still accepted.
     /// [`RecoveryStore::drop_owner_dead`] bumps it past the dying
     /// incarnation *before* the death becomes visible, so a straggling
@@ -85,14 +103,16 @@ pub struct RecoveryStore {
     accept_from: Mutex<HashMap<usize, u32>>,
 }
 
-/// Total order on fail/retention sites matching execution order: panels
-/// outermost, TSQR before Update within a panel, tree steps innermost.
-fn site_index(panel: usize, phase: Phase, step: usize) -> u64 {
-    let ph = match phase {
-        Phase::Tsqr => 0u64,
-        Phase::Update => 1u64,
-    };
-    ((panel as u64) << 32) | (ph << 24) | (step as u64 & 0xff_ffff)
+/// Total order on one rank's sites *within one panel*, matching per-rank
+/// execution order under both schedules: TSQR steps first, then update
+/// lanes in ascending column order, tree steps innermost. (Lane 0 is the
+/// lockstep whole-width update; the pipeline's segments use the global
+/// column-block index, always >= panel + 1.)
+fn panel_site_index(phase: Phase, step: usize, lane: u32) -> u64 {
+    match phase {
+        Phase::Tsqr => step as u64,
+        Phase::Update => (1u64 << 40) | ((lane as u64) << 20) | (step as u64 & 0xf_ffff),
+    }
 }
 
 impl RecoveryStore {
@@ -103,10 +123,11 @@ impl RecoveryStore {
 
     /// Record rank `owner`'s retained state for a step, written by the
     /// owner's incarnation `inc`; also advances `owner`'s completion
-    /// frontier (a step is retained exactly when it completes). The
-    /// entry is silently rejected — though the frontier still advances —
-    /// when `inc` predates the last declared death of the rank (see
-    /// [`RecoveryStore::drop_owner_dead`]).
+    /// frontier for `panel` (a step is retained exactly when it
+    /// completes). The entry is silently rejected — though the frontier
+    /// still advances — when `inc` predates the last declared death of
+    /// the rank (see [`RecoveryStore::drop_owner_dead`]).
+    #[allow(clippy::too_many_arguments)]
     pub fn insert(
         &self,
         owner: usize,
@@ -114,6 +135,7 @@ impl RecoveryStore {
         panel: usize,
         phase: Phase,
         step: usize,
+        lane: u32,
         r: Retained,
     ) {
         {
@@ -123,36 +145,85 @@ impl RecoveryStore {
             if inc >= min {
                 let sz = r.nbytes() as u64;
                 let mut g = self.entries.lock().unwrap();
-                if let Some(old) = g.insert((owner, panel, phase, step), r) {
+                if let Some(old) = g.insert((owner, panel, phase, step, lane), r) {
                     self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
                 }
                 let now = self.bytes.fetch_add(sz, Ordering::Relaxed) + sz;
                 self.peak_bytes.fetch_max(now, Ordering::Relaxed);
             }
         }
-        let idx = site_index(panel, phase, step);
+        let idx = panel_site_index(phase, step, lane);
         let mut p = self.progress.lock().unwrap();
-        let e = p.entry(owner).or_insert(0);
+        let e = p.entry(owner).or_default().entry(panel).or_insert(0);
         *e = (*e).max(idx);
     }
 
-    /// Has `owner` (in any incarnation) ever completed the given step?
-    /// Queried by a replaying replacement on a retained-state miss to
-    /// distinguish "step never ran — re-enter it live" from "step ran
-    /// and both redundancy copies are gone — unrecoverable".
-    pub fn has_completed(&self, owner: usize, panel: usize, phase: Phase, step: usize) -> bool {
+    /// Has `owner` (in any incarnation) ever completed the given step of
+    /// the given panel? Queried by a replaying replacement on a
+    /// retained-state miss to distinguish "step never ran — re-enter it
+    /// live" from "step ran and both redundancy copies are gone —
+    /// unrecoverable". Within a panel, completion of a later site covers
+    /// all earlier ones (per-rank in-panel execution is totally
+    /// ordered); across panels no inference is made — the lookahead
+    /// pipeline interleaves them.
+    pub fn has_completed(
+        &self,
+        owner: usize,
+        panel: usize,
+        phase: Phase,
+        step: usize,
+        lane: u32,
+    ) -> bool {
         self.progress
             .lock()
             .unwrap()
             .get(&owner)
-            .is_some_and(|&max| max >= site_index(panel, phase, step))
+            .and_then(|panels| panels.get(&panel))
+            .is_some_and(|&max| max >= panel_site_index(phase, step, lane))
+    }
+
+    /// Record that `owner` completed (exchanged) the diskless checkpoint
+    /// after `panel`.
+    pub fn note_checkpoint(&self, owner: usize, panel: usize) {
+        self.checkpoints.lock().unwrap().entry(owner).or_default().insert(panel);
+    }
+
+    /// Has `owner` (in any incarnation) completed the checkpoint after
+    /// `panel`?
+    pub fn has_checkpointed(&self, owner: usize, panel: usize) -> bool {
+        self.checkpoints
+            .lock()
+            .unwrap()
+            .get(&owner)
+            .is_some_and(|set| set.contains(&panel))
+    }
+
+    /// Has `owner` ever completed *any* step of `panel` or a later one?
+    /// The checkpoint-replay shortcut: a pre-death incarnation that had
+    /// already entered panel `k+1` must have finished (and exchanged)
+    /// every checkpoint up to and including panel `k`'s — the checkpoint
+    /// is an admission barrier in both schedules.
+    pub fn has_progress_at_or_after(&self, owner: usize, panel: usize) -> bool {
+        self.progress
+            .lock()
+            .unwrap()
+            .get(&owner)
+            .is_some_and(|panels| panels.keys().any(|&p| p >= panel))
     }
 
     /// Read rank `owner`'s retained state (a rebuilt rank asking its
     /// step-buddy for recovery data). Returns a clone; the caller charges
     /// the simulated transfer.
-    pub fn get(&self, owner: usize, panel: usize, phase: Phase, step: usize) -> Option<Retained> {
-        let out = self.entries.lock().unwrap().get(&(owner, panel, phase, step)).cloned();
+    pub fn get(
+        &self,
+        owner: usize,
+        panel: usize,
+        phase: Phase,
+        step: usize,
+        lane: u32,
+    ) -> Option<Retained> {
+        let out =
+            self.entries.lock().unwrap().get(&(owner, panel, phase, step, lane)).cloned();
         if out.is_some() {
             self.reads.fetch_add(1, Ordering::Relaxed);
         }
@@ -265,20 +336,31 @@ mod tests {
     #[test]
     fn insert_get_roundtrip() {
         let s = RecoveryStore::new();
-        s.insert(2, 0, 0, Phase::Update, 1, retained(4));
-        let r = s.get(2, 0, Phase::Update, 1).unwrap();
+        s.insert(2, 0, 0, Phase::Update, 1, 0, retained(4));
+        let r = s.get(2, 0, Phase::Update, 1, 0).unwrap();
         assert_eq!(r.buddy, 1);
-        assert!(s.get(2, 0, Phase::Update, 0).is_none());
+        assert!(s.get(2, 0, Phase::Update, 0, 0).is_none());
         assert_eq!(s.reads(), 1);
+    }
+
+    #[test]
+    fn lanes_are_distinct_entries() {
+        let s = RecoveryStore::new();
+        s.insert(0, 0, 0, Phase::Update, 0, 1, retained(4));
+        s.insert(0, 0, 0, Phase::Update, 0, 2, retained(8));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(0, 0, Phase::Update, 0, 1).unwrap().w.rows(), 4);
+        assert_eq!(s.get(0, 0, Phase::Update, 0, 2).unwrap().w.rows(), 8);
+        assert!(s.get(0, 0, Phase::Update, 0, 0).is_none());
     }
 
     #[test]
     fn byte_accounting_tracks_peak() {
         let s = RecoveryStore::new();
-        s.insert(0, 0, 0, Phase::Tsqr, 0, retained(4));
+        s.insert(0, 0, 0, Phase::Tsqr, 0, 0, retained(4));
         let b1 = s.current_bytes();
         assert!(b1 > 0);
-        s.insert(0, 0, 1, Phase::Tsqr, 0, retained(4));
+        s.insert(0, 0, 1, Phase::Tsqr, 0, 0, retained(4));
         let b2 = s.current_bytes();
         assert_eq!(b2, 2 * b1);
         s.retire_before(1);
@@ -289,42 +371,83 @@ mod tests {
     #[test]
     fn reinsert_replaces() {
         let s = RecoveryStore::new();
-        s.insert(0, 0, 0, Phase::Update, 0, retained(4));
-        s.insert(0, 0, 0, Phase::Update, 0, retained(8));
+        s.insert(0, 0, 0, Phase::Update, 0, 0, retained(4));
+        s.insert(0, 0, 0, Phase::Update, 0, 0, retained(8));
         assert_eq!(s.len(), 1);
-        assert_eq!(s.get(0, 0, Phase::Update, 0).unwrap().w.rows(), 8);
+        assert_eq!(s.get(0, 0, Phase::Update, 0, 0).unwrap().w.rows(), 8);
+    }
+
+    #[test]
+    fn frontier_is_per_panel() {
+        let s = RecoveryStore::new();
+        // A pipelined rank completes panel 1's first TSQR step while
+        // panel 0's far update segments are still in flight.
+        s.insert(2, 0, 1, Phase::Tsqr, 1, 0, retained(4));
+        assert!(s.has_completed(2, 1, Phase::Tsqr, 1, 0));
+        assert!(s.has_completed(2, 1, Phase::Tsqr, 0, 0), "earlier in-panel sites covered");
+        assert!(
+            !s.has_completed(2, 0, Phase::Update, 0, 1),
+            "no cross-panel inference under pipelining"
+        );
+        assert!(!s.has_completed(2, 1, Phase::Update, 0, 2), "later sites not covered");
+        assert!(!s.has_completed(3, 1, Phase::Tsqr, 0, 0), "other ranks untouched");
+        // Within a panel, update lanes are ordered after TSQR and by
+        // ascending lane.
+        s.insert(2, 0, 0, Phase::Update, 0, 2, retained(4));
+        assert!(s.has_completed(2, 0, Phase::Tsqr, 5, 0));
+        assert!(s.has_completed(2, 0, Phase::Update, 3, 1), "earlier lane covered");
+        assert!(!s.has_completed(2, 0, Phase::Update, 0, 3), "later lane not");
+    }
+
+    #[test]
+    fn checkpoint_completion_survives_death() {
+        let s = RecoveryStore::new();
+        assert!(!s.has_checkpointed(2, 1));
+        s.note_checkpoint(2, 1);
+        assert!(s.has_checkpointed(2, 1));
+        assert!(!s.has_checkpointed(2, 3));
+        // Runtime metadata: a death wipes entries, not the record.
+        s.drop_owner_dead(2, 0);
+        assert!(s.has_checkpointed(2, 1));
+    }
+
+    #[test]
+    fn progress_at_or_after_covers_checkpoint_shortcut() {
+        let s = RecoveryStore::new();
+        assert!(!s.has_progress_at_or_after(1, 0));
+        s.insert(1, 0, 2, Phase::Tsqr, 0, 0, retained(4));
+        assert!(s.has_progress_at_or_after(1, 2));
+        assert!(s.has_progress_at_or_after(1, 1));
+        assert!(!s.has_progress_at_or_after(1, 3));
+        assert!(!s.has_progress_at_or_after(0, 0), "other ranks untouched");
     }
 
     #[test]
     fn progress_frontier_survives_drop_owner() {
         let s = RecoveryStore::new();
-        s.insert(2, 0, 1, Phase::Tsqr, 1, retained(4));
-        assert!(s.has_completed(2, 1, Phase::Tsqr, 1));
-        assert!(s.has_completed(2, 0, Phase::Update, 3), "earlier sites covered");
-        assert!(!s.has_completed(2, 1, Phase::Update, 0), "later sites not");
-        assert!(!s.has_completed(3, 0, Phase::Tsqr, 0), "other ranks untouched");
+        s.insert(2, 0, 1, Phase::Tsqr, 1, 0, retained(4));
         // Death wipes the retained data but NOT the runtime's knowledge
         // of how far the rank had progressed.
         s.drop_owner(2);
-        assert!(s.get(2, 1, Phase::Tsqr, 1).is_none());
-        assert!(s.has_completed(2, 1, Phase::Tsqr, 1));
+        assert!(s.get(2, 1, Phase::Tsqr, 1, 0).is_none());
+        assert!(s.has_completed(2, 1, Phase::Tsqr, 1, 0));
     }
 
     #[test]
     fn dead_incarnation_inserts_rejected_but_progress_advances() {
         let s = RecoveryStore::new();
-        s.insert(2, 0, 0, Phase::Tsqr, 0, retained(4));
+        s.insert(2, 0, 0, Phase::Tsqr, 0, 0, retained(4));
         // Incarnation 0 dies; its memory is gone and stays gone even if a
         // straggling retain from the killed task lands afterwards.
         s.drop_owner_dead(2, 0);
-        assert!(s.get(2, 0, Phase::Tsqr, 0).is_none());
-        s.insert(2, 0, 0, Phase::Tsqr, 1, retained(4));
-        assert!(s.get(2, 0, Phase::Tsqr, 1).is_none(), "stale insert resurrected");
+        assert!(s.get(2, 0, Phase::Tsqr, 0, 0).is_none());
+        s.insert(2, 0, 0, Phase::Tsqr, 1, 0, retained(4));
+        assert!(s.get(2, 0, Phase::Tsqr, 1, 0).is_none(), "stale insert resurrected");
         // ...but the runtime still learns the step completed pre-crash.
-        assert!(s.has_completed(2, 0, Phase::Tsqr, 1));
+        assert!(s.has_completed(2, 0, Phase::Tsqr, 1, 0));
         // The replacement (incarnation 1) retains normally.
-        s.insert(2, 1, 0, Phase::Tsqr, 1, retained(4));
-        assert!(s.get(2, 0, Phase::Tsqr, 1).is_some());
+        s.insert(2, 1, 0, Phase::Tsqr, 1, 0, retained(4));
+        assert!(s.get(2, 0, Phase::Tsqr, 1, 0).is_some());
     }
 
     #[test]

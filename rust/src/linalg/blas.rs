@@ -103,6 +103,30 @@ pub fn gemm_view(ta: Trans, tb: Trans, alpha: f32, a: MatrixView<'_>, b: MatrixV
     c
 }
 
+/// Which kernel body a gemm call runs. Per-element accumulation order
+/// differs between the two (direct ikj vs register-tile-per-KC-block),
+/// so callers that split one logical product into column segments must
+/// pin the path to the *full-width* op's choice ([`gemm_path`] +
+/// [`gemm_view_into_on`]) to stay bitwise identical to the unsplit call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmPath {
+    /// Allocation-free strided ikj loop (tiny products).
+    Small,
+    /// BLIS-style packed/tiled kernel (everything else).
+    Tiled,
+}
+
+/// The path [`gemm_view_into`] takes for an `(m, n, k)` op volume.
+pub fn gemm_path(m: usize, n: usize, k: usize) -> GemmPath {
+    // The coordinator issues hordes of tiny b x b products (T algebra,
+    // TSQR merges); packing would cost more than the flops.
+    if m * n * k <= SMALL_WORK {
+        GemmPath::Small
+    } else {
+        GemmPath::Tiled
+    }
+}
+
 /// View-based `C = alpha * op(A) @ op(B) + beta * C`: the zero-copy entry
 /// point — `A`, `B` and `C` may all be strided windows into larger
 /// matrices, so callers update trailing blocks in place.
@@ -111,6 +135,31 @@ pub fn gemm_view(ta: Trans, tb: Trans, alpha: f32, a: MatrixView<'_>, b: MatrixV
 /// each output row's accumulation order depends only on the k-blocking,
 /// never on which band or register tile the row lands in.
 pub fn gemm_view_into(
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    beta: f32,
+    c: MatrixViewMut<'_>,
+) {
+    let (m, k) = op_shape(ta, a.shape());
+    let n = op_shape(tb, b.shape()).1;
+    gemm_view_into_on(gemm_path(m, n, k), ta, tb, alpha, a, b, beta, c);
+}
+
+/// [`gemm_view_into`] with the small/tiled dispatch pinned by the caller.
+///
+/// Per output element both paths accumulate over `k` in the same order,
+/// and the tiled path's per-element result is independent of how the
+/// columns of `C` are partitioned into packing blocks — so a caller that
+/// computes a column segment of a wider product through the *same* path
+/// the full-width call would take gets bitwise-identical values for
+/// those columns. This is the foundation of the lookahead pipeline's
+/// `L > 0 ≡ L = 0` determinism guarantee (see DESIGN.md "Lookahead
+/// dataflow engine").
+pub fn gemm_view_into_on(
+    path: GemmPath,
     ta: Trans,
     tb: Trans,
     alpha: f32,
@@ -130,9 +179,7 @@ pub fn gemm_view_into(
         return;
     }
 
-    // The coordinator issues hordes of tiny b x b products (T algebra,
-    // TSQR merges); packing would cost more than the flops.
-    if m * n * k <= SMALL_WORK {
+    if path == GemmPath::Small {
         gemm_small(ta, tb, alpha, a, b, &mut c);
         return;
     }
@@ -698,5 +745,49 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(4, 2);
         gemm(Trans::No, Trans::No, 1.0, &a, &b);
+    }
+
+    #[test]
+    fn gemm_path_matches_dispatch_threshold() {
+        assert_eq!(gemm_path(16, 16, 64), GemmPath::Small); // 16384 <= 32768
+        assert_eq!(gemm_path(32, 32, 32), GemmPath::Small); // boundary inclusive
+        assert_eq!(gemm_path(16, 48, 64), GemmPath::Tiled); // 49152 > 32768
+    }
+
+    #[test]
+    fn gemm_column_split_with_pinned_path_is_bitwise() {
+        // A column segment of a product, computed through the path the
+        // FULL-width call takes, must be bitwise identical to the full
+        // call's columns — even when the segment's own volume would have
+        // dispatched differently. Exercised with beta = 1 (accumulating
+        // onto C), where the small and tiled paths genuinely differ.
+        let (m, k, n, n1) = (32, 32, 48, 16);
+        let a = Matrix::randn(m, k, 1);
+        let b = Matrix::randn(k, n, 2);
+        let c0 = Matrix::randn(m, n, 3);
+        assert_eq!(gemm_path(m, n, k), GemmPath::Tiled);
+        assert_eq!(gemm_path(m, n1, k), GemmPath::Small, "split would re-dispatch");
+
+        let mut full = c0.clone();
+        gemm_into(Trans::No, Trans::No, -1.0, &a, &b, 1.0, &mut full);
+
+        let mut split = c0.clone();
+        let path = gemm_path(m, n, k);
+        let mut j = 0;
+        while j < n {
+            let w = n1.min(n - j);
+            gemm_view_into_on(
+                path,
+                Trans::No,
+                Trans::No,
+                -1.0,
+                a.as_view(),
+                b.view(0, j, k, w),
+                1.0,
+                split.view_mut(0, j, m, w),
+            );
+            j += w;
+        }
+        assert_eq!(full, split, "pinned column split must be bitwise exact");
     }
 }

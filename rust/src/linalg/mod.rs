@@ -13,14 +13,16 @@ mod matrix;
 mod qr;
 
 pub use blas::{
-    gemm, gemm_into, gemm_ref_into, gemm_view, gemm_view_into, par_threads,
-    set_par_threads, trmm_upper, Trans,
+    gemm, gemm_into, gemm_path, gemm_ref_into, gemm_view, gemm_view_into,
+    gemm_view_into_on, par_threads, set_par_threads, trmm_upper, GemmPath, Trans,
 };
 pub use matrix::{Matrix, MatrixView, MatrixViewMut, Rng64};
 pub use qr::{
     dense_qr_r, householder_qr, householder_qr_blocked, householder_qr_ref,
-    leaf_apply, leaf_apply_into, recover_block, recover_block_into, tree_update,
-    tree_update_half, tree_update_into, tsqr_merge, PanelFactors, TreeStep,
+    leaf_apply, leaf_apply_cols_into, leaf_apply_into, recover_block,
+    recover_block_cols_into, recover_block_into, tree_update, tree_update_half,
+    tree_update_half_cols, tree_update_into, tree_update_into_cols, tsqr_merge,
+    PanelFactors, TreeStep,
 };
 
 /// Relative Frobenius distance `‖a − b‖_F / max(‖b‖_F, 1)`.

@@ -12,7 +12,9 @@
 //! survives as [`householder_qr_ref`], the oracle for
 //! `tests/kernel_props.rs`.
 
-use super::blas::{gemm, gemm_into, gemm_view, gemm_view_into, trmm_upper, Trans};
+use super::blas::{
+    gemm, gemm_path, gemm_view, gemm_view_into, gemm_view_into_on, trmm_upper, Trans,
+};
 use super::matrix::{Matrix, MatrixView};
 
 /// Sub-panel width of the blocked QR: trailing columns are updated with
@@ -325,9 +327,42 @@ pub fn tsqr_merge(r0: &Matrix, r1: &Matrix) -> (Matrix, Matrix, Matrix, Matrix) 
 /// Apply the local `Qᵀ` to a trailing block in place:
 /// `C ← C − Y (Tᵀ (Yᵀ C))`. No copy of `C` is taken.
 pub fn leaf_apply_into(y: &Matrix, t: &Matrix, c: &mut Matrix) {
-    let p = gemm(Trans::Yes, Trans::No, 1.0, y, c); // (b, n)
+    let n = c.cols();
+    leaf_apply_cols_into(y, t, c, n);
+}
+
+/// Column-segment variant of [`leaf_apply_into`]: `c` holds a contiguous
+/// column slice of a logically `full_n`-wide trailing block, and the
+/// gemm dispatch is pinned to the full-width op volume — so applying the
+/// reflectors segment by segment is **bitwise identical** to one
+/// full-width application (the lookahead pipeline's determinism
+/// contract). `full_n == c.cols()` degenerates to [`leaf_apply_into`].
+pub fn leaf_apply_cols_into(y: &Matrix, t: &Matrix, c: &mut Matrix, full_n: usize) {
+    let (m, b) = y.shape();
+    let n = c.cols();
+    debug_assert!(n <= full_n, "segment wider than the full block");
+    let mut p = Matrix::zeros(b, n);
+    gemm_view_into_on(
+        gemm_path(b, full_n, m),
+        Trans::Yes,
+        Trans::No,
+        1.0,
+        y.as_view(),
+        c.as_view(),
+        0.0,
+        p.as_view_mut(),
+    );
     let w = trmm_upper(Trans::Yes, 1.0, t, &p); // (b, n)
-    gemm_into(Trans::No, Trans::No, -1.0, y, &w, 1.0, c);
+    gemm_view_into_on(
+        gemm_path(m, full_n, b),
+        Trans::No,
+        Trans::No,
+        -1.0,
+        y.as_view(),
+        w.as_view(),
+        1.0,
+        c.as_view_mut(),
+    );
 }
 
 /// Copying wrapper over [`leaf_apply_into`]: `Ĉ = C − Y (Tᵀ (Yᵀ C))`.
@@ -342,11 +377,47 @@ pub fn leaf_apply(y: &Matrix, t: &Matrix, c: &Matrix) -> Matrix {
 /// Returns `W` (the retained redundancy payload); neither `C` block is
 /// copied.
 pub fn tree_update_into(c0: &mut Matrix, c1: &mut Matrix, y1: &Matrix, t: &Matrix) -> Matrix {
-    let mut s = gemm(Trans::Yes, Trans::No, 1.0, y1, c1);
+    let n = c0.cols();
+    tree_update_into_cols(c0, c1, y1, t, n)
+}
+
+/// Column-segment variant of [`tree_update_into`] with the gemm dispatch
+/// pinned to a `full_n`-wide op (see [`leaf_apply_cols_into`] for the
+/// bitwise contract). `full_n == c0.cols()` degenerates to the plain
+/// variant.
+pub fn tree_update_into_cols(
+    c0: &mut Matrix,
+    c1: &mut Matrix,
+    y1: &Matrix,
+    t: &Matrix,
+    full_n: usize,
+) -> Matrix {
+    let (b, n) = c0.shape();
+    let path = gemm_path(b, full_n, b);
+    let mut s = Matrix::zeros(b, n);
+    gemm_view_into_on(
+        path,
+        Trans::Yes,
+        Trans::No,
+        1.0,
+        y1.as_view(),
+        c1.as_view(),
+        0.0,
+        s.as_view_mut(),
+    );
     s.add_assign(c0);
     let w = trmm_upper(Trans::Yes, 1.0, t, &s);
     c0.sub_assign(&w);
-    gemm_into(Trans::No, Trans::No, -1.0, y1, &w, 1.0, c1);
+    gemm_view_into_on(
+        path,
+        Trans::No,
+        Trans::No,
+        -1.0,
+        y1.as_view(),
+        w.as_view(),
+        1.0,
+        c1.as_view_mut(),
+    );
     w
 }
 
@@ -363,19 +434,65 @@ pub fn tree_update_half(
     t: &Matrix,
     is_top: bool,
 ) -> Matrix {
+    let n = cp.cols();
+    tree_update_half_cols(cp, peer, y1, t, is_top, n)
+}
+
+/// Column-segment variant of [`tree_update_half`] with the gemm dispatch
+/// pinned to a `full_n`-wide op (see [`leaf_apply_cols_into`] for the
+/// bitwise contract). `full_n == cp.cols()` degenerates to the plain
+/// variant.
+pub fn tree_update_half_cols(
+    cp: &mut Matrix,
+    peer: &Matrix,
+    y1: &Matrix,
+    t: &Matrix,
+    is_top: bool,
+    full_n: usize,
+) -> Matrix {
+    let (b, n) = cp.shape();
+    let path = gemm_path(b, full_n, b);
+    let mut s = Matrix::zeros(b, n);
     if is_top {
         // cp = C₀, peer = C₁: s = Y₁ᵀC₁ + C₀, then C₀ ← C₀ − W.
-        let mut s = gemm(Trans::Yes, Trans::No, 1.0, y1, peer);
+        gemm_view_into_on(
+            path,
+            Trans::Yes,
+            Trans::No,
+            1.0,
+            y1.as_view(),
+            peer.as_view(),
+            0.0,
+            s.as_view_mut(),
+        );
         s.add_assign(cp);
         let w = trmm_upper(Trans::Yes, 1.0, t, &s);
         cp.sub_assign(&w);
         w
     } else {
         // cp = C₁, peer = C₀: same s, then C₁ ← C₁ − Y₁W.
-        let mut s = gemm(Trans::Yes, Trans::No, 1.0, y1, cp);
+        gemm_view_into_on(
+            path,
+            Trans::Yes,
+            Trans::No,
+            1.0,
+            y1.as_view(),
+            cp.as_view(),
+            0.0,
+            s.as_view_mut(),
+        );
         s.add_assign(peer);
         let w = trmm_upper(Trans::Yes, 1.0, t, &s);
-        gemm_into(Trans::No, Trans::No, -1.0, y1, &w, 1.0, cp);
+        gemm_view_into_on(
+            path,
+            Trans::No,
+            Trans::No,
+            -1.0,
+            y1.as_view(),
+            w.as_view(),
+            1.0,
+            cp.as_view_mut(),
+        );
         w
     }
 }
@@ -397,7 +514,26 @@ pub fn tree_update(c0: &Matrix, c1: &Matrix, y1: &Matrix, t: &Matrix) -> TreeSte
 /// through `Backend::recover_top_into` instead of multiplying by an
 /// identity.)
 pub fn recover_block_into(c: &mut Matrix, y: &Matrix, w: &Matrix) {
-    gemm_into(Trans::No, Trans::No, -1.0, y, w, 1.0, c);
+    let n = c.cols();
+    recover_block_cols_into(c, y, w, n);
+}
+
+/// Column-segment variant of [`recover_block_into`] with the gemm
+/// dispatch pinned to a `full_n`-wide op — a replayed segment takes the
+/// exact kernel path the live segmented update took, so the recovered
+/// rows stay bit-identical under the lookahead pipeline too.
+pub fn recover_block_cols_into(c: &mut Matrix, y: &Matrix, w: &Matrix, full_n: usize) {
+    let b = c.rows();
+    gemm_view_into_on(
+        gemm_path(b, full_n, y.cols()),
+        Trans::No,
+        Trans::No,
+        -1.0,
+        y.as_view(),
+        w.as_view(),
+        1.0,
+        c.as_view_mut(),
+    );
 }
 
 /// Copying wrapper over [`recover_block_into`]: `Ĉ = C − Y W`.
@@ -410,7 +546,7 @@ pub fn recover_block(c: &Matrix, y: &Matrix, w: &Matrix) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{gram_residual, rel_err};
+    use crate::linalg::{gemm_into, gram_residual, rel_err};
 
     fn q_from(y: &Matrix, t: &Matrix) -> Matrix {
         // Q = I - Y T Yᵀ
@@ -562,6 +698,61 @@ mod tests {
         assert!(rel_err(&rec1, &st.c1) < 1e-5);
         let rec0 = recover_block(&c0, &Matrix::eye(8), &st.w);
         assert!(rel_err(&rec0, &st.c0) < 1e-5);
+    }
+
+    #[test]
+    fn leaf_apply_cols_matches_full_bitwise() {
+        // Shapes chosen so a 16-wide segment's own volume would dispatch
+        // to the small gemm path while the 48-wide full block is tiled —
+        // the pinned dispatch must keep them bitwise identical anyway.
+        let a = Matrix::randn(64, 16, 21);
+        let f = householder_qr(&a);
+        let c = Matrix::randn(64, 48, 22);
+        let mut full = c.clone();
+        leaf_apply_into(&f.y, &f.t, &mut full);
+        let mut split = Matrix::zeros(64, 48);
+        for j in [0usize, 16, 32] {
+            let mut seg = c.block(0, j, 64, 16);
+            leaf_apply_cols_into(&f.y, &f.t, &mut seg, 48);
+            split.set_block(0, j, &seg);
+        }
+        assert_eq!(full, split, "segmented leaf apply must be bitwise exact");
+    }
+
+    #[test]
+    fn tree_update_cols_match_full_bitwise() {
+        // b = 32, full n = 96: the full-width ops are tiled while a
+        // 32-wide segment's own volume sits exactly at the small-path
+        // threshold — the pinned dispatch must bridge the difference.
+        let r0 = Matrix::randn(32, 32, 23).triu();
+        let r1 = Matrix::randn(32, 32, 24).triu();
+        let (_y0, y1, t, _r) = tsqr_merge(&r0, &r1);
+        let c0 = Matrix::randn(32, 96, 25);
+        let c1 = Matrix::randn(32, 96, 26);
+        let st = tree_update(&c0, &c1, &y1, &t);
+        for j in [0usize, 32, 64] {
+            // Per-segment halves, paths pinned to the 96-wide op.
+            let mut top = c0.block(0, j, 32, 32);
+            let peer_bot = c1.block(0, j, 32, 32);
+            let w_top = tree_update_half_cols(&mut top, &peer_bot, &y1, &t, true, 96);
+            assert_eq!(w_top, st.w.block(0, j, 32, 32), "W seg at {j}");
+            assert_eq!(top, st.c0.block(0, j, 32, 32), "c0 seg at {j}");
+            let mut bot = c1.block(0, j, 32, 32);
+            let peer_top = c0.block(0, j, 32, 32);
+            let w_bot = tree_update_half_cols(&mut bot, &peer_top, &y1, &t, false, 96);
+            assert_eq!(w_bot, st.w.block(0, j, 32, 32));
+            assert_eq!(bot, st.c1.block(0, j, 32, 32), "c1 seg at {j}");
+            // The pair form and the replay recompute agree per segment.
+            let mut pair0 = c0.block(0, j, 32, 32);
+            let mut pair1 = c1.block(0, j, 32, 32);
+            let w = tree_update_into_cols(&mut pair0, &mut pair1, &y1, &t, 96);
+            assert_eq!(w, w_bot);
+            assert_eq!(pair0, top);
+            assert_eq!(pair1, bot);
+            let mut rec = c1.block(0, j, 32, 32);
+            recover_block_cols_into(&mut rec, &y1, &w, 96);
+            assert_eq!(rec, bot, "replayed segment at {j}");
+        }
     }
 
     #[test]

@@ -75,7 +75,8 @@ USAGE:
               [--backend native|xla] [--artifacts DIR]
               [--kill rank@panel:step[:tsqr|update[:incarnation]]]...
               [--kill-pair a,b@panel:step[:phase]]...
-              [--checkpoint-every K] [--seed S] [--trace-out trace.json]
+              [--checkpoint-every K] [--lookahead L] [--seed S]
+              [--trace-out trace.json]
   ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W] [--par T]
               [--mode ft|plain] [--seed S]
   ftcaqr serve --jobs FILE [--workers W] [--max-ranks R] [--batch K]
@@ -88,6 +89,9 @@ when the worker pool already owns the cores).
 Repeat --kill for k independent failures; --kill ...:1 aims at the first
 REBUILD replacement (failure during recovery); --kill-pair crashes both
 ranks at once — on a retention pair this is reported as unrecoverable.
+--lookahead L pipelines the panel loop: up to L+1 panels in flight per
+rank (next panel's TSQR overlaps the far-trailing update). L = 0 is the
+lockstep schedule; factors are bitwise identical for every L.
 
 serve runs every job in FILE (one per line: 'caqr key=value ...' or
 'tsqr key=value ...', '#' comments; kills use the same spec grammar as
@@ -110,6 +114,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     cfg.par = flags.num("par", cfg.par)?;
     cfg.seed = flags.num("seed", cfg.seed)?;
     cfg.checkpoint_every = flags.num("checkpoint-every", cfg.checkpoint_every)?;
+    cfg.lookahead = flags.num("lookahead", cfg.lookahead)?;
     if let Some(a) = flags.get("algorithm") {
         cfg.algorithm = a.parse::<Algorithm>().map_err(anyhow::Error::msg)?;
     }
@@ -136,8 +141,8 @@ fn cmd_run(flags: &Flags) -> Result<()> {
 
     println!("== ftcaqr run ==");
     println!(
-        "matrix {}x{}  block {}  procs {}  algorithm {}  backend {}",
-        cfg.rows, cfg.cols, cfg.block, cfg.procs, cfg.algorithm, backend_kind
+        "matrix {}x{}  block {}  procs {}  algorithm {}  lookahead {}  backend {}",
+        cfg.rows, cfg.cols, cfg.block, cfg.procs, cfg.algorithm, cfg.lookahead, backend_kind
     );
     println!("metrics: {}", out.report);
     println!("store peak bytes: {}", out.store_peak_bytes);

@@ -24,11 +24,19 @@ pub struct Metrics {
     pub failures: AtomicU64,
     /// Final logical clock per rank (the dual-channel cost model).
     clocks: Mutex<Vec<f64>>,
+    /// Per-rank (compute seconds, communication seconds) split of the
+    /// logical clock — communication includes time spent *waiting* on a
+    /// peer (everything that is not local compute).
+    times: Mutex<Vec<(f64, f64)>>,
 }
 
 impl Metrics {
     pub fn new(ranks: usize) -> Arc<Self> {
-        Arc::new(Self { clocks: Mutex::new(vec![0.0; ranks]), ..Default::default() })
+        Arc::new(Self {
+            clocks: Mutex::new(vec![0.0; ranks]),
+            times: Mutex::new(vec![(0.0, 0.0); ranks]),
+            ..Default::default()
+        })
     }
 
     pub fn record_message(&self, bytes: usize) {
@@ -65,12 +73,30 @@ impl Metrics {
         c[rank] = c[rank].max(t);
     }
 
+    /// Publish a rank's compute/communication split of its logical clock
+    /// (max-merged across incarnations, like [`Metrics::set_clock`]).
+    pub fn set_rank_times(&self, rank: usize, compute_s: f64, comm_s: f64) {
+        let mut t = self.times.lock().unwrap();
+        if rank >= t.len() {
+            t.resize(rank + 1, (0.0, 0.0));
+        }
+        t[rank].0 = t[rank].0.max(compute_s);
+        t[rank].1 = t[rank].1.max(comm_s);
+    }
+
     /// Critical path = max over ranks of the logical clock.
     pub fn critical_path(&self) -> f64 {
         self.clocks.lock().unwrap().iter().cloned().fold(0.0, f64::max)
     }
 
     pub fn snapshot(&self) -> Report {
+        let (compute_path, comm_path) = {
+            let t = self.times.lock().unwrap();
+            (
+                t.iter().map(|p| p.0).fold(0.0, f64::max),
+                t.iter().map(|p| p.1).fold(0.0, f64::max),
+            )
+        };
         Report {
             messages: self.messages.load(Ordering::Relaxed),
             exchanges: self.exchanges.load(Ordering::Relaxed),
@@ -79,6 +105,8 @@ impl Metrics {
             recoveries: self.recoveries.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
             critical_path: self.critical_path(),
+            compute_path,
+            comm_path,
         }
     }
 }
@@ -100,6 +128,14 @@ pub struct Report {
     pub failures: u64,
     /// Max over ranks of the final logical clock, seconds.
     pub critical_path: f64,
+    /// Max over ranks of the *compute* share of the logical clock,
+    /// seconds — with [`Report::comm_path`], the first-class readout of
+    /// the paper's failure-free FT-vs-plain overhead claim (redundancy
+    /// shows up as compute, not as critical-path communication).
+    pub compute_path: f64,
+    /// Max over ranks of the *communication* share of the logical clock
+    /// (transfer time plus waiting on peers), seconds.
+    pub comm_path: f64,
 }
 
 impl Report {
@@ -116,6 +152,8 @@ impl Report {
         self.recoveries += other.recoveries;
         self.failures += other.failures;
         self.critical_path = self.critical_path.max(other.critical_path);
+        self.compute_path = self.compute_path.max(other.compute_path);
+        self.comm_path = self.comm_path.max(other.comm_path);
     }
 
     /// Difference against an earlier snapshot (for per-phase accounting).
@@ -128,6 +166,8 @@ impl Report {
             recoveries: self.recoveries - earlier.recoveries,
             failures: self.failures - earlier.failures,
             critical_path: self.critical_path,
+            compute_path: self.compute_path,
+            comm_path: self.comm_path,
         }
     }
 }
@@ -136,14 +176,17 @@ impl std::fmt::Display for Report {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "msgs={} exch={} bytes={} flops={} fail={} recov={} cp={:.6}s",
+            "msgs={} exch={} bytes={} flops={} fail={} recov={} cp={:.6}s \
+             (compute={:.6}s comm={:.6}s)",
             self.messages,
             self.exchanges,
             self.bytes,
             self.flops,
             self.failures,
             self.recoveries,
-            self.critical_path
+            self.critical_path,
+            self.compute_path,
+            self.comm_path
         )
     }
 }
@@ -187,6 +230,27 @@ mod tests {
         assert_eq!(total.flops, 10);
         assert_eq!(total.failures, 1);
         assert_eq!(total.critical_path, 5.0);
+    }
+
+    #[test]
+    fn rank_time_split_is_max_over_ranks() {
+        let m = Metrics::new(2);
+        m.set_rank_times(0, 1.0, 4.0);
+        m.set_rank_times(1, 3.0, 2.0);
+        let r = m.snapshot();
+        assert_eq!(r.compute_path, 3.0);
+        assert_eq!(r.comm_path, 4.0);
+        // Re-publishing (a REBUILD incarnation) max-merges per rank.
+        m.set_rank_times(0, 0.5, 5.0);
+        let r2 = m.snapshot();
+        assert_eq!(r2.compute_path, 3.0);
+        assert_eq!(r2.comm_path, 5.0);
+        // absorb maxes the paths like the critical path.
+        let mut total = Report::default();
+        total.absorb(&r2);
+        total.absorb(&Report { compute_path: 9.0, ..Default::default() });
+        assert_eq!(total.compute_path, 9.0);
+        assert_eq!(total.comm_path, 5.0);
     }
 
     #[test]

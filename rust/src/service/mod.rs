@@ -629,6 +629,7 @@ pub fn seed_for(base: u64, job_index: u64) -> u64 {
 ///
 /// ```text
 /// caqr rows=256 cols=64 block=16 procs=4 seed=1 kill=1@0:0:update
+/// caqr rows=512 cols=128 block=32 procs=4 lookahead=2 seed=9
 /// tsqr rows=128 block=8 procs=8 mode=ft seed=7
 /// ```
 pub fn parse_jobs(text: &str) -> Result<Vec<JobSpec>> {
@@ -672,6 +673,7 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
                     "seed" => cfg.seed = v.parse()?,
                     "verify" => cfg.verify = v.parse()?,
                     "checkpoint-every" => cfg.checkpoint_every = v.parse()?,
+                    "lookahead" => cfg.lookahead = v.parse()?,
                     "algorithm" => {
                         cfg.algorithm = v.parse().map_err(anyhow::Error::msg)?
                     }
@@ -737,8 +739,17 @@ mod tests {
         let JobSpec::Caqr { cfg, kills } = spec else { panic!("caqr expected") };
         assert_eq!((cfg.rows, cfg.cols, cfg.block, cfg.procs, cfg.seed), (256, 64, 16, 4, 9));
         assert_eq!(cfg.algorithm, Algorithm::FaultTolerant);
+        assert_eq!(cfg.lookahead, 0, "jobs default to lockstep");
         assert_eq!(kills.len(), 1);
         assert_eq!(kills[0].rank, 1);
+    }
+
+    #[test]
+    fn job_line_parses_lookahead() {
+        let spec = parse_job_line("caqr rows=256 cols=64 block=16 procs=4 lookahead=2").unwrap();
+        let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
+        assert_eq!(cfg.lookahead, 2);
+        assert!(parse_job_line("caqr lookahead=deep").is_err());
     }
 
     #[test]

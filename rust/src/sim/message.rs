@@ -42,8 +42,11 @@ pub enum TagKind {
     Misc(u16),
 }
 
-/// Full message tag: kind + panel + tree step. Matching is exact, so
-/// concurrent panels/steps can never cross-talk.
+/// Full message tag: kind + panel + tree step + lane. Matching is exact,
+/// so concurrent panels/steps can never cross-talk — the lookahead
+/// pipeline relies on this to keep several in-flight panels' exchanges
+/// (and, within a panel, several column-segment update lanes) routed
+/// independently on one rank pair.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Tag {
     /// Protocol message kind.
@@ -52,16 +55,25 @@ pub struct Tag {
     pub panel: u32,
     /// Tree step the message belongs to.
     pub step: u32,
+    /// Sub-phase lane: 0 for whole-width traffic (plain lockstep mode),
+    /// the global column-block index for a pipelined update segment.
+    pub lane: u32,
 }
 
 impl Tag {
+    /// Tag on the default lane 0 (whole-width traffic).
     pub fn new(kind: TagKind, panel: usize, step: usize) -> Self {
-        Self { kind, panel: panel as u32, step: step as u32 }
+        Self::with_lane(kind, panel, step, 0)
+    }
+
+    /// Tag on an explicit lane (a pipelined update segment's traffic).
+    pub fn with_lane(kind: TagKind, panel: usize, step: usize, lane: u32) -> Self {
+        Self { kind, panel: panel as u32, step: step as u32, lane }
     }
 
     /// Tag with no panel/step context.
     pub fn plain(kind: TagKind) -> Self {
-        Self { kind, panel: 0, step: 0 }
+        Self::new(kind, 0, 0)
     }
 }
 
@@ -185,6 +197,12 @@ mod tests {
         let b = Tag::new(TagKind::TsqrR, 1, 3);
         assert_ne!(a, b);
         assert_eq!(a, Tag::new(TagKind::TsqrR, 1, 2));
+        // Lanes are part of the match key: two update segments of the
+        // same (panel, step) never cross-talk.
+        let l1 = Tag::with_lane(TagKind::UpdateC, 1, 0, 2);
+        let l2 = Tag::with_lane(TagKind::UpdateC, 1, 0, 3);
+        assert_ne!(l1, l2);
+        assert_eq!(Tag::new(TagKind::UpdateC, 1, 0).lane, 0);
     }
 
     #[test]

@@ -244,6 +244,10 @@ pub struct RankCtx {
     /// kill can invalidate it while the task still runs — see
     /// [`RankCtx::check_self`].
     inc: u32,
+    /// Compute share of `clock` accumulated by this incarnation.
+    compute_s: f64,
+    /// Communication share of `clock` (transfers + waiting on peers).
+    comm_s: f64,
     router: Arc<Router>,
     mailbox: Mailbox,
 }
@@ -251,14 +255,32 @@ pub struct RankCtx {
 impl Drop for RankCtx {
     fn drop(&mut self) {
         self.metrics.set_clock(self.rank, self.clock);
+        self.metrics.set_rank_times(self.rank, self.compute_s, self.comm_s);
     }
 }
 
 impl RankCtx {
     /// Advance the clock for a local computation and account flops.
     pub fn compute(&mut self, flops: u64) {
-        self.clock += self.cost.compute_time(flops);
+        let dt = self.cost.compute_time(flops);
+        self.clock += dt;
+        self.compute_s += dt;
         self.metrics.record_flops(flops);
+    }
+
+    /// Advance the clock by a communication delta (charged as comm time).
+    fn advance_comm_to(&mut self, t: f64) {
+        self.comm_s += t - self.clock;
+        self.clock = t;
+    }
+
+    /// Charge a local retained-state read as one simulated message (the
+    /// recovery fetch of paper III-C): the receive-time formula applied
+    /// against our own clock, accounted as communication.
+    pub fn charge_local_recv(&mut self, bytes: usize) {
+        let t = self.cost.recv_time(self.clock, self.clock, bytes);
+        self.advance_comm_to(t);
+        self.metrics.record_message(bytes);
     }
 
     /// Fault-injection site: dies (and unwinds the task) when scheduled.
@@ -320,7 +342,8 @@ impl RankCtx {
     /// model.
     pub fn send(&mut self, dst: usize, tag: Tag, data: MsgData) -> Result<(), Fail> {
         let bytes = self.push(dst, tag, data, false)?;
-        self.clock += self.cost.o;
+        let t = self.clock + self.cost.o;
+        self.advance_comm_to(t);
         self.metrics.record_message(bytes);
         Ok(())
     }
@@ -331,7 +354,8 @@ impl RankCtx {
         loop {
             let open = self.mailbox.drain();
             if let Some(env) = self.mailbox.take(src, tag) {
-                self.clock = self.cost.recv_time(self.clock, env.send_ts, env.bytes);
+                let t = self.cost.recv_time(self.clock, env.send_ts, env.bytes);
+                self.advance_comm_to(t);
                 return Ok(env.data);
             }
             if !open {
@@ -378,8 +402,9 @@ impl RankCtx {
                 crate::simlog!("[r{}] RETRANSMIT to {peer} {tag:?} ok={ok}", self.rank);
             }
             if let Some(env) = self.mailbox.take(peer, tag) {
-                self.clock =
+                let t =
                     self.cost.exchange_time(self.clock, env.send_ts, bytes_out, env.bytes);
+                self.advance_comm_to(t);
                 return Ok(env.data);
             }
             if !open {
@@ -415,7 +440,8 @@ impl RankCtx {
         self.check_self()?;
         let open = self.mailbox.drain();
         if let Some(env) = self.mailbox.take(src, tag) {
-            self.clock = self.cost.recv_time(self.clock, env.send_ts, env.bytes);
+            let t = self.cost.recv_time(self.clock, env.send_ts, env.bytes);
+            self.advance_comm_to(t);
             return Ok(Some(env.data));
         }
         if !open {
@@ -467,8 +493,9 @@ impl RankCtx {
             crate::simlog!("[r{}] RETRANSMIT to {} {:?} ok={ok}", self.rank, op.peer, op.tag);
         }
         if let Some(env) = self.mailbox.take(op.peer, op.tag) {
-            self.clock =
+            let t =
                 self.cost.exchange_time(self.clock, env.send_ts, op.bytes_out, env.bytes);
+            self.advance_comm_to(t);
             return Ok(Some(env.data));
         }
         if !open {
@@ -542,13 +569,18 @@ impl World {
             metrics: self.metrics.clone(),
             fault: self.fault.clone(),
             inc: self.router.incarnation(rank),
+            compute_s: 0.0,
+            comm_s: 0.0,
             router: self.router.clone(),
             mailbox: Mailbox::new(rx),
         }
     }
 
     /// REBUILD a dead rank: fresh mailbox/incarnation, clock preset to
-    /// the recovery start time (usually the detector's clock).
+    /// the recovery start time (usually the detector's clock). The preset
+    /// offset is charged as *communication* time (failure detection +
+    /// respawn is wait, not compute), so the replacement's published
+    /// compute/comm split still decomposes its final logical clock.
     pub fn revive(&self, rank: usize, clock0: f64) -> RankCtx {
         let rx = self.router.revive(rank);
         RankCtx {
@@ -558,6 +590,8 @@ impl World {
             metrics: self.metrics.clone(),
             fault: self.fault.clone(),
             inc: self.router.incarnation(rank),
+            compute_s: 0.0,
+            comm_s: clock0,
             router: self.router.clone(),
             mailbox: Mailbox::new(rx),
         }

@@ -656,6 +656,77 @@ mod tests {
         assert_eq!(w.metrics.snapshot().exchanges, (n * 6) as u64);
     }
 
+    /// Two independent exchange chains multiplexed on ONE task, routed
+    /// apart purely by the tag's lane — the lookahead engine's shape: a
+    /// rank drives several in-flight sub-machines, each parking on its
+    /// own exchange, and a single wakeup advances whichever can run.
+    struct TwoLanes {
+        s: [usize; 2],
+        ops: [Option<ExchangeOp>; 2],
+        steps: usize,
+    }
+
+    impl RankTask for TwoLanes {
+        fn poll(&mut self, ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+            loop {
+                let mut progressed = false;
+                for lane in 0..2 {
+                    if let Some(op) = self.ops[lane].as_mut() {
+                        match ctx.poll_exchange(op) {
+                            Ok(Some(d)) => {
+                                // The payload must come from the SAME
+                                // lane's chain — no cross-talk.
+                                assert_eq!(d.into_ctrl(), lane as u64);
+                                self.ops[lane] = None;
+                                self.s[lane] += 1;
+                                progressed = true;
+                            }
+                            Ok(None) => {}
+                            Err(e) => return TaskPoll::Ready(Err(e)),
+                        }
+                    }
+                    if self.ops[lane].is_none() && self.s[lane] < self.steps {
+                        let peer = ctx.rank ^ 1;
+                        let t = Tag::with_lane(TagKind::UpdateC, 0, self.s[lane], lane as u32);
+                        match ctx.begin_exchange(peer, t, MsgData::Ctrl(lane as u64)) {
+                            Ok(op) => {
+                                self.ops[lane] = Some(op);
+                                progressed = true;
+                            }
+                            Err(e) => return TaskPoll::Ready(Err(e)),
+                        }
+                    }
+                }
+                if self.s[0] == self.steps && self.s[1] == self.steps {
+                    return TaskPoll::Ready(Ok(()));
+                }
+                if !progressed {
+                    return TaskPoll::Pending;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_task_multiplexes_lane_routed_exchanges() {
+        let n = 2;
+        let w = World::new(n, CostModel::default(), FaultPlan::none());
+        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..n)
+            .map(|r| {
+                (
+                    r,
+                    Box::new(TwoLanes { s: [0, 0], ops: [None, None], steps: 5 })
+                        as Box<dyn RankTask>,
+                )
+            })
+            .collect();
+        let results = w.run_tasks(2, tasks);
+        for (rank, res) in results {
+            assert_eq!(res, Ok(()), "rank {rank}");
+        }
+        assert_eq!(w.metrics.snapshot().exchanges, (n * 2 * 5) as u64);
+    }
+
     /// A task that parks forever (waits for a message nobody sends).
     struct Forever;
 
