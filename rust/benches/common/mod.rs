@@ -82,66 +82,7 @@ pub fn artifacts_present() -> bool {
         .exists()
 }
 
-/// One JSON field value (hand-rolled: the offline crate set has no serde).
-pub enum JsonVal<'a> {
-    /// String field.
-    S(&'a str),
-    /// Float field (written with enough digits to round-trip).
-    F(f64),
-    /// Integer field.
-    I(i64),
-}
-
-/// Collects flat JSON records and writes them as an array — to the path
-/// in `FTCAQR_BENCH_JSON` if set, else to `<bench>.json` under the crate
-/// root. This is the machine-readable channel CI archives so the perf
-/// trajectory is tracked across PRs.
-pub struct JsonSink {
-    records: Vec<String>,
-}
-
-impl JsonSink {
-    pub fn new() -> Self {
-        Self { records: Vec::new() }
-    }
-
-    /// Append one flat object.
-    pub fn rec(&mut self, fields: &[(&str, JsonVal<'_>)]) {
-        let body: Vec<String> = fields
-            .iter()
-            .map(|(k, v)| {
-                let val = match v {
-                    JsonVal::S(s) => format!("\"{}\"", escape(s)),
-                    JsonVal::F(f) if f.is_finite() => format!("{f:e}"),
-                    JsonVal::F(_) => "null".to_string(),
-                    JsonVal::I(i) => i.to_string(),
-                };
-                format!("\"{}\":{}", escape(k), val)
-            })
-            .collect();
-        self.records.push(format!("{{{}}}", body.join(",")));
-    }
-
-    /// Write the array and report where it went. Returns the path used.
-    pub fn finish(self, bench: &str) -> std::path::PathBuf {
-        let path = match std::env::var("FTCAQR_BENCH_JSON") {
-            Ok(p) => std::path::PathBuf::from(p),
-            Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-                .join(format!("{bench}.json")),
-        };
-        let body = format!("[\n{}\n]\n", self.records.join(",\n"));
-        match std::fs::write(&path, &body) {
-            Ok(()) => println!(
-                "\njson: {} records -> {}",
-                self.records.len(),
-                path.display()
-            ),
-            Err(e) => println!("\njson: write to {} failed: {e}", path.display()),
-        }
-        path
-    }
-}
-
-fn escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
+/// Machine-readable output: one shared implementation in the library
+/// (the `campaign` subcommand writes the same format) — re-exported here
+/// so every bench keeps its `common::JsonSink` spelling.
+pub use ftcaqr::metrics::json::{JsonSink, JsonVal};

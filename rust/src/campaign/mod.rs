@@ -1,0 +1,654 @@
+//! Stochastic failure campaigns: sweep failure rate x P x checkpoint
+//! interval across the CAQR driver, measure survival probability and
+//! expected makespan, and validate [`crate::checkpoint::CheckpointModel`]
+//! against the measured failure-free runs.
+//!
+//! One campaign is reproducible from one seed: every trial's input
+//! matrix and kill schedule derive from `(seed, cell, trial)` through
+//! splitmix streams, the stochastic generators compile to concrete
+//! schedules before any rank runs ([`StochasticSpec::kills`]), and every
+//! trial's simulated world is driven by a single worker so logical
+//! clocks — and therefore makespans — are bit-identical across runs.
+//! Wall-clock parallelism comes from running *trials* concurrently on OS
+//! threads; results land in a pre-sized table by deterministic index, so
+//! the emitted JSON never depends on completion order.
+//!
+//! Trial seeds are shared across the checkpoint-interval axis: the same
+//! (mtbf, procs, trial) triple sees the same matrix and the same failure
+//! realization at every interval, so interval comparisons are paired
+//! rather than confounded by fresh randomness.
+//!
+//! Because kills are random and plentiful, a campaign doubles as a
+//! randomized soak test of the recovery protocol: any trial that ends in
+//! an error other than the documented unrecoverable cases, or survives
+//! with a bad residual, is a protocol bug surfaced by `--seed` replay.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::backend::Backend;
+use crate::checkpoint::{auto_checkpoint_interval, failure_rate_estimate};
+use crate::config::RunConfig;
+use crate::coordinator::run_caqr;
+use crate::fault::{FaultPlan, FaultSpec, Hazard, ScheduledKill, StochasticSpec};
+use crate::metrics::json::{JsonSink, JsonVal};
+use crate::service::seed_for;
+use crate::trace::Trace;
+
+/// Residual threshold above which a "completed" trial is counted as not
+/// survived (the factorization came back numerically wrong — a protocol
+/// bug, not a tolerable outcome).
+pub const RESIDUAL_TOL: f32 = 1e-3;
+
+/// One checkpoint-interval choice of a sweep: a concrete interval in
+/// panels (0 = off) or `auto` (resolved per (mtbf, procs) cell from the
+/// materialized failure rate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntervalChoice {
+    /// Fixed interval in panels; 0 disables checkpointing.
+    Fixed(usize),
+    /// Resolve via [`crate::checkpoint::auto_checkpoint_interval`].
+    Auto,
+}
+
+impl std::str::FromStr for IntervalChoice {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        if s == "auto" {
+            Ok(IntervalChoice::Auto)
+        } else {
+            Ok(IntervalChoice::Fixed(
+                s.parse().with_context(|| format!("bad checkpoint interval '{s}'"))?,
+            ))
+        }
+    }
+}
+
+/// Full description of one campaign sweep.
+#[derive(Clone, Debug)]
+pub struct CampaignConfig {
+    /// Shape/cost template for every cell; `procs`, `checkpoint_every`,
+    /// `seed` and `fault` are overridden per trial, and `workers` is
+    /// forced to 1 (see the module docs on determinism).
+    pub base: RunConfig,
+    /// Process counts to sweep.
+    pub procs: Vec<usize>,
+    /// MTBF values (panels per failure per unit) to sweep.
+    pub mtbf_panels: Vec<f64>,
+    /// Checkpoint intervals to sweep.
+    pub intervals: Vec<IntervalChoice>,
+    /// Inter-arrival law of the failure process.
+    pub hazard: Hazard,
+    /// Ranks per correlated failure unit (1 = independent ranks).
+    pub node_width: usize,
+    /// Trials per cell.
+    pub trials: usize,
+    /// Kill-schedule cap per trial.
+    pub max_failures: usize,
+    /// Master seed; everything else derives from it.
+    pub seed: u64,
+    /// Relative-error tolerance for the predicted-vs-measured makespan
+    /// check on the failure-free checkpointed baselines; `None` records
+    /// the errors without asserting.
+    pub check_tol: Option<f64>,
+    /// OS threads running trials concurrently (0 = available cores).
+    pub jobs: usize,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        Self {
+            base: RunConfig::default(),
+            procs: vec![4],
+            mtbf_panels: vec![8.0],
+            intervals: vec![IntervalChoice::Fixed(0)],
+            hazard: Hazard::Poisson,
+            node_width: 1,
+            trials: 3,
+            max_failures: 16,
+            seed: 0,
+            check_tol: Some(0.5),
+            jobs: 0,
+        }
+    }
+}
+
+/// Outcome of one trial (one seeded run under one kill schedule).
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    /// MTBF of the cell this trial belongs to.
+    pub mtbf_panels: f64,
+    /// Process count of the cell.
+    pub procs: usize,
+    /// Resolved checkpoint interval the trial ran with.
+    pub interval: usize,
+    /// Whether the interval came from `auto` resolution.
+    pub auto_interval: bool,
+    /// Trial index within the cell.
+    pub trial: usize,
+    /// Input-matrix seed.
+    pub matrix_seed: u64,
+    /// Kill-schedule seed.
+    pub fault_seed: u64,
+    /// The materialized kill schedule.
+    pub kills: Vec<ScheduledKill>,
+    /// Completed with an acceptable residual.
+    pub survived: bool,
+    /// Simulated makespan (critical path, seconds); NaN when the run
+    /// died unrecoverably.
+    pub makespan: f64,
+    /// Failures injected (from the run's metrics; 0 when it died).
+    pub failures: u64,
+    /// Recoveries completed (0 when it died).
+    pub recoveries: u64,
+    /// Why the trial did not survive, when it didn't.
+    pub error: Option<String>,
+}
+
+/// Failure-free reference for one (procs, interval) pair, and the
+/// checkpoint-model validation attached to it.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineResult {
+    /// Process count.
+    pub procs: usize,
+    /// Checkpoint interval (0 = the clean no-checkpoint reference).
+    pub interval: usize,
+    /// Measured failure-free makespan at this interval.
+    pub measured: f64,
+    /// Model-predicted makespan: the interval-0 measurement plus the
+    /// predicted checkpoint-exchange overhead.
+    pub predicted: f64,
+    /// `|measured - predicted| / measured`.
+    pub rel_err: f64,
+}
+
+/// Aggregated outcome of one sweep cell (mtbf x procs x interval).
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// MTBF of the cell.
+    pub mtbf_panels: f64,
+    /// Process count.
+    pub procs: usize,
+    /// Resolved checkpoint interval.
+    pub interval: usize,
+    /// Whether the interval came from `auto`.
+    pub auto_interval: bool,
+    /// Trials run.
+    pub trials: usize,
+    /// Trials that completed with an acceptable residual.
+    pub survived: usize,
+    /// Total kills scheduled across the cell's trials.
+    pub kills_scheduled: usize,
+    /// Total failures injected across surviving trials.
+    pub failures: u64,
+    /// Total recoveries across surviving trials.
+    pub recoveries: u64,
+    /// Expected makespan: mean over surviving trials (NaN if none).
+    pub expected_makespan: f64,
+    /// The cell's failure-free reference makespan.
+    pub clean_makespan: f64,
+}
+
+/// Everything a campaign produced.
+#[derive(Clone, Debug)]
+pub struct CampaignOutcome {
+    /// Failure-free references, one per distinct (procs, interval).
+    pub baselines: Vec<BaselineResult>,
+    /// Aggregates, one per sweep cell.
+    pub cells: Vec<CellResult>,
+    /// Every trial, in deterministic cell-major order.
+    pub trials: Vec<TrialResult>,
+}
+
+/// The run shape of one cell: the base config with the cell's procs and
+/// interval, faults cleared and the world forced single-worker.
+fn cell_cfg(c: &CampaignConfig, procs: usize, interval: usize) -> RunConfig {
+    let mut cfg = c.base.clone();
+    cfg.procs = procs;
+    cfg.checkpoint_every = interval;
+    cfg.checkpoint_auto = false;
+    cfg.fault = FaultSpec::None;
+    // One worker per trial: REBUILD's revive clock and gate arbitration
+    // depend on which detector acts first, so wider pools would make
+    // makespans run-to-run noisy. Parallelism lives across trials.
+    cfg.workers = 1;
+    cfg
+}
+
+/// Predicted critical-path overhead of checkpointing at `cfg`'s interval:
+/// per checkpointed panel, one state exchange (latency + wire + CPU
+/// overhead) — counted only when the highest rank (always a participant,
+/// and the longest-lived) actually pairs up under the panel's geometry.
+fn predicted_checkpoint_overhead(cfg: &RunConfig) -> f64 {
+    let every = cfg.checkpoint_every;
+    if every == 0 {
+        return 0.0;
+    }
+    let state_bytes = (cfg.local_rows() * cfg.cols * 4) as f64;
+    let wire = if cfg.cost.dual_channel {
+        state_bytes * cfg.cost.beta
+    } else {
+        2.0 * state_bytes * cfg.cost.beta
+    };
+    let per_exchange = cfg.cost.alpha + wire + cfg.cost.o;
+    let m_local = cfg.local_rows();
+    let mut total = 0.0;
+    for k in 0..cfg.panels() {
+        if (k + 1) % every != 0 {
+            continue;
+        }
+        let owner = k * cfg.block / m_local;
+        let q = cfg.procs - owner;
+        let idx_last = cfg.procs - 1 - owner;
+        if (idx_last ^ 1) < q {
+            total += per_exchange;
+        }
+    }
+    total
+}
+
+/// Run `n` jobs on up to `threads` OS threads, preserving index order.
+fn run_indexed<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let width = threads.clamp(1, n.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..width {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("indexed job completed"))
+        .collect()
+}
+
+/// Run one seeded trial under a pre-materialized kill schedule.
+fn run_trial(
+    cfg: RunConfig,
+    kills: Vec<ScheduledKill>,
+) -> (bool, f64, u64, u64, Option<String>) {
+    let fault = FaultPlan::new(FaultSpec::Schedule { kills });
+    match run_caqr(cfg, Backend::native(), fault, Trace::disabled()) {
+        Ok(out) => {
+            let makespan = out.report.critical_path;
+            let (failures, recoveries) = (out.report.failures, out.report.recoveries);
+            match out.residual {
+                Some(r) if r >= RESIDUAL_TOL => (
+                    false,
+                    makespan,
+                    failures,
+                    recoveries,
+                    Some(format!("bad residual {r:e}")),
+                ),
+                _ => (true, makespan, failures, recoveries, None),
+            }
+        }
+        Err(e) => (false, f64::NAN, 0, 0, Some(format!("{e:#}"))),
+    }
+}
+
+/// Execute a campaign: materialize every schedule, measure the
+/// failure-free references, run every trial, aggregate, and (when
+/// `check_tol` is set) assert the checkpoint model's predicted makespan
+/// against the measured baselines.
+pub fn run_campaign(c: &CampaignConfig) -> Result<CampaignOutcome> {
+    ensure!(!c.procs.is_empty(), "campaign needs at least one procs value");
+    ensure!(!c.mtbf_panels.is_empty(), "campaign needs at least one mtbf value");
+    ensure!(!c.intervals.is_empty(), "campaign needs at least one checkpoint interval");
+    ensure!(c.trials >= 1, "campaign needs at least one trial per cell");
+    ensure!(c.node_width >= 1, "node width must be >= 1");
+    for &m in &c.mtbf_panels {
+        ensure!(m.is_finite() && m > 0.0, "mtbf must be finite and positive, got {m}");
+    }
+    for &p in &c.procs {
+        cell_cfg(c, p, 0).validate().with_context(|| format!("procs {p}"))?;
+    }
+    let panels = c.base.panels();
+    let jobs = if c.jobs > 0 {
+        c.jobs
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    };
+
+    // Materialize every (mtbf, procs) pair's trial schedules up front.
+    // Trial seeds depend only on the pair and the trial index, so the
+    // interval axis reuses identical failure realizations (paired
+    // comparisons), and `auto` resolution can read the realized rate.
+    struct Pair {
+        mtbf: f64,
+        procs: usize,
+        // per trial: (matrix_seed, fault_seed, kills)
+        trials: Vec<(u64, u64, Vec<ScheduledKill>)>,
+        rate: f64,
+    }
+    let mut pairs: Vec<Pair> = Vec::new();
+    for &mtbf in &c.mtbf_panels {
+        for &procs in &c.procs {
+            let pair_idx = pairs.len() as u64;
+            let mut trials = Vec::with_capacity(c.trials);
+            let mut total_kills = 0usize;
+            for t in 0..c.trials {
+                let stream = pair_idx * c.trials as u64 + t as u64;
+                let matrix_seed = seed_for(c.seed, 2 * stream);
+                let fault_seed = seed_for(c.seed, 2 * stream + 1);
+                let spec = StochasticSpec {
+                    hazard: c.hazard,
+                    mtbf_panels: mtbf,
+                    node_width: c.node_width,
+                    max_failures: c.max_failures,
+                    seed: fault_seed,
+                };
+                let kills = spec.kills(procs, panels);
+                total_kills += kills.len();
+                trials.push((matrix_seed, fault_seed, kills));
+            }
+            let rate = total_kills as f64 / (c.trials * panels.max(1)) as f64;
+            pairs.push(Pair { mtbf, procs, trials, rate });
+        }
+    }
+
+    // Resolve the interval axis per pair (auto depends on the pair's
+    // realized failure rate) and collect the distinct (procs, interval)
+    // baselines the sweep needs — always including interval 0, the
+    // clean reference every prediction builds on.
+    struct Cell {
+        pair: usize,
+        interval: usize,
+        auto_interval: bool,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut baseline_keys: std::collections::BTreeSet<(usize, usize)> =
+        c.procs.iter().map(|&p| (p, 0)).collect();
+    for (pi, pair) in pairs.iter().enumerate() {
+        for &ic in &c.intervals {
+            let (interval, auto_interval) = match ic {
+                IntervalChoice::Fixed(k) => (k, false),
+                IntervalChoice::Auto => {
+                    (auto_checkpoint_interval(&cell_cfg(c, pair.procs, 0), pair.rate), true)
+                }
+            };
+            baseline_keys.insert((pair.procs, interval));
+            cells.push(Cell { pair: pi, interval, auto_interval });
+        }
+    }
+
+    // Failure-free references, in parallel across (procs, interval).
+    let keys: Vec<(usize, usize)> = baseline_keys.into_iter().collect();
+    let measured: Vec<f64> = run_indexed(keys.len(), jobs, |i| {
+        let (procs, interval) = keys[i];
+        let (_, makespan, _, _, err) = run_trial(cell_cfg(c, procs, interval), Vec::new());
+        debug_assert!(err.is_none(), "failure-free baseline died: {err:?}");
+        makespan
+    });
+    let clean0: BTreeMap<usize, f64> = keys
+        .iter()
+        .zip(&measured)
+        .filter(|((_, interval), _)| *interval == 0)
+        .map(|(&(procs, _), &m)| (procs, m))
+        .collect();
+    let mut baselines = Vec::with_capacity(keys.len());
+    let mut baseline_by_key: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for (&(procs, interval), &m) in keys.iter().zip(&measured) {
+        let predicted =
+            clean0[&procs] + predicted_checkpoint_overhead(&cell_cfg(c, procs, interval));
+        let rel_err = (m - predicted).abs() / m.max(f64::MIN_POSITIVE);
+        baselines.push(BaselineResult { procs, interval, measured: m, predicted, rel_err });
+        baseline_by_key.insert((procs, interval), m);
+    }
+
+    // Every trial of every cell, flattened into one deterministic list.
+    let trial_results: Vec<TrialResult> =
+        run_indexed(cells.len() * c.trials, jobs, |i| {
+            let cell = &cells[i / c.trials];
+            let t = i % c.trials;
+            let pair = &pairs[cell.pair];
+            let (matrix_seed, fault_seed, kills) = &pair.trials[t];
+            let (matrix_seed, fault_seed) = (*matrix_seed, *fault_seed);
+            let mut cfg = cell_cfg(c, pair.procs, cell.interval);
+            cfg.seed = matrix_seed;
+            let (survived, makespan, failures, recoveries, error) =
+                run_trial(cfg, kills.clone());
+            TrialResult {
+                mtbf_panels: pair.mtbf,
+                procs: pair.procs,
+                interval: cell.interval,
+                auto_interval: cell.auto_interval,
+                trial: t,
+                matrix_seed,
+                fault_seed,
+                kills: kills.clone(),
+                survived,
+                makespan,
+                failures,
+                recoveries,
+                error,
+            }
+        });
+
+    // Aggregate cells from their trials.
+    let mut cell_results = Vec::with_capacity(cells.len());
+    for (ci, cell) in cells.iter().enumerate() {
+        let pair = &pairs[cell.pair];
+        let trials = &trial_results[ci * c.trials..(ci + 1) * c.trials];
+        let survivors: Vec<&TrialResult> = trials.iter().filter(|t| t.survived).collect();
+        let expected_makespan = if survivors.is_empty() {
+            f64::NAN
+        } else {
+            survivors.iter().map(|t| t.makespan).sum::<f64>() / survivors.len() as f64
+        };
+        cell_results.push(CellResult {
+            mtbf_panels: pair.mtbf,
+            procs: pair.procs,
+            interval: cell.interval,
+            auto_interval: cell.auto_interval,
+            trials: c.trials,
+            survived: survivors.len(),
+            kills_scheduled: trials.iter().map(|t| t.kills.len()).sum(),
+            failures: survivors.iter().map(|t| t.failures).sum(),
+            recoveries: survivors.iter().map(|t| t.recoveries).sum(),
+            expected_makespan,
+            clean_makespan: baseline_by_key[&(pair.procs, cell.interval)],
+        });
+    }
+
+    // Model validation: predicted vs measured on the failure-free
+    // checkpointed references, within the documented tolerance.
+    if let Some(tol) = c.check_tol {
+        for b in &baselines {
+            ensure!(
+                b.rel_err <= tol,
+                "checkpoint model validation failed: procs {} interval {}: \
+                 measured {:.3e} vs predicted {:.3e} (rel err {:.3} > tol {tol})",
+                b.procs,
+                b.interval,
+                b.measured,
+                b.predicted,
+                b.rel_err
+            );
+        }
+    }
+
+    Ok(CampaignOutcome { baselines, cells: cell_results, trials: trial_results })
+}
+
+/// Serialize a trial's kill schedule as one compact string
+/// (`;`-separated [`ScheduledKill::label`]s).
+pub fn kills_label(kills: &[ScheduledKill]) -> String {
+    kills.iter().map(ScheduledKill::label).collect::<Vec<_>>().join(";")
+}
+
+impl CampaignOutcome {
+    /// Emit the campaign as flat JSON records (schema documented in
+    /// DESIGN.md): one `meta` record, then `baseline`, `cell` and
+    /// `trial` records in deterministic order.
+    pub fn emit(&self, c: &CampaignConfig, sink: &mut JsonSink) {
+        sink.rec(&[
+            ("record", JsonVal::S("meta")),
+            ("schema", JsonVal::I(1)),
+            ("seed", JsonVal::S(&c.seed.to_string())),
+            ("hazard", JsonVal::S(&c.hazard.label())),
+            ("node_width", JsonVal::I(c.node_width as i64)),
+            ("trials", JsonVal::I(c.trials as i64)),
+            ("max_failures", JsonVal::I(c.max_failures as i64)),
+            ("rows", JsonVal::I(c.base.rows as i64)),
+            ("cols", JsonVal::I(c.base.cols as i64)),
+            ("block", JsonVal::I(c.base.block as i64)),
+            ("check_tol", JsonVal::F(c.check_tol.unwrap_or(f64::NAN))),
+        ]);
+        for b in &self.baselines {
+            sink.rec(&[
+                ("record", JsonVal::S("baseline")),
+                ("procs", JsonVal::I(b.procs as i64)),
+                ("interval", JsonVal::I(b.interval as i64)),
+                ("measured", JsonVal::F(b.measured)),
+                ("predicted", JsonVal::F(b.predicted)),
+                ("rel_err", JsonVal::F(b.rel_err)),
+            ]);
+        }
+        for cell in &self.cells {
+            sink.rec(&[
+                ("record", JsonVal::S("cell")),
+                ("mtbf", JsonVal::F(cell.mtbf_panels)),
+                ("procs", JsonVal::I(cell.procs as i64)),
+                ("interval", JsonVal::I(cell.interval as i64)),
+                ("auto", JsonVal::I(cell.auto_interval as i64)),
+                ("trials", JsonVal::I(cell.trials as i64)),
+                ("survived", JsonVal::I(cell.survived as i64)),
+                (
+                    "survival_rate",
+                    JsonVal::F(cell.survived as f64 / cell.trials as f64),
+                ),
+                ("kills_scheduled", JsonVal::I(cell.kills_scheduled as i64)),
+                ("failures", JsonVal::I(cell.failures as i64)),
+                ("recoveries", JsonVal::I(cell.recoveries as i64)),
+                ("expected_makespan", JsonVal::F(cell.expected_makespan)),
+                ("clean_makespan", JsonVal::F(cell.clean_makespan)),
+            ]);
+        }
+        for t in &self.trials {
+            let kills = kills_label(&t.kills);
+            let err = t.error.clone().unwrap_or_default();
+            sink.rec(&[
+                ("record", JsonVal::S("trial")),
+                ("mtbf", JsonVal::F(t.mtbf_panels)),
+                ("procs", JsonVal::I(t.procs as i64)),
+                ("interval", JsonVal::I(t.interval as i64)),
+                ("auto", JsonVal::I(t.auto_interval as i64)),
+                ("trial", JsonVal::I(t.trial as i64)),
+                ("matrix_seed", JsonVal::S(&t.matrix_seed.to_string())),
+                ("fault_seed", JsonVal::S(&t.fault_seed.to_string())),
+                ("kills", JsonVal::S(&kills)),
+                ("survived", JsonVal::I(t.survived as i64)),
+                ("makespan", JsonVal::F(t.makespan)),
+                ("failures", JsonVal::I(t.failures as i64)),
+                ("recoveries", JsonVal::I(t.recoveries as i64)),
+                ("error", JsonVal::S(&err)),
+            ]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CampaignConfig {
+        CampaignConfig {
+            base: RunConfig {
+                rows: 128,
+                cols: 32,
+                block: 16,
+                procs: 2,
+                workers: 1,
+                ..Default::default()
+            },
+            procs: vec![2],
+            mtbf_panels: vec![2.0],
+            intervals: vec![IntervalChoice::Fixed(0), IntervalChoice::Fixed(1)],
+            trials: 2,
+            max_failures: 4,
+            seed: 13,
+            check_tol: None,
+            jobs: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn interval_choice_parses() {
+        assert_eq!("auto".parse::<IntervalChoice>().unwrap(), IntervalChoice::Auto);
+        assert_eq!("4".parse::<IntervalChoice>().unwrap(), IntervalChoice::Fixed(4));
+        assert!("soonish".parse::<IntervalChoice>().is_err());
+    }
+
+    #[test]
+    fn tiny_campaign_runs_and_aggregates() {
+        let c = tiny();
+        let out = run_campaign(&c).unwrap();
+        assert_eq!(out.cells.len(), 2);
+        assert_eq!(out.trials.len(), 4);
+        // Baselines: (2, 0) and (2, 1).
+        assert_eq!(out.baselines.len(), 2);
+        for cell in &out.cells {
+            assert_eq!(cell.trials, 2);
+            assert!(cell.survived <= cell.trials);
+        }
+        // Paired seeds: the same trial index sees the same schedule at
+        // both intervals.
+        assert_eq!(out.trials[0].kills, out.trials[2].kills);
+        assert_eq!(out.trials[0].matrix_seed, out.trials[2].matrix_seed);
+    }
+
+    #[test]
+    fn campaign_json_is_reproducible() {
+        let c = tiny();
+        let body = |out: &CampaignOutcome| {
+            let mut sink = JsonSink::new();
+            out.emit(&c, &mut sink);
+            sink.body()
+        };
+        let a = body(&run_campaign(&c).unwrap());
+        let b = body(&run_campaign(&c).unwrap());
+        assert_eq!(a, b, "same seed must reproduce bit-identical JSON");
+        assert!(a.contains("\"record\":\"meta\""));
+        assert!(a.contains("\"record\":\"trial\""));
+    }
+
+    #[test]
+    fn auto_interval_resolves_per_cell() {
+        let mut c = tiny();
+        c.mtbf_panels = vec![0.5]; // hot: kills all but certain
+        c.intervals = vec![IntervalChoice::Auto];
+        let out = run_campaign(&c).unwrap();
+        for cell in &out.cells {
+            assert!(cell.auto_interval);
+            // The tuner contract: checkpoint iff the realized rate the
+            // cell resolved against was positive.
+            if cell.kills_scheduled > 0 {
+                assert!(cell.interval >= 1);
+            } else {
+                assert_eq!(cell.interval, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_model_validates_on_clean_runs() {
+        let mut c = tiny();
+        c.check_tol = Some(0.5);
+        let out = run_campaign(&c).unwrap();
+        for b in &out.baselines {
+            assert!(b.rel_err <= 0.5, "baseline {b:?}");
+        }
+    }
+}

@@ -12,6 +12,9 @@
 //! times into recovery costs, plus memory-overhead accounting to compare
 //! against [`crate::coordinator::RecoveryStore`] retention.
 
+use crate::config::RunConfig;
+use crate::fault::{tree_steps, FaultSpec};
+
 /// Cost model for checkpoint/rollback recovery.
 #[derive(Clone, Copy, Debug)]
 pub struct CheckpointModel {
@@ -69,6 +72,96 @@ impl CheckpointModel {
     /// dual-channel exchange with the partner).
     pub fn overhead_per_panel_seconds(&self) -> f64 {
         (self.alpha + self.state_bytes as f64 * self.beta) / self.interval as f64
+    }
+
+    /// Expected per-panel cost of running at this interval under a
+    /// failure rate of `rate_per_panel` failures per panel: the amortized
+    /// checkpoint transfer plus the expected rollback cost (restore
+    /// transfer + mean replay of `(interval - 1) / 2` panels per
+    /// failure). This is the objective the auto-tuner minimizes.
+    pub fn expected_per_panel_cost(&self, rate_per_panel: f64) -> f64 {
+        let transfer = self.alpha + self.state_bytes as f64 * self.beta;
+        let mean_replay = (self.interval as f64 - 1.0) / 2.0 * self.seconds_per_panel;
+        self.overhead_per_panel_seconds() + rate_per_panel * (transfer + mean_replay)
+    }
+
+    /// Pick the checkpoint interval minimizing
+    /// [`CheckpointModel::expected_per_panel_cost`] for the given failure
+    /// rate. Returns 0 (checkpointing off) when the measured rate is zero
+    /// or negative — with no failures the no-checkpoint schedule is
+    /// optimal — and otherwise the smallest argmin in
+    /// `[1, max_interval]`. The objective is `transfer/I + c1(rate)*I +
+    /// c0(rate)` in the interval `I`, so the argmin is monotone
+    /// non-increasing in the rate: more failures, tighter checkpoints.
+    pub fn auto_interval(
+        state_bytes: usize,
+        seconds_per_panel: f64,
+        alpha: f64,
+        beta: f64,
+        rate_per_panel: f64,
+        max_interval: usize,
+    ) -> usize {
+        if !(rate_per_panel > 0.0) || max_interval == 0 {
+            return 0;
+        }
+        let mut best = (f64::INFINITY, 0);
+        for interval in 1..=max_interval {
+            let m = CheckpointModel { interval, state_bytes, seconds_per_panel, alpha, beta };
+            let cost = m.expected_per_panel_cost(rate_per_panel);
+            if cost < best.0 {
+                best = (cost, interval);
+            }
+        }
+        best.1
+    }
+}
+
+/// Resolve `--checkpoint-every auto` for a run: estimate the per-panel
+/// state size and duration from `cfg` and pick the interval minimizing
+/// the expected per-panel cost at `rate_per_panel` failures per panel.
+/// The duration estimate is deliberately rough (leading-order flop and
+/// latency terms) — only the *argmin*, not the absolute cost, matters.
+pub fn auto_checkpoint_interval(cfg: &RunConfig, rate_per_panel: f64) -> usize {
+    let state_bytes = cfg.local_rows() * cfg.cols * 4; // one f32 local block
+    CheckpointModel::auto_interval(
+        state_bytes,
+        estimate_seconds_per_panel(cfg),
+        cfg.cost.alpha,
+        cfg.cost.beta,
+        rate_per_panel,
+        cfg.panels(),
+    )
+}
+
+/// Leading-order estimate of one panel iteration's duration under the
+/// cost model: local panel QR + trailing update at the mean remaining
+/// width, plus the reduction tree's latency terms.
+fn estimate_seconds_per_panel(cfg: &RunConfig) -> f64 {
+    let m = cfg.local_rows() as f64;
+    let b = cfg.block as f64;
+    let n = cfg.cols as f64;
+    let flops = 2.0 * m * b * b + 4.0 * m * b * (n / 2.0);
+    let steps = tree_steps(cfg.procs) as f64;
+    let wire = steps * (cfg.cost.alpha + b * b * 4.0 * cfg.cost.beta + cfg.cost.o);
+    flops / cfg.cost.flops_per_sec + wire
+}
+
+/// Expected failures per panel implied by a [`FaultSpec`] — the measured
+/// rate the auto-tuner consumes. A materialized schedule (including the
+/// compiled stochastic generators) counts its kills exactly; the
+/// per-site coin model multiplies its probability by the number of
+/// sites, capped by the failure budget.
+pub fn failure_rate_estimate(spec: &FaultSpec, procs: usize, panels: usize) -> f64 {
+    if panels == 0 {
+        return 0.0;
+    }
+    match spec {
+        FaultSpec::None => 0.0,
+        FaultSpec::Schedule { kills } => kills.len() as f64 / panels as f64,
+        FaultSpec::Random { prob, max_failures, .. } => {
+            let sites = (procs * 2 * tree_steps(procs) * panels) as f64;
+            (prob * sites).min(*max_failures as f64) / panels as f64
+        }
     }
 }
 
@@ -179,6 +272,80 @@ mod tests {
         assert_eq!(c0.restored_panel, 0);
         assert_eq!(c0.replay_panels, 0);
         assert!(c0.total_seconds > 0.0);
+    }
+
+    #[test]
+    fn auto_interval_zero_rate_means_no_checkpoints() {
+        // No measured failures: fall back to the no-checkpoint schedule.
+        let pick = |rate| CheckpointModel::auto_interval(1 << 20, 0.01, 1e-6, 1e-10, rate, 64);
+        assert_eq!(pick(0.0), 0);
+        assert_eq!(pick(-1.0), 0);
+        assert_eq!(pick(f64::NAN), 0);
+        // Degenerate horizon: nothing to checkpoint.
+        assert_eq!(CheckpointModel::auto_interval(1 << 20, 0.01, 1e-6, 1e-10, 0.5, 0), 0);
+        // And any positive rate turns checkpointing on.
+        assert!(pick(1e-6) >= 1);
+    }
+
+    #[test]
+    fn auto_interval_monotone_non_increasing_in_rate() {
+        let mut prev = usize::MAX;
+        for i in 0..60 {
+            let rate = 1e-6 * 1.5f64.powi(i);
+            let k = CheckpointModel::auto_interval(1 << 20, 0.01, 1e-6, 1e-10, rate, 64);
+            assert!(k >= 1, "positive rate must checkpoint (rate {rate})");
+            assert!(k <= prev, "interval grew from {prev} to {k} at rate {rate}");
+            prev = k;
+        }
+        // Saturation: overwhelming failure rates checkpoint every panel.
+        assert_eq!(prev, 1);
+    }
+
+    #[test]
+    fn auto_interval_matches_objective_argmin() {
+        // The picked interval must actually minimize the objective, ties
+        // broken toward the smallest interval.
+        let (sb, spp, a, b, rate, max) = (1 << 18, 0.005, 1e-6, 1e-10, 0.02, 32);
+        let k = CheckpointModel::auto_interval(sb, spp, a, b, rate, max);
+        let cost = |interval: usize| {
+            CheckpointModel { interval, state_bytes: sb, seconds_per_panel: spp, alpha: a, beta: b }
+                .expected_per_panel_cost(rate)
+        };
+        for other in 1..=max {
+            assert!(cost(k) <= cost(other), "interval {other} beats chosen {k}");
+        }
+    }
+
+    #[test]
+    fn failure_rate_estimates() {
+        use crate::fault::{Hazard, StochasticSpec};
+        assert_eq!(failure_rate_estimate(&FaultSpec::None, 4, 8), 0.0);
+        let spec = StochasticSpec {
+            hazard: Hazard::Poisson,
+            mtbf_panels: 4.0,
+            node_width: 1,
+            max_failures: 100,
+            seed: 3,
+        };
+        let fs = spec.fault_spec(4, 16);
+        let FaultSpec::Schedule { ref kills } = fs else { panic!("expected schedule") };
+        let rate = failure_rate_estimate(&fs, 4, 16);
+        assert!((rate - kills.len() as f64 / 16.0).abs() < 1e-12);
+        // Random: prob x sites, capped by the budget.
+        let r = FaultSpec::Random { prob: 1.0, seed: 0, max_failures: 2 };
+        assert!((failure_rate_estimate(&r, 4, 16) - 2.0 / 16.0).abs() < 1e-12);
+        assert_eq!(failure_rate_estimate(&FaultSpec::None, 4, 0), 0.0);
+    }
+
+    #[test]
+    fn auto_checkpoint_interval_uses_run_shape() {
+        use crate::config::RunConfig;
+        let cfg = RunConfig::default();
+        assert_eq!(auto_checkpoint_interval(&cfg, 0.0), 0);
+        let k = auto_checkpoint_interval(&cfg, 0.5);
+        assert!((1..=cfg.panels()).contains(&k));
+        // Higher rate never loosens the interval.
+        assert!(auto_checkpoint_interval(&cfg, 5.0) <= k);
     }
 
     #[test]

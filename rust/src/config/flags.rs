@@ -58,6 +58,27 @@ impl Flags {
             None => Ok(default),
         }
     }
+
+    /// Like [`Flags::num`] but accepting the literal `auto`, mapped to
+    /// `None`: `--key auto` -> `Ok(None)`, `--key V` -> `Ok(Some(V))`,
+    /// absent -> `Ok(default)`. Used by `--checkpoint-every auto`.
+    pub fn num_or_auto<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: Option<T>,
+    ) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            Some("auto") => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e} (or 'auto')")),
+            None => Ok(default),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +140,20 @@ mod tests {
         // usize parsing rejects negative depths rather than wrapping.
         let f = Flags::parse(&args(&["--lookahead", "-1"])).unwrap();
         assert!(f.num("lookahead", 0usize).is_err());
+    }
+
+    #[test]
+    fn num_or_auto_distinguishes_auto_number_and_absent() {
+        let f = Flags::parse(&args(&["--checkpoint-every", "auto"])).unwrap();
+        assert_eq!(f.num_or_auto("checkpoint-every", Some(0usize)).unwrap(), None);
+        let f = Flags::parse(&args(&["--checkpoint-every", "4"])).unwrap();
+        assert_eq!(f.num_or_auto("checkpoint-every", Some(0usize)).unwrap(), Some(4));
+        let f = Flags::parse(&args(&[])).unwrap();
+        assert_eq!(f.num_or_auto("checkpoint-every", Some(2usize)).unwrap(), Some(2));
+        assert_eq!(f.num_or_auto::<usize>("checkpoint-every", None).unwrap(), None);
+        let f = Flags::parse(&args(&["--checkpoint-every", "soon"])).unwrap();
+        let err = f.num_or_auto("checkpoint-every", Some(0usize)).unwrap_err().to_string();
+        assert!(err.contains("auto"), "{err}");
     }
 
     #[test]

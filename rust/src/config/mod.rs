@@ -16,7 +16,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::fault::FaultSpec;
 use crate::ft::Semantics;
-use crate::sim::CostModel;
+use crate::sim::{parse_straggler, CostModel};
 
 /// Which trailing-update algorithm the coordinator runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -96,6 +96,15 @@ pub struct RunConfig {
     /// Diskless-checkpoint interval in panels (0 = off) — the §II
     /// comparator baseline, experiment E7.
     pub checkpoint_every: usize,
+    /// `--checkpoint-every auto`: pick the interval from the measured
+    /// failure rate via [`crate::checkpoint::auto_checkpoint_interval`]
+    /// when the run is prepared. `checkpoint_every` is then overwritten
+    /// with the chosen value and this flag cleared, so a resolved config
+    /// round-trips as a concrete interval.
+    pub checkpoint_auto: bool,
+    /// Straggler injection: `(rank, factor)` compute slowdowns (a slow
+    /// rank, distinct from a killed one). Empty = no stragglers.
+    pub stragglers: Vec<(usize, f64)>,
     /// Lookahead depth L of the pipelined panel loop: up to L + 1 panels
     /// in flight per rank. 0 = lockstep (bitwise the pre-pipeline
     /// schedule); L >= 1 overlaps the next panel's TSQR with the current
@@ -123,6 +132,8 @@ impl Default for RunConfig {
             cost: CostModel::default(),
             fault: FaultSpec::default(),
             checkpoint_every: 0,
+            checkpoint_auto: false,
+            stragglers: Vec::new(),
             lookahead: 0,
             seed: 0,
             verify: true,
@@ -190,6 +201,17 @@ impl RunConfig {
             self.local_rows(),
             self.block
         );
+        for &(rank, factor) in &self.stragglers {
+            ensure!(
+                rank < self.procs,
+                "straggler rank {rank} out of range (procs = {})",
+                self.procs
+            );
+            ensure!(
+                factor.is_finite() && factor >= 1.0,
+                "straggler factor for rank {rank} must be finite and >= 1, got {factor}"
+            );
+        }
         Ok(())
     }
 
@@ -214,7 +236,15 @@ impl RunConfig {
                 "par" => c.par = v.parse()?,
                 "algorithm" => c.algorithm = v.parse().map_err(anyhow::Error::msg)?,
                 "semantics" => c.semantics = v.parse().map_err(anyhow::Error::msg)?,
-                "checkpoint_every" => c.checkpoint_every = v.parse()?,
+                "checkpoint_every" => {
+                    if v == "auto" {
+                        c.checkpoint_auto = true;
+                    } else {
+                        c.checkpoint_every = v.parse()?;
+                        c.checkpoint_auto = false;
+                    }
+                }
+                "straggler" => c.stragglers.push(parse_straggler(v)?),
                 "lookahead" => c.lookahead = v.parse()?,
                 "seed" => c.seed = v.parse()?,
                 "verify" => c.verify = v.parse()?,
@@ -242,7 +272,14 @@ impl RunConfig {
         out.push_str(&format!("par = {}\n", self.par));
         out.push_str(&format!("algorithm = {}\n", self.algorithm));
         out.push_str(&format!("semantics = {}\n", self.semantics));
-        out.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));
+        if self.checkpoint_auto {
+            out.push_str("checkpoint_every = auto\n");
+        } else {
+            out.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));
+        }
+        for (rank, factor) in &self.stragglers {
+            out.push_str(&format!("straggler = {rank}:{factor}\n"));
+        }
         out.push_str(&format!("lookahead = {}\n", self.lookahead));
         out.push_str(&format!("seed = {}\n", self.seed));
         out.push_str(&format!("verify = {}\n", self.verify));
@@ -293,6 +330,35 @@ mod tests {
         assert_eq!(c.lookahead, 4);
         assert!(RunConfig::from_kv("lookahead = nope\n").is_err());
         assert!(RunConfig::from_kv("lookahead = -1\n").is_err());
+    }
+
+    #[test]
+    fn checkpoint_auto_and_stragglers_roundtrip() {
+        let c = RunConfig {
+            checkpoint_auto: true,
+            stragglers: vec![(1, 10.0), (3, 2.5)],
+            ..Default::default()
+        };
+        let c2 = RunConfig::from_kv(&c.to_kv()).unwrap();
+        assert!(c2.checkpoint_auto);
+        assert_eq!(c2.stragglers, vec![(1, 10.0), (3, 2.5)]);
+        // A concrete interval after an `auto` line wins (last write).
+        let c3 =
+            RunConfig::from_kv("checkpoint_every = auto\ncheckpoint_every = 4\n").unwrap();
+        assert!(!c3.checkpoint_auto);
+        assert_eq!(c3.checkpoint_every, 4);
+        assert!(RunConfig::from_kv("checkpoint_every = nope\n").is_err());
+        assert!(RunConfig::from_kv("straggler = 1\n").is_err());
+    }
+
+    #[test]
+    fn straggler_validation() {
+        let c = RunConfig { stragglers: vec![(9, 2.0)], ..Default::default() };
+        assert!(c.validate().is_err(), "rank out of range");
+        let c = RunConfig { stragglers: vec![(1, 0.5)], ..Default::default() };
+        assert!(c.validate().is_err(), "factor below 1");
+        let c = RunConfig { stragglers: vec![(1, 10.0)], ..Default::default() };
+        c.validate().unwrap();
     }
 
     #[test]

@@ -39,7 +39,9 @@ use crate::fault::{FailSite, FaultPlan, Phase};
 use crate::ft::Fail;
 use crate::linalg::{gram_residual, Matrix};
 use crate::metrics::Report;
-use crate::sim::{CostModel, MsgData, RankCtx, RankTask, Spawner, Tag, TagKind, TaskPoll, World};
+use crate::sim::{
+    CostModel, MsgData, RankCtx, RankTask, Spawner, Stragglers, Tag, TagKind, TaskPoll, World,
+};
 use crate::trace::Trace;
 
 use super::panel::{geometry, PanelGeom};
@@ -1101,7 +1103,7 @@ impl CaqrJob {
     /// `t0` is the wallclock origin reported in the outcome (callers that
     /// time matrix generation pass an earlier instant).
     pub(crate) fn prepare(
-        cfg: RunConfig,
+        mut cfg: RunConfig,
         a: Matrix,
         backend: Arc<Backend>,
         fault: Arc<FaultPlan>,
@@ -1109,6 +1111,19 @@ impl CaqrJob {
         t0: std::time::Instant,
     ) -> Result<Self> {
         cfg.validate()?;
+        // Resolve `--checkpoint-every auto` against the failure rate the
+        // injected fault plan implies, so every driver (run, serve,
+        // campaign) tunes the same way. The resolved config — with a
+        // concrete interval — is what the checkpoint barriers see.
+        if cfg.checkpoint_auto {
+            let rate = crate::checkpoint::failure_rate_estimate(
+                fault.spec(),
+                cfg.procs,
+                cfg.panels(),
+            );
+            cfg.checkpoint_every = crate::checkpoint::auto_checkpoint_interval(&cfg, rate);
+            cfg.checkpoint_auto = false;
+        }
         anyhow::ensure!(
             a.shape() == (cfg.rows, cfg.cols),
             "input matrix shape mismatch: got {:?}, cfg says ({}, {})",
@@ -1121,7 +1136,12 @@ impl CaqrJob {
             .map(|r| a.block(r * m_local, 0, m_local, cfg.cols))
             .collect();
 
-        let world = World::new(cfg.procs, cfg.cost, fault);
+        let world = World::new_with_stragglers(
+            cfg.procs,
+            cfg.cost,
+            fault,
+            Stragglers::new(cfg.stragglers.clone()),
+        );
         let flops0 = backend.flops();
         let shared = Arc::new(Shared {
             cfg: cfg.clone(),

@@ -46,7 +46,7 @@ pub enum Phase {
 }
 
 /// One scheduled kill: rank `rank` dies at `site` (once).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ScheduledKill {
     /// Victim rank.
     pub rank: usize,
@@ -99,6 +99,24 @@ impl ScheduledKill {
             k = k.at_incarnation(i);
         }
         Ok(k)
+    }
+
+    /// Compact textual form (`rank@panel:step:phase[#gN]`) — the inverse
+    /// of [`ScheduledKill::parse`] plus a group annotation, used by the
+    /// campaign JSON so a trial's whole schedule fits in one string.
+    pub fn label(&self) -> String {
+        let phase = match self.site.phase {
+            Phase::Tsqr => "tsqr",
+            Phase::Update => "update",
+        };
+        let mut s = format!("{}@{}:{}:{}", self.rank, self.site.panel, self.site.step, phase);
+        if let Some(i) = self.incarnation {
+            s.push_str(&format!(":{i}"));
+        }
+        if let Some(g) = self.group {
+            s.push_str(&format!("#g{g}"));
+        }
+        s
     }
 }
 
@@ -162,6 +180,155 @@ pub enum FaultSpec {
     Random { prob: f64, seed: u64, max_failures: usize },
 }
 
+/// Inter-arrival law of a stochastic failure process, in units of the
+/// rank's mean time between failures (campaigns sweep the MTBF).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Hazard {
+    /// Memoryless exponential inter-arrivals (constant hazard rate) —
+    /// the classic Poisson-process MTBF model.
+    Poisson,
+    /// Weibull inter-arrivals with the given shape; `shape < 1` models
+    /// infant mortality (bursty early failures), `shape > 1` wear-out.
+    /// `shape == 1` degenerates to [`Hazard::Poisson`] exactly.
+    Weibull {
+        /// Weibull shape parameter `k > 0`.
+        shape: f64,
+    },
+}
+
+impl Hazard {
+    /// Stable textual label for logs and campaign JSON.
+    pub fn label(&self) -> String {
+        match self {
+            Hazard::Poisson => "poisson".to_string(),
+            Hazard::Weibull { shape } => format!("weibull({shape})"),
+        }
+    }
+}
+
+/// Pairwise reduction-tree depth for `procs` ranks: `ceil(log2 procs)`,
+/// at least 1. This is the number of `step` values a panel's TSQR (and
+/// update) tree exposes as failure sites, so stochastic arrivals inside
+/// a panel are spread across `2 * tree_steps(procs)` sites.
+pub fn tree_steps(procs: usize) -> usize {
+    procs.max(2).next_power_of_two().trailing_zeros() as usize
+}
+
+/// An MTBF-driven failure-process generator. Unlike [`FaultSpec::Random`]
+/// (an independent coin per visited site), a `StochasticSpec` *compiles*
+/// to a concrete kill schedule up front: per-unit renewal processes are
+/// sampled on the logical time axis (panels) and materialized into a
+/// [`FaultSpec::Schedule`]. The schedule is a pure function of the spec
+/// and the run shape — independent of worker-pool width or scheduler
+/// interleaving — so one seed reproduces a campaign bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StochasticSpec {
+    /// Inter-arrival law.
+    pub hazard: Hazard,
+    /// Mean time between failures of one unit (rank or node), measured
+    /// in panels of the outer CAQR loop. For Weibull this is the *scale*
+    /// parameter (the 63rd-percentile life), not the analytic mean —
+    /// avoiding a gamma-function dependency.
+    pub mtbf_panels: f64,
+    /// Ranks per failure unit: 1 = independent per-rank failures; `w > 1`
+    /// groups ranks `[u*w, (u+1)*w)` into nodes that crash together
+    /// (correlated kills sharing a [`ScheduledKill::group`]).
+    pub node_width: usize,
+    /// Cap on generated kills; a correlated node crash is never split by
+    /// the cap (generation stops before a partial group).
+    pub max_failures: usize,
+    /// Seed of the whole process; each unit gets an independent
+    /// deterministic stream derived from it.
+    pub seed: u64,
+}
+
+impl StochasticSpec {
+    /// Draw one inter-arrival time (in panels) from the hazard law.
+    fn sample(&self, rng: &mut Rng64) -> f64 {
+        // uniform_open is in (0, 1], so ln is finite and the inverse
+        // transforms below never yield NaN/inf.
+        let u = rng.uniform_open();
+        match self.hazard {
+            Hazard::Poisson => -self.mtbf_panels * u.ln(),
+            Hazard::Weibull { shape } => self.mtbf_panels * (-u.ln()).powf(1.0 / shape),
+        }
+    }
+
+    /// Materialize the kill schedule for a `procs`-rank run of `panels`
+    /// panels. Arrival times are continuous on `[0, panels)`: the integer
+    /// part picks the panel, the fraction picks one of the
+    /// `2 * tree_steps(procs)` sites inside it (TSQR steps first, then
+    /// update steps). Arrivals are merged across units in (time, unit)
+    /// order, so the result is deterministic for a fixed spec and shape.
+    pub fn kills(&self, procs: usize, panels: usize) -> Vec<ScheduledKill> {
+        assert!(procs >= 1, "stochastic spec needs at least one rank");
+        assert!(
+            self.mtbf_panels.is_finite() && self.mtbf_panels > 0.0,
+            "mtbf_panels must be finite and positive"
+        );
+        if let Hazard::Weibull { shape } = self.hazard {
+            assert!(shape.is_finite() && shape > 0.0, "Weibull shape must be positive");
+        }
+        let width = self.node_width.max(1);
+        let units = procs.div_ceil(width);
+        let horizon = panels as f64;
+        let mut arrivals: Vec<(f64, usize)> = Vec::new();
+        for unit in 0..units {
+            let mut rng = Rng64::new(stream_seed(self.seed, unit as u64));
+            let mut t = self.sample(&mut rng);
+            while t < horizon {
+                arrivals.push((t, unit));
+                t += self.sample(&mut rng);
+            }
+        }
+        // Total order: arrival time, units break exact ties. Times are
+        // finite by construction, so partial_cmp cannot fail.
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+
+        let steps = tree_steps(procs);
+        let sites = 2 * steps;
+        let mut kills = Vec::new();
+        let mut group = 0u32;
+        for (t, unit) in arrivals {
+            let lo = unit * width;
+            let hi = ((unit + 1) * width).min(procs);
+            if kills.len() + (hi - lo) > self.max_failures {
+                break; // never split a correlated group across the cap
+            }
+            let panel = (t.floor() as usize).min(panels.saturating_sub(1));
+            let frac = (t - panel as f64).clamp(0.0, 1.0);
+            let si = ((frac * sites as f64) as usize).min(sites - 1);
+            let (phase, step) =
+                if si < steps { (Phase::Tsqr, si) } else { (Phase::Update, si - steps) };
+            if hi - lo > 1 {
+                for r in lo..hi {
+                    kills.push(ScheduledKill::new(r, panel, step, phase).in_group(group));
+                }
+                group += 1;
+            } else {
+                kills.push(ScheduledKill::new(lo, panel, step, phase));
+            }
+        }
+        kills
+    }
+
+    /// The materialized schedule as a [`FaultSpec`], ready for
+    /// [`FaultPlan::new`].
+    pub fn fault_spec(&self, procs: usize, panels: usize) -> FaultSpec {
+        FaultSpec::Schedule { kills: self.kills(procs, panels) }
+    }
+}
+
+/// Derive the `idx`-th independent seed from `base` (splitmix64 stream —
+/// same construction the service uses for per-job seeds, duplicated here
+/// so `fault` stays dependency-free).
+fn stream_seed(base: u64, idx: u64) -> u64 {
+    let mut z = base.wrapping_add((idx.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Runtime fault injector shared by all ranks. Each scheduled kill fires
 /// at most once (the `used` flags), so a REBUILT rank replaying the same
 /// site does not die again.
@@ -215,6 +382,12 @@ impl FaultPlan {
     /// No injected failures.
     pub fn none() -> Arc<Self> {
         Self::new(FaultSpec::None)
+    }
+
+    /// The failure model this plan injects. Campaigns and the
+    /// `--checkpoint-every auto` tuner estimate the failure rate from it.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
     }
 
     /// Should `rank` die at `site`? Consumes the kill when it fires.
@@ -379,6 +552,99 @@ mod tests {
         // Incarnation targeting is a single-kill feature; a pair spec
         // carrying one must be rejected, not silently ignored.
         assert!(parse_kill_pair("2,3@0:1:tsqr:1", 0).is_err());
+    }
+
+    #[test]
+    fn stochastic_schedule_is_deterministic() {
+        let spec = StochasticSpec {
+            hazard: Hazard::Poisson,
+            mtbf_panels: 3.0,
+            node_width: 1,
+            max_failures: 64,
+            seed: 42,
+        };
+        let a = spec.kills(4, 16);
+        let b = spec.kills(4, 16);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "mtbf 3 over 4 ranks x 16 panels should produce kills");
+    }
+
+    #[test]
+    fn weibull_shape_one_is_poisson() {
+        // shape == 1 makes the Weibull inverse transform algebraically
+        // identical to the exponential one, so the schedules must match
+        // bit for bit.
+        let base = StochasticSpec {
+            hazard: Hazard::Poisson,
+            mtbf_panels: 2.5,
+            node_width: 1,
+            max_failures: 128,
+            seed: 7,
+        };
+        let weib = StochasticSpec { hazard: Hazard::Weibull { shape: 1.0 }, ..base };
+        assert_eq!(base.kills(8, 32), weib.kills(8, 32));
+    }
+
+    #[test]
+    fn stochastic_sites_are_in_range() {
+        for &(procs, panels) in &[(1usize, 4usize), (3, 7), (8, 32)] {
+            let spec = StochasticSpec {
+                hazard: Hazard::Weibull { shape: 0.7 },
+                mtbf_panels: 1.5,
+                node_width: 1,
+                max_failures: 1000,
+                seed: 99,
+            };
+            for k in spec.kills(procs, panels) {
+                assert!(k.rank < procs);
+                assert!(k.site.panel < panels);
+                assert!(k.site.step < tree_steps(procs), "step {} procs {}", k.site.step, procs);
+            }
+        }
+    }
+
+    #[test]
+    fn node_width_groups_are_correlated_and_never_split() {
+        let spec = StochasticSpec {
+            hazard: Hazard::Poisson,
+            mtbf_panels: 2.0,
+            node_width: 2,
+            max_failures: 5, // odd cap: the last pair must not be split
+            seed: 11,
+        };
+        let kills = spec.kills(6, 64);
+        assert!(kills.len() <= 4, "cap of 5 can hold at most two whole pairs");
+        assert_eq!(kills.len() % 2, 0, "node crashes come in whole pairs");
+        let mut groups = std::collections::HashSet::new();
+        for pair in kills.chunks(2) {
+            assert_eq!(pair[0].group, pair[1].group);
+            assert_eq!(pair[0].site, pair[1].site);
+            assert_eq!(pair[0].rank / 2, pair[1].rank / 2, "members share a node");
+            assert!(groups.insert(pair[0].group), "each crash gets a fresh group");
+        }
+    }
+
+    #[test]
+    fn stochastic_rate_tracks_mtbf() {
+        // 4 ranks, mtbf 8 panels, horizon 64 panels: ~32 expected kills.
+        let spec = StochasticSpec {
+            hazard: Hazard::Poisson,
+            mtbf_panels: 8.0,
+            node_width: 1,
+            max_failures: 10_000,
+            seed: 5,
+        };
+        let n = spec.kills(4, 64).len();
+        assert!((8..=80).contains(&n), "got {n} kills, expected around 32");
+    }
+
+    #[test]
+    fn kill_label_round_trips() {
+        let k = ScheduledKill::new(2, 1, 0, Phase::Tsqr);
+        assert_eq!(k.label(), "2@1:0:tsqr");
+        assert_eq!(ScheduledKill::parse(&k.label()).unwrap(), k);
+        assert_eq!(k.clone().in_group(3).label(), "2@1:0:tsqr#g3");
+        assert_eq!(k.at_incarnation(1).label(), "2@1:0:tsqr:1");
     }
 
     #[test]

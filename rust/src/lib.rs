@@ -54,10 +54,25 @@
 //! and per-job metrics regardless of how tenants interleave. `ftcaqr
 //! serve --jobs <file>` is the CLI front end; `benches/service.rs`
 //! measures jobs/sec and p50/p99 latency against pool width.
+//!
+//! ## Campaigns: stochastic failures, stragglers, auto-tuning
+//!
+//! The [`campaign`] module closes the loop between the failure model and
+//! the checkpoint comparator: [`fault::StochasticSpec`] compiles
+//! MTBF-driven Poisson/Weibull failure processes (per-rank or correlated
+//! per-node) into deterministic kill schedules, [`sim::Stragglers`]
+//! injects slow-but-alive ranks, and `ftcaqr campaign` sweeps failure
+//! rate x P x checkpoint interval, emitting survival-probability and
+//! expected-makespan JSON. `--checkpoint-every auto` picks the interval
+//! from the measured failure rate via
+//! [`checkpoint::auto_checkpoint_interval`], and every campaign
+//! validates the model's predicted makespan against the measured
+//! failure-free baselines.
 
 #![warn(missing_docs)]
 
 pub mod backend;
+pub mod campaign;
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;

@@ -6,6 +6,8 @@
 //!   series of paper Fig 2
 //! * `serve`  — multi-tenant service: run a jobs file of concurrent
 //!   CAQR/TSQR jobs over one persistent scheduler pool
+//! * `campaign` — seeded stochastic failure campaign: sweep MTBF x P x
+//!   checkpoint interval, emit survival/makespan JSON
 //! * `info`   — show the AOT artifact manifest the runtime would load
 //!
 //! Examples:
@@ -26,11 +28,13 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use ftcaqr::backend::Backend;
+use ftcaqr::campaign::{run_campaign, CampaignConfig, IntervalChoice};
 use ftcaqr::config::{Algorithm, BackendKind, Flags, RunConfig};
 use ftcaqr::coordinator::{run_caqr, run_tsqr, run_tsqr_pooled, TsqrMode};
-use ftcaqr::fault::{self, FaultPlan, FaultSpec, ScheduledKill};
+use ftcaqr::fault::{self, FaultPlan, FaultSpec, Hazard, ScheduledKill};
 use ftcaqr::ft::Semantics;
 use ftcaqr::linalg::Matrix;
+use ftcaqr::metrics::json::JsonSink;
 use ftcaqr::runtime::{Engine, Manifest};
 use ftcaqr::service::{self, JobOutput, Service, ServiceConfig};
 use ftcaqr::sim::CostModel;
@@ -75,11 +79,17 @@ USAGE:
               [--backend native|xla] [--artifacts DIR]
               [--kill rank@panel:step[:tsqr|update[:incarnation]]]...
               [--kill-pair a,b@panel:step[:phase]]...
-              [--checkpoint-every K] [--lookahead L] [--seed S]
+              [--straggler rank:factor]...
+              [--checkpoint-every K|auto] [--lookahead L] [--seed S]
               [--trace-out trace.json]
   ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W] [--par T]
               [--mode ft|plain] [--seed S]
   ftcaqr serve --jobs FILE [--workers W] [--max-ranks R] [--batch K]
+  ftcaqr campaign [--rows N] [--cols N] [--block B]
+              [--procs P1,P2,...] [--mtbf M1,M2,...]
+              [--checkpoint K1,K2,auto,...] [--hazard poisson|weibull]
+              [--shape K] [--node-width W] [--trials T] [--seed S]
+              [--max-failures F] [--check-tol X] [--jobs J] [--out FILE]
   ftcaqr info [--artifacts DIR]
 
 P is the number of simulated ranks (hundreds are fine: ranks are pooled
@@ -99,6 +109,20 @@ serve runs every job in FILE (one per line: 'caqr key=value ...' or
 simulated ranks in flight (admission control); --batch packs up to K
 same-shape TSQR jobs into one tree sweep. A job poisoned by a
 double-failure fails alone; its neighbors complete.
+
+--straggler rank:factor multiplies that rank's compute charges (slow,
+not dead — no recovery fires). --checkpoint-every auto picks the
+interval from the failure rate the fault plan implies.
+
+campaign sweeps an MTBF-driven stochastic failure process (per-rank, or
+correlated per-node with --node-width > 1) across P and checkpoint
+intervals: --trials seeded runs per cell, survival probability and
+expected makespan out, plus a predicted-vs-measured validation of the
+checkpoint model on failure-free baselines (--check-tol, default 0.5;
+'off' records the errors without asserting).
+All randomness derives from --seed; rerunning reproduces the JSON
+bit-for-bit. --out FILE writes the records there (else campaign.json
+under the crate root, FTCAQR_BENCH_JSON override respected).
 ";
 
 fn cmd_run(flags: &Flags) -> Result<()> {
@@ -113,7 +137,18 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     cfg.workers = flags.num("workers", cfg.workers)?;
     cfg.par = flags.num("par", cfg.par)?;
     cfg.seed = flags.num("seed", cfg.seed)?;
-    cfg.checkpoint_every = flags.num("checkpoint-every", cfg.checkpoint_every)?;
+    let every_default =
+        if cfg.checkpoint_auto { None } else { Some(cfg.checkpoint_every) };
+    match flags.num_or_auto("checkpoint-every", every_default)? {
+        Some(k) => {
+            cfg.checkpoint_every = k;
+            cfg.checkpoint_auto = false;
+        }
+        None => cfg.checkpoint_auto = true,
+    }
+    for s in flags.all("straggler") {
+        cfg.stragglers.push(ftcaqr::sim::parse_straggler(&s)?);
+    }
     cfg.lookahead = flags.num("lookahead", cfg.lookahead)?;
     if let Some(a) = flags.get("algorithm") {
         cfg.algorithm = a.parse::<Algorithm>().map_err(anyhow::Error::msg)?;
@@ -252,6 +287,118 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated sweep list (`--procs 2,4,8`).
+fn parse_list<T: std::str::FromStr>(s: &str, what: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<T>().map_err(|e| anyhow::anyhow!("bad {what} '{p}': {e}")))
+        .collect()
+}
+
+fn cmd_campaign(flags: &Flags) -> Result<()> {
+    let base = {
+        let d = RunConfig::default();
+        RunConfig {
+            rows: flags.num("rows", d.rows)?,
+            cols: flags.num("cols", d.cols)?,
+            block: flags.num("block", d.block)?,
+            ..d
+        }
+    };
+    let hazard = match flags.get("hazard").unwrap_or("poisson") {
+        "poisson" => Hazard::Poisson,
+        "weibull" => Hazard::Weibull { shape: flags.num("shape", 0.7)? },
+        other => bail!("unknown hazard '{other}' (poisson|weibull)"),
+    };
+    let check_tol = match flags.get("check-tol") {
+        None => Some(0.5),
+        Some("off") => None,
+        Some(v) => Some(
+            v.parse::<f64>().map_err(|e| anyhow::anyhow!("bad --check-tol '{v}': {e}"))?,
+        ),
+    };
+    let c = CampaignConfig {
+        base,
+        procs: match flags.get("procs") {
+            Some(s) => parse_list(s, "procs")?,
+            None => vec![4],
+        },
+        mtbf_panels: match flags.get("mtbf") {
+            Some(s) => parse_list(s, "mtbf")?,
+            None => vec![8.0],
+        },
+        intervals: match flags.get("checkpoint") {
+            Some(s) => parse_list(s, "checkpoint interval")?,
+            None => vec![IntervalChoice::Fixed(0)],
+        },
+        hazard,
+        node_width: flags.num("node-width", 1)?,
+        trials: flags.num("trials", 3)?,
+        max_failures: flags.num("max-failures", 16)?,
+        seed: flags.num("seed", 0)?,
+        check_tol,
+        jobs: flags.num("jobs", 0)?,
+    };
+
+    let out = run_campaign(&c)?;
+
+    println!(
+        "== ftcaqr campaign: {}x{} block {}  {} cells x {} trials  seed {} ==",
+        c.base.rows,
+        c.base.cols,
+        c.base.block,
+        out.cells.len(),
+        c.trials,
+        c.seed
+    );
+    println!("-- checkpoint model (failure-free baselines) --");
+    for b in &out.baselines {
+        println!(
+            "procs {:>4} interval {:>3}: measured {:>10.4e}s  predicted {:>10.4e}s  rel err {:>5.1}%",
+            b.procs,
+            b.interval,
+            b.measured,
+            b.predicted,
+            100.0 * b.rel_err
+        );
+    }
+    println!("-- sweep cells --");
+    for cell in &out.cells {
+        let auto = if cell.auto_interval { " (auto)" } else { "" };
+        println!(
+            "mtbf {:>7.2} procs {:>4} interval {:>3}{auto}: survived {}/{}  \
+             E[makespan] {:>10.4e}s  clean {:>10.4e}s  kills {}  recoveries {}",
+            cell.mtbf_panels,
+            cell.procs,
+            cell.interval,
+            cell.survived,
+            cell.trials,
+            cell.expected_makespan,
+            cell.clean_makespan,
+            cell.kills_scheduled,
+            cell.recoveries
+        );
+    }
+
+    let mut sink = JsonSink::new();
+    out.emit(&c, &mut sink);
+    match flags.get("out") {
+        Some(p) => {
+            sink.write_to(std::path::Path::new(p))
+                .with_context(|| format!("writing campaign JSON to '{p}'"))?;
+            println!("{} JSON records -> {p}", sink.len());
+        }
+        None => {
+            sink.finish("campaign");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_info(flags: &Flags) -> Result<()> {
     let artifacts = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
     let m = Manifest::load(&artifacts)?;
@@ -274,6 +421,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(&flags),
         "tsqr" => cmd_tsqr(&flags),
         "serve" => cmd_serve(&flags),
+        "campaign" => cmd_campaign(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

@@ -1,0 +1,142 @@
+//! Hand-rolled flat-record JSON output (offline build: no serde).
+//!
+//! One [`JsonSink`] collects flat objects and writes them as an array —
+//! the machine-readable channel CI archives so perf/survival trajectories
+//! are tracked across PRs. Formatting is deterministic: floats use the
+//! round-tripping `{:e}` form, non-finite values become `null`, and
+//! records appear exactly in insertion order, so two identical runs
+//! produce byte-identical files (the campaign reproducibility contract).
+//!
+//! Lives in the library (rather than `benches/common`) so the `campaign`
+//! subcommand and the bench binaries share one implementation.
+
+use std::path::{Path, PathBuf};
+
+/// One JSON field value.
+pub enum JsonVal<'a> {
+    /// String field.
+    S(&'a str),
+    /// Float field (written with enough digits to round-trip).
+    F(f64),
+    /// Integer field.
+    I(i64),
+}
+
+/// Collects flat JSON records and writes them as an array — to the path
+/// in `FTCAQR_BENCH_JSON` if set, else to `<bench>.json` under the crate
+/// root (or to an explicit path via [`JsonSink::write_to`]).
+pub struct JsonSink {
+    records: Vec<String>,
+}
+
+impl Default for JsonSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonSink {
+    /// An empty sink.
+    pub fn new() -> Self {
+        Self { records: Vec::new() }
+    }
+
+    /// Append one flat object.
+    pub fn rec(&mut self, fields: &[(&str, JsonVal<'_>)]) {
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(k, v)| {
+                let val = match v {
+                    JsonVal::S(s) => format!("\"{}\"", escape(s)),
+                    JsonVal::F(f) if f.is_finite() => format!("{f:e}"),
+                    JsonVal::F(_) => "null".to_string(),
+                    JsonVal::I(i) => i.to_string(),
+                };
+                format!("\"{}\":{}", escape(k), val)
+            })
+            .collect();
+        self.records.push(format!("{{{}}}", body.join(",")));
+    }
+
+    /// Number of records collected so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when no record has been collected.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The serialized array body (what [`JsonSink::write_to`] writes).
+    pub fn body(&self) -> String {
+        format!("[\n{}\n]\n", self.records.join(",\n"))
+    }
+
+    /// Write the array to an explicit path.
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.body())
+    }
+
+    /// Write the array to the conventional bench location and report
+    /// where it went: `FTCAQR_BENCH_JSON` if set, else `<bench>.json`
+    /// under the crate root. Returns the path used.
+    pub fn finish(self, bench: &str) -> PathBuf {
+        let path = match std::env::var("FTCAQR_BENCH_JSON") {
+            Ok(p) => PathBuf::from(p),
+            Err(_) => {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("{bench}.json"))
+            }
+        };
+        match self.write_to(&path) {
+            Ok(()) => println!(
+                "\njson: {} records -> {}",
+                self.records.len(),
+                path.display()
+            ),
+            Err(e) => println!("\njson: write to {} failed: {e}", path.display()),
+        }
+        path
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_are_deterministic_and_escaped() {
+        let mut s = JsonSink::new();
+        s.rec(&[
+            ("name", JsonVal::S("a\"b\\c")),
+            ("x", JsonVal::F(0.5)),
+            ("bad", JsonVal::F(f64::NAN)),
+            ("n", JsonVal::I(-3)),
+        ]);
+        let body = s.body();
+        assert!(body.contains("\"name\":\"a\\\"b\\\\c\""), "{body}");
+        assert!(body.contains("\"x\":5e-1"), "{body}");
+        assert!(body.contains("\"bad\":null"), "{body}");
+        assert!(body.contains("\"n\":-3"), "{body}");
+        let mut s2 = JsonSink::new();
+        s2.rec(&[
+            ("name", JsonVal::S("a\"b\\c")),
+            ("x", JsonVal::F(0.5)),
+            ("bad", JsonVal::F(f64::NAN)),
+            ("n", JsonVal::I(-3)),
+        ]);
+        assert_eq!(body, s2.body(), "same records, same bytes");
+    }
+
+    #[test]
+    fn empty_sink_is_an_empty_array() {
+        let s = JsonSink::new();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.body(), "[\n\n]\n");
+    }
+}

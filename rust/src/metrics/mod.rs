@@ -4,6 +4,8 @@
 //! flops, the dual-channel critical-path estimate and wallclock — flows
 //! through one [`Metrics`] instance shared by every simulated rank.
 
+pub mod json;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 

@@ -672,7 +672,17 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
                     "procs" => cfg.procs = v.parse()?,
                     "seed" => cfg.seed = v.parse()?,
                     "verify" => cfg.verify = v.parse()?,
-                    "checkpoint-every" => cfg.checkpoint_every = v.parse()?,
+                    "checkpoint-every" => {
+                        if v == "auto" {
+                            cfg.checkpoint_auto = true;
+                        } else {
+                            cfg.checkpoint_every = v.parse()?;
+                            cfg.checkpoint_auto = false;
+                        }
+                    }
+                    "straggler" => {
+                        cfg.stragglers.push(crate::sim::parse_straggler(v)?)
+                    }
                     "lookahead" => cfg.lookahead = v.parse()?,
                     "algorithm" => {
                         cfg.algorithm = v.parse().map_err(anyhow::Error::msg)?
@@ -750,6 +760,25 @@ mod tests {
         let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
         assert_eq!(cfg.lookahead, 2);
         assert!(parse_job_line("caqr lookahead=deep").is_err());
+    }
+
+    #[test]
+    fn job_line_parses_checkpoint_auto_and_stragglers() {
+        let spec = parse_job_line(
+            "caqr rows=256 cols=64 block=16 procs=4 checkpoint-every=auto \
+             straggler=1:10 straggler=2:1.5",
+        )
+        .unwrap();
+        let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
+        assert!(cfg.checkpoint_auto);
+        assert_eq!(cfg.stragglers, vec![(1, 10.0), (2, 1.5)]);
+        // A concrete interval still parses and clears the auto flag.
+        let spec = parse_job_line("caqr rows=256 cols=64 block=16 checkpoint-every=2").unwrap();
+        let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
+        assert!(!cfg.checkpoint_auto);
+        assert_eq!(cfg.checkpoint_every, 2);
+        assert!(parse_job_line("caqr straggler=1").is_err());
+        assert!(parse_job_line("caqr checkpoint-every=soon").is_err());
     }
 
     #[test]

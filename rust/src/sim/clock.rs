@@ -17,6 +17,8 @@
 //! where the exchange costs the *sum*, showing where the paper's claim
 //! stops holding).
 
+use anyhow::{ensure, Context, Result};
+
 /// Communication/computation cost parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
@@ -81,6 +83,60 @@ impl CostModel {
     }
 }
 
+/// Per-rank compute slowdown plan — straggler injection.
+///
+/// A straggler is *slow, not dead*: every local compute charge on its
+/// logical clock is multiplied by a factor `>= 1`, while the rank keeps
+/// participating in every exchange (which therefore drags its partners'
+/// clocks with it). This is deliberately distinct from a kill: no
+/// detection, no REBUILD — the recovery protocol never sees it, only the
+/// critical path does. Communication charges are *not* scaled: exchange
+/// completion is a joint function of both endpoints' clocks, and the
+/// slow rank's late arrival already shows up through `max(t_i, t_j)`.
+#[derive(Clone, Debug, Default)]
+pub struct Stragglers {
+    slow: Vec<(usize, f64)>,
+}
+
+impl Stragglers {
+    /// No stragglers: every rank computes at factor 1.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Build from `(rank, factor)` entries; on duplicates the last wins.
+    pub fn new(slow: Vec<(usize, f64)>) -> Self {
+        Self { slow }
+    }
+
+    /// The compute multiplier for `rank` (1.0 when not a straggler).
+    pub fn factor_for(&self, rank: usize) -> f64 {
+        self.slow.iter().rev().find(|(r, _)| *r == rank).map_or(1.0, |(_, f)| *f)
+    }
+
+    /// True when no rank is slowed.
+    pub fn is_empty(&self) -> bool {
+        self.slow.is_empty()
+    }
+}
+
+/// Parse a `rank:factor` straggler spec — e.g. `3:10` makes rank 3's
+/// compute charges 10x slower. The factor must be finite and `>= 1`.
+pub fn parse_straggler(spec: &str) -> Result<(usize, f64)> {
+    let (rank, factor) = spec
+        .split_once(':')
+        .with_context(|| format!("straggler spec '{spec}' must be rank:factor"))?;
+    let rank: usize =
+        rank.parse().with_context(|| format!("straggler spec '{spec}': bad rank"))?;
+    let factor: f64 =
+        factor.parse().with_context(|| format!("straggler spec '{spec}': bad factor"))?;
+    ensure!(
+        factor.is_finite() && factor >= 1.0,
+        "straggler spec '{spec}': factor must be finite and >= 1"
+    );
+    Ok((rank, factor))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +180,25 @@ mod tests {
         let c = CostModel::default();
         assert_eq!(c.compute_time(0), 0.0);
         assert!((c.compute_time(100) - 2.0 * c.compute_time(50)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn straggler_factors_default_to_one() {
+        let s = Stragglers::none();
+        assert!(s.is_empty());
+        assert_eq!(s.factor_for(0), 1.0);
+        let s = Stragglers::new(vec![(1, 4.0), (1, 10.0)]);
+        assert_eq!(s.factor_for(0), 1.0);
+        assert_eq!(s.factor_for(1), 10.0, "last duplicate wins");
+    }
+
+    #[test]
+    fn straggler_spec_parses() {
+        assert_eq!(parse_straggler("3:10").unwrap(), (3, 10.0));
+        assert_eq!(parse_straggler("0:1.5").unwrap(), (0, 1.5));
+        assert!(parse_straggler("3").is_err());
+        assert!(parse_straggler("x:2").is_err());
+        assert!(parse_straggler("3:0.5").is_err(), "speed-ups are not stragglers");
+        assert!(parse_straggler("3:inf").is_err());
     }
 }

@@ -33,7 +33,7 @@ pub mod clock;
 pub mod message;
 pub mod sched;
 
-pub use clock::CostModel;
+pub use clock::{parse_straggler, CostModel, Stragglers};
 pub use message::{Envelope, Event, MsgData, Tag, TagKind};
 pub use sched::{default_workers, JobId, JobResults, Pool, RankTask, Spawner, TaskPoll};
 
@@ -248,6 +248,10 @@ pub struct RankCtx {
     compute_s: f64,
     /// Communication share of `clock` (transfers + waiting on peers).
     comm_s: f64,
+    /// Straggler compute multiplier (1.0 for healthy ranks). Applied to
+    /// every compute charge; survives REBUILD (slowness is a property of
+    /// the physical slot, not the incarnation).
+    slow: f64,
     router: Arc<Router>,
     mailbox: Mailbox,
 }
@@ -260,12 +264,18 @@ impl Drop for RankCtx {
 }
 
 impl RankCtx {
-    /// Advance the clock for a local computation and account flops.
+    /// Advance the clock for a local computation and account flops. A
+    /// straggler rank's charge is multiplied by its slowdown factor.
     pub fn compute(&mut self, flops: u64) {
-        let dt = self.cost.compute_time(flops);
+        let dt = self.slow * self.cost.compute_time(flops);
         self.clock += dt;
         self.compute_s += dt;
         self.metrics.record_flops(flops);
+    }
+
+    /// This rank's straggler compute multiplier (1.0 when healthy).
+    pub fn slow_factor(&self) -> f64 {
+        self.slow
     }
 
     /// Advance the clock by a communication delta (charged as comm time).
@@ -536,18 +546,32 @@ pub struct World {
     pub metrics: Arc<Metrics>,
     /// Failure injector shared by every rank.
     pub fault: Arc<FaultPlan>,
+    /// Per-rank compute slowdown plan (straggler injection).
+    stragglers: Stragglers,
     router: Arc<Router>,
     mailboxes: Mutex<Vec<Option<Receiver<Event>>>>,
 }
 
 impl World {
     pub fn new(n: usize, cost: CostModel, fault: Arc<FaultPlan>) -> Arc<Self> {
+        Self::new_with_stragglers(n, cost, fault, Stragglers::none())
+    }
+
+    /// A world with straggler injection: slowed ranks multiply every
+    /// local compute charge by their factor, across all incarnations.
+    pub fn new_with_stragglers(
+        n: usize,
+        cost: CostModel,
+        fault: Arc<FaultPlan>,
+        stragglers: Stragglers,
+    ) -> Arc<Self> {
         let (router, rxs) = Router::new(n);
         Arc::new(Self {
             n,
             cost,
             metrics: Metrics::new(n),
             fault,
+            stragglers,
             router,
             mailboxes: Mutex::new(rxs.into_iter().map(Some).collect()),
         })
@@ -571,6 +595,7 @@ impl World {
             inc: self.router.incarnation(rank),
             compute_s: 0.0,
             comm_s: 0.0,
+            slow: self.stragglers.factor_for(rank),
             router: self.router.clone(),
             mailbox: Mailbox::new(rx),
         }
@@ -592,6 +617,7 @@ impl World {
             inc: self.router.incarnation(rank),
             compute_s: 0.0,
             comm_s: clock0,
+            slow: self.stragglers.factor_for(rank),
             router: self.router.clone(),
             mailbox: Mailbox::new(rx),
         }

@@ -37,6 +37,16 @@
 //! job's parked tasks with [`Fail::Stalled`] and completes the job —
 //! protocol bugs surface as crisp per-job errors without stalling
 //! unrelated tenants.
+//!
+//! Stall detection is *event-structural*, never time-based: the proof
+//! above reasons only about task states (queued / running / parked), not
+//! about logical or wall clocks. This matters for straggler injection
+//! ([`super::Stragglers`]): a slowed rank's compute charges are
+//! multiplied in *logical* time, but its task still polls, parks and
+//! wakes exactly like a healthy one, so an arbitrarily slow-but-alive
+//! rank can never be misclassified as [`Fail::Stalled`] — and,
+//! conversely, a genuine deadlock is still detected even when stragglers
+//! are present.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -543,7 +553,7 @@ pub(crate) fn run_pool(
 mod tests {
     use super::*;
     use crate::fault::FaultPlan;
-    use crate::sim::{CostModel, ExchangeOp, MsgData, Tag, TagKind};
+    use crate::sim::{CostModel, ExchangeOp, MsgData, Stragglers, Tag, TagKind};
 
     fn tag() -> Tag {
         Tag::plain(TagKind::Misc(42))
@@ -725,6 +735,75 @@ mod tests {
             assert_eq!(res, Ok(()), "rank {rank}");
         }
         assert_eq!(w.metrics.snapshot().exchanges, (n * 2 * 5) as u64);
+    }
+
+    /// [`PingPong`] with a compute charge up front — the shape that would
+    /// tempt a timeout-based stall detector, since one rank's logical
+    /// clock can run far behind its peers'.
+    struct BusyPingPong {
+        flops: u64,
+        inner: PingPong,
+    }
+
+    impl RankTask for BusyPingPong {
+        fn poll(&mut self, ctx: &mut RankCtx, sp: &Spawner) -> TaskPoll {
+            if self.flops > 0 {
+                ctx.compute(std::mem::take(&mut self.flops));
+            }
+            self.inner.poll(ctx, sp)
+        }
+    }
+
+    fn busy_tasks(n: usize) -> Vec<(usize, Box<dyn RankTask>)> {
+        (0..n)
+            .map(|r| {
+                let t = BusyPingPong { flops: 1 << 22, inner: PingPong { sent: false } };
+                (r, Box::new(t) as Box<dyn RankTask>)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn straggler_slowed_rank_completes_instead_of_stalling() {
+        // Regression (straggler vs stall misclassification): a 10x-slowed
+        // rank still polls/parks/wakes like a healthy one, so the
+        // event-structural deadlock proof never fires and the job
+        // completes — while the slowdown is visible in the critical path.
+        let run = |stragglers: Stragglers| {
+            let w = World::new_with_stragglers(
+                4,
+                CostModel::default(),
+                FaultPlan::none(),
+                stragglers,
+            );
+            let results = w.run_tasks(2, busy_tasks(4));
+            for (rank, res) in results {
+                assert_eq!(res, Ok(()), "rank {rank}");
+            }
+            w.metrics.snapshot().critical_path
+        };
+        let healthy = run(Stragglers::none());
+        let slowed = run(Stragglers::new(vec![(0, 10.0)]));
+        assert!(
+            slowed > healthy,
+            "a 10x straggler must lengthen the critical path: {slowed} vs {healthy}"
+        );
+    }
+
+    #[test]
+    fn genuine_stall_is_still_detected_with_a_straggler_present() {
+        // The converse: stragglers do not mask a real deadlock, because
+        // detection reasons about events, not elapsed logical time.
+        let w = World::new_with_stragglers(
+            2,
+            CostModel::default(),
+            FaultPlan::none(),
+            Stragglers::new(vec![(0, 10.0)]),
+        );
+        let results = w.run_tasks(2, forever_tasks(2));
+        for (_, res) in results {
+            assert_eq!(res, Err(Fail::Stalled));
+        }
     }
 
     /// A task that parks forever (waits for a message nobody sends).

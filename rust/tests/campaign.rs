@@ -1,0 +1,334 @@
+//! Integration: the stochastic-campaign subsystem as a randomized soak
+//! harness for the recovery protocol.
+//!
+//! * worker-width invariance: a seeded failure model must produce the
+//!   same kill schedule (and the same factors) no matter how many pool
+//!   workers drive the simulated ranks — `StochasticSpec` because it
+//!   compiles to a schedule before any rank runs, `FaultSpec::Random`
+//!   because its coins are a pure function of `(rank, incarnation,
+//!   site, seed)`;
+//! * store retention edges under randomized kills: a seeded fuzz loop
+//!   drives `RecoveryStore` against a plain model map and checks that
+//!   the progress frontier matches and that no stale lane is ever
+//!   resurrected after a REBUILD;
+//! * straggler injection end to end: a 10x-slowed rank (plus a kill)
+//!   still completes with bitwise-identical factors, paying only
+//!   logical time;
+//! * campaign reproducibility through the public API.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use ftcaqr::backend::Backend;
+use ftcaqr::campaign::{run_campaign, CampaignConfig, IntervalChoice};
+use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::coordinator::{run_caqr_matrix, CaqrOutcome, RecoveryStore, Retained};
+use ftcaqr::fault::{FaultPlan, FaultSpec, Hazard, Phase, StochasticSpec};
+use ftcaqr::ft::Semantics;
+use ftcaqr::linalg::{Matrix, Rng64};
+use ftcaqr::metrics::json::JsonSink;
+use ftcaqr::trace::Trace;
+
+fn cfg(procs: usize, workers: usize) -> RunConfig {
+    RunConfig {
+        rows: procs * 64,
+        cols: 64,
+        block: 16,
+        procs,
+        workers,
+        algorithm: Algorithm::FaultTolerant,
+        semantics: Semantics::Rebuild,
+        ..Default::default()
+    }
+}
+
+fn run_with(
+    c: &RunConfig,
+    a: &Matrix,
+    fault: Arc<FaultPlan>,
+) -> anyhow::Result<CaqrOutcome> {
+    run_caqr_matrix(c.clone(), a.clone(), Backend::native(), fault, Trace::disabled())
+}
+
+/// The two runs must be indistinguishable: same success/failure, and on
+/// success the same factors and the same injected-failure count.
+fn assert_outcomes_agree(
+    a: &anyhow::Result<CaqrOutcome>,
+    b: &anyhow::Result<CaqrOutcome>,
+    what: &str,
+) {
+    match (a, b) {
+        (Ok(x), Ok(y)) => {
+            assert_eq!(x.r, y.r, "{what}: R differs");
+            assert_eq!(x.reduced, y.reduced, "{what}: reduced factor differs");
+            assert_eq!(x.report.failures, y.report.failures, "{what}: failure count differs");
+            assert_eq!(
+                x.report.recoveries, y.report.recoveries,
+                "{what}: recovery count differs"
+            );
+        }
+        (Err(x), Err(y)) => {
+            assert_eq!(format!("{x:#}"), format!("{y:#}"), "{what}: errors differ");
+        }
+        (x, y) => panic!(
+            "{what}: outcomes diverge: {:?} vs {:?}",
+            x.as_ref().map(|_| "ok").map_err(|e| format!("{e:#}")),
+            y.as_ref().map(|_| "ok").map_err(|e| format!("{e:#}"))
+        ),
+    }
+}
+
+#[test]
+fn stochastic_schedule_is_identical_across_worker_widths() {
+    // The generator compiles to a schedule before any rank runs, so the
+    // schedule cannot depend on pool width — and with one kill the run
+    // must recover to bitwise-identical factors at every width.
+    let procs = 4;
+    let spec = StochasticSpec {
+        hazard: Hazard::Poisson,
+        mtbf_panels: 1.0, // hot process: a kill is all but certain
+        node_width: 1,
+        max_failures: 1,
+        seed: 2024,
+    };
+    let c1 = cfg(procs, 1);
+    let kills = spec.kills(procs, c1.panels());
+    assert_eq!(kills, spec.kills(procs, c1.panels()), "generator must be pure");
+    assert!(kills.len() <= 1);
+
+    let a = Matrix::randn(c1.rows, c1.cols, 71);
+    let clean = run_with(&c1, &a, FaultPlan::none()).unwrap();
+    let mut outcomes = Vec::new();
+    for workers in [1usize, 4] {
+        let c = cfg(procs, workers);
+        let out = run_with(&c, &a, FaultPlan::new(spec.fault_spec(procs, c.panels())));
+        outcomes.push(out);
+    }
+    assert_outcomes_agree(&outcomes[0], &outcomes[1], "stochastic schedule");
+    let out = outcomes[0].as_ref().expect("single stochastic kill must be recoverable");
+    // <= rather than ==: a kill can land on a site the run never visits
+    // (e.g. the last panel's update phase, which has no trailing matrix).
+    assert!(out.report.failures as usize <= kills.len());
+    assert_eq!(out.report.recoveries, out.report.failures);
+    assert_eq!(clean.r, out.r, "recovered factors must match the clean run");
+}
+
+#[test]
+fn random_fault_coins_are_identical_across_worker_widths() {
+    // FaultSpec::Random draws one deterministic coin per (rank,
+    // incarnation, site, seed). With a budget wide enough that the cap
+    // never arbitrates between concurrent winners, the fired set — and
+    // hence the whole run — is a pure function of the seed, not of the
+    // pool width.
+    let procs = 4;
+    let a = Matrix::randn(procs * 64, 64, 73);
+    let mk = || {
+        FaultPlan::new(FaultSpec::Random { prob: 0.02, seed: 90210, max_failures: 100 })
+    };
+    let r1 = run_with(&cfg(procs, 1), &a, mk());
+    let r4 = run_with(&cfg(procs, 4), &a, mk());
+    assert_outcomes_agree(&r1, &r4, "random coins");
+}
+
+#[test]
+fn straggler_run_completes_with_identical_factors() {
+    // Satellite: a 10x straggler is slow, not dead. The run completes
+    // (no stall misclassification), the factors are bitwise identical —
+    // slowness only exists on the logical time axis — and the critical
+    // path stretches. Also holds with a kill in flight: recovery and
+    // straggling compose.
+    let procs = 4;
+    let base = cfg(procs, 1);
+    let a = Matrix::randn(base.rows, base.cols, 79);
+    // Fresh plan per run: scheduled kills fire once per FaultPlan.
+    let kill =
+        || FaultPlan::schedule(vec![ftcaqr::fault::ScheduledKill::new(2, 1, 0, Phase::Update)]);
+
+    let healthy = run_with(&base, &a, kill()).unwrap();
+    let mut slowed_cfg = base.clone();
+    slowed_cfg.stragglers = vec![(1, 10.0)];
+    let slowed = run_with(&slowed_cfg, &a, kill()).unwrap();
+
+    assert_eq!(healthy.report.failures, 1);
+    assert_eq!(slowed.report.failures, 1);
+    assert_eq!(slowed.report.recoveries, 1, "straggler must not break recovery");
+    assert_eq!(healthy.r, slowed.r, "straggling must not change the arithmetic");
+    assert_eq!(healthy.reduced, slowed.reduced);
+    assert!(
+        slowed.report.critical_path > healthy.report.critical_path,
+        "10x straggler must lengthen the critical path: {} vs {}",
+        slowed.report.critical_path,
+        healthy.report.critical_path
+    );
+}
+
+// ---------------------------------------------------------------------
+// RecoveryStore fuzz (satellite: retention edges under randomized kills)
+// ---------------------------------------------------------------------
+
+/// The in-panel site order [`RecoveryStore`] documents: TSQR steps
+/// first, then update lanes ascending, steps innermost.
+fn site_index(phase: Phase, step: usize, lane: u32) -> u64 {
+    match phase {
+        Phase::Tsqr => step as u64,
+        Phase::Update => (1u64 << 40) | ((lane as u64) << 20) | (step as u64),
+    }
+}
+
+fn retained() -> Retained {
+    Retained {
+        buddy: 0,
+        w: Arc::new(Matrix::zeros(4, 2)),
+        y1: Arc::new(Matrix::zeros(2, 2)),
+        t: Arc::new(Matrix::zeros(2, 2)),
+        r_merged: Arc::new(Matrix::zeros(2, 2)),
+    }
+}
+
+#[test]
+fn store_retention_fuzz_never_resurrects_stale_lanes() {
+    const RANKS: usize = 4;
+    const PANELS: usize = 4;
+    const STEPS: usize = 3;
+    const LANES: u32 = 3;
+    const ITERS: usize = 1000;
+
+    let store = RecoveryStore::new();
+    let entry_bytes = retained().nbytes() as u64;
+    let mut rng = Rng64::new(0xF0CC);
+
+    // The model: plain maps the store must agree with at every step.
+    let mut live: HashMap<(usize, usize, Phase, usize, u32), ()> = HashMap::new();
+    let mut frontier: HashMap<(usize, usize), u64> = HashMap::new(); // (rank, panel) -> max site
+    let mut inc = [0u32; RANKS];
+    let mut died = [false; RANKS];
+    let mut touched: HashSet<(usize, usize, Phase, usize, u32)> = HashSet::new();
+
+    let pick_key = |rng: &mut Rng64| {
+        let rank = (rng.next_u64() % RANKS as u64) as usize;
+        let panel = (rng.next_u64() % PANELS as u64) as usize;
+        let phase = if rng.next_u64() % 2 == 0 { Phase::Tsqr } else { Phase::Update };
+        let step = (rng.next_u64() % STEPS as u64) as usize;
+        let lane = if phase == Phase::Tsqr { 0 } else { (rng.next_u64() % LANES as u64) as u32 };
+        (rank, panel, phase, step, lane)
+    };
+
+    for iter in 0..ITERS {
+        match rng.next_u64() % 100 {
+            // Live insert by the rank's current incarnation.
+            0..=59 => {
+                let (rank, panel, phase, step, lane) = pick_key(&mut rng);
+                store.insert(rank, inc[rank], panel, phase, step, lane, retained());
+                live.insert((rank, panel, phase, step, lane), ());
+                touched.insert((rank, panel, phase, step, lane));
+                let f = frontier.entry((rank, panel)).or_insert(0);
+                *f = (*f).max(site_index(phase, step, lane));
+            }
+            // Straggling insert from a DEAD incarnation: the store must
+            // reject the entry (never resurrect memory that died with
+            // the process) while still advancing the frontier.
+            60..=74 => {
+                let (rank, panel, phase, step, lane) = pick_key(&mut rng);
+                if !died[rank] {
+                    continue;
+                }
+                let stale_inc = inc[rank] - 1;
+                let existed = live.contains_key(&(rank, panel, phase, step, lane));
+                store.insert(rank, stale_inc, panel, phase, step, lane, retained());
+                touched.insert((rank, panel, phase, step, lane));
+                let f = frontier.entry((rank, panel)).or_insert(0);
+                *f = (*f).max(site_index(phase, step, lane));
+                assert_eq!(
+                    store.get(rank, panel, phase, step, lane).is_some(),
+                    existed,
+                    "iter {iter}: stale insert changed entry presence"
+                );
+            }
+            // Kill the rank's current incarnation (REBUILD follows: the
+            // next incarnation's inserts are accepted again).
+            75..=89 => {
+                let rank = (rng.next_u64() % RANKS as u64) as usize;
+                store.drop_owner_dead(rank, inc[rank]);
+                inc[rank] += 1;
+                died[rank] = true;
+                live.retain(|k, _| k.0 != rank);
+            }
+            // Global retirement: panels before p are checkpoint-covered.
+            _ => {
+                let p = (rng.next_u64() % (PANELS as u64 + 1)) as usize;
+                store.retire_before(p);
+                live.retain(|k, _| k.1 >= p);
+            }
+        }
+
+        // Frontier agreement, every iteration (cheap).
+        for rank in 0..RANKS {
+            for panel in 0..=PANELS {
+                let model = (panel..PANELS).any(|p| frontier.contains_key(&(rank, p)));
+                assert_eq!(
+                    store.has_progress_at_or_after(rank, panel),
+                    model,
+                    "iter {iter}: has_progress_at_or_after({rank}, {panel})"
+                );
+            }
+        }
+        assert_eq!(
+            store.current_bytes(),
+            live.len() as u64 * entry_bytes,
+            "iter {iter}: byte accounting drifted"
+        );
+
+        // Entry + per-(rank, panel) frontier agreement over every key
+        // ever written, periodically (the expensive sweep).
+        if iter % 50 == 49 || iter == ITERS - 1 {
+            for &(rank, panel, phase, step, lane) in &touched {
+                assert_eq!(
+                    store.get(rank, panel, phase, step, lane).is_some(),
+                    live.contains_key(&(rank, panel, phase, step, lane)),
+                    "iter {iter}: entry presence diverged at \
+                     ({rank}, {panel}, {phase:?}, {step}, {lane})"
+                );
+                let model = frontier
+                    .get(&(rank, panel))
+                    .is_some_and(|&max| max >= site_index(phase, step, lane));
+                assert_eq!(
+                    store.has_completed(rank, panel, phase, step, lane),
+                    model,
+                    "iter {iter}: frontier diverged at \
+                     ({rank}, {panel}, {phase:?}, {step}, {lane})"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Campaign reproducibility through the public API
+// ---------------------------------------------------------------------
+
+#[test]
+fn campaign_is_bit_reproducible_from_one_seed() {
+    let c = CampaignConfig {
+        base: RunConfig { rows: 128, cols: 32, block: 16, procs: 2, ..Default::default() },
+        procs: vec![2],
+        mtbf_panels: vec![2.0],
+        intervals: vec![IntervalChoice::Fixed(0), IntervalChoice::Auto],
+        trials: 2,
+        max_failures: 4,
+        seed: 77,
+        check_tol: Some(0.5),
+        jobs: 2,
+        ..Default::default()
+    };
+    let body = |c: &CampaignConfig| {
+        let mut sink = JsonSink::new();
+        run_campaign(c).unwrap().emit(c, &mut sink);
+        sink.body()
+    };
+    assert_eq!(body(&c), body(&c), "one seed, one byte stream");
+    // A different seed is a different campaign (overwhelmingly likely to
+    // differ in its kill schedules).
+    let mut c2 = c.clone();
+    c2.seed = 78;
+    assert_ne!(body(&c), body(&c2), "seed must actually steer the campaign");
+}
