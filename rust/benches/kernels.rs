@@ -5,9 +5,15 @@
 //! Sections:
 //! * GEMM n x n x n sweep (64..1024): pre-tile ikj reference
 //!   (`gemm_ref_into`) vs tiled/packed kernel, GFLOP/s and speedup.
+//! * SIMD sweep (64..1024): scalar micro-kernel vs the runtime-detected
+//!   best SIMD level vs the pool-split parallel path, GFLOP/s each.
+//!   **This sweep is also the CI bitwise gate** (runs in smoke mode):
+//!   every SIMD level and the parallel split must reproduce the scalar
+//!   serial product bit-for-bit, or the bench aborts and `bench-smoke`
+//!   fails.
 //! * Panel QR: scalar reference (`householder_qr_ref`) vs blocked.
 //! * tree_update: clone-returning pair step vs in-place half update.
-//! * Optional GEMM thread-split sweep (`set_par_threads`).
+//! * Optional GEMM band-split sweep (`ParCtx::threads`).
 //! * XLA artifact rows (engine compile-vs-exec accounting) when present.
 //!
 //! Every row is also emitted as a JSON record (`FTCAQR_BENCH_JSON`, CI's
@@ -22,7 +28,10 @@ use std::collections::BTreeMap;
 use common::JsonVal::{F, I, S};
 
 use ftcaqr::backend::Backend;
-use ftcaqr::linalg::{self, gemm_into, gemm_ref_into, Matrix, Trans};
+use ftcaqr::linalg::{
+    self, gemm_into, gemm_ref_into, gemm_view_into_par, gemm_view_into_with, gemm_with,
+    Matrix, ParCtx, SimdLevel, Trans,
+};
 use ftcaqr::runtime::Engine;
 
 fn gemm_sweep(sink: &mut common::JsonSink) {
@@ -62,6 +71,109 @@ fn gemm_sweep(sink: &mut common::JsonSink) {
             ("speedup", F(speedup)),
         ]);
     }
+}
+
+/// Scalar vs best-SIMD vs pool-split parallel GEMM, plus the bitwise
+/// gate: every level and the parallel split must equal the scalar serial
+/// product bit-for-bit (the determinism contract the whole replay /
+/// lookahead machinery rests on). Runs in smoke mode — this is the CI
+/// regression gate for the SIMD kernels.
+fn simd_sweep(sink: &mut common::JsonSink) {
+    let best = SimdLevel::best();
+    let threads = common::pool().min(4);
+    common::header(&format!(
+        "GEMM n x n x n: scalar vs SIMD ({}) vs parallel ({threads} bands) — bitwise-gated",
+        best.name()
+    ));
+    println!(
+        "{:>6} | {:>10} {:>10} {:>10} | {:>8} {:>8}",
+        "n", "scal GF/s", "simd GF/s", "par GF/s", "simd x", "par x"
+    );
+    let sizes: &[usize] =
+        if common::smoke() { &[64, 128] } else { &[64, 128, 256, 512, 1024] };
+    for &n in sizes {
+        let a = Matrix::randn(n, n, 1);
+        let b = Matrix::randn(n, n, 2);
+
+        // Bitwise gate first: every available SIMD level and the band
+        // split must reproduce the scalar serial product exactly.
+        let serial = ParCtx::serial();
+        let want = gemm_with(&serial, SimdLevel::Scalar, Trans::No, Trans::No, 1.0, &a, &b);
+        for lvl in SimdLevel::available() {
+            let got = gemm_with(&serial, lvl, Trans::No, Trans::No, 1.0, &a, &b);
+            assert_eq!(
+                got,
+                want,
+                "SIMD level {} diverged bitwise from scalar at n={n}",
+                lvl.name()
+            );
+        }
+        let par = ParCtx::threads(threads);
+        let got = gemm_with(&par, best, Trans::No, Trans::No, 1.0, &a, &b);
+        assert_eq!(got, want, "parallel GEMM diverged bitwise from scalar at n={n}");
+
+        let mut c = Matrix::zeros(n, n);
+        let iters = if n >= 512 { 3 } else { 9 };
+        let (scal_med, _, _) = common::time_case(1, iters, || {
+            gemm_view_into_with(
+                &serial,
+                SimdLevel::Scalar,
+                Trans::No,
+                Trans::No,
+                1.0,
+                a.as_view(),
+                b.as_view(),
+                0.0,
+                c.as_view_mut(),
+            )
+        });
+        let (simd_med, _, _) = common::time_case(1, iters, || {
+            gemm_view_into_with(
+                &serial,
+                best,
+                Trans::No,
+                Trans::No,
+                1.0,
+                a.as_view(),
+                b.as_view(),
+                0.0,
+                c.as_view_mut(),
+            )
+        });
+        let (par_med, _, _) = common::time_case(1, iters, || {
+            gemm_view_into_par(
+                &par,
+                Trans::No,
+                Trans::No,
+                1.0,
+                a.as_view(),
+                b.as_view(),
+                0.0,
+                c.as_view_mut(),
+            )
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        let (gf_scal, gf_simd, gf_par) =
+            (flops / scal_med / 1e9, flops / simd_med / 1e9, flops / par_med / 1e9);
+        println!(
+            "{n:>6} | {gf_scal:>10.2} {gf_simd:>10.2} {gf_par:>10.2} | {:>7.2}x {:>7.2}x",
+            scal_med / simd_med,
+            scal_med / par_med,
+        );
+        sink.rec(&[
+            ("bench", S("gemm_simd")),
+            ("n", I(n as i64)),
+            ("simd", S(best.name())),
+            ("threads", I(threads as i64)),
+            ("scalar_s", F(scal_med)),
+            ("simd_s", F(simd_med)),
+            ("par_s", F(par_med)),
+            ("scalar_gflops", F(gf_scal)),
+            ("simd_gflops", F(gf_simd)),
+            ("par_gflops", F(gf_par)),
+        ]);
+    }
+    println!("bitwise gate: all SIMD levels and the band split match scalar exactly");
 }
 
 fn panel_qr_sweep(sink: &mut common::JsonSink) {
@@ -145,7 +257,7 @@ fn tree_update_sweep(sink: &mut common::JsonSink) {
 
 fn par_sweep(sink: &mut common::JsonSink) {
     let n = 1024usize;
-    common::header("GEMM thread split (set_par_threads), n=1024");
+    common::header("GEMM band split (ParCtx::threads), n=1024");
     println!("{:>8} | {:>12} | {:>10}", "threads", "median", "GF/s");
     let a = Matrix::randn(n, n, 1);
     let b = Matrix::randn(n, n, 2);
@@ -155,9 +267,18 @@ fn par_sweep(sink: &mut common::JsonSink) {
         if threads > common::pool() {
             continue;
         }
-        linalg::set_par_threads(threads);
+        let par = ParCtx::threads(threads);
         let (med, _, _) = common::time_case(1, 3, || {
-            gemm_into(Trans::No, Trans::No, 1.0, &a, &b, 0.0, &mut c)
+            gemm_view_into_par(
+                &par,
+                Trans::No,
+                Trans::No,
+                1.0,
+                a.as_view(),
+                b.as_view(),
+                0.0,
+                c.as_view_mut(),
+            )
         });
         println!(
             "{threads:>8} | {:>12} | {:>10.2}",
@@ -172,7 +293,6 @@ fn par_sweep(sink: &mut common::JsonSink) {
             ("tiled_gflops", F(flops / med / 1e9)),
         ]);
     }
-    linalg::set_par_threads(1);
 }
 
 fn xla_rows() {
@@ -251,6 +371,8 @@ fn xla_rows() {
 fn main() {
     let mut sink = common::JsonSink::new();
     gemm_sweep(&mut sink);
+    // Always runs: the SIMD sweep doubles as the CI bitwise gate.
+    simd_sweep(&mut sink);
     panel_qr_sweep(&mut sink);
     tree_update_sweep(&mut sink);
     if !common::smoke() {

@@ -13,11 +13,11 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
-use crate::linalg::{self, Matrix, PanelFactors, TreeStep};
+use crate::linalg::{self, Matrix, PanelFactors, ParCtx, TreeStep};
 use crate::runtime::EngineHandle;
 
 /// Merge factors returned by [`Backend::tsqr_merge`].
@@ -37,6 +37,11 @@ pub struct MergeFactors {
 #[derive(Default)]
 pub struct NativeBackend {
     flops: AtomicU64,
+    /// Intra-rank parallel context for the heavy linalg ops. Backend-
+    /// scoped (not a process global) so concurrent jobs — service
+    /// tenants, campaign trials — each carry their own split without
+    /// racing. Defaults to serial; bitwise-identical at any width.
+    par: RwLock<ParCtx>,
 }
 
 /// PJRT-backed backend: pads to the artifact ladder, executes, crops.
@@ -111,6 +116,26 @@ impl Backend {
         }
     }
 
+    /// Install the intra-rank parallel context used by the native
+    /// linalg ops (GEMM band split, blocked-QR trailing update). A
+    /// no-op on the XLA backend, whose parallelism lives inside the
+    /// PJRT runtime. The split never changes results: every parallel
+    /// path is bitwise-identical to the serial one.
+    pub fn set_par_ctx(&self, par: ParCtx) {
+        if let Backend::Native(b) = self {
+            *b.par.write().unwrap() = par;
+        }
+    }
+
+    /// The backend's current intra-rank parallel context (serial on
+    /// XLA and on a freshly constructed native backend).
+    pub fn par_ctx(&self) -> ParCtx {
+        match self {
+            Backend::Native(b) => b.par.read().unwrap().clone(),
+            Backend::Xla(_) => ParCtx::serial(),
+        }
+    }
+
     /// Cumulative flops issued through this backend.
     pub fn flops(&self) -> u64 {
         match self {
@@ -131,7 +156,7 @@ impl Backend {
         let (m, b) = a.shape();
         self.add_flops(flops::panel_qr(m, b));
         match self {
-            Backend::Native(_) => Ok(linalg::householder_qr(a)),
+            Backend::Native(_) => Ok(linalg::householder_qr_par(&self.par_ctx(), a)),
             Backend::Xla(x) => {
                 let want = BTreeMap::from([("m", m), ("b", b)]);
                 let entry = x.engine.manifest().select("panel_qr", &want)?.clone();
@@ -192,7 +217,7 @@ impl Backend {
             Backend::Native(_) => {
                 let (m, b) = y.shape();
                 self.add_flops(flops::leaf_apply(m, b, c.cols()));
-                linalg::leaf_apply_cols_into(y, t, c, full_n);
+                linalg::leaf_apply_cols_into_par(&self.par_ctx(), y, t, c, full_n);
                 Ok(())
             }
             Backend::Xla(_) => {
@@ -237,7 +262,15 @@ impl Backend {
             Backend::Native(_) => {
                 let (b, n) = cp.shape();
                 self.add_flops(flops::tree_update(b, n));
-                Ok(linalg::tree_update_half_cols(cp, peer, y1, t, is_top, full_n))
+                Ok(linalg::tree_update_half_cols_par(
+                    &self.par_ctx(),
+                    cp,
+                    peer,
+                    y1,
+                    t,
+                    is_top,
+                    full_n,
+                ))
             }
             Backend::Xla(_) => {
                 let st = if is_top {
@@ -280,7 +313,7 @@ impl Backend {
             Backend::Native(_) => {
                 let (b, n) = c0.shape();
                 self.add_flops(flops::tree_update(b, n));
-                Ok(linalg::tree_update_into_cols(c0, c1, y1, t, full_n))
+                Ok(linalg::tree_update_into_cols_par(&self.par_ctx(), c0, c1, y1, t, full_n))
             }
             Backend::Xla(_) => {
                 let st = self.tree_update(c0, c1, y1, t)?;
@@ -334,7 +367,7 @@ impl Backend {
             Backend::Native(_) => {
                 let (b, n) = c.shape();
                 self.add_flops(flops::recover(b, n));
-                linalg::recover_block_cols_into(c, y, w, full_n);
+                linalg::recover_block_cols_into_par(&self.par_ctx(), c, y, w, full_n);
                 Ok(())
             }
             Backend::Xla(_) => {
@@ -479,6 +512,28 @@ mod tests {
         let mut rec0 = c0.clone();
         be.recover_top_into(&mut rec0, &st.w).unwrap();
         assert_eq!(rec0, st.c0);
+    }
+
+    #[test]
+    fn par_ctx_backend_matches_serial_bitwise() {
+        let serial = Backend::native();
+        let par = Backend::native();
+        par.set_par_ctx(ParCtx::threads(3));
+        assert!(serial.par_ctx().is_serial());
+        assert_eq!(par.par_ctx().width(), 3);
+
+        // Tall panel so the blocked-QR trailing update crosses the
+        // parallel work threshold.
+        let a = Matrix::randn(2048, 128, 9);
+        let f0 = serial.panel_qr(&a).unwrap();
+        let f1 = par.panel_qr(&a).unwrap();
+        assert_eq!(f0.y, f1.y);
+        assert_eq!(f0.t, f1.t);
+        assert_eq!(f0.r, f1.r);
+
+        // Resetting to serial restores the default context.
+        par.set_par_ctx(ParCtx::serial());
+        assert!(par.par_ctx().is_serial());
     }
 
     #[test]

@@ -78,10 +78,13 @@ pub struct RunConfig {
     /// machine's core count, capped by P). P is *not* bounded by this —
     /// rank tasks park on communication instead of holding a thread.
     pub workers: usize,
-    /// GEMM row-panel thread split (process-wide,
-    /// [`crate::linalg::set_par_threads`]): 1 = serial kernels (the
-    /// default — the rank worker pool usually owns the cores); N > 1
-    /// splits large products across N plain threads.
+    /// Intra-rank GEMM/QR band split width, carried by the run's
+    /// backend as a [`crate::linalg::ParCtx`] ([`crate::Backend::set_par_ctx`]):
+    /// 1 = serial kernels (the default — the rank worker pool usually
+    /// owns the cores); N > 1 submits up to N band closures per large
+    /// product to the same pool that drives the rank tasks (its compute
+    /// lane), so the split never oversubscribes the host. Any width is
+    /// bitwise-identical to serial.
     pub par: usize,
     /// Trailing-update algorithm (paper Algorithm 1 vs 2).
     pub algorithm: Algorithm,

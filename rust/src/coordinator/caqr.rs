@@ -1246,22 +1246,31 @@ fn run_caqr_on(
     trace: Arc<Trace>,
     t0: std::time::Instant,
 ) -> Result<CaqrOutcome> {
-    // The GEMM split knob is process-wide; apply this run's value and
-    // restore the previous one on every exit path (including bail!).
-    // Concurrent runs with different `par` race only on thread count,
-    // never on results (the kernels are bit-deterministic either way).
-    struct ParGuard(usize);
-    impl Drop for ParGuard {
+    // One pool drives both the rank tasks and the backend's intra-rank
+    // GEMM/QR band split (`cfg.par`): band closures ride the pool's
+    // compute lane, so a run never oversubscribes the host with nested
+    // scoped threads. The split is backend-scoped (`Backend::set_par_ctx`)
+    // rather than a process global, so concurrent runs with different
+    // `par` no longer race — and it never changes results: every
+    // parallel path is bitwise-identical to serial.
+    let workers = cfg.effective_workers();
+    let pool = crate::sim::Pool::new(workers);
+    backend.set_par_ctx(pool.par_ctx(cfg.par));
+    // Restore the serial default on every exit path so the caller's
+    // backend does not keep an executor for a pool that died with this
+    // call. (Submitting to a dropped pool is safe — help-first runs the
+    // bands on the submitting thread — but serial is the honest state.)
+    struct SerialOnExit(Arc<Backend>);
+    impl Drop for SerialOnExit {
         fn drop(&mut self) {
-            crate::linalg::set_par_threads(self.0);
+            self.0.set_par_ctx(crate::linalg::ParCtx::serial());
         }
     }
-    let _par_guard = ParGuard(crate::linalg::par_threads());
-    crate::linalg::set_par_threads(cfg.par);
-    let workers = cfg.effective_workers();
+    let _reset = SerialOnExit(backend.clone());
     let CaqrJob { cfg, a, shared, world, tasks, flops0, t0 } =
         CaqrJob::prepare(cfg, a, backend, fault, trace, t0)?;
-    let results = world.run_tasks(workers, tasks);
+    let results = pool.run(&world, tasks);
+    world.router().set_waker(None);
     CaqrJob::finalize(&cfg, &a, &shared, &world, results, flops0, t0)
 }
 

@@ -70,6 +70,11 @@
 //! failure-free baselines.
 
 #![warn(missing_docs)]
+// Unsafe code (the explicit-SIMD kernels in `linalg::simd`, the scoped
+// task-lifetime erasure in `sim::sched`) must put every unsafe operation
+// in a scoped `unsafe {}` block with its own SAFETY comment — even
+// inside `unsafe fn`.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod backend;
 pub mod campaign;

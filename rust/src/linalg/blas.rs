@@ -4,8 +4,9 @@
 //! These back the [`crate::backend::NativeBackend`] hot path. The GEMM is
 //! a BLIS-style tiled/packed kernel (see DESIGN.md "Kernel architecture"):
 //! operands are packed into cache-sized `MC x KC` / `KC x NC` blocks, and
-//! an `MR x NR` register micro-kernel streams contiguous packed panels so
-//! the compiler can keep the accumulator tile in SIMD registers. Packing
+//! an `MR x NR` register micro-kernel (runtime-dispatched AVX/NEON with a
+//! scalar oracle, `linalg::simd`) streams contiguous packed panels with
+//! the accumulator tile held in vector registers. Packing
 //! reads through strided [`MatrixView`]s, so transposed operands and
 //! sub-block views cost a pack pass (O(mk + kn)), never an extra
 //! materialized copy of the operand.
@@ -14,9 +15,9 @@
 //! correctness oracle for the property tests and the "before" baseline in
 //! `benches/kernels.rs`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use super::matrix::{Matrix, MatrixView, MatrixViewMut};
+use super::par::{ParCtx, ParTask};
+use super::simd::{self, SimdLevel};
 
 /// Transpose flag for [`gemm`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,9 +37,10 @@ const KC: usize = 256;
 /// Columns of op(B) packed per block.
 const NC: usize = 256;
 /// Micro-kernel rows (accumulator tile height).
-const MR: usize = 4;
-/// Micro-kernel columns (accumulator tile width; 4 SIMD vectors of 4).
-const NR: usize = 16;
+pub(crate) const MR: usize = 4;
+/// Micro-kernel columns (accumulator tile width: two AVX f32x8 vectors,
+/// or four NEON f32x4 vectors — see `linalg::simd`).
+pub(crate) const NR: usize = 16;
 /// Minimum `m * n * k` before the row-panel thread split engages.
 const PAR_MIN_WORK: usize = 1 << 21;
 /// At or below this op volume the pack-buffer setup dominates the math:
@@ -47,30 +49,28 @@ const PAR_MIN_WORK: usize = 1 << 21;
 /// replay bit-equality is unaffected.
 const SMALL_WORK: usize = 32 * 32 * 32;
 
-/// Worker count for the GEMM row-panel split (process-wide; see
-/// [`set_par_threads`]). Default 1 = serial.
-static PAR_THREADS: AtomicUsize = AtomicUsize::new(1);
-
-/// Set the process-wide GEMM thread split: large products are divided
-/// into contiguous row panels of `C`, one plain `std::thread` each (no
-/// rayon). `n <= 1` (including 0) means serial. Drivers apply
-/// `RunConfig::par` through this; leave it at 1 when a simulation worker
-/// pool already saturates the machine.
-pub fn set_par_threads(n: usize) {
-    PAR_THREADS.store(n.max(1), Ordering::Relaxed);
-}
-
-/// Current GEMM thread split (see [`set_par_threads`]).
-pub fn par_threads() -> usize {
-    PAR_THREADS.load(Ordering::Relaxed).max(1)
-}
-
-/// `alpha * op(A) @ op(B)` into a fresh matrix.
+/// `alpha * op(A) @ op(B)` into a fresh matrix (serial, best SIMD).
 pub fn gemm(ta: Trans, tb: Trans, alpha: f32, a: &Matrix, b: &Matrix) -> Matrix {
+    gemm_with(&ParCtx::serial(), SimdLevel::best(), ta, tb, alpha, a, b)
+}
+
+/// [`gemm`] with the parallel context and SIMD level chosen by the
+/// caller. Benches and property tests use this to compare kernel
+/// variants; results are bitwise identical across every `(par, lvl)`
+/// combination (see `linalg::simd` module docs).
+pub fn gemm_with(
+    par: &ParCtx,
+    lvl: SimdLevel,
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+) -> Matrix {
     let (m, _k) = op_shape(ta, a.shape());
     let (_, n) = op_shape(tb, b.shape());
     let mut c = Matrix::zeros(m, n);
-    gemm_into(ta, tb, alpha, a, b, 0.0, &mut c);
+    gemm_view_into_with(par, lvl, ta, tb, alpha, a.as_view(), b.as_view(), 0.0, c.as_view_mut());
     c
 }
 
@@ -131,10 +131,27 @@ pub fn gemm_path(m: usize, n: usize, k: usize) -> GemmPath {
 /// point — `A`, `B` and `C` may all be strided windows into larger
 /// matrices, so callers update trailing blocks in place.
 ///
-/// Results are bit-deterministic and independent of [`par_threads`]:
-/// each output row's accumulation order depends only on the k-blocking,
-/// never on which band or register tile the row lands in.
+/// Results are bit-deterministic and independent of the parallel split
+/// and SIMD level: each output row's accumulation order depends only on
+/// the k-blocking, never on which band, register tile, or vector lane
+/// the row lands in.
 pub fn gemm_view_into(
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    beta: f32,
+    c: MatrixViewMut<'_>,
+) {
+    gemm_view_into_par(&ParCtx::serial(), ta, tb, alpha, a, b, beta, c);
+}
+
+/// [`gemm_view_into`] splitting large products across `par` (the band
+/// split engages above [`PAR_MIN_WORK`]; smaller ops run inline).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_view_into_par(
+    par: &ParCtx,
     ta: Trans,
     tb: Trans,
     alpha: f32,
@@ -145,7 +162,27 @@ pub fn gemm_view_into(
 ) {
     let (m, k) = op_shape(ta, a.shape());
     let n = op_shape(tb, b.shape()).1;
-    gemm_view_into_on(gemm_path(m, n, k), ta, tb, alpha, a, b, beta, c);
+    gemm_view_into_core(gemm_path(m, n, k), SimdLevel::best(), par, ta, tb, alpha, a, b, beta, c);
+}
+
+/// [`gemm_view_into`] with both the parallel context and the SIMD level
+/// chosen by the caller (property tests pin non-best levels and strided
+/// views through this).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_view_into_with(
+    par: &ParCtx,
+    lvl: SimdLevel,
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    beta: f32,
+    c: MatrixViewMut<'_>,
+) {
+    let (m, k) = op_shape(ta, a.shape());
+    let n = op_shape(tb, b.shape()).1;
+    gemm_view_into_core(gemm_path(m, n, k), lvl, par, ta, tb, alpha, a, b, beta, c);
 }
 
 /// [`gemm_view_into`] with the small/tiled dispatch pinned by the caller.
@@ -160,6 +197,41 @@ pub fn gemm_view_into(
 /// dataflow engine").
 pub fn gemm_view_into_on(
     path: GemmPath,
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    beta: f32,
+    c: MatrixViewMut<'_>,
+) {
+    gemm_view_into_core(path, SimdLevel::best(), &ParCtx::serial(), ta, tb, alpha, a, b, beta, c);
+}
+
+/// [`gemm_view_into_on`] splitting across `par` (the pinned-path variant
+/// the `qr` column kernels use when a parallel context travels with the
+/// job).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_view_into_on_par(
+    path: GemmPath,
+    par: &ParCtx,
+    ta: Trans,
+    tb: Trans,
+    alpha: f32,
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    beta: f32,
+    c: MatrixViewMut<'_>,
+) {
+    gemm_view_into_core(path, SimdLevel::best(), par, ta, tb, alpha, a, b, beta, c);
+}
+
+/// Shared dispatch body behind every gemm entry point.
+#[allow(clippy::too_many_arguments)]
+fn gemm_view_into_core(
+    path: GemmPath,
+    lvl: SimdLevel,
+    par: &ParCtx,
     ta: Trans,
     tb: Trans,
     alpha: f32,
@@ -184,29 +256,55 @@ pub fn gemm_view_into_on(
         return;
     }
 
-    let threads = par_threads();
-    if threads > 1 && m >= 2 * MR && m * n * k >= PAR_MIN_WORK {
-        gemm_parallel(ta, tb, alpha, a, b, threads, c);
+    if par.width() > 1 && m >= 2 * MR && m * n * k >= PAR_MIN_WORK {
+        gemm_parallel(lvl, ta, tb, alpha, a, b, par, c);
     } else {
-        gemm_band(ta, tb, alpha, a, b, c);
+        gemm_band(lvl, ta, tb, alpha, a, b, c);
     }
 }
 
-/// Thread-split driver. All of `op(B)` is packed **once** up front into
+/// Balanced row-band split for the parallel driver: distribute the
+/// `ceil(m / MR)` register strips over at most `bands` bands so no band
+/// exceeds `ceil(strips / bands)` strips (the old `m.div_ceil(bands)`
+/// rounding could hand the tail band every remainder row). Returns the
+/// row count of each band; counts sum to `m` and every band is
+/// non-empty (fewer bands are returned when `m` has fewer strips).
+pub fn par_band_rows(m: usize, bands: usize) -> Vec<usize> {
+    let strips = m.div_ceil(MR);
+    let bands = bands.max(1).min(strips.max(1));
+    let base = strips / bands;
+    let rem = strips % bands;
+    let mut rows = Vec::with_capacity(bands);
+    let mut used = 0usize;
+    for i in 0..bands {
+        let s = base + usize::from(i < rem);
+        // Only the last band can hit the clamp: every earlier prefix
+        // covers at most strips-1 strips, i.e. fewer than m rows.
+        let r = (s * MR).min(m - used);
+        rows.push(r);
+        used += r;
+    }
+    debug_assert_eq!(used, m);
+    rows
+}
+
+/// Band-split driver. All of `op(B)` is packed **once** up front into
 /// a single buffer (one segment per `(jc, pc)` block) shared read-only
-/// by every thread; `C` is divided into contiguous row bands and each
-/// band gets one thread, spawned once, that walks the same `jc`/`pc`
-/// block order as the serial path over its rows. No per-block thread
-/// respawns, no duplicated B packing, one A-pack buffer per thread.
+/// by every band task; `C` is divided into contiguous row bands
+/// ([`par_band_rows`]) and each band becomes one [`ParTask`] handed to
+/// the caller's [`ParCtx`] — the job's worker pool, scoped threads, or
+/// inline — walking the same `jc`/`pc` block order as the serial path
+/// over its rows. No duplicated B packing, one A-pack buffer per band.
 /// Per-row accumulation order is unchanged, so results stay
-/// bit-identical to the serial path.
+/// bit-identical to the serial path at any width.
 fn gemm_parallel(
+    lvl: SimdLevel,
     ta: Trans,
     tb: Trans,
     alpha: f32,
     a: MatrixView<'_>,
     b: MatrixView<'_>,
-    threads: usize,
+    par: &ParCtx,
     c: MatrixViewMut<'_>,
 ) {
     let m = c.rows();
@@ -235,29 +333,32 @@ fn gemm_parallel(
             let kc = KC.min(k - pb * KC);
             let off = offs[jb * kblocks + pb];
             let len = kc * nc.div_ceil(NR) * NR;
-            pack_b(&mut bpack[off..off + len], b, tb, pb * KC, kc, jb * NC, nc);
+            pack_b(lvl, &mut bpack[off..off + len], b, tb, pb * KC, kc, jb * NC, nc);
         }
     }
 
-    // One contiguous row band of C per thread.
-    let bands = threads.min(m / MR);
-    let rows_per = m.div_ceil(bands);
-    let mut parts: Vec<(usize, MatrixViewMut<'_>)> = Vec::with_capacity(bands);
+    // One contiguous, strip-balanced row band of C per task.
+    let rows = par_band_rows(m, par.width());
+    let mut parts: Vec<(usize, MatrixViewMut<'_>)> = Vec::with_capacity(rows.len());
     let mut rest = c;
     let mut row0 = 0;
-    while rest.rows() > rows_per {
-        let (head, tail) = rest.split_rows(rows_per);
+    for (i, &r) in rows.iter().enumerate() {
+        if i + 1 == rows.len() {
+            parts.push((row0, rest));
+            break;
+        }
+        let (head, tail) = rest.split_rows(r);
         parts.push((row0, head));
-        row0 += rows_per;
+        row0 += r;
         rest = tail;
     }
-    parts.push((row0, rest));
 
     let bpack = &bpack[..];
     let offs = &offs[..];
-    std::thread::scope(|s| {
-        for (r0, mut band) in parts {
-            s.spawn(move || {
+    let tasks: Vec<ParTask<'_>> = parts
+        .into_iter()
+        .map(|(r0, mut band)| {
+            Box::new(move || {
                 let bm = band.rows();
                 let kc_cap = KC.min(k);
                 let mut abuf =
@@ -274,15 +375,16 @@ fn gemm_parallel(
                             let mc = MC.min(bm - ic);
                             pack_a(&mut abuf, a, ta, r0 + ic, mc, pc, kc);
                             macro_kernel(
-                                &abuf, bp, kc, mc, nc, alpha, &mut band, ic, jc,
+                                lvl, &abuf, bp, kc, mc, nc, alpha, &mut band, ic, jc,
                             );
                             ic += MC;
                         }
                     }
                 }
-            });
-        }
-    });
+            }) as ParTask<'_>
+        })
+        .collect();
+    par.run(tasks);
 }
 
 /// Scale every row of `c` by `beta` (`0.0` zero-fills).
@@ -350,6 +452,7 @@ fn gemm_small(
 /// Serial tiled kernel over the whole of `C` (the thread split uses
 /// [`gemm_parallel`] instead, which shares the packed `B` across bands).
 fn gemm_band(
+    lvl: SimdLevel,
     ta: Trans,
     tb: Trans,
     alpha: f32,
@@ -375,12 +478,12 @@ fn gemm_band(
         let mut pc = 0;
         while pc < k {
             let kc = KC.min(k - pc);
-            pack_b(&mut bbuf, b, tb, pc, kc, jc, nc);
+            pack_b(lvl, &mut bbuf, b, tb, pc, kc, jc, nc);
             let mut ic = 0;
             while ic < m {
                 let mc = MC.min(m - ic);
                 pack_a(&mut abuf, a, ta, ic, mc, pc, kc);
-                macro_kernel(&abuf, &bbuf, kc, mc, nc, alpha, &mut c, ic, jc);
+                macro_kernel(lvl, &abuf, &bbuf, kc, mc, nc, alpha, &mut c, ic, jc);
                 ic += MC;
             }
             pc += KC;
@@ -389,7 +492,10 @@ fn gemm_band(
     }
 }
 
-/// Pack `op(A)[i0..i0+mc, p0..p0+kc]` into MR-row panels.
+/// Pack `op(A)[i0..i0+mc, p0..p0+kc]` into MR-row panels. Full panels of
+/// a transposed operand are contiguous MR-wide row chunks of `A`, copied
+/// directly; everything else (untransposed A, zero-padded edge panels)
+/// takes the strided gather.
 fn pack_a(
     buf: &mut [f32],
     a: MatrixView<'_>,
@@ -402,6 +508,14 @@ fn pack_a(
     let panels = mc.div_ceil(MR);
     for ir in 0..panels {
         let base = ir * kc * MR;
+        if ta == Trans::Yes && (ir + 1) * MR <= mc {
+            let c0 = i0 + ir * MR;
+            for p in 0..kc {
+                let off = base + p * MR;
+                buf[off..off + MR].copy_from_slice(&a.row(p0 + p)[c0..c0 + MR]);
+            }
+            continue;
+        }
         for p in 0..kc {
             let off = base + p * MR;
             for r in 0..MR {
@@ -413,8 +527,13 @@ fn pack_a(
     }
 }
 
-/// Pack `op(B)[p0..p0+kc, j0..j0+nc]` into NR-column panels.
+/// Pack `op(B)[p0..p0+kc, j0..j0+nc]` into NR-column panels. Full panels
+/// of an untransposed operand are contiguous NR-wide row chunks of `B`,
+/// moved with the SIMD copy at `lvl` (bit-exact by construction);
+/// transposed operands and zero-padded edge panels take the strided
+/// gather.
 fn pack_b(
+    lvl: SimdLevel,
     buf: &mut [f32],
     b: MatrixView<'_>,
     tb: Trans,
@@ -426,6 +545,14 @@ fn pack_b(
     let panels = nc.div_ceil(NR);
     for jr in 0..panels {
         let base = jr * kc * NR;
+        if tb == Trans::No && (jr + 1) * NR <= nc {
+            let c0 = j0 + jr * NR;
+            for p in 0..kc {
+                let off = base + p * NR;
+                simd::copy_slices(lvl, &b.row(p0 + p)[c0..c0 + NR], &mut buf[off..off + NR]);
+            }
+            continue;
+        }
         for p in 0..kc {
             let off = base + p * NR;
             for cc in 0..NR {
@@ -441,6 +568,7 @@ fn pack_b(
 /// accumulate `alpha * tile` into `C`.
 #[allow(clippy::too_many_arguments)]
 fn macro_kernel(
+    lvl: SimdLevel,
     abuf: &[f32],
     bbuf: &[f32],
     kc: usize,
@@ -461,7 +589,7 @@ fn macro_kernel(
             for row in acc.iter_mut() {
                 row.fill(0.0);
             }
-            micro_kernel(ap, bp, &mut acc);
+            simd::micro_kernel(lvl, ap, bp, &mut acc);
             let rmax = MR.min(mc - ir * MR);
             let cmax = NR.min(nc - jr * NR);
             for (r, arow) in acc.iter().enumerate().take(rmax) {
@@ -475,22 +603,8 @@ fn macro_kernel(
     }
 }
 
-/// The register tile: `acc[r][c] += a[r] * b[c]` over the packed k run.
-/// `ap`/`bp` are exact-length packed panels, so every slice below has a
-/// compile-time-known width and the loop autovectorizes to fma chains
-/// (no per-element zero test — that branch defeated vectorization in the
-/// pre-tile kernel).
-#[inline(always)]
-fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
-    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
-        for r in 0..MR {
-            let arp = av[r];
-            for (x, &y) in acc[r].iter_mut().zip(bv) {
-                *x += arp * y;
-            }
-        }
-    }
-}
+// The register micro-kernel lives in `linalg::simd`: the scalar oracle
+// plus runtime-dispatched AVX/NEON variants pinned bitwise to it.
 
 /// Upper-triangular multiply `alpha * op(T) @ B` with `T` upper
 /// triangular: the trmm-style specialization for the `T` and `R` factors.
@@ -707,10 +821,51 @@ mod tests {
         let a = Matrix::randn(150, 64, 1);
         let b = Matrix::randn(64, 220, 2);
         let serial = gemm(Trans::No, Trans::No, 1.0, &a, &b);
-        set_par_threads(3);
-        let par = gemm(Trans::No, Trans::No, 1.0, &a, &b);
-        set_par_threads(1);
-        assert_eq!(serial, par, "thread split must not change results");
+        for width in [2, 3, 7] {
+            let par = gemm_with(
+                &ParCtx::threads(width),
+                SimdLevel::best(),
+                Trans::No,
+                Trans::No,
+                1.0,
+                &a,
+                &b,
+            );
+            assert_eq!(serial, par, "width {width} split must not change results");
+        }
+    }
+
+    #[test]
+    fn gemm_simd_levels_match_scalar_bitwise() {
+        // Big enough for the tiled path with edge tiles in both dims.
+        let a = Matrix::randn(67, 70, 11);
+        let b = Matrix::randn(70, 83, 12);
+        let scalar =
+            gemm_with(&ParCtx::serial(), SimdLevel::Scalar, Trans::No, Trans::No, 1.0, &a, &b);
+        for lvl in SimdLevel::available() {
+            let got = gemm_with(&ParCtx::serial(), lvl, Trans::No, Trans::No, 1.0, &a, &b);
+            assert_eq!(scalar, got, "level {} must be bitwise scalar", lvl.name());
+        }
+    }
+
+    #[test]
+    fn par_band_rows_never_overfills_a_band() {
+        for m in [4usize, 8, 12, 16, 20, 33, 64, 65, 127, 128, 150, 1000] {
+            for bands in 1..=8 {
+                let rows = par_band_rows(m, bands);
+                assert_eq!(rows.iter().sum::<usize>(), m, "m={m} bands={bands}");
+                assert!(rows.len() <= bands);
+                let strips = m.div_ceil(MR);
+                let cap = strips.div_ceil(rows.len()) * MR;
+                for &r in &rows {
+                    assert!(r > 0, "empty band at m={m} bands={bands}");
+                    assert!(
+                        r <= cap,
+                        "band of {r} rows exceeds {cap}-row cap at m={m} bands={bands}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -468,20 +468,18 @@ impl Matrix {
         Matrix::from_vec(self.rows, self.cols, data)
     }
 
-    /// Elementwise `self += other`, allocation-free.
+    /// Elementwise `self += other`, allocation-free (SIMD at the best
+    /// level; bitwise-identical to the scalar loop).
     pub fn add_assign(&mut self, other: &Matrix) {
         assert_eq!(self.shape(), other.shape(), "add_assign shape mismatch");
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
-        }
+        super::simd::add_slices(super::simd::SimdLevel::best(), &mut self.data, &other.data);
     }
 
-    /// Elementwise `self -= other`, allocation-free.
+    /// Elementwise `self -= other`, allocation-free (SIMD at the best
+    /// level; bitwise-identical to the scalar loop).
     pub fn sub_assign(&mut self, other: &Matrix) {
         assert_eq!(self.shape(), other.shape(), "sub_assign shape mismatch");
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a -= b;
-        }
+        super::simd::sub_slices(super::simd::SimdLevel::best(), &mut self.data, &other.data);
     }
 }
 

@@ -10,20 +10,27 @@
 
 mod blas;
 mod matrix;
+mod par;
 mod qr;
+mod simd;
 
 pub use blas::{
     gemm, gemm_into, gemm_path, gemm_ref_into, gemm_view, gemm_view_into,
-    gemm_view_into_on, par_threads, set_par_threads, trmm_upper, GemmPath, Trans,
+    gemm_view_into_on, gemm_view_into_on_par, gemm_view_into_par,
+    gemm_view_into_with, gemm_with, par_band_rows, trmm_upper, GemmPath, Trans,
 };
 pub use matrix::{Matrix, MatrixView, MatrixViewMut, Rng64};
+pub use par::{ParCtx, ParExecutor, ParTask, ScopedThreads};
 pub use qr::{
-    dense_qr_r, householder_qr, householder_qr_blocked, householder_qr_ref,
-    leaf_apply, leaf_apply_cols_into, leaf_apply_into, recover_block,
-    recover_block_cols_into, recover_block_into, tree_update, tree_update_half,
-    tree_update_half_cols, tree_update_into, tree_update_into_cols, tsqr_merge,
-    PanelFactors, TreeStep,
+    dense_qr_r, householder_qr, householder_qr_blocked,
+    householder_qr_blocked_par, householder_qr_par, householder_qr_ref,
+    leaf_apply, leaf_apply_cols_into, leaf_apply_cols_into_par, leaf_apply_into,
+    recover_block, recover_block_cols_into, recover_block_cols_into_par,
+    recover_block_into, tree_update, tree_update_half, tree_update_half_cols,
+    tree_update_half_cols_par, tree_update_into, tree_update_into_cols,
+    tree_update_into_cols_par, tsqr_merge, PanelFactors, TreeStep,
 };
+pub use simd::SimdLevel;
 
 /// Relative Frobenius distance `‖a − b‖_F / max(‖b‖_F, 1)`.
 pub fn rel_err(a: &Matrix, b: &Matrix) -> f32 {

@@ -1,0 +1,165 @@
+//! Intra-rank parallel execution context: the replacement for the old
+//! `set_par_threads` process-global.
+//!
+//! The GEMM row-panel split used to read a process-wide atomic, which
+//! raced when concurrent service tenants wanted different splits and
+//! could oversubscribe the machine (pool workers *plus* ad-hoc scoped
+//! threads). A [`ParCtx`] instead travels with the job: drivers derive
+//! one from `RunConfig::par` and the run's own worker pool
+//! ([`crate::sim::sched::Pool::par_ctx`]), install it on the job's
+//! [`crate::backend::Backend`], and the kernels split work by handing
+//! closures to the context. Results are bitwise independent of the
+//! context (see DESIGN.md "SIMD micro-kernels & pool-integrated
+//! parallelism"), so it is purely a resource-placement knob.
+//!
+//! The executor trait lives in `linalg` (not `sim`) so the kernels do
+//! not depend on the scheduler; `sim::sched::Pool` implements it.
+
+use std::sync::Arc;
+
+/// One unit of kernel work handed to a [`ParExecutor`]. Borrows the
+/// caller's operands (`'s`), so executors must not let it escape the
+/// `run_scoped` call that received it.
+pub type ParTask<'s> = Box<dyn FnOnce() + Send + 's>;
+
+/// Something that can execute a batch of borrowed closures and return
+/// only when **every one of them has run** (structured / scoped
+/// parallelism). Implementations may run tasks on any thread, including
+/// the calling one; tasks are pure compute and never block.
+pub trait ParExecutor: Send + Sync {
+    /// Run every task in `tasks` to completion before returning. If a
+    /// task panics, the panic must propagate to this caller (after the
+    /// remaining tasks have been accounted for).
+    fn run_scoped<'s>(&self, tasks: Vec<ParTask<'s>>);
+}
+
+/// A [`ParExecutor`] that spawns one plain scoped `std::thread` per
+/// task — the standalone-CLI replacement for the old `set_par_threads`
+/// behavior, used when no simulation pool owns the cores.
+pub struct ScopedThreads;
+
+impl ParExecutor for ScopedThreads {
+    fn run_scoped<'s>(&self, tasks: Vec<ParTask<'s>>) {
+        std::thread::scope(|scope| {
+            for t in tasks {
+                scope.spawn(t);
+            }
+        });
+    }
+}
+
+/// Cloneable handle bundling a [`ParExecutor`] with the split width the
+/// caller asked for (`RunConfig::par`). `width() <= 1` means serial; the
+/// kernels then never build a task batch at all.
+#[derive(Clone)]
+pub struct ParCtx {
+    exec: Option<Arc<dyn ParExecutor>>,
+    width: usize,
+}
+
+impl Default for ParCtx {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+impl std::fmt::Debug for ParCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParCtx")
+            .field("width", &self.width)
+            .field("executor", &self.exec.is_some())
+            .finish()
+    }
+}
+
+impl ParCtx {
+    /// The serial context: kernels run inline on the calling thread.
+    pub fn serial() -> Self {
+        Self { exec: None, width: 1 }
+    }
+
+    /// Split across `n` plain scoped threads ([`ScopedThreads`]).
+    /// `n <= 1` degenerates to [`ParCtx::serial`].
+    pub fn threads(n: usize) -> Self {
+        if n <= 1 {
+            Self::serial()
+        } else {
+            Self { exec: Some(Arc::new(ScopedThreads)), width: n }
+        }
+    }
+
+    /// Split across a caller-supplied executor (e.g. a simulation
+    /// worker pool). `width <= 1` degenerates to [`ParCtx::serial`].
+    pub fn with_executor(exec: Arc<dyn ParExecutor>, width: usize) -> Self {
+        if width <= 1 {
+            Self::serial()
+        } else {
+            Self { exec: Some(exec), width }
+        }
+    }
+
+    /// The requested split width (1 = serial).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// True when [`ParCtx::run`] would execute inline.
+    pub fn is_serial(&self) -> bool {
+        self.width <= 1 || self.exec.is_none()
+    }
+
+    /// Execute every task, returning when all are complete. Inline (in
+    /// order) for the serial context or a single task; otherwise
+    /// delegated to the executor.
+    pub fn run<'s>(&self, tasks: Vec<ParTask<'s>>) {
+        match &self.exec {
+            Some(exec) if tasks.len() > 1 => exec.run_scoped(tasks),
+            _ => {
+                for t in tasks {
+                    t();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_runs_inline_in_order() {
+        let ctx = ParCtx::serial();
+        let order = std::sync::Mutex::new(Vec::new());
+        ctx.run(vec![
+            Box::new(|| order.lock().unwrap().push(1)) as ParTask<'_>,
+            Box::new(|| order.lock().unwrap().push(2)),
+        ]);
+        assert_eq!(*order.lock().unwrap(), vec![1, 2]);
+        assert!(ctx.is_serial());
+        assert_eq!(ctx.width(), 1);
+    }
+
+    #[test]
+    fn threads_runs_every_task() {
+        let ctx = ParCtx::threads(3);
+        assert_eq!(ctx.width(), 3);
+        assert!(!ctx.is_serial());
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<ParTask<'_>> = (0..7)
+            .map(|_| Box::new(|| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            }) as ParTask<'_>)
+            .collect();
+        ctx.run(tasks);
+        assert_eq!(hits.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn width_one_degenerates_to_serial() {
+        assert!(ParCtx::threads(1).is_serial());
+        assert!(ParCtx::threads(0).is_serial());
+        assert!(ParCtx::with_executor(Arc::new(ScopedThreads), 1).is_serial());
+    }
+}

@@ -13,9 +13,11 @@
 //! `tests/kernel_props.rs`.
 
 use super::blas::{
-    gemm, gemm_path, gemm_view, gemm_view_into, gemm_view_into_on, trmm_upper, Trans,
+    gemm, gemm_path, gemm_view, gemm_view_into_on_par, gemm_view_into_par, trmm_upper, Trans,
 };
 use super::matrix::{Matrix, MatrixView};
+use super::par::ParCtx;
+use super::simd::{self, SimdLevel};
 
 /// Sub-panel width of the blocked QR: trailing columns are updated with
 /// level-3 kernels every `NB` factored columns.
@@ -52,10 +54,23 @@ pub fn householder_qr(a: &Matrix) -> PanelFactors {
     householder_qr_blocked(a, NB)
 }
 
+/// [`householder_qr`] with the level-3 trailing updates split across
+/// `par`. Bitwise identical to the serial call at any width (the gemm
+/// band split never changes per-element accumulation order).
+pub fn householder_qr_par(par: &ParCtx, a: &Matrix) -> PanelFactors {
+    householder_qr_blocked_par(par, a, NB)
+}
+
 /// [`householder_qr`] with an explicit sub-panel width (exposed for the
 /// property tests' `nb` sweeps; `nb >= b` degenerates to a single
 /// unblocked panel).
 pub fn householder_qr_blocked(a: &Matrix, nb: usize) -> PanelFactors {
+    householder_qr_blocked_par(&ParCtx::serial(), a, nb)
+}
+
+/// [`householder_qr_blocked`] with the trailing updates split across
+/// `par` (see [`householder_qr_par`]).
+pub fn householder_qr_blocked_par(par: &ParCtx, a: &Matrix, nb: usize) -> PanelFactors {
     let (m, b) = a.shape();
     assert!(m >= b, "householder_qr needs m >= b, got {m} x {b}");
     assert!(nb >= 1, "householder_qr_blocked needs nb >= 1");
@@ -107,7 +122,8 @@ pub fn householder_qr_blocked(a: &Matrix, nb: usize) -> PanelFactors {
         if nt > 0 {
             let p = gemm_view(Trans::Yes, Trans::No, 1.0, yblk, work.view(j0, j0 + w, pm, nt));
             let wm = trmm_upper(Trans::Yes, 1.0, &tblk, &p);
-            gemm_view_into(
+            gemm_view_into_par(
+                par,
                 Trans::No,
                 Trans::No,
                 -1.0,
@@ -180,7 +196,11 @@ fn factor_panel(panel: &mut [f32], pm: usize, w: usize, taus: &mut [f32]) {
         col[j] = beta;
 
         // Apply H = I - tau v vᵀ to the trailing columns: contiguous
-        // slice dot + axpy per column.
+        // slice dot + axpy per column. The dot is a reduction and must
+        // stay scalar (vector lanes would change the summation order);
+        // the axpy is elementwise and runs at the best SIMD level,
+        // bitwise-pinned to the scalar `*ci -= f * yi`.
+        let lvl = SimdLevel::best();
         let ytail = &col[j + 1..];
         for cpanel in trailing.chunks_exact_mut(pm) {
             let (chead, ctail) = cpanel.split_at_mut(j + 1);
@@ -191,9 +211,7 @@ fn factor_panel(panel: &mut [f32], pm: usize, w: usize, taus: &mut [f32]) {
             }
             let f = tau * dot;
             *cj -= f;
-            for (yi, ci) in ytail.iter().zip(ctail.iter_mut()) {
-                *ci -= f * yi;
-            }
+            simd::sub_scaled(lvl, f, ytail, ctail);
         }
     }
 }
@@ -338,12 +356,26 @@ pub fn leaf_apply_into(y: &Matrix, t: &Matrix, c: &mut Matrix) {
 /// full-width application (the lookahead pipeline's determinism
 /// contract). `full_n == c.cols()` degenerates to [`leaf_apply_into`].
 pub fn leaf_apply_cols_into(y: &Matrix, t: &Matrix, c: &mut Matrix, full_n: usize) {
+    leaf_apply_cols_into_par(&ParCtx::serial(), y, t, c, full_n);
+}
+
+/// [`leaf_apply_cols_into`] with the gemms split across `par` (bitwise
+/// identical at any width; the pinned path composes with the band split
+/// because neither changes per-element accumulation order).
+pub fn leaf_apply_cols_into_par(
+    par: &ParCtx,
+    y: &Matrix,
+    t: &Matrix,
+    c: &mut Matrix,
+    full_n: usize,
+) {
     let (m, b) = y.shape();
     let n = c.cols();
     debug_assert!(n <= full_n, "segment wider than the full block");
     let mut p = Matrix::zeros(b, n);
-    gemm_view_into_on(
+    gemm_view_into_on_par(
         gemm_path(b, full_n, m),
+        par,
         Trans::Yes,
         Trans::No,
         1.0,
@@ -353,8 +385,9 @@ pub fn leaf_apply_cols_into(y: &Matrix, t: &Matrix, c: &mut Matrix, full_n: usiz
         p.as_view_mut(),
     );
     let w = trmm_upper(Trans::Yes, 1.0, t, &p); // (b, n)
-    gemm_view_into_on(
+    gemm_view_into_on_par(
         gemm_path(m, full_n, b),
+        par,
         Trans::No,
         Trans::No,
         -1.0,
@@ -392,11 +425,25 @@ pub fn tree_update_into_cols(
     t: &Matrix,
     full_n: usize,
 ) -> Matrix {
+    tree_update_into_cols_par(&ParCtx::serial(), c0, c1, y1, t, full_n)
+}
+
+/// [`tree_update_into_cols`] with the gemms split across `par` (bitwise
+/// identical at any width).
+pub fn tree_update_into_cols_par(
+    par: &ParCtx,
+    c0: &mut Matrix,
+    c1: &mut Matrix,
+    y1: &Matrix,
+    t: &Matrix,
+    full_n: usize,
+) -> Matrix {
     let (b, n) = c0.shape();
     let path = gemm_path(b, full_n, b);
     let mut s = Matrix::zeros(b, n);
-    gemm_view_into_on(
+    gemm_view_into_on_par(
         path,
+        par,
         Trans::Yes,
         Trans::No,
         1.0,
@@ -408,8 +455,9 @@ pub fn tree_update_into_cols(
     s.add_assign(c0);
     let w = trmm_upper(Trans::Yes, 1.0, t, &s);
     c0.sub_assign(&w);
-    gemm_view_into_on(
+    gemm_view_into_on_par(
         path,
+        par,
         Trans::No,
         Trans::No,
         -1.0,
@@ -450,13 +498,30 @@ pub fn tree_update_half_cols(
     is_top: bool,
     full_n: usize,
 ) -> Matrix {
+    tree_update_half_cols_par(&ParCtx::serial(), cp, peer, y1, t, is_top, full_n)
+}
+
+/// [`tree_update_half_cols`] with the gemms split across `par` (bitwise
+/// identical at any width — both pair members may even use different
+/// widths and still agree on `W` bit-for-bit).
+#[allow(clippy::too_many_arguments)]
+pub fn tree_update_half_cols_par(
+    par: &ParCtx,
+    cp: &mut Matrix,
+    peer: &Matrix,
+    y1: &Matrix,
+    t: &Matrix,
+    is_top: bool,
+    full_n: usize,
+) -> Matrix {
     let (b, n) = cp.shape();
     let path = gemm_path(b, full_n, b);
     let mut s = Matrix::zeros(b, n);
     if is_top {
         // cp = C₀, peer = C₁: s = Y₁ᵀC₁ + C₀, then C₀ ← C₀ − W.
-        gemm_view_into_on(
+        gemm_view_into_on_par(
             path,
+            par,
             Trans::Yes,
             Trans::No,
             1.0,
@@ -471,8 +536,9 @@ pub fn tree_update_half_cols(
         w
     } else {
         // cp = C₁, peer = C₀: same s, then C₁ ← C₁ − Y₁W.
-        gemm_view_into_on(
+        gemm_view_into_on_par(
             path,
+            par,
             Trans::Yes,
             Trans::No,
             1.0,
@@ -483,8 +549,9 @@ pub fn tree_update_half_cols(
         );
         s.add_assign(peer);
         let w = trmm_upper(Trans::Yes, 1.0, t, &s);
-        gemm_view_into_on(
+        gemm_view_into_on_par(
             path,
+            par,
             Trans::No,
             Trans::No,
             -1.0,
@@ -523,9 +590,23 @@ pub fn recover_block_into(c: &mut Matrix, y: &Matrix, w: &Matrix) {
 /// exact kernel path the live segmented update took, so the recovered
 /// rows stay bit-identical under the lookahead pipeline too.
 pub fn recover_block_cols_into(c: &mut Matrix, y: &Matrix, w: &Matrix, full_n: usize) {
+    recover_block_cols_into_par(&ParCtx::serial(), c, y, w, full_n);
+}
+
+/// [`recover_block_cols_into`] with the gemm split across `par` (bitwise
+/// identical at any width — replay stays exact even when the recovering
+/// rank uses a different split than the dead one did).
+pub fn recover_block_cols_into_par(
+    par: &ParCtx,
+    c: &mut Matrix,
+    y: &Matrix,
+    w: &Matrix,
+    full_n: usize,
+) {
     let b = c.rows();
-    gemm_view_into_on(
+    gemm_view_into_on_par(
         gemm_path(b, full_n, y.cols()),
+        par,
         Trans::No,
         Trans::No,
         -1.0,
@@ -753,6 +834,18 @@ mod tests {
             recover_block_cols_into(&mut rec, &y1, &w, 96);
             assert_eq!(rec, bot, "replayed segment at {j}");
         }
+    }
+
+    #[test]
+    fn qr_par_matches_serial_bitwise() {
+        // Tall enough that the step-3 trailing gemm crosses the
+        // PAR_MIN_WORK threshold and genuinely band-splits.
+        let a = Matrix::randn(2048, 128, 27);
+        let serial = householder_qr(&a);
+        let par = householder_qr_par(&ParCtx::threads(3), &a);
+        assert_eq!(serial.y, par.y, "Y must not depend on the split");
+        assert_eq!(serial.t, par.t, "T must not depend on the split");
+        assert_eq!(serial.r, par.r, "R must not depend on the split");
     }
 
     #[test]

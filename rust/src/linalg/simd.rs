@@ -1,0 +1,517 @@
+//! Explicit-SIMD kernels (`core::arch`) behind the tiled GEMM and the
+//! QR column updates, **bitwise-pinned** to the scalar fallback.
+//!
+//! Every kernel here vectorizes *across independent output elements*
+//! (the NR = 16 columns of the GEMM accumulator tile, the elements of an
+//! axpy row), never across a reduction — so each output element performs
+//! the exact same sequence of IEEE-754 operations as the scalar kernel:
+//! one `mul` then one `add`/`sub` per k step, in the same k order. The
+//! intrinsics used (`_mm256_mul_ps`/`_mm256_add_ps`, `vmulq_f32`/
+//! `vaddq_f32`) lower to separate multiply and add instructions and are
+//! **never contracted into an FMA** (LLVM only fuses when the source
+//! permits it; explicit intrinsics do not), so SIMD output is
+//! bit-identical to scalar output. `tests/kernel_props.rs` and the
+//! in-module property tests pin this for every available level.
+//!
+//! Reductions (the Householder dot products and norms in
+//! `qr::factor_panel`) deliberately stay scalar: vectorizing a sum
+//! changes the association order and breaks the bitwise contract.
+//!
+//! Dispatch is by value of [`SimdLevel`]: the scalar kernel is the
+//! always-available fallback and the oracle the property tests compare
+//! against; [`SimdLevel::best`] is detected once per process. Pre-AVX
+//! x86 falls back to scalar (the packed tile still autovectorizes to
+//! SSE there).
+
+use std::sync::OnceLock;
+
+use super::blas::{MR, NR};
+
+// The hand-unrolled kernels below are written for the 4 x 16 tile.
+const _: () = assert!(MR == 4 && NR == 16, "SIMD kernels assume a 4x16 tile");
+
+/// Instruction-set level a kernel runs at. Variants other than
+/// [`SimdLevel::Scalar`] exist only on the architecture that provides
+/// them; all levels produce bitwise-identical results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Plain Rust loops — the always-available fallback and the
+    /// bit-equality oracle.
+    Scalar,
+    /// 8-lane f32 AVX (`core::arch::x86_64`), runtime-detected.
+    #[cfg(target_arch = "x86_64")]
+    Avx,
+    /// 4-lane f32 NEON (`core::arch::aarch64`), baseline on aarch64.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl SimdLevel {
+    /// Every level usable on this machine, scalar first. Property tests
+    /// iterate this to pin each level against the scalar oracle.
+    pub fn available() -> Vec<SimdLevel> {
+        #[allow(unused_mut)]
+        let mut levels = vec![SimdLevel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx") {
+            levels.push(SimdLevel::Avx);
+        }
+        #[cfg(target_arch = "aarch64")]
+        levels.push(SimdLevel::Neon);
+        levels
+    }
+
+    /// The widest available level, detected once and cached. This is
+    /// what the production entry points dispatch to.
+    pub fn best() -> SimdLevel {
+        static BEST: OnceLock<SimdLevel> = OnceLock::new();
+        *BEST.get_or_init(|| *SimdLevel::available().last().expect("scalar always present"))
+    }
+
+    /// Short lowercase name for bench JSON / logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx => "avx",
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+// --- GEMM register tile -------------------------------------------------
+
+/// The register tile `acc[r][c] += a[r] * b[c]` over the packed k run,
+/// at `lvl`. `ap`/`bp` are exact-length packed panels (see
+/// `blas::pack_a` / `blas::pack_b`).
+#[inline]
+pub(crate) fn micro_kernel(lvl: SimdLevel, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    match lvl {
+        SimdLevel::Scalar => micro_kernel_scalar(ap, bp, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx level is only ever constructed by
+        // `SimdLevel::available` after `is_x86_feature_detected!("avx")`.
+        SimdLevel::Avx => unsafe { micro_kernel_avx(ap, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline feature of the aarch64 target.
+        SimdLevel::Neon => unsafe { micro_kernel_neon(ap, bp, acc) },
+    }
+}
+
+/// Scalar register tile — the bit-equality oracle. Each `acc[r][j]`
+/// receives exactly one `mul` + one `add` per k step, in k order; the
+/// SIMD kernels reproduce this sequence lane-for-lane.
+#[inline(always)]
+pub(crate) fn micro_kernel_scalar(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let arp = av[r];
+            for (x, &y) in acc[r].iter_mut().zip(bv) {
+                *x += arp * y;
+            }
+        }
+    }
+}
+
+/// AVX tile: each accumulator row is two 8-lane registers; every k step
+/// broadcasts `a[r]` and issues `mul` then `add` (never FMA), matching
+/// the scalar per-element op sequence exactly.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn micro_kernel_avx(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use core::arch::x86_64::*;
+    // SAFETY: AVX support was runtime-verified before this level was
+    // selected; every load/store below stays inside the fixed
+    // `[[f32; 16]; 4]` accumulator or a `chunks_exact` window of the
+    // packed panels, so all pointers are valid for 8 lanes.
+    unsafe {
+        let mut c00 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c01 = _mm256_loadu_ps(acc[0].as_ptr().add(8));
+        let mut c10 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c11 = _mm256_loadu_ps(acc[1].as_ptr().add(8));
+        let mut c20 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c21 = _mm256_loadu_ps(acc[2].as_ptr().add(8));
+        let mut c30 = _mm256_loadu_ps(acc[3].as_ptr());
+        let mut c31 = _mm256_loadu_ps(acc[3].as_ptr().add(8));
+        for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+            let b0 = _mm256_loadu_ps(bv.as_ptr());
+            let b1 = _mm256_loadu_ps(bv.as_ptr().add(8));
+            let a0 = _mm256_set1_ps(av[0]);
+            c00 = _mm256_add_ps(c00, _mm256_mul_ps(a0, b0));
+            c01 = _mm256_add_ps(c01, _mm256_mul_ps(a0, b1));
+            let a1 = _mm256_set1_ps(av[1]);
+            c10 = _mm256_add_ps(c10, _mm256_mul_ps(a1, b0));
+            c11 = _mm256_add_ps(c11, _mm256_mul_ps(a1, b1));
+            let a2 = _mm256_set1_ps(av[2]);
+            c20 = _mm256_add_ps(c20, _mm256_mul_ps(a2, b0));
+            c21 = _mm256_add_ps(c21, _mm256_mul_ps(a2, b1));
+            let a3 = _mm256_set1_ps(av[3]);
+            c30 = _mm256_add_ps(c30, _mm256_mul_ps(a3, b0));
+            c31 = _mm256_add_ps(c31, _mm256_mul_ps(a3, b1));
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c00);
+        _mm256_storeu_ps(acc[0].as_mut_ptr().add(8), c01);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c10);
+        _mm256_storeu_ps(acc[1].as_mut_ptr().add(8), c11);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c20);
+        _mm256_storeu_ps(acc[2].as_mut_ptr().add(8), c21);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c30);
+        _mm256_storeu_ps(acc[3].as_mut_ptr().add(8), c31);
+    }
+}
+
+/// NEON tile: each accumulator row is four 4-lane registers; `vmulq` +
+/// `vaddq` (separate instructions, never `fmla`) per k step.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn micro_kernel_neon(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use core::arch::aarch64::*;
+    // SAFETY: NEON is baseline on aarch64; every load/store stays
+    // inside the fixed `[[f32; 16]; 4]` accumulator or a `chunks_exact`
+    // window of the packed panels (valid for 4 lanes).
+    unsafe {
+        let mut c: [[float32x4_t; 4]; MR] = [[vdupq_n_f32(0.0); 4]; MR];
+        for (r, row) in acc.iter().enumerate() {
+            for (q, cv) in c[r].iter_mut().enumerate() {
+                *cv = vld1q_f32(row.as_ptr().add(4 * q));
+            }
+        }
+        for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+            let b = [
+                vld1q_f32(bv.as_ptr()),
+                vld1q_f32(bv.as_ptr().add(4)),
+                vld1q_f32(bv.as_ptr().add(8)),
+                vld1q_f32(bv.as_ptr().add(12)),
+            ];
+            for r in 0..MR {
+                let a = vdupq_n_f32(av[r]);
+                for (cv, bq) in c[r].iter_mut().zip(b.iter()) {
+                    *cv = vaddq_f32(*cv, vmulq_f32(a, *bq));
+                }
+            }
+        }
+        for (r, row) in acc.iter_mut().enumerate() {
+            for (q, cv) in c[r].iter().enumerate() {
+                vst1q_f32(row.as_mut_ptr().add(4 * q), *cv);
+            }
+        }
+    }
+}
+
+// --- elementwise column kernels ----------------------------------------
+//
+// All bitwise-safe to vectorize: each output element is produced by the
+// same one or two IEEE ops regardless of lane placement. Used by the
+// Householder reflector apply (`qr::factor_panel`), the `tree_update_*`
+// compositions (`Matrix::add_assign`/`sub_assign`), and the packing
+// fast paths.
+
+/// `dst[i] += src[i]` at `lvl` (slices must be equal length).
+#[inline]
+pub(crate) fn add_slices(lvl: SimdLevel, dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "add_slices length mismatch");
+    match lvl {
+        SimdLevel::Scalar => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx is only constructed after runtime detection.
+        SimdLevel::Avx => unsafe { add_slices_avx(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdLevel::Neon => unsafe { add_slices_neon(dst, src) },
+    }
+}
+
+/// `dst[i] -= src[i]` at `lvl` (slices must be equal length).
+#[inline]
+pub(crate) fn sub_slices(lvl: SimdLevel, dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "sub_slices length mismatch");
+    match lvl {
+        SimdLevel::Scalar => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d -= s;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx is only constructed after runtime detection.
+        SimdLevel::Avx => unsafe { sub_slices_avx(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdLevel::Neon => unsafe { sub_slices_neon(dst, src) },
+    }
+}
+
+/// `dst[i] -= f * src[i]` at `lvl` — the Householder reflector-apply
+/// axpy, kept as `mul` then `sub` to match the scalar op sequence.
+#[inline]
+pub(crate) fn sub_scaled(lvl: SimdLevel, f: f32, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(dst.len(), src.len(), "sub_scaled length mismatch");
+    match lvl {
+        SimdLevel::Scalar => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d -= f * s;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx is only constructed after runtime detection.
+        SimdLevel::Avx => unsafe { sub_scaled_avx(f, src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdLevel::Neon => unsafe { sub_scaled_neon(f, src, dst) },
+    }
+}
+
+/// `dst[i] = src[i]` at `lvl` — the packing copy (bit-exact at every
+/// level by construction; vector registers just move more per cycle).
+#[inline]
+pub(crate) fn copy_slices(lvl: SimdLevel, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(dst.len(), src.len(), "copy_slices length mismatch");
+    match lvl {
+        SimdLevel::Scalar => dst.copy_from_slice(src),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx is only constructed after runtime detection.
+        SimdLevel::Avx => unsafe { copy_slices_avx(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => dst.copy_from_slice(src),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn add_slices_avx(dst: &mut [f32], src: &[f32]) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let mut i = 0;
+    // SAFETY: `i + 8 <= n` guards every 8-lane access and the
+    // dispatcher asserted the slices have equal length.
+    unsafe {
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, s));
+            i += 8;
+        }
+    }
+    for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d += s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn sub_slices_avx(dst: &mut [f32], src: &[f32]) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let mut i = 0;
+    // SAFETY: `i + 8 <= n` guards every 8-lane access and the
+    // dispatcher asserted the slices have equal length.
+    unsafe {
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_sub_ps(d, s));
+            i += 8;
+        }
+    }
+    for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d -= s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn sub_scaled_avx(f: f32, src: &[f32], dst: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let mut i = 0;
+    // SAFETY: `i + 8 <= n` guards every 8-lane access and the
+    // dispatcher asserted the slices have equal length.
+    unsafe {
+        let vf = _mm256_set1_ps(f);
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_sub_ps(d, _mm256_mul_ps(vf, s)));
+            i += 8;
+        }
+    }
+    for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d -= f * s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn copy_slices_avx(src: &[f32], dst: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let mut i = 0;
+    // SAFETY: `i + 8 <= n` guards every 8-lane access and the
+    // dispatcher asserted the slices have equal length.
+    unsafe {
+        while i + 8 <= n {
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_loadu_ps(src.as_ptr().add(i)));
+            i += 8;
+        }
+    }
+    dst[i..].copy_from_slice(&src[i..]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn add_slices_neon(dst: &mut [f32], src: &[f32]) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let mut i = 0;
+    // SAFETY: `i + 4 <= n` guards every 4-lane access and the
+    // dispatcher asserted the slices have equal length.
+    unsafe {
+        while i + 4 <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let s = vld1q_f32(src.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, s));
+            i += 4;
+        }
+    }
+    for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d += s;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn sub_slices_neon(dst: &mut [f32], src: &[f32]) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let mut i = 0;
+    // SAFETY: `i + 4 <= n` guards every 4-lane access and the
+    // dispatcher asserted the slices have equal length.
+    unsafe {
+        while i + 4 <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let s = vld1q_f32(src.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vsubq_f32(d, s));
+            i += 4;
+        }
+    }
+    for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d -= s;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn sub_scaled_neon(f: f32, src: &[f32], dst: &mut [f32]) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let mut i = 0;
+    // SAFETY: `i + 4 <= n` guards every 4-lane access and the
+    // dispatcher asserted the slices have equal length.
+    unsafe {
+        let vf = vdupq_n_f32(f);
+        while i + 4 <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let s = vld1q_f32(src.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vsubq_f32(d, vmulq_f32(vf, s)));
+            i += 4;
+        }
+    }
+    for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d -= f * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng64::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn available_starts_scalar_and_contains_best() {
+        let levels = SimdLevel::available();
+        assert_eq!(levels[0], SimdLevel::Scalar);
+        assert!(levels.contains(&SimdLevel::best()));
+    }
+
+    #[test]
+    fn micro_kernel_levels_match_scalar_bitwise() {
+        for lvl in SimdLevel::available() {
+            for kc in [1usize, 2, 3, 7, 16, 33] {
+                let ap = randv(kc * MR, 100 + kc as u64);
+                let bp = randv(kc * NR, 200 + kc as u64);
+                let seed_acc = randv(MR * NR, 300 + kc as u64);
+                let load = |buf: &mut [[f32; NR]; MR]| {
+                    for r in 0..MR {
+                        buf[r].copy_from_slice(&seed_acc[r * NR..(r + 1) * NR]);
+                    }
+                };
+                let mut want = [[0.0f32; NR]; MR];
+                load(&mut want);
+                micro_kernel_scalar(&ap, &bp, &mut want);
+                let mut got = [[0.0f32; NR]; MR];
+                load(&mut got);
+                micro_kernel(lvl, &ap, &bp, &mut got);
+                assert_eq!(
+                    want.iter().flatten().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    got.iter().flatten().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "level {} kc {kc}",
+                    lvl.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_levels_match_scalar_bitwise() {
+        // Odd lengths force the scalar-tail path; 0 and 1 are the
+        // degenerate edges.
+        for lvl in SimdLevel::available() {
+            for n in [0usize, 1, 3, 4, 7, 8, 9, 15, 16, 17, 33, 64, 100] {
+                let src = randv(n, 7 + n as u64);
+                let base = randv(n, 11 + n as u64);
+                let f = 0.7531f32;
+
+                let mut want = base.clone();
+                for (d, &s) in want.iter_mut().zip(&src) {
+                    *d += s;
+                }
+                let mut got = base.clone();
+                add_slices(lvl, &mut got, &src);
+                assert_eq!(bits(&want), bits(&got), "add {} n={n}", lvl.name());
+
+                let mut want = base.clone();
+                for (d, &s) in want.iter_mut().zip(&src) {
+                    *d -= s;
+                }
+                let mut got = base.clone();
+                sub_slices(lvl, &mut got, &src);
+                assert_eq!(bits(&want), bits(&got), "sub {} n={n}", lvl.name());
+
+                let mut want = base.clone();
+                for (d, &s) in want.iter_mut().zip(&src) {
+                    *d -= f * s;
+                }
+                let mut got = base.clone();
+                sub_scaled(lvl, f, &src, &mut got);
+                assert_eq!(bits(&want), bits(&got), "axpy {} n={n}", lvl.name());
+
+                let mut got = vec![0.0f32; n];
+                copy_slices(lvl, &src, &mut got);
+                assert_eq!(bits(&src), bits(&got), "copy {} n={n}", lvl.name());
+            }
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+}

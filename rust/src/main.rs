@@ -200,7 +200,7 @@ fn cmd_tsqr(flags: &Flags) -> Result<()> {
     let block: usize = flags.num("block", 16)?;
     let procs: usize = flags.num("procs", 8)?;
     let workers: usize = flags.num("workers", 0)?;
-    ftcaqr::linalg::set_par_threads(flags.num("par", 1)?);
+    let par: usize = flags.num("par", 1)?;
     let seed: u64 = flags.num("seed", 0)?;
     let mode_s = flags.get("mode").unwrap_or("ft");
     let a = Matrix::randn(rows, block, seed);
@@ -208,10 +208,14 @@ fn cmd_tsqr(flags: &Flags) -> Result<()> {
         "plain" => TsqrMode::Plain,
         _ => TsqrMode::FaultTolerant,
     };
+    // Backend-scoped intra-rank split (bitwise-identical at any width);
+    // the old process-wide knob is gone.
+    let be = Backend::native();
+    be.set_par_ctx(ftcaqr::linalg::ParCtx::threads(par));
     let out = if workers > 0 {
-        run_tsqr_pooled(&a, procs, m, Backend::native(), CostModel::default(), workers)?
+        run_tsqr_pooled(&a, procs, m, be, CostModel::default(), workers)?
     } else {
-        run_tsqr(&a, procs, m, Backend::native(), CostModel::default())?
+        run_tsqr(&a, procs, m, be, CostModel::default())?
     };
     println!("== tsqr {mode_s} ==");
     println!("redundancy per step (paper Fig 2): {:?}", out.redundancy);

@@ -107,15 +107,7 @@ impl JobSpec {
 
     fn validate(&self) -> Result<()> {
         match self {
-            JobSpec::Caqr { cfg, .. } => {
-                cfg.validate()?;
-                anyhow::ensure!(
-                    cfg.par == 1,
-                    "service jobs must use par = 1: the GEMM split knob is \
-                     process-wide and would race across tenants"
-                );
-                Ok(())
-            }
+            JobSpec::Caqr { cfg, .. } => cfg.validate(),
             JobSpec::Tsqr { rows, block, procs, .. } => {
                 crate::coordinator::tsqr::validate_shape(*rows, *block, *procs)
             }
@@ -460,9 +452,15 @@ impl Inner {
             if kills.is_empty() { FaultPlan::none() } else { FaultPlan::schedule(kills) };
         // Per-job backend + input derived from the job's own seed: flop
         // accounting and numerics are isolated from every other tenant.
+        // The job's `par` split runs on the service's shared pool via
+        // the compute lane (help-first, so tenants can never deadlock or
+        // oversubscribe the host) and is scoped to this job's backend —
+        // tenants with different `par` no longer race, and any width is
+        // bitwise-identical to serial.
         let a = Matrix::randn(cfg.rows, cfg.cols, cfg.seed);
-        let prep =
-            CaqrJob::prepare(cfg, a, Backend::native(), fault, Trace::disabled(), t_run);
+        let backend = Backend::native();
+        backend.set_par_ctx(self.pool.par_ctx(cfg.par));
+        let prep = CaqrJob::prepare(cfg, a, backend, fault, Trace::disabled(), t_run);
         let job = match prep {
             Ok(j) => j,
             Err(e) => {
@@ -535,6 +533,9 @@ impl Inner {
             .into_iter()
             .map(|p| (p.id, p.tx, p.enqueued.elapsed().as_secs_f64()))
             .collect();
+        // Tall-skinny lanes stay serial (default backend ParCtx): each
+        // rank's block is far below the parallel-GEMM work threshold, so
+        // a split would only add latch traffic on the shared pool.
         let prep =
             batch::prepare(&inputs, procs, mode, Backend::native(), CostModel::default());
         let (world, tasks, finals) = match prep {
@@ -684,6 +685,7 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
                         cfg.stragglers.push(crate::sim::parse_straggler(v)?)
                     }
                     "lookahead" => cfg.lookahead = v.parse()?,
+                    "par" => cfg.par = v.parse()?,
                     "algorithm" => {
                         cfg.algorithm = v.parse().map_err(anyhow::Error::msg)?
                     }
@@ -756,6 +758,9 @@ mod tests {
 
     #[test]
     fn job_line_parses_lookahead() {
+        let spec = parse_job_line("caqr rows=256 cols=64 block=16 procs=4 par=2").unwrap();
+        let JobSpec::Caqr { cfg, .. } = &spec else { panic!("caqr") };
+        assert_eq!(cfg.par, 2);
         let spec = parse_job_line("caqr rows=256 cols=64 block=16 procs=4 lookahead=2").unwrap();
         let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
         assert_eq!(cfg.lookahead, 2);
@@ -821,8 +826,36 @@ mod tests {
             seed: 0,
         };
         assert!(bad.validate().is_err());
+        // `par > 1` is allowed: the band split is backend-scoped and
+        // rides the service pool's compute lane, so tenants with
+        // different widths cannot race.
         let cfg = RunConfig { par: 2, ..Default::default() };
-        assert!(JobSpec::Caqr { cfg, kills: vec![] }.validate().is_err());
+        assert!(JobSpec::Caqr { cfg, kills: vec![] }.validate().is_ok());
+    }
+
+    #[test]
+    fn par_split_tenant_matches_serial_tenant_bitwise() {
+        // Two tenants, identical job except `par`: the pooled band
+        // split must not perturb a single bit of the factors.
+        let svc = Service::new(ServiceConfig {
+            workers: 2,
+            max_inflight_ranks: 64,
+            batch_max: 1,
+        });
+        let serial = RunConfig { par: 1, ..Default::default() };
+        let split = RunConfig { par: 3, ..serial.clone() };
+        let h1 = svc.submit(JobSpec::Caqr { cfg: serial, kills: vec![] }).unwrap();
+        let h2 = svc.submit(JobSpec::Caqr { cfg: split, kills: vec![] }).unwrap();
+        let (o1, o2) = (h1.wait(), h2.wait());
+        let r1 = match o1.output.expect("serial tenant") {
+            JobOutput::Caqr(o) => o.r,
+            other => panic!("unexpected output {other:?}"),
+        };
+        let r2 = match o2.output.expect("par tenant") {
+            JobOutput::Caqr(o) => o.r,
+            other => panic!("unexpected output {other:?}"),
+        };
+        assert_eq!(r1, r2, "par split changed the factorization bits");
     }
 
     #[test]

@@ -47,11 +47,25 @@
 //! rank can never be misclassified as [`Fail::Stalled`] — and,
 //! conversely, a genuine deadlock is still detected even when stragglers
 //! are present.
+//!
+//! **Compute lane** ([`Pool::par_ctx`]): besides rank tasks, workers
+//! drain a second queue of *compute tasks* — the band closures a
+//! [`crate::linalg::ParCtx`] splits a large GEMM into. A rank task that
+//! reaches a big kernel submits its bands here and *helps drain the
+//! queue itself* until they are all taken, then waits on a per-batch
+//! latch; idle workers pick bands up in between rank polls. This is how
+//! intra-rank parallelism shares the machine with inter-rank simulation
+//! (and with every other tenant) without spawning ad-hoc threads or
+//! oversubscribing cores — and because the submitter always helps first,
+//! a batch completes even when every worker is busy polling rank tasks.
+//! Compute tasks are preferred over rank polls: each one unblocks an
+//! in-flight poll, while rank work only grows the frontier.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::ft::Fail;
+use crate::linalg::{ParCtx, ParExecutor, ParTask};
 
 use super::{RankCtx, World};
 
@@ -147,10 +161,68 @@ impl JobState {
     }
 }
 
+/// Completion latch for one [`ParExecutor::run_scoped`] batch: counts
+/// outstanding compute tasks down to zero and carries the first panic
+/// message (re-raised on the submitting thread, where the rank task's
+/// own `catch_unwind` turns it into [`Fail::TaskPanicked`]).
+struct ComputeLatch {
+    state: Mutex<(usize, Option<String>)>,
+    cv: Condvar,
+}
+
+impl ComputeLatch {
+    fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self { state: Mutex::new((n, None)), cv: Condvar::new() })
+    }
+
+    fn finish(&self, panic: Option<String>) {
+        let mut g = self.state.lock().unwrap();
+        g.0 -= 1;
+        if g.1.is_none() {
+            g.1 = panic;
+        }
+        if g.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every task in the batch has run; re-raise the first
+    /// task panic on the caller.
+    fn wait(&self) {
+        let mut g = self.state.lock().unwrap();
+        while g.0 > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        if let Some(msg) = g.1.take() {
+            drop(g);
+            panic!("pool compute task panicked: {msg}");
+        }
+    }
+}
+
+/// One band of kernel work on the compute lane. The closure's borrows
+/// are erased to `'static` by the submitter, which guarantees (by
+/// blocking on `latch`) that they outlive the run.
+struct ComputeTask {
+    run: ParTask<'static>,
+    latch: Arc<ComputeLatch>,
+}
+
+/// Run one compute task, containing panics (recorded in the latch and
+/// re-raised on the submitter — never on the worker that happened to
+/// execute the band).
+fn run_compute(t: ComputeTask) {
+    let ComputeTask { run, latch } = t;
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run));
+    latch.finish(res.err().map(|p| panic_msg(p.as_ref())));
+}
+
 struct CoreState {
     jobs: HashMap<JobId, JobState>,
     /// Global run queue of (job, slot) pairs, shared by all tenants.
     queue: VecDeque<(JobId, usize)>,
+    /// Compute lane: kernel bands submitted via [`Pool::par_ctx`].
+    compute: VecDeque<ComputeTask>,
     next_job: JobId,
     shutdown: bool,
 }
@@ -166,6 +238,7 @@ impl Core {
             state: Mutex::new(CoreState {
                 jobs: HashMap::new(),
                 queue: VecDeque::new(),
+                compute: VecDeque::new(),
                 next_job: 0,
                 shutdown: false,
             }),
@@ -279,6 +352,14 @@ enum PollOutcome {
 fn worker_loop(core: &Arc<Core>) {
     let mut g = core.state.lock().unwrap();
     loop {
+        // Compute bands first: each unblocks an in-flight rank poll
+        // waiting on its batch latch.
+        if let Some(t) = g.compute.pop_front() {
+            drop(g);
+            run_compute(t);
+            g = core.state.lock().unwrap();
+            continue;
+        }
         if let Some((job, id)) = g.queue.pop_front() {
             let settled = {
                 let gs = &mut *g;
@@ -388,7 +469,7 @@ fn worker_loop(core: &Arc<Core>) {
                     g = core.state.lock().unwrap();
                 }
             }
-            if g.jobs.is_empty() && g.queue.is_empty() {
+            if g.jobs.is_empty() && g.queue.is_empty() && g.compute.is_empty() {
                 core.cv.notify_all();
                 return;
             }
@@ -434,6 +515,21 @@ impl Pool {
     /// The pool's worker-thread count.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// A [`ParCtx`] that splits kernel work across this pool's compute
+    /// lane: drivers install it on the job's [`crate::backend::Backend`]
+    /// so intra-rank GEMM/QR bands run on the same workers as everyone's
+    /// rank tasks — one machine-wide budget, no oversubscription, no
+    /// process-global knob. `width <= 1` degenerates to serial. The
+    /// handle outlives the pool safely: once the workers are gone, the
+    /// submitting thread drains its own bands inline.
+    pub fn par_ctx(&self, width: usize) -> ParCtx {
+        if width <= 1 {
+            ParCtx::serial()
+        } else {
+            ParCtx::with_executor(Arc::new(PoolExecutor { core: self.core.clone() }), width)
+        }
     }
 
     /// Submit a job: drive `tasks` (each paired with its rank in
@@ -517,6 +613,48 @@ impl Pool {
             let _ = tx.send(results);
         });
         rx.recv().expect("pool delivers job results")
+    }
+}
+
+/// The pool-backed [`ParExecutor`] behind [`Pool::par_ctx`]: enqueue
+/// every band on the compute lane, help drain the lane from the
+/// submitting thread, then wait on the batch latch. Help-first makes the
+/// scheme deadlock-free by construction — even with zero free workers
+/// (all busy polling rank tasks, or the pool already shut down), the
+/// submitter itself runs every band it popped, and whatever it did not
+/// pop is held by a worker that will finish it.
+struct PoolExecutor {
+    core: Arc<Core>,
+}
+
+impl ParExecutor for PoolExecutor {
+    fn run_scoped<'s>(&self, tasks: Vec<ParTask<'s>>) {
+        let latch = ComputeLatch::new(tasks.len());
+        {
+            let mut g = self.core.state.lock().unwrap();
+            for t in tasks {
+                // SAFETY: the closure borrows operands owned by this
+                // call's caller ('s). We block on `latch` below until
+                // every task has run (run_compute counts panicked tasks
+                // down too), so no task outlives the borrow — this is
+                // `std::thread::scope`'s guarantee, enforced by the same
+                // block-until-done structure.
+                let run: ParTask<'static> = unsafe { std::mem::transmute::<ParTask<'s>, ParTask<'static>>(t) };
+                g.compute.push_back(ComputeTask { run, latch: latch.clone() });
+            }
+        }
+        self.core.cv.notify_all();
+        // Help-first: drain the lane on this thread until it is empty.
+        // (We may run bands of a concurrent batch — harmless, they are
+        // pure compute and never block.)
+        loop {
+            let t = self.core.state.lock().unwrap().compute.pop_front();
+            match t {
+                Some(t) => run_compute(t),
+                None => break,
+            }
+        }
+        latch.wait();
     }
 }
 
@@ -929,5 +1067,102 @@ mod tests {
         let w = World::new(1, CostModel::default(), FaultPlan::none());
         let results = pool.run(&w, Vec::new());
         assert!(results.is_empty());
+    }
+
+    #[test]
+    fn pool_par_ctx_gemm_matches_serial_bitwise() {
+        use crate::linalg::{gemm, gemm_with, Matrix, SimdLevel, Trans};
+        let pool = Pool::new(3);
+        let a = Matrix::randn(150, 64, 31);
+        let b = Matrix::randn(64, 220, 32);
+        let serial = gemm(Trans::No, Trans::No, 1.0, &a, &b);
+        let got =
+            gemm_with(&pool.par_ctx(3), SimdLevel::best(), Trans::No, Trans::No, 1.0, &a, &b);
+        assert_eq!(serial, got, "pool-lane split must not change results");
+    }
+
+    /// A rank task that runs one pool-parallel gemm and checks it
+    /// bitwise against a precomputed serial product.
+    struct GemmTask {
+        par: ParCtx,
+        a: crate::linalg::Matrix,
+        b: crate::linalg::Matrix,
+        want: crate::linalg::Matrix,
+    }
+
+    impl RankTask for GemmTask {
+        fn poll(&mut self, _ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+            use crate::linalg::{gemm_with, SimdLevel, Trans};
+            let got =
+                gemm_with(&self.par, SimdLevel::best(), Trans::No, Trans::No, 1.0, &self.a, &self.b);
+            assert_eq!(got, self.want, "pooled gemm diverged from serial");
+            TaskPoll::Ready(Ok(()))
+        }
+    }
+
+    #[test]
+    fn busy_pool_drains_compute_bands_help_first() {
+        use crate::linalg::{gemm, Matrix, Trans};
+        // More rank tasks than workers, and every rank task submits a
+        // 4-way parallel gemm: with both workers busy polling, the
+        // batches can only complete because submitters drain the compute
+        // lane themselves (help-first). A deadlock here would surface as
+        // a hang; a determinism bug as the bitwise assert inside.
+        let pool = Pool::new(2);
+        let n = 4;
+        let w = World::new(n, CostModel::default(), FaultPlan::none());
+        let a = Matrix::randn(150, 64, 33);
+        let b = Matrix::randn(64, 220, 34);
+        let want = gemm(Trans::No, Trans::No, 1.0, &a, &b);
+        let tasks: Vec<(usize, Box<dyn RankTask>)> = (0..n)
+            .map(|r| {
+                let t = GemmTask {
+                    par: pool.par_ctx(4),
+                    a: a.clone(),
+                    b: b.clone(),
+                    want: want.clone(),
+                };
+                (r, Box::new(t) as Box<dyn RankTask>)
+            })
+            .collect();
+        let results = pool.run(&w, tasks);
+        for (rank, res) in results {
+            assert_eq!(res, Ok(()), "rank {rank}");
+        }
+        w.router().set_waker(None);
+    }
+
+    /// A rank task whose parallel batch contains a panicking band.
+    struct PanickingBandTask {
+        par: ParCtx,
+    }
+
+    impl RankTask for PanickingBandTask {
+        fn poll(&mut self, _ctx: &mut RankCtx, _sp: &Spawner) -> TaskPoll {
+            self.par.run(vec![
+                Box::new(|| panic!("band boom")) as ParTask<'_>,
+                Box::new(|| {}),
+            ]);
+            TaskPoll::Ready(Ok(()))
+        }
+    }
+
+    #[test]
+    fn compute_band_panic_fails_the_submitting_task_only() {
+        // The panic is recorded in the batch latch and re-raised on the
+        // submitting rank task, whose own catch_unwind turns it into
+        // TaskPanicked — the worker that happened to execute the band
+        // (possibly a different one) is unaffected and keeps serving.
+        let pool = Pool::new(2);
+        let w = World::new(1, CostModel::default(), FaultPlan::none());
+        let t = PanickingBandTask { par: pool.par_ctx(2) };
+        let results = pool.run(&w, vec![(0, Box::new(t) as Box<dyn RankTask>)]);
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].1, Err(Fail::TaskPanicked));
+        w.router().set_waker(None);
+        // The pool still works after the panic.
+        let w2 = World::new(4, CostModel::default(), FaultPlan::none());
+        let results = pool.run(&w2, pingpong_tasks(4));
+        assert!(results.iter().all(|(_, r)| r.is_ok()));
     }
 }

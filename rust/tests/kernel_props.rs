@@ -4,12 +4,20 @@
 //! `householder_qr_ref`) across odd shapes — tile-edge cases, `m < nb`
 //! panels, zero columns — and the borrowed `MatrixView` ops are checked
 //! to bit-match the old copying `block`/`set_block` path.
+//!
+//! The SIMD/parallel pins (PR: explicit-SIMD micro-kernels): every
+//! runtime-available [`SimdLevel`] and every `ParCtx` band width must
+//! reproduce the scalar serial product **bit-for-bit** — at adversarial
+//! tile-edge shapes, under every `Trans` combination, and on strided
+//! `MatrixView` sub-blocks. This is the determinism contract replay and
+//! lookahead rest on; `assert_eq!` on `Matrix` compares exact bits.
 
 use ftcaqr::linalg::{
-    gemm, gemm_into, gemm_ref_into, gemm_view, gemm_view_into, householder_qr,
-    householder_qr_blocked, householder_qr_ref, leaf_apply, leaf_apply_into,
-    recover_block, recover_block_into, rel_err, tree_update, tree_update_half,
-    tree_update_into, trmm_upper, tsqr_merge, Matrix, Rng64, Trans,
+    gemm, gemm_into, gemm_ref_into, gemm_view, gemm_view_into, gemm_view_into_with,
+    gemm_with, householder_qr, householder_qr_blocked, householder_qr_par,
+    householder_qr_ref, leaf_apply, leaf_apply_into, recover_block, recover_block_into,
+    rel_err, tree_update, tree_update_half, tree_update_into, trmm_upper, tsqr_merge,
+    Matrix, ParCtx, Rng64, SimdLevel, Trans,
 };
 
 fn ref_gemm(ta: Trans, tb: Trans, alpha: f32, a: &Matrix, b: &Matrix) -> Matrix {
@@ -266,6 +274,124 @@ fn prop_inplace_update_ops_bitmatch_copying_ops() {
     let mut rec_got = c1.clone();
     recover_block_into(&mut rec_got, &y1, &st.w);
     assert_eq!(rec_got, rec_want);
+}
+
+#[test]
+fn prop_simd_levels_bitmatch_scalar_adversarial_shapes() {
+    // (m, k, n) straddling every tile edge the micro-kernel cares about:
+    // m % MR != 0, n % NR != 0, and k ∈ {1, KC, KC + 1} (KC = 256) so
+    // the packed k-panel loop runs zero, one, and one-plus-a-remainder
+    // full panels. Crossed with all four Trans combinations (distinct
+    // packing paths) and a non-trivial alpha.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (5, 1, 17),
+        (7, 256, 31),
+        (13, 257, 47),
+        (33, 100, 65),
+        (64, 64, 64),
+    ];
+    let serial = ParCtx::serial();
+    let mut seed = 9000u64;
+    for &(m, k, n) in &shapes {
+        for (ta, tb) in [
+            (Trans::No, Trans::No),
+            (Trans::Yes, Trans::No),
+            (Trans::No, Trans::Yes),
+            (Trans::Yes, Trans::Yes),
+        ] {
+            for alpha in [1.0f32, 0.37] {
+                seed += 1;
+                let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+                let a = Matrix::randn(ar, ac, seed);
+                let b = Matrix::randn(br, bc, seed + 5000);
+                let want = gemm_with(&serial, SimdLevel::Scalar, ta, tb, alpha, &a, &b);
+                for lvl in SimdLevel::available() {
+                    let got = gemm_with(&serial, lvl, ta, tb, alpha, &a, &b);
+                    assert_eq!(
+                        got, want,
+                        "({m},{k},{n}) {ta:?}/{tb:?} alpha={alpha}: level {} \
+                         diverged bitwise from scalar",
+                        lvl.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simd_levels_bitmatch_scalar_on_strided_views() {
+    // Strided MatrixView sub-blocks: the packing loops see rows shorter
+    // than the parent stride and ragged tile edges on both operands and
+    // the accumulating destination.
+    let big_a = Matrix::randn(40, 38, 61);
+    let big_b = Matrix::randn(37, 36, 62);
+    let big_c = Matrix::randn(42, 39, 63);
+    let (m, k, n) = (19usize, 21usize, 18usize);
+    let serial = ParCtx::serial();
+    let run = |lvl: SimdLevel| {
+        let mut c = big_c.clone();
+        gemm_view_into_with(
+            &serial,
+            lvl,
+            Trans::No,
+            Trans::No,
+            -0.5,
+            big_a.view(3, 2, m, k),
+            big_b.view(1, 4, k, n),
+            1.0,
+            c.view_mut(5, 3, m, n),
+        );
+        c
+    };
+    let want = run(SimdLevel::Scalar);
+    for lvl in SimdLevel::available() {
+        assert_eq!(
+            run(lvl),
+            want,
+            "strided-view gemm at level {} diverged bitwise from scalar",
+            lvl.name()
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_band_split_bitmatches_serial_at_any_width() {
+    // 150 * 220 * 64 > PAR_MIN_WORK, so widths > 1 genuinely take the
+    // banded path; every width must reproduce the serial product's bits
+    // (each band runs the same macro-kernel over the same packed B).
+    let a = Matrix::randn(150, 220, 71);
+    let b = Matrix::randn(220, 64, 72);
+    let want = gemm(Trans::No, Trans::No, 1.0, &a, &b);
+    for width in [2usize, 3, 5, 8] {
+        let got = gemm_with(
+            &ParCtx::threads(width),
+            SimdLevel::best(),
+            Trans::No,
+            Trans::No,
+            1.0,
+            &a,
+            &b,
+        );
+        assert_eq!(got, want, "band width {width} diverged bitwise from serial");
+    }
+}
+
+#[test]
+fn prop_qr_par_bitmatches_serial() {
+    // Tall panel so the blocked-QR trailing update crosses the parallel
+    // work threshold: the factorization must be bit-identical at any
+    // split width.
+    let a = Matrix::randn(2048, 128, 81);
+    let want = householder_qr(&a);
+    for width in [2usize, 5] {
+        let got = householder_qr_par(&ParCtx::threads(width), &a);
+        assert_eq!(got.y, want.y, "width {width} y");
+        assert_eq!(got.t, want.t, "width {width} t");
+        assert_eq!(got.r, want.r, "width {width} r");
+    }
 }
 
 #[test]
