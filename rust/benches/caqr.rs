@@ -140,6 +140,119 @@ fn bench_lookahead(sink: &mut common::JsonSink) {
     }
 }
 
+/// Grid-shape sweep: at a fixed process count P, compare 1 x P, P x 1
+/// and the near-square grid, failure-free and with one mid-run kill.
+/// Gates the layout's bitwise contract — the explicit P x 1 grid must
+/// reproduce the implicit 1-D default exactly — and Gram-checks every
+/// other shape (the TSQR tree depends on Pr, so different Pr gives a
+/// numerically different, equally valid R). Reports makespan / compute
+/// / comm per shape.
+fn bench_grid(sink: &mut common::JsonSink) {
+    common::header("E6d: process-grid sweep (Pr x Pc at fixed P)");
+    let shapes: &[(usize, usize, usize, usize)] = if common::smoke() {
+        &[(256, 64, 16, 4)]
+    } else {
+        &[(512, 128, 32, 4), (1024, 256, 32, 8)]
+    };
+    println!(
+        "{:>11} {:>5} {:>6} {:>6} | {:>12} {:>12} {:>12} {:>10}",
+        "matrix", "P", "grid", "kill", "makespan(us)", "compute(us)", "comm(us)", "wall(ms)"
+    );
+    for &(rows, cols, block, procs) in shapes {
+        // (0, 0) is the auto grid (P x 1): the 1-D baseline every
+        // explicit shape must match bitwise.
+        let near = {
+            let mut pr = (procs as f64).sqrt() as usize;
+            while procs % pr != 0 {
+                pr -= 1;
+            }
+            (pr, procs / pr)
+        };
+        let grids = [(0usize, 0usize), (procs, 1), (1, procs), near];
+        for faulted in [false, true] {
+            let mut r0: Option<Matrix> = None;
+            for (gr, gc) in grids {
+                let cfg = RunConfig {
+                    rows,
+                    cols,
+                    block,
+                    procs,
+                    grid_rows: gr,
+                    grid_cols: gc,
+                    algorithm: Algorithm::FaultTolerant,
+                    verify: true,
+                    ..Default::default()
+                };
+                let (pr, pc) = cfg.grid_shape();
+                let fault = if faulted {
+                    FaultPlan::schedule(vec![ScheduledKill::new(
+                        procs - 1,
+                        1,
+                        0,
+                        Phase::Update,
+                    )])
+                } else {
+                    FaultPlan::none()
+                };
+                let a = Matrix::randn(rows, cols, 7);
+                let (out, wall) = common::wall(|| {
+                    ftcaqr::coordinator::run_caqr_matrix(
+                        cfg.clone(),
+                        a.clone(),
+                        Backend::native(),
+                        fault,
+                        Trace::disabled(),
+                    )
+                    .unwrap()
+                });
+                if pc == 1 {
+                    // 1-D-equivalent shapes must agree to the bit.
+                    match &r0 {
+                        None => r0 = Some(out.r.clone()),
+                        Some(base) => assert_eq!(
+                            base, &out.r,
+                            "explicit {pr}x1 grid diverged from the 1-D path \
+                             ({rows}x{cols} faulted={faulted})"
+                        ),
+                    }
+                }
+                let res = out.residual.expect("verify=true always computes the Gram residual");
+                assert!(
+                    res < 1e-3,
+                    "grid {pr}x{pc} failed the Gram check: residual {res:.3e} \
+                     ({rows}x{cols} faulted={faulted})"
+                );
+                println!(
+                    "{:>11} {procs:>5} {:>6} {:>6} | {:>12.3} {:>12.3} {:>12.3} {:>10.2}",
+                    format!("{rows}x{cols}"),
+                    format!("{pr}x{pc}"),
+                    if faulted { "1" } else { "-" },
+                    out.report.critical_path * 1e6,
+                    out.report.compute_path * 1e6,
+                    out.report.comm_path * 1e6,
+                    wall * 1e3,
+                );
+                sink.rec(&[
+                    ("bench", JsonVal::S("caqr_grid")),
+                    ("rows", JsonVal::I(rows as i64)),
+                    ("cols", JsonVal::I(cols as i64)),
+                    ("block", JsonVal::I(block as i64)),
+                    ("procs", JsonVal::I(procs as i64)),
+                    ("grid_rows", JsonVal::I(pr as i64)),
+                    ("grid_cols", JsonVal::I(pc as i64)),
+                    ("faulted", JsonVal::I(faulted as i64)),
+                    ("makespan_s", JsonVal::F(out.report.critical_path)),
+                    ("compute_path_s", JsonVal::F(out.report.compute_path)),
+                    ("comm_path_s", JsonVal::F(out.report.comm_path)),
+                    ("exchanges", JsonVal::I(out.report.exchanges as i64)),
+                    ("bytes", JsonVal::I(out.report.bytes as i64)),
+                    ("wall_s", JsonVal::F(wall)),
+                ]);
+            }
+        }
+    }
+}
+
 fn main() {
     common::header("E6: end-to-end CAQR (native backend)");
     bench_backend("nat", Backend::native);
@@ -172,5 +285,6 @@ fn main() {
 
     let mut sink = common::JsonSink::new();
     bench_lookahead(&mut sink);
+    bench_grid(&mut sink);
     sink.finish("caqr");
 }

@@ -208,6 +208,13 @@ pub struct CampaignOutcome {
 fn cell_cfg(c: &CampaignConfig, procs: usize, interval: usize) -> RunConfig {
     let mut cfg = c.base.clone();
     cfg.procs = procs;
+    // A fixed grid shape from the base config only fits its own process
+    // count; when the sweep changes `procs`, fall back to the auto
+    // (`procs x 1`) grid so every cell stays valid.
+    if cfg.grid_shape().0 * cfg.grid_shape().1 != procs {
+        cfg.grid_rows = 0;
+        cfg.grid_cols = 0;
+    }
     cfg.checkpoint_every = interval;
     cfg.checkpoint_auto = false;
     cfg.fault = FaultSpec::None;
@@ -235,14 +242,17 @@ fn predicted_checkpoint_overhead(cfg: &RunConfig) -> f64 {
     };
     let per_exchange = cfg.cost.alpha + wire + cfg.cost.o;
     let m_local = cfg.local_rows();
+    // Checkpoint pairs run down grid columns, so the tree extent is the
+    // grid-row count (== procs on the default `Px1` grid).
+    let pr = cfg.grid_shape().0;
     let mut total = 0.0;
     for k in 0..cfg.panels() {
         if (k + 1) % every != 0 {
             continue;
         }
-        let owner = k * cfg.block / m_local;
-        let q = cfg.procs - owner;
-        let idx_last = cfg.procs - 1 - owner;
+        let owner_row = k * cfg.block / m_local;
+        let q = pr - owner_row;
+        let idx_last = pr - 1 - owner_row;
         if (idx_last ^ 1) < q {
             total += per_exchange;
         }

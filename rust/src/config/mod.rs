@@ -72,8 +72,17 @@ pub struct RunConfig {
     pub cols: usize,
     /// Panel width (b).
     pub block: usize,
-    /// Number of simulated processes (P); each owns rows/P block rows.
+    /// Number of simulated processes (P); arranged as a `Pr x Pc`
+    /// process grid (see `grid_rows`/`grid_cols`). Each grid row owns
+    /// rows/Pr block rows; column blocks are block-cyclic over grid
+    /// columns.
     pub procs: usize,
+    /// Process-grid rows `Pr` (0 = auto). With both grid extents 0 the
+    /// grid defaults to `procs x 1` — the original 1-D block-row
+    /// layout, which the 2-D code reproduces bitwise.
+    pub grid_rows: usize,
+    /// Process-grid columns `Pc` (0 = auto; see `grid_rows`).
+    pub grid_cols: usize,
     /// Worker-pool width driving the simulated ranks (0 = auto: the
     /// machine's core count, capped by P). P is *not* bounded by this —
     /// rank tasks park on communication instead of holding a thread.
@@ -127,6 +136,8 @@ impl Default for RunConfig {
             cols: 64,
             block: 16,
             procs: 4,
+            grid_rows: 0,
+            grid_cols: 0,
             workers: 0,
             par: 1,
             algorithm: Algorithm::default(),
@@ -144,10 +155,38 @@ impl Default for RunConfig {
     }
 }
 
+/// Parse a `PrxPc` grid-shape literal (e.g. `4x2`).
+pub fn parse_grid(s: &str) -> Result<(usize, usize)> {
+    let Some((pr, pc)) = s.split_once(['x', 'X']) else {
+        bail!("grid must be PrxPc (e.g. 4x2), got '{s}'");
+    };
+    let pr: usize = pr.trim().parse().map_err(|_| {
+        anyhow::anyhow!("grid rows must be a positive integer, got '{pr}'")
+    })?;
+    let pc: usize = pc.trim().parse().map_err(|_| {
+        anyhow::anyhow!("grid cols must be a positive integer, got '{pc}'")
+    })?;
+    ensure!(pr >= 1 && pc >= 1, "grid extents must be >= 1, got {pr}x{pc}");
+    Ok((pr, pc))
+}
+
 impl RunConfig {
-    /// Rows owned by each rank.
+    /// The resolved `Pr x Pc` process-grid shape. `0` extents are
+    /// auto-filled: both zero gives `procs x 1` (the 1-D layout); one
+    /// zero derives the missing extent from `procs`.
+    pub fn grid_shape(&self) -> (usize, usize) {
+        match (self.grid_rows, self.grid_cols) {
+            (0, 0) => (self.procs, 1),
+            (pr, 0) => (pr, self.procs / pr.max(1)),
+            (0, pc) => (self.procs / pc.max(1), pc),
+            (pr, pc) => (pr, pc),
+        }
+    }
+
+    /// Rows owned by each rank (`rows / Pr`; with the default `Px1`
+    /// grid this is the historical `rows / procs`).
     pub fn local_rows(&self) -> usize {
-        self.rows / self.procs
+        self.rows / self.grid_shape().0
     }
 
     /// Number of panels in the CAQR outer loop.
@@ -179,11 +218,22 @@ impl RunConfig {
             self.block >= 1 && self.block <= self.cols,
             "block must be in [1, cols]"
         );
+        let (pr, pc) = self.grid_shape();
         ensure!(
-            self.rows % self.procs == 0,
-            "rows ({}) must divide evenly across procs ({})",
-            self.rows,
+            pr >= 1 && pc >= 1 && pr * pc == self.procs,
+            "grid {pr}x{pc} must tile procs ({}) exactly",
             self.procs
+        );
+        ensure!(
+            self.rows % pr == 0,
+            "rows ({}) must divide evenly across the {pr} grid rows",
+            self.rows,
+        );
+        ensure!(
+            self.cols / self.block >= pc,
+            "grid cols ({pc}) must not exceed the panel count ({}) — every \
+             grid column must own at least one column block",
+            self.cols / self.block.max(1),
         );
         ensure!(
             self.cols % self.block == 0,
@@ -235,6 +285,7 @@ impl RunConfig {
                 "cols" => c.cols = v.parse()?,
                 "block" => c.block = v.parse()?,
                 "procs" => c.procs = v.parse()?,
+                "grid" => (c.grid_rows, c.grid_cols) = parse_grid(v)?,
                 "workers" => c.workers = v.parse()?,
                 "par" => c.par = v.parse()?,
                 "algorithm" => c.algorithm = v.parse().map_err(anyhow::Error::msg)?,
@@ -271,6 +322,10 @@ impl RunConfig {
         out.push_str(&format!("cols = {}\n", self.cols));
         out.push_str(&format!("block = {}\n", self.block));
         out.push_str(&format!("procs = {}\n", self.procs));
+        if self.grid_rows != 0 || self.grid_cols != 0 {
+            let (pr, pc) = self.grid_shape();
+            out.push_str(&format!("grid = {pr}x{pc}\n"));
+        }
         out.push_str(&format!("workers = {}\n", self.workers));
         out.push_str(&format!("par = {}\n", self.par));
         out.push_str(&format!("algorithm = {}\n", self.algorithm));
@@ -403,6 +458,51 @@ mod tests {
     fn panels_count() {
         let c = RunConfig { cols: 64, block: 16, ..Default::default() };
         assert_eq!(c.panels(), 4);
+    }
+
+    #[test]
+    fn grid_defaults_to_1d_and_parses() {
+        let c = RunConfig::default();
+        assert_eq!(c.grid_shape(), (c.procs, 1), "auto grid is the 1-D layout");
+        assert_eq!(c.local_rows(), c.rows / c.procs);
+
+        assert_eq!(parse_grid("4x2").unwrap(), (4, 2));
+        assert_eq!(parse_grid("1X8").unwrap(), (1, 8));
+        assert!(parse_grid("4").is_err());
+        assert!(parse_grid("0x2").is_err());
+        assert!(parse_grid("4xtwo").is_err());
+
+        let c = RunConfig::from_kv("rows = 256\ncols = 64\ngrid = 2x2\n").unwrap();
+        assert_eq!(c.grid_shape(), (2, 2));
+        assert_eq!(c.local_rows(), 128);
+        let c2 = RunConfig::from_kv(&c.to_kv()).unwrap();
+        assert_eq!(c2.grid_shape(), (2, 2));
+    }
+
+    #[test]
+    fn grid_validation() {
+        // Grid must tile procs.
+        let c = RunConfig { grid_rows: 3, grid_cols: 2, ..Default::default() };
+        assert!(c.validate().is_err(), "3x2 != 4 procs");
+        // Partial spec derives the other extent.
+        let c = RunConfig { grid_rows: 2, ..Default::default() };
+        assert_eq!(c.grid_shape(), (2, 2));
+        c.validate().unwrap();
+        // Rows must divide across grid rows, and local rows stay
+        // block-aligned under the grid-aware m_local.
+        let c = RunConfig { rows: 296, grid_rows: 4, grid_cols: 1, ..Default::default() };
+        assert!(c.validate().is_err(), "local rows 74 not a multiple of 16");
+        // More grid columns than panels leaves empty grid columns.
+        let c = RunConfig {
+            procs: 8,
+            grid_rows: 1,
+            grid_cols: 8,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err(), "8 grid cols > 4 panels");
+        // A 2x2 grid on the default shape is fine.
+        let c = RunConfig { grid_rows: 2, grid_cols: 2, ..Default::default() };
+        c.validate().unwrap();
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! The CAQR panel driver and per-rank algorithm bodies.
 //!
-//! `run_caqr` builds the simulated world, distributes block rows, runs
-//! every rank's panel loop (TSQR + trailing update, plain or FT) as a
+//! `run_caqr` builds the simulated world, distributes the matrix over
+//! the `Pr x Pc` process grid (rows block-distributed over grid rows,
+//! column blocks block-cyclic over grid columns — see
+//! [`super::grid::Grid`]), runs every rank's panel loop (TSQR down the
+//! panel's grid column, WY factors row-broadcast to the other grid
+//! columns, trailing update in every column; plain or FT) as a
 //! resumable task on the bounded worker pool — including any REBUILD
 //! replacement tasks spawned by recovery — assembles the reduced matrix,
 //! and verifies the Gram identity. Rank bodies are *lookahead dataflow
@@ -44,6 +48,7 @@ use crate::sim::{
 };
 use crate::trace::Trace;
 
+use super::grid::Grid;
 use super::panel::{geometry, PanelGeom};
 use super::recovery::FtOp;
 use super::store::{RecoveryStore, RevivalGate};
@@ -195,10 +200,26 @@ pub(crate) struct UpdatePhase {
     covered_end: usize,
 }
 
+/// How a rank outside the panel's grid column waits for the panel's WY
+/// factor bundle to arrive along its grid row (`Pc > 1` only; with
+/// `Pc = 1` every rank is in the panel column and this stage is never
+/// entered, keeping the 1-D path bitwise and metrics identical).
+enum BcastWait {
+    /// FT mode: pull from the sender's published store bundle (the
+    /// one-sided model of the row-broadcast; the receiver is charged
+    /// the bundle bytes on the hit).
+    Store { sender: usize },
+    /// Plain mode: a real row-broadcast message in flight.
+    Plain { sender: usize, tag: Tag },
+}
+
 /// Pipeline stage of one in-flight panel on one rank.
 enum Stage {
-    /// Panel factorization tree in progress.
+    /// Panel factorization tree in progress (panel grid column only).
     Tsqr(TsqrPhase),
+    /// Waiting for the panel column's factors along the grid row
+    /// (off-panel-column ranks with local trailing blocks).
+    Bcast(BcastWait),
     /// Trailing update draining segment by segment.
     Update(UpdatePhase),
     /// Diskless-checkpoint exchange in flight (always the oldest unit —
@@ -218,14 +239,19 @@ struct Unit {
 }
 
 impl Unit {
-    /// Has this panel's trailing update fully reached column block
-    /// `jblock` (columns `[jblock*b, (jblock+1)*b)`) — i.e. may the next
-    /// panel touch those columns?
-    fn covers_done(&self, jblock: usize, b: usize) -> bool {
+    /// Has this panel's trailing update fully reached *global* column
+    /// block `jblock` (columns `[jblock*b, (jblock+1)*b)`) — i.e. may
+    /// the next panel touch this rank's columns up to there? The
+    /// update's `covered_end` frontier is in local columns, so the
+    /// global block is converted through this rank's grid column
+    /// (`Pc = 1`: the identity, bitwise the 1-D gate).
+    fn covers_done(&self, jblock: usize, grid: Grid, b: usize) -> bool {
         match &self.stage {
             Stage::Complete | Stage::Checkpoint(_) => true,
-            Stage::Tsqr(_) => false,
-            Stage::Update(up) => up.covered_end >= (jblock + 1) * b,
+            Stage::Tsqr(_) | Stage::Bcast(_) => false,
+            Stage::Update(up) => {
+                up.covered_end >= grid.blocks_before(self.g.gcol, jblock + 1) * b
+            }
         }
     }
 }
@@ -240,15 +266,19 @@ fn update_segments(
         return out;
     }
     if cfg.lookahead == 0 {
-        // Lockstep: one whole-width segment on lane 0 — bitwise the
-        // pre-pipeline schedule (same message sizes, tags and kernel
-        // call shapes).
+        // Lockstep: one segment spanning the rank's whole local trailing
+        // width on lane 0 — bitwise the pre-pipeline schedule (same
+        // message sizes, tags and kernel call shapes).
         out.push_back((g.trail_col, g.n_trail, 0));
     } else {
         let b = cfg.block;
+        let grid = Grid::from_cfg(cfg);
         for i in 0..g.n_trail / b {
             let col0 = g.trail_col + i * b;
-            out.push_back((col0, b, (col0 / b) as u32));
+            // Lanes are *global* column-block indices so the lane part
+            // of tags and retained-state keys is grid-shape independent
+            // (`Pc = 1`: local == global, the 1-D lanes).
+            out.push_back((col0, b, grid.global_block(col0 / b, g.gcol) as u32));
         }
     }
     out
@@ -260,6 +290,37 @@ enum Stepped {
     Parked,
     /// The phase completed.
     Finished,
+}
+
+/// Outcome of stepping a broadcast receiver.
+enum BcastStep {
+    /// Bundle not available yet — park with the wait state.
+    Parked(BcastWait),
+    /// The factor bundle arrived.
+    Got(Vec<Arc<Matrix>>),
+}
+
+/// The tree steps for which a rank at tree index `idx` holds `(Y₁, T)`
+/// merge factors after its TSQR — exactly the `merges` slots that are
+/// `Some`, so a row-broadcast bundle's layout is computable on both
+/// sides without a header. FT mode fills a slot whenever the rank was an
+/// active reduce-tree node with an in-range exchange buddy; plain mode
+/// only when it was the pair's upper member (the lower leaves the tree
+/// without merging). The update tree only ever reads slots where the
+/// rank is Upper or Lower at that step, and both are covered in both
+/// modes (every reduce pair is an exchange pair).
+fn merge_slots(algorithm: Algorithm, idx: usize, q: usize) -> Vec<usize> {
+    (0..tree::steps(q))
+        .filter(|&s| match algorithm {
+            Algorithm::FaultTolerant => {
+                tree::reduce_active(idx, s) && tree::exchange_pair(idx, s, q).is_some()
+            }
+            Algorithm::Plain => {
+                tree::reduce_active(idx, s)
+                    && tree::reduce_pair(idx, s, q).0 == Role::Upper
+            }
+        })
+        .collect()
 }
 
 /// One rank's resumable panel-loop body (original or REBUILD
@@ -324,6 +385,10 @@ impl Ranker {
         &self.shared.cfg
     }
 
+    fn grid(&self) -> Grid {
+        Grid::from_cfg(&self.shared.cfg)
+    }
+
     /// Run the dataflow engine forward as far as possible: retire
     /// completed panels, admit new ones while the pipeline has room, and
     /// advance every in-flight unit (oldest first) until a full pass
@@ -335,7 +400,7 @@ impl Ranker {
             let mut progressed = false;
             self.retire_front();
             while self.can_admit() {
-                self.admit(ctx);
+                self.admit(ctx)?;
                 self.retire_front();
                 progressed = true;
             }
@@ -389,19 +454,22 @@ impl Ranker {
         }
         match self.units.back() {
             None => true,
-            Some(prev) => prev.covers_done(self.next_k, cfg.block),
+            Some(prev) => prev.covers_done(self.next_k, self.grid(), cfg.block),
         }
     }
 
-    /// Enter panel `next_k`: start its TSQR leaf factorization, or — for
-    /// a retired rank (participation is monotone) — leave the loop.
-    fn admit(&mut self, ctx: &mut RankCtx) {
+    /// Enter panel `next_k`: start its TSQR leaf factorization (panel
+    /// grid column), wait for the row-broadcast factors (other columns
+    /// with trailing blocks), skip straight to the checkpoint barrier
+    /// (row-active ranks with nothing to update this panel), or — for a
+    /// retired rank (participation is monotone) — leave the loop.
+    fn admit(&mut self, ctx: &mut RankCtx) -> Result<(), Fail> {
         let k = self.next_k;
         let g = geometry(self.cfg(), ctx.rank, k);
         if !g.participates {
-            // Owner indices only grow: once retired, retired for good.
+            // Owner rows only grow: once retired, retired for good.
             self.next_k = self.cfg().panels();
-            return;
+            return Ok(());
         }
         self.next_k = k + 1;
         crate::simlog!(
@@ -410,8 +478,19 @@ impl Ranker {
             self.resume,
             self.units.len()
         );
-        let ph = self.begin_tsqr(ctx, g);
-        self.units.push_back(Unit { g, stage: Stage::Tsqr(ph) });
+        let stage = if g.in_panel_col {
+            Stage::Tsqr(self.begin_tsqr(ctx, g))
+        } else if g.n_trail > 0 {
+            self.begin_bcast(ctx, g)?
+        } else {
+            // Off the panel column with no local trailing blocks: this
+            // rank has no numeric work in panel `k` — only the
+            // checkpoint barrier (if due) involves it, and the pairs
+            // align because every row-active rank reaches it.
+            self.after_update(ctx, g)
+        };
+        self.units.push_back(Unit { g, stage });
+        Ok(())
     }
 
     /// Advance one in-flight unit as far as it can go. Returns whether
@@ -425,7 +504,14 @@ impl Ranker {
                 Stepped::Parked => Stage::Tsqr(ph),
                 Stepped::Finished => {
                     moved = true;
-                    self.after_tsqr(ctx, ph)
+                    self.after_tsqr(ctx, ph)?
+                }
+            },
+            Stage::Bcast(wait) => match self.step_bcast(g, wait, ctx, sp)? {
+                BcastStep::Parked(w) => Stage::Bcast(w),
+                BcastStep::Got(mats) => {
+                    moved = true;
+                    self.begin_update_from_bcast(g, mats)
                 }
             },
             Stage::Update(mut up) => {
@@ -484,12 +570,15 @@ impl Ranker {
     }
 
     /// Leaf factorization of the active panel rows (zero-row padded) —
-    /// the local, non-blocking prologue of the TSQR phase.
+    /// the local, non-blocking prologue of the TSQR phase. Panel-grid-
+    /// column ranks only; the panel block sits at local column
+    /// `g.panel_lcol` of the compact block-cyclic storage.
     fn begin_tsqr(&self, ctx: &mut RankCtx, g: PanelGeom) -> TsqrPhase {
+        debug_assert!(g.in_panel_col);
         let b = self.cfg().block;
         let m_local = self.cfg().local_rows();
         let apanel =
-            self.local.block_padded(g.start, g.k * b, g.active_m, b, m_local, b);
+            self.local.block_padded(g.start, g.panel_lcol, g.active_m, b, m_local, b);
         let leaf = self
             .shared
             .backend
@@ -536,15 +625,32 @@ impl Ranker {
                                 *moved = true;
                                 continue;
                             };
-                            let buddy = bidx + g.owner;
-                            let tag = Tag::new(TagKind::TsqrR, g.k, s);
+                            // TSQR buddies run down the panel's grid
+                            // column: same column, grid row owner_row +
+                            // buddy-index (`Pc = 1`: rank owner + bidx).
+                            let buddy =
+                                self.grid().rank_at(g.owner_row + bidx, g.panel_gcol);
+                            let tag = Tag::grid(
+                                TagKind::TsqrR,
+                                g.k,
+                                s,
+                                0,
+                                g.panel_gcol as u32,
+                            );
 
                             // Replay path: take the completed merge from
                             // the buddy's retained memory (paper III-C).
                             if self.resume {
-                                match self
-                                    .fetch_retained(ctx, sp, buddy, g.k, Phase::Tsqr, s, 0)?
-                                {
+                                match self.fetch_retained(
+                                    ctx,
+                                    sp,
+                                    buddy,
+                                    g.k,
+                                    Phase::Tsqr,
+                                    s,
+                                    0,
+                                    g.panel_gcol as u32,
+                                )? {
                                     Fetch::Hit(ret) => {
                                         if tree::reduce_active(g.idx, s) {
                                             ph.merges[s] =
@@ -583,8 +689,15 @@ impl Ranker {
                             let site = FailSite { panel: g.k, step: s, phase: Phase::Tsqr };
                             self.maybe_fail(ctx, site)?;
                             let (role, bidx) = tree::reduce_pair(g.idx, s, g.q);
-                            let buddy = bidx + g.owner;
-                            let tag = Tag::new(TagKind::TsqrR, g.k, s);
+                            let buddy =
+                                self.grid().rank_at(g.owner_row + bidx, g.panel_gcol);
+                            let tag = Tag::grid(
+                                TagKind::TsqrR,
+                                g.k,
+                                s,
+                                0,
+                                g.panel_gcol as u32,
+                            );
                             match role {
                                 Role::Idle => {
                                     ph.s += 1;
@@ -614,11 +727,13 @@ impl Ranker {
                         return Ok(Stepped::Parked);
                     }
                     Some(d) => {
-                        let peer = d.into_mat();
+                        let tag =
+                            Tag::grid(TagKind::TsqrR, ph.g.k, ph.s, 0, ph.g.panel_gcol as u32);
+                        let peer = d.into_mat_for(&tag);
                         let g = ph.g;
                         let s = ph.s;
                         let buddy = op.peer();
-                        let bidx = buddy - g.owner;
+                        let bidx = self.grid().coords(buddy).0 - g.owner_row;
                         let mf = {
                             let (rtop, rbot) = if tree::is_top(g.idx, bidx) {
                                 (ph.r.as_ref(), peer.as_ref())
@@ -670,7 +785,7 @@ impl Ranker {
                             return Ok(Stepped::Parked);
                         }
                         Some(d) => {
-                            let peer = d.into_mat();
+                            let peer = d.into_mat_for(&tag);
                             let mf = self
                                 .shared
                                 .backend
@@ -689,18 +804,28 @@ impl Ranker {
     }
 
     /// Write the panel columns of the reduced matrix (the owner holds R;
-    /// everyone else's active panel rows are eliminated), then hand over
-    /// to the trailing update / checkpoint / completion.
-    fn after_tsqr(&mut self, ctx: &mut RankCtx, ph: TsqrPhase) -> Stage {
+    /// everyone else's active panel rows are eliminated), row-broadcast
+    /// the WY factors to the other grid columns (`Pc > 1`), then hand
+    /// over to the trailing update / checkpoint / completion.
+    fn after_tsqr(&mut self, ctx: &mut RankCtx, ph: TsqrPhase) -> Result<Stage, Fail> {
         let g = ph.g;
         let b = self.cfg().block;
         let mut panel_out = Matrix::zeros(g.active_m, b);
         if g.idx == 0 {
             panel_out.set_block(0, 0, ph.r.as_ref());
         }
-        self.local.set_block(g.start, g.k * b, &panel_out);
+        self.local.set_block(g.start, g.panel_lcol, &panel_out);
 
-        if g.n_trail > 0 {
+        // Row-broadcast: grid columns other than the panel's own hold
+        // `full_trail - n_trail` trailing columns between them; their
+        // members on this grid row need the leaf + merge factors to run
+        // the same update tree. (`Pc = 1`: full_trail == n_trail, no
+        // broadcast — bitwise and metrics identical to the 1-D path.)
+        if g.full_trail > g.n_trail {
+            self.bcast_factors(ctx, &g, &ph)?;
+        }
+
+        Ok(if g.n_trail > 0 {
             Stage::Update(UpdatePhase {
                 leaf_y: ph.leaf_y,
                 leaf_t: ph.leaf_t,
@@ -711,7 +836,134 @@ impl Ranker {
             })
         } else {
             self.after_update(ctx, g)
+        })
+    }
+
+    /// Publish (FT) or send (plain) the panel's WY factor bundle along
+    /// the grid row: `[leaf Y, leaf T]` then `(Y₁, T)` for every merge
+    /// slot this tree index holds — the layout both sides derive from
+    /// [`merge_slots`]. Runs synchronously at the end of the sender's
+    /// TSQR, with its own `Phase::Bcast` kill site *before* the publish
+    /// (a mid-row-broadcast death leaves every receiver parked until the
+    /// replacement's TSQR replay republishes).
+    fn bcast_factors(
+        &self,
+        ctx: &mut RankCtx,
+        g: &PanelGeom,
+        ph: &TsqrPhase,
+    ) -> Result<(), Fail> {
+        let site = FailSite { panel: g.k, step: 0, phase: Phase::Bcast };
+        self.maybe_fail(ctx, site)?;
+        let slots = merge_slots(self.cfg().algorithm, g.idx, g.q);
+        let mut mats: Vec<Arc<Matrix>> = Vec::with_capacity(2 + 2 * slots.len());
+        mats.push(Arc::new(ph.leaf_y.clone()));
+        mats.push(Arc::new(ph.leaf_t.clone()));
+        for &s in &slots {
+            let (y1, t) = ph.merges[s].clone().expect("merge slot filled (merge_slots)");
+            mats.push(y1);
+            mats.push(t);
         }
+        match self.cfg().algorithm {
+            Algorithm::FaultTolerant => {
+                crate::simlog!("[r{}] bcast publish panel {}", ctx.rank, g.k);
+                self.retain_bcast(ctx.rank, ctx.incarnation(), g.k, mats);
+            }
+            Algorithm::Plain => {
+                // Real row messages to exactly the grid-row peers that
+                // own trailing blocks this panel (a peer with none never
+                // posts a receive).
+                let grid = self.grid();
+                let (grow, _) = grid.coords(ctx.rank);
+                let tag =
+                    Tag::grid(TagKind::BcastFactors, g.k, 0, 0, g.panel_gcol as u32);
+                for gc in 0..grid.cols() {
+                    if gc == g.panel_gcol {
+                        continue;
+                    }
+                    let peer = grid.rank_at(grow, gc);
+                    if geometry(self.cfg(), peer, g.k).n_trail > 0 {
+                        self.send_plain(ctx, peer, tag, MsgData::Mats(mats.clone()))?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Enter the broadcast-wait stage: this rank is off the panel's grid
+    /// column but owns trailing blocks, so it needs the factors from its
+    /// grid row's panel-column member. The receiver has its own
+    /// `Phase::Bcast` kill site (dying here exercises recovery of a rank
+    /// that never entered the panel's communication at all).
+    fn begin_bcast(&self, ctx: &mut RankCtx, g: PanelGeom) -> Result<Stage, Fail> {
+        debug_assert!(!g.in_panel_col && g.n_trail > 0);
+        let site = FailSite { panel: g.k, step: 0, phase: Phase::Bcast };
+        self.maybe_fail(ctx, site)?;
+        let sender = self.grid().rank_at(g.owner_row + g.idx, g.panel_gcol);
+        let wait = match self.cfg().algorithm {
+            Algorithm::FaultTolerant => BcastWait::Store { sender },
+            Algorithm::Plain => BcastWait::Plain {
+                sender,
+                tag: Tag::grid(TagKind::BcastFactors, g.k, 0, 0, g.panel_gcol as u32),
+            },
+        };
+        Ok(Stage::Bcast(wait))
+    }
+
+    /// Poll the broadcast wait: a store pull (FT) or a plain receive.
+    fn step_bcast(
+        &self,
+        g: PanelGeom,
+        wait: BcastWait,
+        ctx: &mut RankCtx,
+        sp: &Spawner,
+    ) -> Result<BcastStep, Fail> {
+        match wait {
+            BcastWait::Store { sender } => match self.fetch_bcast(ctx, sp, sender, g.k)? {
+                Some(mats) => Ok(BcastStep::Got(mats)),
+                None => Ok(BcastStep::Parked(BcastWait::Store { sender })),
+            },
+            BcastWait::Plain { sender, tag } => {
+                match self.recv_plain_poll(ctx, sender, tag)? {
+                    Some(d) => Ok(BcastStep::Got(d.into_mats_for(&tag))),
+                    None => Ok(BcastStep::Parked(BcastWait::Plain { sender, tag })),
+                }
+            }
+        }
+    }
+
+    /// Enter the trailing update with factors received over the grid row
+    /// instead of computed locally — the receiving half of the
+    /// row-broadcast. The bundle layout is re-derived from
+    /// [`merge_slots`] with this rank's own (identical) tree index.
+    fn begin_update_from_bcast(&self, g: PanelGeom, mats: Vec<Arc<Matrix>>) -> Stage {
+        let nsteps = tree::steps(g.q);
+        let slots = merge_slots(self.cfg().algorithm, g.idx, g.q);
+        assert_eq!(
+            mats.len(),
+            2 + 2 * slots.len(),
+            "bcast bundle shape mismatch (panel {}, idx {}, q {})",
+            g.k,
+            g.idx,
+            g.q
+        );
+        let mut it = mats.into_iter();
+        let leaf_y = it.next().expect("leaf Y").as_ref().clone();
+        let leaf_t = it.next().expect("leaf T").as_ref().clone();
+        let mut merges = vec![None; nsteps];
+        for s in slots {
+            let y1 = it.next().expect("merge Y1");
+            let t = it.next().expect("merge T");
+            merges[s] = Some((y1, t));
+        }
+        Stage::Update(UpdatePhase {
+            leaf_y,
+            leaf_t,
+            merges,
+            todo: update_segments(self.cfg(), &g),
+            cur: None,
+            covered_end: g.trail_col,
+        })
     }
 
     /// Diskless-checkpoint baseline traffic (E7), if configured; else the
@@ -745,8 +997,11 @@ impl Ranker {
         {
             return Stage::Complete;
         }
-        let partner = g.owner + pidx;
-        let tag = Tag::new(TagKind::Checkpoint, g.k, 0);
+        // Checkpoint pairs run down each rank's OWN grid column (the
+        // snapshot is the rank's local block; only a same-column peer
+        // holds equally-shaped state). `Pc = 1`: rank owner + pidx.
+        let partner = self.grid().rank_at(g.owner_row + pidx, g.gcol);
+        let tag = Tag::grid(TagKind::Checkpoint, g.k, 0, 0, g.gcol as u32);
         // One snapshot copy into an Arc; the exchange's retransmit buffer
         // and the routed envelope share it instead of re-copying.
         let op = FtOp::new(partner, tag, MsgData::mat(self.local.clone()));
@@ -776,9 +1031,10 @@ impl Ranker {
                 };
                 // In-rank dataflow gate: the previous panel's update must
                 // have fully reached this segment's columns before panel
-                // `g.k`'s transform touches them.
-                let jlast = (col0 + ncols) / b - 1;
-                if i > 0 && !self.units[i - 1].covers_done(jlast, b) {
+                // `g.k`'s transform touches them. The gate compares
+                // *global* column blocks (covers_done converts back).
+                let jlast = self.grid().global_block((col0 + ncols) / b - 1, g.gcol);
+                if i > 0 && !self.units[i - 1].covers_done(jlast, self.grid(), b) {
                     return Ok(false);
                 }
                 // Segment prologue: leaf reflectors onto its columns,
@@ -787,9 +1043,14 @@ impl Ranker {
                 let mut cseg = self
                     .local
                     .block_padded(g.start, col0, g.active_m, ncols, m_local, ncols);
+                // Kernel dispatch pinned to the GLOBAL trailing width:
+                // every grid column takes the same code path regardless
+                // of how many columns it owns locally, so any `Pr x Pc`
+                // is bitwise-identical to `Pr x 1` (column-independent
+                // reflector application).
                 self.shared
                     .backend
-                    .leaf_apply_cols_into(&up.leaf_y, &up.leaf_t, &mut cseg, g.n_trail)
+                    .leaf_apply_cols_into(&up.leaf_y, &up.leaf_t, &mut cseg, g.full_trail)
                     .unwrap_or_else(|e| self.backend_err(ctx.rank, "leaf_apply", e));
                 ctx.compute(crate::backend::flops::leaf_apply(m_local, b, ncols));
                 self.local
@@ -843,8 +1104,12 @@ impl Ranker {
                     }
                     let site = FailSite { panel: g.k, step: s, phase: Phase::Update };
                     self.maybe_fail(ctx, site)?;
-                    let buddy = bidx + g.owner;
-                    let tag = Tag::with_lane(TagKind::UpdateC, g.k, s, seg.lane);
+                    // The update tree mirrors the TSQR pairing but runs
+                    // down this rank's OWN grid column; the tag carries
+                    // the grid column so same-(panel, step, lane) trees
+                    // in different columns never cross-talk.
+                    let buddy = self.grid().rank_at(g.owner_row + bidx, g.gcol);
+                    let tag = Tag::grid(TagKind::UpdateC, g.k, s, seg.lane, g.gcol as u32);
 
                     match self.cfg().algorithm {
                         Algorithm::FaultTolerant => {
@@ -864,6 +1129,7 @@ impl Ranker {
                                     Phase::Update,
                                     s,
                                     seg.lane,
+                                    g.gcol as u32,
                                 )? {
                                     Fetch::Hit(ret) => {
                                         self.recover_rows(
@@ -871,7 +1137,7 @@ impl Ranker {
                                             &mut seg.cp,
                                             role,
                                             &ret,
-                                            g.n_trail,
+                                            g.full_trail,
                                         );
                                         self.retain_update(
                                             ctx.rank,
@@ -919,7 +1185,13 @@ impl Ranker {
                                 self.send_plain(ctx, buddy, tag, MsgData::mat(cp))?;
                                 seg.wait = UpdateWait::PlainLowerW {
                                     buddy,
-                                    tag: Tag::with_lane(TagKind::UpdateW, g.k, s, seg.lane),
+                                    tag: Tag::grid(
+                                        TagKind::UpdateW,
+                                        g.k,
+                                        s,
+                                        seg.lane,
+                                        g.gcol as u32,
+                                    ),
                                 };
                                 *moved = true;
                             }
@@ -936,7 +1208,9 @@ impl Ranker {
                             // Peer rows are read-only for our half of the
                             // pair step: borrow them straight out of the
                             // message, update our rows in place.
-                            let peer_c = d.into_mat();
+                            let tag =
+                                Tag::grid(TagKind::UpdateC, g.k, seg.s, seg.lane, g.gcol as u32);
+                            let peer_c = d.into_mat_for(&tag);
                             let s = seg.s;
                             let w = self
                                 .shared
@@ -947,7 +1221,7 @@ impl Ranker {
                                     &y1,
                                     &t,
                                     role == Role::Upper,
-                                    g.n_trail,
+                                    g.full_trail,
                                 )
                                 .unwrap_or_else(|e| {
                                     self.backend_err(ctx.rank, "tree_update", e)
@@ -1005,7 +1279,7 @@ impl Ranker {
                                     &mut peer_c,
                                     &y1,
                                     &t,
-                                    g.n_trail,
+                                    g.full_trail,
                                 )
                                 .unwrap_or_else(|e| self.backend_err(ctx.rank, "tree_update", e));
                             ctx.compute(crate::backend::flops::tree_update(b, seg.ncols));
@@ -1015,7 +1289,7 @@ impl Ranker {
                             self.send_plain(
                                 ctx,
                                 buddy,
-                                Tag::with_lane(TagKind::UpdateW, g.k, s, seg.lane),
+                                Tag::grid(TagKind::UpdateW, g.k, s, seg.lane, g.gcol as u32),
                                 MsgData::mat(peer_c),
                             )?;
                             seg.s += 1;
@@ -1131,9 +1405,24 @@ impl CaqrJob {
             cfg.rows,
             cfg.cols
         );
+        // Scatter over the process grid: each rank's initial block is the
+        // compact (m_local x local_cols) gather of the tiles it owns —
+        // its grid row's row range crossed with its grid column's cyclic
+        // column blocks. `Pc = 1`: the historical contiguous block-row.
+        let grid = Grid::from_cfg(&cfg);
         let m_local = cfg.local_rows();
+        let b = cfg.block;
         let initial: Vec<Matrix> = (0..cfg.procs)
-            .map(|r| a.block(r * m_local, 0, m_local, cfg.cols))
+            .map(|r| {
+                let (gr, gc) = grid.coords(r);
+                let lcols = grid.local_cols(gc, cfg.cols, b);
+                let mut m = Matrix::zeros(m_local, lcols);
+                for lb in 0..lcols / b {
+                    let j = grid.global_block(lb, gc);
+                    m.set_block(0, lb * b, &a.block(gr * m_local, j * b, m_local, b));
+                }
+                m
+            })
             .collect();
 
         let world = World::new_with_stragglers(
@@ -1207,10 +1496,19 @@ impl CaqrJob {
             );
         }
 
-        // Assemble the reduced matrix [R; 0].
+        // Assemble the reduced matrix [R; 0]: scatter each rank's compact
+        // local blocks back to their global tile positions (the inverse
+        // of the prepare-time gather).
+        let grid = Grid::from_cfg(cfg);
+        let b = cfg.block;
         let mut reduced = Matrix::zeros(cfg.rows, cfg.cols);
         for r in 0..cfg.procs {
-            reduced.set_block(r * m_local, 0, &results[&r]);
+            let (gr, gc) = grid.coords(r);
+            let local = &results[&r];
+            for lb in 0..local.cols() / b {
+                let j = grid.global_block(lb, gc);
+                reduced.set_block(gr * m_local, j * b, &local.block(0, lb * b, m_local, b));
+            }
         }
         drop(results);
 
@@ -1282,4 +1580,66 @@ pub fn run_caqr_simple(cfg: RunConfig) -> Result<CaqrOutcome> {
 /// Default cost model re-export for binaries.
 pub fn default_cost() -> CostModel {
     CostModel::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The row-broadcast bundle layout is computed independently by the
+    /// sender (packing) and every receiver (unpacking); it must be a
+    /// pure function of (algorithm, tree index, tree size). Pin the
+    /// invariants the unpack side relies on: slots are strictly
+    /// increasing, every Upper/Lower reduce-tree step a receiver's
+    /// update tree will read is present, and no slot repeats.
+    #[test]
+    fn merge_slot_layout_covers_the_update_tree() {
+        for q in 1..=9usize {
+            for idx in 0..q {
+                for alg in [Algorithm::FaultTolerant, Algorithm::Plain] {
+                    let slots = merge_slots(alg, idx, q);
+                    assert!(
+                        slots.windows(2).all(|w| w[0] < w[1]),
+                        "slots must be sorted unique (alg {alg:?} idx {idx} q {q})"
+                    );
+                    for s in 0..tree::steps(q) {
+                        let needed = match alg {
+                            // The FT update tree walks every step where
+                            // the rank is an active reduce node with a
+                            // partner; plain only merges as Upper.
+                            Algorithm::FaultTolerant => {
+                                tree::reduce_active(idx, s)
+                                    && tree::exchange_pair(idx, s, q).is_some()
+                            }
+                            Algorithm::Plain => {
+                                tree::reduce_active(idx, s)
+                                    && tree::reduce_pair(idx, s, q).0 == Role::Upper
+                            }
+                        };
+                        assert_eq!(
+                            slots.contains(&s),
+                            needed,
+                            "slot {s} mismatch (alg {alg:?} idx {idx} q {q})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// FT slots are a superset of plain slots at every (idx, q): the
+    /// all-exchange tree merges on both sides of each pair, so a bundle
+    /// packed by an FT sender always carries what a plain receiver at
+    /// the same index would need.
+    #[test]
+    fn ft_slots_cover_plain_slots() {
+        for q in 1..=9usize {
+            for idx in 0..q {
+                let ft = merge_slots(Algorithm::FaultTolerant, idx, q);
+                for s in merge_slots(Algorithm::Plain, idx, q) {
+                    assert!(ft.contains(&s), "plain slot {s} missing from FT (idx {idx} q {q})");
+                }
+            }
+        }
+    }
 }

@@ -1,0 +1,254 @@
+//! Process-grid layout: the tile-ownership map and global↔local index
+//! algebra for 2-D block-cyclic CAQR.
+//!
+//! The `P = Pr x Pc` simulated world is arranged as a process grid in
+//! row-major rank order: rank `r` sits at grid coordinates
+//! `(r / Pc, r % Pc)`. The two matrix dimensions are distributed
+//! differently, matching Demmel/Grigori/Hoemmen/Langou's CAQR layout:
+//!
+//! - **Rows** are block-distributed over *grid rows*: grid row `gr` owns
+//!   the contiguous rows `[gr*m_local, (gr+1)*m_local)` with
+//!   `m_local = rows / Pr`. Every rank in a grid row therefore holds the
+//!   same global row range, which is what lets the trailing update run
+//!   the same reduction tree in every grid column with the same row
+//!   alignment as the panel column's TSQR.
+//! - **Columns** are block-cyclic over *grid columns*: the width-`b`
+//!   column block `j` is owned by grid column `j % Pc`, stored locally at
+//!   block index `j / Pc`. Cyclic ownership keeps late panels spread
+//!   across the grid instead of piling the trailing work onto whichever
+//!   column owns the right edge.
+//!
+//! `Pc = 1` collapses to the original 1-D block-row layout: rank == grid
+//! row, every rank owns every column block, and all index conversions
+//! are identities — the refactored coordinator is bitwise-identical to
+//! the pre-grid code there.
+
+use crate::config::RunConfig;
+
+/// A `Pr x Pc` process grid (row-major rank order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid {
+    pr: usize,
+    pc: usize,
+}
+
+impl Grid {
+    /// Build a `pr x pc` grid. Both extents must be >= 1.
+    pub fn new(pr: usize, pc: usize) -> Self {
+        assert!(pr >= 1 && pc >= 1, "grid extents must be >= 1 ({pr}x{pc})");
+        Grid { pr, pc }
+    }
+
+    /// The grid a run config describes (`cfg.grid_shape()`).
+    pub fn from_cfg(cfg: &RunConfig) -> Self {
+        let (pr, pc) = cfg.grid_shape();
+        Grid::new(pr, pc)
+    }
+
+    /// Grid rows `Pr`.
+    pub fn rows(&self) -> usize {
+        self.pr
+    }
+
+    /// Grid columns `Pc`.
+    pub fn cols(&self) -> usize {
+        self.pc
+    }
+
+    /// Total process count `Pr * Pc`.
+    pub fn size(&self) -> usize {
+        self.pr * self.pc
+    }
+
+    /// Rank at grid coordinates `(gr, gc)` (row-major).
+    pub fn rank_at(&self, gr: usize, gc: usize) -> usize {
+        debug_assert!(gr < self.pr && gc < self.pc, "({gr},{gc}) outside {self:?}");
+        gr * self.pc + gc
+    }
+
+    /// Grid coordinates `(gr, gc)` of `rank`.
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.size(), "rank {rank} outside {self:?}");
+        (rank / self.pc, rank % self.pc)
+    }
+
+    /// Grid column owning global column block `j` (block-cyclic).
+    pub fn col_owner(&self, j: usize) -> usize {
+        j % self.pc
+    }
+
+    /// Local block index of global column block `j` on its owner.
+    pub fn local_block(&self, j: usize) -> usize {
+        j / self.pc
+    }
+
+    /// Global column block stored at local block index `lb` on grid
+    /// column `gc` — the inverse of [`Grid::local_block`] restricted to
+    /// `gc`'s blocks.
+    pub fn global_block(&self, lb: usize, gc: usize) -> usize {
+        debug_assert!(gc < self.pc, "grid col {gc} outside {self:?}");
+        lb * self.pc + gc
+    }
+
+    /// Number of blocks among the global blocks `[0, nblocks)` owned by
+    /// grid column `gc`. Block-cyclic: counts differ by at most one
+    /// across grid columns.
+    pub fn blocks_before(&self, gc: usize, nblocks: usize) -> usize {
+        debug_assert!(gc < self.pc, "grid col {gc} outside {self:?}");
+        if gc >= nblocks {
+            0
+        } else {
+            (nblocks - gc).div_ceil(self.pc)
+        }
+    }
+
+    /// Total column blocks owned by grid column `gc` when the matrix has
+    /// `nblocks` column blocks.
+    pub fn local_blocks(&self, gc: usize, nblocks: usize) -> usize {
+        self.blocks_before(gc, nblocks)
+    }
+
+    /// Local column count (elements, not blocks) on grid column `gc`.
+    pub fn local_cols(&self, gc: usize, cols: usize, block: usize) -> usize {
+        self.local_blocks(gc, cols / block) * block
+    }
+
+    /// Grid row owning global matrix row `i` (block row distribution,
+    /// `m_local` rows per grid row).
+    pub fn row_owner(&self, i: usize, m_local: usize) -> usize {
+        i / m_local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adversarial (m, n, Pr, Pc, block) sweep shared by the ownership
+    /// properties: shapes are chosen so rows divide Pr and cols divide
+    /// block (the invariants `RunConfig::validate` enforces), but
+    /// otherwise stress tall/square grids, Pc > panel count, prime-ish
+    /// extents and single-block matrices.
+    fn shapes() -> Vec<(usize, usize, usize, usize, usize)> {
+        vec![
+            (256, 64, 4, 1, 16),  // the 1-D special case
+            (256, 64, 1, 4, 16),  // pure column grid
+            (256, 64, 2, 2, 16),  // square
+            (512, 96, 4, 2, 16),  // tall grid, 6 panels over 2 grid cols
+            (512, 96, 2, 3, 16),  // 6 panels over 3 grid cols
+            (384, 80, 3, 4, 16),  // 5 panels over 4 grid cols (uneven cyclic)
+            (128, 16, 8, 7, 8),   // Pc > panels: cols 16 / block 8 = 2 blocks, 7 grid cols
+            (64, 64, 1, 1, 64),   // single tile
+            (1024, 512, 16, 4, 32),
+            (960, 224, 5, 7, 16), // prime-ish grid extents, 14 panels
+        ]
+    }
+
+    #[test]
+    fn ownership_is_a_bijection_over_tiles() {
+        for (m, n, pr, pc, b) in shapes() {
+            let g = Grid::new(pr, pc);
+            let m_local = m / pr;
+            let (rtiles, ctiles) = (m / b, n / b);
+            // Every tile (ri, cj) maps to exactly one rank, and the
+            // per-rank tile sets partition the tile space.
+            let mut owned = vec![0usize; g.size()];
+            for ri in 0..rtiles {
+                for cj in 0..ctiles {
+                    let gr = g.row_owner(ri * b, m_local);
+                    let gc = g.col_owner(cj);
+                    let r = g.rank_at(gr, gc);
+                    assert!(r < g.size(), "{m}x{n} {pr}x{pc} b{b}: tile ({ri},{cj})");
+                    owned[r] += 1;
+                }
+            }
+            assert_eq!(
+                owned.iter().sum::<usize>(),
+                rtiles * ctiles,
+                "{m}x{n} {pr}x{pc} b{b}: tiles lost or double-counted"
+            );
+            // Per-rank count must equal the closed-form local extents.
+            for rank in 0..g.size() {
+                let (gr, gc) = g.coords(rank);
+                let want = (m_local / b) * g.local_blocks(gc, ctiles);
+                assert_eq!(owned[rank], want, "{m}x{n} {pr}x{pc} b{b}: rank {rank} (gr={gr})");
+            }
+        }
+    }
+
+    #[test]
+    fn global_local_round_trips() {
+        for (_m, n, pr, pc, b) in shapes() {
+            let g = Grid::new(pr, pc);
+            let nblocks = n / b;
+            for j in 0..nblocks {
+                let gc = g.col_owner(j);
+                let lb = g.local_block(j);
+                assert_eq!(g.global_block(lb, gc), j, "{pr}x{pc}: block {j}");
+                assert!(lb < g.local_blocks(gc, nblocks), "{pr}x{pc}: block {j}");
+                // blocks_before is consistent with local_block: block j is
+                // the (lb+1)-th block owned by gc among [0, j+1).
+                assert_eq!(g.blocks_before(gc, j + 1), lb + 1, "{pr}x{pc}: block {j}");
+            }
+            // And the local side round-trips back to distinct globals.
+            for gc in 0..pc {
+                for lb in 0..g.local_blocks(gc, nblocks) {
+                    let j = g.global_block(lb, gc);
+                    assert!(j < nblocks);
+                    assert_eq!(g.col_owner(j), gc);
+                    assert_eq!(g.local_block(j), lb);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cyclic_imbalance_is_at_most_one_tile() {
+        for (m, n, pr, pc, b) in shapes() {
+            let g = Grid::new(pr, pc);
+            let nblocks = n / b;
+            let counts: Vec<usize> =
+                (0..pc).map(|gc| g.local_blocks(gc, nblocks)).collect();
+            let (lo, hi) = (
+                *counts.iter().min().unwrap(),
+                *counts.iter().max().unwrap(),
+            );
+            assert!(
+                hi - lo <= 1,
+                "{m}x{n} {pr}x{pc} b{b}: column-tile imbalance {hi}-{lo} > 1"
+            );
+            assert_eq!(counts.iter().sum::<usize>(), nblocks);
+            // Rows are block-distributed exactly evenly, so the cyclic
+            // dimension is the only imbalance source.
+            assert_eq!(m % pr, 0);
+        }
+    }
+
+    #[test]
+    fn rank_coord_round_trip_row_major() {
+        for (_, _, pr, pc, _) in shapes() {
+            let g = Grid::new(pr, pc);
+            for rank in 0..g.size() {
+                let (gr, gc) = g.coords(rank);
+                assert_eq!(g.rank_at(gr, gc), rank);
+            }
+            // Row-major: grid row gr occupies the contiguous rank range
+            // [gr*Pc, (gr+1)*Pc) — with Pc = 1 rank == grid row, the 1-D
+            // compatibility anchor.
+            if pc == 1 {
+                for rank in 0..g.size() {
+                    assert_eq!(g.coords(rank), (rank, 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_cols_match_block_counts() {
+        for (_m, n, pr, pc, b) in shapes() {
+            let g = Grid::new(pr, pc);
+            let total: usize = (0..pc).map(|gc| g.local_cols(gc, n, b)).sum();
+            assert_eq!(total, n, "{pr}x{pc}: local columns must tile the matrix");
+        }
+    }
+}

@@ -3,7 +3,8 @@
 //! CAQR panel driver, and the single-buddy recovery protocol.
 //!
 //! Module map (paper section → code):
-//! * §III-A CAQR panel/update organization → [`caqr`], [`panel`]
+//! * §III-A CAQR panel/update organization → [`caqr`], [`panel`], with
+//!   the 2-D block-cyclic process-grid layout in [`grid`]
 //! * §III-B FT-TSQR all-exchange reduction  → [`tsqr`] (standalone) and
 //!   the TSQR phase inside [`caqr`]
 //! * §III-C Algorithms 1 & 2 + recovery     → [`caqr`], [`recovery`],
@@ -11,6 +12,7 @@
 //! * tree shapes shared by all of the above → [`tree`]
 
 pub mod caqr;
+pub mod grid;
 pub mod panel;
 pub mod recovery;
 pub mod store;
@@ -18,6 +20,7 @@ pub mod tree;
 pub mod tsqr;
 
 pub use caqr::{run_caqr, run_caqr_matrix, run_caqr_simple, CaqrOutcome, Shared};
+pub use grid::Grid;
 pub use panel::{geometry, PanelGeom};
 pub use store::{RecoveryStore, Retained, RevivalGate};
 pub use tsqr::{run_tsqr, run_tsqr_pooled, TsqrMode, TsqrOutcome};

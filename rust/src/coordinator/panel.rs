@@ -1,55 +1,98 @@
-//! Panel geometry for 1-D block-row CAQR.
+//! Panel geometry for block-cyclic CAQR on a `Pr x Pc` process grid.
 //!
-//! The global `rows x cols` matrix is distributed by block rows: rank `r`
-//! owns rows `[r*m_local, (r+1)*m_local)`. Panel `k` covers columns
-//! `[k*b, (k+1)*b)` and *active* rows `[k*b, rows)`; ranks whose rows lie
-//! entirely above the active region have retired from the computation.
+//! Rows are block-distributed over grid rows (grid row `gr` owns rows
+//! `[gr*m_local, (gr+1)*m_local)` with `m_local = rows / Pr`); width-`b`
+//! column blocks are block-cyclic over grid columns (block `j` lives on
+//! grid column `j % Pc`). Panel `k` covers columns `[k*b, (k+1)*b)` and
+//! *active* rows `[k*b, rows)`: its TSQR runs down grid column `k % Pc`
+//! over the grid rows at or below the diagonal, and every grid column
+//! runs the mirrored update tree over the same grid rows on its own
+//! local trailing columns. Grid rows whose rows lie entirely above the
+//! active region have retired from the computation.
+//!
+//! With `Pc = 1` (the default grid) every field collapses to the
+//! original 1-D block-row geometry: `owner == owner_row`, local column
+//! indices equal global ones, and `n_trail` is the full trailing width.
 
 use crate::config::RunConfig;
+use crate::coordinator::grid::Grid;
 
 /// Geometry of one panel iteration for one rank.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PanelGeom {
     /// Panel index.
     pub k: usize,
-    /// First participating rank (owns the diagonal block).
+    /// Rank holding the diagonal block (`rank_at(owner_row, panel_gcol)`).
     pub owner: usize,
-    /// Participant count (`procs - owner`).
+    /// First participating grid row (owns the diagonal rows).
+    pub owner_row: usize,
+    /// Participant count down a grid column (`Pr - owner_row`) — the
+    /// size of both the TSQR tree and every grid column's update tree.
     pub q: usize,
-    /// This rank's tree index (`rank - owner`); only valid when
+    /// This rank's tree index (`grid row - owner_row`); only valid when
     /// `participates`.
     pub idx: usize,
-    /// Whether this rank still holds active rows.
+    /// Whether this rank still holds active rows (its grid row is at or
+    /// below the diagonal).
     pub participates: bool,
+    /// This rank's grid column.
+    pub gcol: usize,
+    /// Grid column owning panel `k`'s column block (`k % Pc`).
+    pub panel_gcol: usize,
+    /// Whether this rank factorizes the panel (`gcol == panel_gcol`,
+    /// and `participates`).
+    pub in_panel_col: bool,
+    /// Local column of the panel block on the panel grid column
+    /// (`(k / Pc) * b`). Only meaningful when `in_panel_col`.
+    pub panel_lcol: usize,
     /// First active row within the local block.
     pub start: usize,
     /// Active row count within the local block.
     pub active_m: usize,
-    /// First trailing column (`(k+1)*b`).
+    /// First trailing column *in this rank's local column space*: local
+    /// columns at or beyond this belong to global blocks `> k`.
     pub trail_col: usize,
-    /// Trailing width (`cols - (k+1)*b`).
+    /// Local trailing width — columns of this rank's blocks with global
+    /// index `> k`. (`Pc = 1`: the full `cols - (k+1)*b`.)
     pub n_trail: usize,
+    /// Global trailing width (`cols - (k+1)*b`). Kernel dispatch is
+    /// pinned to this width on every grid column, so any `Pr x Pc`
+    /// produces factors bitwise-identical to `Pr x 1`.
+    pub full_trail: usize,
 }
 
 /// Compute panel `k`'s geometry for `rank` under `cfg`.
 pub fn geometry(cfg: &RunConfig, rank: usize, k: usize) -> PanelGeom {
     let b = cfg.block;
+    let grid = Grid::from_cfg(cfg);
     let m_local = cfg.local_rows();
+    let (grow, gcol) = grid.coords(rank);
     let diag_row = k * b;
-    let owner = diag_row / m_local;
-    let participates = rank >= owner;
-    let start = if rank == owner { diag_row - owner * m_local } else { 0 };
+    let owner_row = diag_row / m_local;
+    let panel_gcol = grid.col_owner(k);
+    let participates = grow >= owner_row;
+    let start = if grow == owner_row { diag_row - owner_row * m_local } else { 0 };
     let active_m = if participates { m_local - start } else { 0 };
+    let nblocks = cfg.panels();
+    // Local blocks with global index <= k owned by this grid column sit
+    // (compactly) before the trailing ones.
+    let lead_blocks = grid.blocks_before(gcol, k + 1);
     PanelGeom {
         k,
-        owner,
-        q: cfg.procs - owner,
-        idx: rank.saturating_sub(owner),
+        owner: grid.rank_at(owner_row, panel_gcol),
+        owner_row,
+        q: grid.rows() - owner_row,
+        idx: grow.saturating_sub(owner_row),
         participates,
+        gcol,
+        panel_gcol,
+        in_panel_col: participates && gcol == panel_gcol,
+        panel_lcol: grid.local_block(k) * b,
         start,
         active_m,
-        trail_col: (k + 1) * b,
-        n_trail: cfg.cols - (k + 1) * b,
+        trail_col: lead_blocks * b,
+        n_trail: (grid.local_blocks(gcol, nblocks) - lead_blocks) * b,
+        full_trail: cfg.cols - (k + 1) * b,
     }
 }
 
@@ -59,7 +102,7 @@ mod tests {
 
     fn cfg() -> RunConfig {
         RunConfig { rows: 512, cols: 128, block: 32, procs: 4, ..Default::default() }
-        // m_local = 128, panels = 4
+        // m_local = 128, panels = 4, default grid 4x1
     }
 
     #[test]
@@ -68,12 +111,15 @@ mod tests {
         for r in 0..4 {
             let g = geometry(&c, r, 0);
             assert!(g.participates);
+            assert!(g.in_panel_col);
             assert_eq!(g.owner, 0);
+            assert_eq!(g.owner_row, 0);
             assert_eq!(g.q, 4);
             assert_eq!(g.idx, r);
-            assert_eq!(g.start, if r == 0 { 0 } else { 0 });
+            assert_eq!(g.start, 0);
             assert_eq!(g.active_m, 128);
             assert_eq!(g.n_trail, 96);
+            assert_eq!(g.full_trail, 96);
         }
     }
 
@@ -85,6 +131,7 @@ mod tests {
         assert_eq!(g.owner, 0);
         assert_eq!(g.start, 32);
         assert_eq!(g.active_m, 96);
+        assert_eq!(g.panel_lcol, 32);
         // panel 3: diag row 96.
         let g3 = geometry(&c, 0, 3);
         assert_eq!(g3.start, 96);
@@ -126,6 +173,54 @@ mod tests {
                     assert_eq!(g.active_m % c.block, 0, "k={k} r={r}");
                     assert!(g.active_m >= c.block);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_geometry_2x2() {
+        // 2x2 grid: m_local = 256, 4 panels cycling over 2 grid cols.
+        let c = RunConfig {
+            rows: 512,
+            cols: 128,
+            block: 32,
+            procs: 4,
+            grid_rows: 2,
+            grid_cols: 2,
+            ..Default::default()
+        };
+        // Panel 0 lives on grid col 0; ranks 0 and 2 factorize it.
+        let g = geometry(&c, 0, 0);
+        assert!(g.in_panel_col);
+        assert_eq!((g.owner_row, g.q, g.idx), (0, 2, 0));
+        assert_eq!(g.panel_lcol, 0);
+        // Grid col 0 owns blocks {0, 2}: after panel 0 one trailing
+        // block remains locally, two globally beyond it.
+        assert_eq!((g.trail_col, g.n_trail, g.full_trail), (32, 32, 96));
+        // Rank 1 (grid col 1, blocks {1, 3}) receives the broadcast.
+        let g1 = geometry(&c, 1, 0);
+        assert!(g1.participates && !g1.in_panel_col);
+        assert_eq!(g1.panel_gcol, 0);
+        assert_eq!((g1.trail_col, g1.n_trail), (0, 64));
+        assert_eq!(g1.idx, 0);
+        // Panel 1 cycles to grid col 1; rank 3 is its lower tree member.
+        let g3 = geometry(&c, 3, 1);
+        assert!(g3.in_panel_col);
+        assert_eq!((g3.idx, g3.q), (1, 2));
+        assert_eq!(g3.panel_lcol, 0);
+        assert_eq!(g3.owner, 1);
+        // Grid col 1 owns {1, 3}: one local trailing block after panel 1.
+        assert_eq!((g3.trail_col, g3.n_trail, g3.full_trail), (32, 32, 64));
+    }
+
+    #[test]
+    fn px1_grid_matches_1d_fields() {
+        // Explicit Px1 grid must be field-for-field the 1-D geometry.
+        let c = cfg();
+        let c_grid = RunConfig { grid_rows: 4, grid_cols: 1, ..cfg() };
+        for k in 0..c.panels() {
+            for r in 0..c.procs {
+                assert_eq!(geometry(&c, r, k), geometry(&c_grid, r, k), "k={k} r={r}");
             }
         }
     }

@@ -35,6 +35,7 @@ use crate::linalg::Matrix;
 use crate::sim::{ExchangeOp, MsgData, RankCtx, Spawner, Tag, TagKind};
 
 use super::caqr::{Fetch, Ranker};
+use super::grid::Grid;
 use super::panel::PanelGeom;
 use super::store::Retained;
 use super::tree::Role;
@@ -251,11 +252,32 @@ impl Ranker {
         }
     }
 
+    /// The fully-attributed [`Fail::Unrecoverable`] for a lost-redundancy
+    /// site on this rank: grid coordinates plus the panel/step/lane of
+    /// the site whose retained copies are gone.
+    pub(crate) fn unrecoverable(
+        &self,
+        rank: usize,
+        panel: usize,
+        step: usize,
+        lane: u32,
+    ) -> Fail {
+        Fail::Unrecoverable {
+            rank,
+            grid: Grid::from_cfg(&self.shared.cfg).coords(rank),
+            panel,
+            step,
+            lane,
+        }
+    }
+
     /// Read a buddy's retained step data during replay, charging the
     /// simulated transfer (one message from one process — paper III-C).
     /// See the module docs for the three miss cases. `lane` is the
     /// update-segment lane of the lookahead pipeline (0 for TSQR steps
-    /// and the lockstep whole-width update).
+    /// and the lockstep whole-width update); `gcol` is the grid column
+    /// whose reduction tree the step belongs to (the live-exchange tags
+    /// are routed on it).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn fetch_retained(
         &self,
@@ -266,6 +288,7 @@ impl Ranker {
         phase: Phase,
         step: usize,
         lane: u32,
+        gcol: u32,
     ) -> Result<Fetch, Fail> {
         if let Some(ret) = self.shared.store.get(buddy, panel, phase, step, lane) {
             self.charge_fetch(ctx, buddy, panel, phase, step, &ret);
@@ -281,20 +304,22 @@ impl Ranker {
                     "[r{}] replay LOST ({buddy},{panel},{phase:?},{step}) -> unrecoverable",
                     ctx.rank
                 );
-                return Err(Fail::Unrecoverable { rank: ctx.rank });
+                return Err(self.unrecoverable(ctx.rank, panel, step, lane));
             }
             // The buddy never completed the step. If its (rebuilt) task
             // has already pushed us a live half for this step, join the
             // live exchange; otherwise wait for the buddy to either
             // retain the step or die trying.
-            let live_tag = Tag::with_lane(
+            let live_tag = Tag::grid(
                 match phase {
                     Phase::Tsqr => TagKind::TsqrR,
                     Phase::Update => TagKind::UpdateC,
+                    Phase::Bcast => unreachable!("bcast bundles are store-only"),
                 },
                 panel,
                 step,
                 lane,
+                gcol,
             );
             if ctx.has_pending(buddy, live_tag) {
                 crate::simlog!(
@@ -413,6 +438,68 @@ impl Ranker {
                 r_merged: r_merged.clone(),
             },
         );
+        self.shared.notify_store_watchers();
+    }
+
+    /// Pull the panel's row-broadcast factor bundle (FT mode, `Pc > 1`):
+    /// the same grid row's panel-column member published it after its
+    /// TSQR. `Ok(None)` parks the receiver — the sender either hasn't
+    /// published yet, or died and its replacement will republish during
+    /// its TSQR replay. There is no unrecoverable case here: unlike a
+    /// pair step's `{W, T, Y₁}`, the bundle is re-derivable from the
+    /// sender's own replay (whose step fetches have their own
+    /// unrecoverable check).
+    pub(crate) fn fetch_bcast(
+        &self,
+        ctx: &mut RankCtx,
+        sp: &Spawner,
+        sender: usize,
+        panel: usize,
+    ) -> Result<Option<Vec<Arc<Matrix>>>, Fail> {
+        if let Some(mats) = self.shared.store.get_bcast(sender, panel) {
+            self.charge_bcast(ctx, sender, panel, &mats);
+            return Ok(Some(mats));
+        }
+        if !self.shared.world.router().is_alive(sender) {
+            // Become the sender's detector so its replay can start;
+            // either way we park and re-check on the next wakeup.
+            let _revived_now = self.on_peer_failure(ctx, sp, sender)?;
+        }
+        self.shared.watch_store(ctx.rank);
+        // Close the insert/watch race: the sender may have published
+        // between our miss and the registration.
+        if let Some(mats) = self.shared.store.get_bcast(sender, panel) {
+            self.charge_bcast(ctx, sender, panel, &mats);
+            return Ok(Some(mats));
+        }
+        crate::simlog!("[r{}] bcast WAIT (panel {panel} from {sender})", ctx.rank);
+        Ok(None)
+    }
+
+    fn charge_bcast(
+        &self,
+        ctx: &mut RankCtx,
+        sender: usize,
+        panel: usize,
+        mats: &[Arc<Matrix>],
+    ) {
+        let bytes: usize = mats.iter().map(|m| m.nbytes()).sum();
+        ctx.charge_local_recv(bytes);
+        self.shared.trace.emit(ctx.clock, ctx.rank, panel, 0, "bcast_fetch", sender as f64);
+        crate::simlog!("[r{}] bcast hit (panel {panel} from {sender})", ctx.rank);
+    }
+
+    /// Publish the row-broadcast factor bundle for `panel` (FT mode; the
+    /// one-sided counterpart of the plain mode's real row messages) and
+    /// wake any grid-row peers parked on it.
+    pub(crate) fn retain_bcast(
+        &self,
+        rank: usize,
+        inc: u32,
+        panel: usize,
+        mats: Vec<Arc<Matrix>>,
+    ) {
+        self.shared.store.insert_bcast(rank, inc, panel, mats);
         self.shared.notify_store_watchers();
     }
 

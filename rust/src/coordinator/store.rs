@@ -101,6 +101,13 @@ pub struct RecoveryStore {
     /// with the process (the entry is rejected; the progress frontier is
     /// still advanced — the step really did complete before the crash).
     accept_from: Mutex<HashMap<usize, u32>>,
+    /// Row-broadcast factor bundles, keyed `(publisher rank, panel)`:
+    /// the panel grid column's `{leaf Y, leaf T, (Y₁, T) per merge step}`
+    /// that the same grid row's other columns pull to run their update
+    /// trees (2-D grids only). Like `entries`, a bundle lives in its
+    /// publisher's memory and dies with it — receivers then park until
+    /// the replacement's TSQR replay republishes it.
+    bcast: Mutex<HashMap<(usize, usize), Vec<Arc<Matrix>>>>,
 }
 
 /// Total order on one rank's sites *within one panel*, matching per-rank
@@ -111,6 +118,10 @@ pub struct RecoveryStore {
 fn panel_site_index(phase: Phase, step: usize, lane: u32) -> u64 {
     match phase {
         Phase::Tsqr => step as u64,
+        // The row-broadcast publish sits between the panel column's TSQR
+        // and every grid column's update lanes in per-rank execution
+        // order (`Pc = 1` grids never emit this site).
+        Phase::Bcast => 1u64 << 30,
         Phase::Update => (1u64 << 40) | ((lane as u64) << 20) | (step as u64 & 0xf_ffff),
     }
 }
@@ -156,6 +167,44 @@ impl RecoveryStore {
         let mut p = self.progress.lock().unwrap();
         let e = p.entry(owner).or_default().entry(panel).or_insert(0);
         *e = (*e).max(idx);
+    }
+
+    /// Publish rank `owner`'s row-broadcast factor bundle for `panel`
+    /// (the panel grid column's leaf + merge factors, pulled by the same
+    /// grid row's other columns). Incarnation-gated like
+    /// [`RecoveryStore::insert`]; also advances the publisher's frontier
+    /// past the `Phase::Bcast` site.
+    pub fn insert_bcast(&self, owner: usize, inc: u32, panel: usize, mats: Vec<Arc<Matrix>>) {
+        {
+            // Lock order everywhere: accept_from before entries/bcast.
+            let gate = self.accept_from.lock().unwrap();
+            let min = gate.get(&owner).copied().unwrap_or(0);
+            if inc >= min {
+                let sz: u64 = mats.iter().map(|m| m.nbytes() as u64).sum();
+                let mut g = self.bcast.lock().unwrap();
+                if let Some(old) = g.insert((owner, panel), mats) {
+                    let old_sz: u64 = old.iter().map(|m| m.nbytes() as u64).sum();
+                    self.bytes.fetch_sub(old_sz, Ordering::Relaxed);
+                }
+                let now = self.bytes.fetch_add(sz, Ordering::Relaxed) + sz;
+                self.peak_bytes.fetch_max(now, Ordering::Relaxed);
+            }
+        }
+        let idx = panel_site_index(Phase::Bcast, 0, 0);
+        let mut p = self.progress.lock().unwrap();
+        let e = p.entry(owner).or_default().entry(panel).or_insert(0);
+        *e = (*e).max(idx);
+    }
+
+    /// Read `owner`'s broadcast bundle for `panel`, if still retained.
+    /// Returns a clone of the `Arc` list; the caller charges the
+    /// simulated transfer.
+    pub fn get_bcast(&self, owner: usize, panel: usize) -> Option<Vec<Arc<Matrix>>> {
+        let out = self.bcast.lock().unwrap().get(&(owner, panel)).cloned();
+        if out.is_some() {
+            self.reads.fetch_add(1, Ordering::Relaxed);
+        }
+        out
     }
 
     /// Has `owner` (in any incarnation) ever completed the given step of
@@ -230,13 +279,25 @@ impl RecoveryStore {
         out
     }
 
-    /// A process died: its retained memory is lost with it.
+    /// A process died: its retained memory is lost with it — the step
+    /// entries *and* any broadcast bundles it had published.
     pub fn drop_owner(&self, owner: usize) {
-        let mut g = self.entries.lock().unwrap();
-        let dead: Vec<StepKey> = g.keys().filter(|k| k.0 == owner).cloned().collect();
+        {
+            let mut g = self.entries.lock().unwrap();
+            let dead: Vec<StepKey> = g.keys().filter(|k| k.0 == owner).cloned().collect();
+            for k in dead {
+                if let Some(old) = g.remove(&k) {
+                    self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        let mut g = self.bcast.lock().unwrap();
+        let dead: Vec<(usize, usize)> =
+            g.keys().filter(|k| k.0 == owner).cloned().collect();
         for k in dead {
             if let Some(old) = g.remove(&k) {
-                self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+                let sz: u64 = old.iter().map(|m| m.nbytes() as u64).sum();
+                self.bytes.fetch_sub(sz, Ordering::Relaxed);
             }
         }
     }
@@ -258,11 +319,22 @@ impl RecoveryStore {
     /// redundancy for them is no longer needed once a global checkpoint
     /// of R's rows exists). Keeps memory bounded in long runs.
     pub fn retire_before(&self, panel: usize) {
-        let mut g = self.entries.lock().unwrap();
-        let dead: Vec<StepKey> = g.keys().filter(|k| k.1 < panel).cloned().collect();
+        {
+            let mut g = self.entries.lock().unwrap();
+            let dead: Vec<StepKey> = g.keys().filter(|k| k.1 < panel).cloned().collect();
+            for k in dead {
+                if let Some(old) = g.remove(&k) {
+                    self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        let mut g = self.bcast.lock().unwrap();
+        let dead: Vec<(usize, usize)> =
+            g.keys().filter(|k| k.1 < panel).cloned().collect();
         for k in dead {
             if let Some(old) = g.remove(&k) {
-                self.bytes.fetch_sub(old.nbytes() as u64, Ordering::Relaxed);
+                let sz: u64 = old.iter().map(|m| m.nbytes() as u64).sum();
+                self.bytes.fetch_sub(sz, Ordering::Relaxed);
             }
         }
     }
@@ -448,6 +520,48 @@ mod tests {
         // The replacement (incarnation 1) retains normally.
         s.insert(2, 1, 0, Phase::Tsqr, 1, 0, retained(4));
         assert!(s.get(2, 0, Phase::Tsqr, 1, 0).is_some());
+    }
+
+    fn bundle() -> Vec<Arc<Matrix>> {
+        vec![Arc::new(Matrix::zeros(8, 4)), Arc::new(Matrix::zeros(4, 4))]
+    }
+
+    #[test]
+    fn bcast_bundle_roundtrip_and_death_wipe() {
+        let s = RecoveryStore::new();
+        assert!(s.get_bcast(1, 0).is_none());
+        s.insert_bcast(1, 0, 0, bundle());
+        let got = s.get_bcast(1, 0).expect("published bundle readable");
+        assert_eq!(got.len(), 2);
+        assert!(s.current_bytes() > 0);
+        assert_eq!(s.reads(), 1);
+        // The publish advances the frontier past the bcast site: after
+        // TSQR, before any update lane.
+        assert!(s.has_completed(1, 0, Phase::Bcast, 0, 0));
+        assert!(s.has_completed(1, 0, Phase::Tsqr, 9, 0), "tsqr sites covered");
+        assert!(!s.has_completed(1, 0, Phase::Update, 0, 1), "update sites not");
+        // Death wipes the bundle (it lived in the publisher's memory)…
+        s.drop_owner_dead(1, 0);
+        assert!(s.get_bcast(1, 0).is_none());
+        assert_eq!(s.current_bytes(), 0);
+        // …and rejects a straggling republish from the dead incarnation,
+        // while the replacement's republish lands.
+        s.insert_bcast(1, 0, 0, bundle());
+        assert!(s.get_bcast(1, 0).is_none(), "stale publish resurrected");
+        s.insert_bcast(1, 1, 0, bundle());
+        assert!(s.get_bcast(1, 0).is_some());
+    }
+
+    #[test]
+    fn bcast_bundles_retire_with_their_panel() {
+        let s = RecoveryStore::new();
+        s.insert_bcast(0, 0, 0, bundle());
+        s.insert_bcast(0, 0, 2, bundle());
+        let per = s.current_bytes() / 2;
+        s.retire_before(1);
+        assert!(s.get_bcast(0, 0).is_none());
+        assert!(s.get_bcast(0, 2).is_some());
+        assert_eq!(s.current_bytes(), per);
     }
 
     #[test]

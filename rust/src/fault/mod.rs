@@ -41,6 +41,11 @@ pub struct FailSite {
 pub enum Phase {
     /// Panel factorization (TSQR reduction tree).
     Tsqr,
+    /// Row-broadcast of the panel's WY factors across the process grid
+    /// (between the TSQR and the trailing update; a no-op on `Px1`
+    /// grids). Senders fail before publishing the factor bundle,
+    /// receivers before consuming it.
+    Bcast,
     /// Trailing-matrix update tree.
     Update,
 }
@@ -107,6 +112,7 @@ impl ScheduledKill {
     pub fn label(&self) -> String {
         let phase = match self.site.phase {
             Phase::Tsqr => "tsqr",
+            Phase::Bcast => "bcast",
             Phase::Update => "update",
         };
         let mut s = format!("{}@{}:{}:{}", self.rank, self.site.panel, self.site.step, phase);
@@ -120,7 +126,7 @@ impl ScheduledKill {
     }
 }
 
-/// Parse `panel:step[:tsqr|update[:incarnation]]`.
+/// Parse `panel:step[:tsqr|bcast|update[:incarnation]]`.
 fn parse_site(spec: &str, rest: &str) -> Result<(usize, usize, Phase, Option<u32>)> {
     let mut it = rest.split(':');
     let panel = it
@@ -135,7 +141,10 @@ fn parse_site(spec: &str, rest: &str) -> Result<(usize, usize, Phase, Option<u32
     let phase = match it.next() {
         None | Some("update") => Phase::Update,
         Some("tsqr") => Phase::Tsqr,
-        Some(other) => bail!("kill spec '{spec}': unknown phase '{other}' (tsqr|update)"),
+        Some("bcast") => Phase::Bcast,
+        Some(other) => {
+            bail!("kill spec '{spec}': unknown phase '{other}' (tsqr|bcast|update)")
+        }
     };
     let incarnation = it.next().map(str::parse).transpose()?;
     if it.next().is_some() {
@@ -640,6 +649,9 @@ mod tests {
 
     #[test]
     fn kill_label_round_trips() {
+        let kb = ScheduledKill::new(3, 2, 0, Phase::Bcast);
+        assert_eq!(kb.label(), "3@2:0:bcast");
+        assert_eq!(ScheduledKill::parse(&kb.label()).unwrap(), kb);
         let k = ScheduledKill::new(2, 1, 0, Phase::Tsqr);
         assert_eq!(k.label(), "2@1:0:tsqr");
         assert_eq!(ScheduledKill::parse(&k.label()).unwrap(), k);

@@ -81,6 +81,16 @@ pub enum Fail {
     Unrecoverable {
         /// The rank whose state can no longer be reconstructed.
         rank: usize,
+        /// Process-grid coordinates `(row, col)` of `rank`, so a
+        /// multi-panel grid failure is attributable from the error
+        /// alone.
+        grid: (usize, usize),
+        /// Panel whose retained redundancy was lost.
+        panel: usize,
+        /// Tree step within the panel.
+        step: usize,
+        /// Update-segment lane (0 for TSQR / whole-width traffic).
+        lane: u32,
     },
 }
 
@@ -93,8 +103,13 @@ impl std::fmt::Display for Fail {
             Fail::WorldGone => write!(f, "world shut down"),
             Fail::Stalled => write!(f, "scheduler stall: every live task parked"),
             Fail::TaskPanicked => write!(f, "rank task panicked (infrastructure bug)"),
-            Fail::Unrecoverable { rank } => {
-                write!(f, "rank {rank} unrecoverable: buddy redundancy lost")
+            Fail::Unrecoverable { rank, grid, panel, step, lane } => {
+                write!(
+                    f,
+                    "rank {rank} (grid {},{}) unrecoverable: buddy redundancy \
+                     lost at panel {panel} step {step} lane {lane}",
+                    grid.0, grid.1
+                )
             }
         }
     }
@@ -122,5 +137,15 @@ mod tests {
     #[test]
     fn fail_display() {
         assert_eq!(Fail::RankFailed { rank: 3 }.to_string(), "rank 3 failed");
+        let u = Fail::Unrecoverable {
+            rank: 5,
+            grid: (1, 2),
+            panel: 3,
+            step: 1,
+            lane: 4,
+        };
+        let s = u.to_string();
+        assert!(s.contains("grid 1,2"), "{s}");
+        assert!(s.contains("panel 3 step 1 lane 4"), "{s}");
     }
 }

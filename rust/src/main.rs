@@ -74,10 +74,10 @@ ftcaqr — fault-tolerant communication-avoiding QR (Coti 2016)
 
 USAGE:
   ftcaqr run  [--config f.kv] [--rows N] [--cols N] [--block B] [--procs P]
-              [--workers W] [--par T] [--algorithm ft|plain]
+              [--grid PrxPc] [--workers W] [--par T] [--algorithm ft|plain]
               [--semantics rebuild|abort|shrink|blank]
               [--backend native|xla] [--artifacts DIR]
-              [--kill rank@panel:step[:tsqr|update[:incarnation]]]...
+              [--kill rank@panel:step[:tsqr|update|bcast[:incarnation]]]...
               [--kill-pair a,b@panel:step[:phase]]...
               [--straggler rank:factor]...
               [--checkpoint-every K|auto] [--lookahead L] [--seed S]
@@ -85,7 +85,7 @@ USAGE:
   ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W] [--par T]
               [--mode ft|plain] [--seed S]
   ftcaqr serve --jobs FILE [--workers W] [--max-ranks R] [--batch K]
-  ftcaqr campaign [--rows N] [--cols N] [--block B]
+  ftcaqr campaign [--rows N] [--cols N] [--block B] [--grid PrxPc]
               [--procs P1,P2,...] [--mtbf M1,M2,...]
               [--checkpoint K1,K2,auto,...] [--hazard poisson|weibull]
               [--shape K] [--node-width W] [--trials T] [--seed S]
@@ -96,6 +96,11 @@ P is the number of simulated ranks (hundreds are fine: ranks are pooled
 tasks, not OS threads); W bounds the worker pool (0 = core count); T
 splits large GEMMs across T kernel threads (default 1 — leave serial
 when the worker pool already owns the cores).
+--grid PrxPc arranges the P ranks as a 2-D process grid (rows
+block-distributed over grid rows, column blocks cyclic over grid
+columns); Pr*Pc must equal P. Default Px1 — the 1-D layout, bitwise
+identical to omitting the flag. Any shape passes the same Gram check,
+and a Pr x Pc run's factors are bitwise identical to Pr x 1.
 Repeat --kill for k independent failures; --kill ...:1 aims at the first
 REBUILD replacement (failure during recovery); --kill-pair crashes both
 ranks at once — on a retention pair this is reported as unrecoverable.
@@ -134,6 +139,11 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     cfg.cols = flags.num("cols", cfg.cols)?;
     cfg.block = flags.num("block", cfg.block)?;
     cfg.procs = flags.num("procs", cfg.procs)?;
+    if let Some(gspec) = flags.get("grid") {
+        let (pr, pc) = ftcaqr::config::parse_grid(gspec)?;
+        cfg.grid_rows = pr;
+        cfg.grid_cols = pc;
+    }
     cfg.workers = flags.num("workers", cfg.workers)?;
     cfg.par = flags.num("par", cfg.par)?;
     cfg.seed = flags.num("seed", cfg.seed)?;
@@ -175,9 +185,11 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     let out = run_caqr(cfg.clone(), be, fault, trace.clone())?;
 
     println!("== ftcaqr run ==");
+    let (gpr, gpc) = cfg.grid_shape();
     println!(
-        "matrix {}x{}  block {}  procs {}  algorithm {}  lookahead {}  backend {}",
-        cfg.rows, cfg.cols, cfg.block, cfg.procs, cfg.algorithm, cfg.lookahead, backend_kind
+        "matrix {}x{}  block {}  procs {} (grid {}x{})  algorithm {}  lookahead {}  backend {}",
+        cfg.rows, cfg.cols, cfg.block, cfg.procs, gpr, gpc, cfg.algorithm, cfg.lookahead,
+        backend_kind
     );
     println!("metrics: {}", out.report);
     println!("store peak bytes: {}", out.store_peak_bytes);
@@ -306,12 +318,20 @@ where
 fn cmd_campaign(flags: &Flags) -> Result<()> {
     let base = {
         let d = RunConfig::default();
-        RunConfig {
+        let mut b = RunConfig {
             rows: flags.num("rows", d.rows)?,
             cols: flags.num("cols", d.cols)?,
             block: flags.num("block", d.block)?,
             ..d
+        };
+        // Cells whose proc count does not match Pr*Pc fall back to the
+        // auto (procs x 1) grid — see campaign::cell_cfg.
+        if let Some(gspec) = flags.get("grid") {
+            let (pr, pc) = ftcaqr::config::parse_grid(gspec)?;
+            b.grid_rows = pr;
+            b.grid_cols = pc;
         }
+        b
     };
     let hazard = match flags.get("hazard").unwrap_or("poisson") {
         "poisson" => Hazard::Poisson,

@@ -671,6 +671,11 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
                     "cols" => cfg.cols = v.parse()?,
                     "block" => cfg.block = v.parse()?,
                     "procs" => cfg.procs = v.parse()?,
+                    "grid" => {
+                        let (pr, pc) = crate::config::parse_grid(v)?;
+                        cfg.grid_rows = pr;
+                        cfg.grid_cols = pc;
+                    }
                     "seed" => cfg.seed = v.parse()?,
                     "verify" => cfg.verify = v.parse()?,
                     "checkpoint-every" => {
@@ -765,6 +770,16 @@ mod tests {
         let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
         assert_eq!(cfg.lookahead, 2);
         assert!(parse_job_line("caqr lookahead=deep").is_err());
+    }
+
+    #[test]
+    fn job_line_parses_grid() {
+        let spec =
+            parse_job_line("caqr rows=256 cols=64 block=16 procs=4 grid=2x2").unwrap();
+        let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
+        assert_eq!((cfg.grid_rows, cfg.grid_cols), (2, 2));
+        assert_eq!(cfg.grid_shape(), (2, 2));
+        assert!(parse_job_line("caqr procs=4 grid=3").is_err(), "PrxPc shape required");
     }
 
     #[test]

@@ -38,6 +38,9 @@ pub enum TagKind {
     Gather,
     /// Checkpointing traffic (diskless-checkpoint baseline).
     Checkpoint,
+    /// Row-broadcast of a panel's WY factor bundle across a process-grid
+    /// row (plain mode; FT mode publishes the bundle via the store).
+    BcastFactors,
     /// Anything else (tests).
     Misc(u16),
 }
@@ -58,22 +61,45 @@ pub struct Tag {
     /// Sub-phase lane: 0 for whole-width traffic (plain lockstep mode),
     /// the global column-block index for a pipelined update segment.
     pub lane: u32,
+    /// Process-grid column the traffic belongs to: the grid column a
+    /// column-reduction (TSQR / update tree / checkpoint pair) runs in,
+    /// or the panel's grid column for a row-broadcast. Always 0 on `Px1`
+    /// grids, so the 1-D path is unchanged. Part of the exact match key:
+    /// same-(panel, step, lane) reductions in different grid columns can
+    /// never cross-talk.
+    pub gcol: u32,
 }
 
 impl Tag {
-    /// Tag on the default lane 0 (whole-width traffic).
+    /// Tag on the default lane 0 (whole-width traffic), grid column 0.
     pub fn new(kind: TagKind, panel: usize, step: usize) -> Self {
         Self::with_lane(kind, panel, step, 0)
     }
 
-    /// Tag on an explicit lane (a pipelined update segment's traffic).
+    /// Tag on an explicit lane (a pipelined update segment's traffic),
+    /// grid column 0.
     pub fn with_lane(kind: TagKind, panel: usize, step: usize, lane: u32) -> Self {
-        Self { kind, panel: panel as u32, step: step as u32, lane }
+        Self::grid(kind, panel, step, lane, 0)
+    }
+
+    /// Fully-qualified tag: lane plus process-grid column.
+    pub fn grid(kind: TagKind, panel: usize, step: usize, lane: u32, gcol: u32) -> Self {
+        Self { kind, panel: panel as u32, step: step as u32, lane, gcol }
     }
 
     /// Tag with no panel/step context.
     pub fn plain(kind: TagKind) -> Self {
         Self::new(kind, 0, 0)
+    }
+
+    /// Routing context for payload-mismatch panics: every coordinate a
+    /// multi-panel grid failure needs to be attributable from the error
+    /// alone.
+    fn context(&self) -> String {
+        format!(
+            "{:?} panel {} step {} lane {} grid col {}",
+            self.kind, self.panel, self.step, self.lane, self.gcol
+        )
     }
 }
 
@@ -126,6 +152,47 @@ impl MsgData {
             MsgData::Mats(mut v) if v.len() == 1 => v.pop().expect("len checked"),
             other => panic!(
                 "expected Mat payload (a single matrix), got {}",
+                other.describe()
+            ),
+        }
+    }
+
+    /// [`MsgData::into_mat`] with routing context: the panic names the
+    /// tag's panel/step/lane/grid-column alongside the payload shapes.
+    pub fn into_mat_for(self, tag: &Tag) -> Arc<Matrix> {
+        match self {
+            MsgData::Mat(m) => m,
+            MsgData::Mats(mut v) if v.len() == 1 => v.pop().expect("len checked"),
+            other => panic!(
+                "expected Mat payload (a single matrix) for {}, got {}",
+                tag.context(),
+                other.describe()
+            ),
+        }
+    }
+
+    /// [`MsgData::into_mats`] with routing context (see
+    /// [`MsgData::into_mat_for`]).
+    pub fn into_mats_for(self, tag: &Tag) -> Vec<Arc<Matrix>> {
+        match self {
+            MsgData::Mat(m) => vec![m],
+            MsgData::Mats(v) => v,
+            other => panic!(
+                "expected Mats payload (a bundle) for {}, got {}",
+                tag.context(),
+                other.describe()
+            ),
+        }
+    }
+
+    /// [`MsgData::into_ctrl`] with routing context (see
+    /// [`MsgData::into_mat_for`]).
+    pub fn into_ctrl_for(self, tag: &Tag) -> u64 {
+        match self {
+            MsgData::Ctrl(c) => c,
+            other => panic!(
+                "expected Ctrl payload for {}, got {}",
+                tag.context(),
                 other.describe()
             ),
         }
@@ -245,5 +312,28 @@ mod tests {
     fn msgdata_bundle_unwrap_reports_shapes() {
         let v = vec![Arc::new(Matrix::eye(2)), Arc::new(Matrix::eye(4))];
         MsgData::Mats(v).into_mat();
+    }
+
+    #[test]
+    fn grid_column_is_part_of_the_match_key() {
+        let a = Tag::grid(TagKind::UpdateC, 1, 0, 2, 0);
+        let b = Tag::grid(TagKind::UpdateC, 1, 0, 2, 1);
+        assert_ne!(a, b, "same reduction in two grid columns must not cross-talk");
+        assert_eq!(Tag::with_lane(TagKind::UpdateC, 1, 0, 2), a);
+        assert_eq!(Tag::new(TagKind::TsqrR, 1, 2).gcol, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "panel 3 step 1 lane 7 grid col 2")]
+    fn msgdata_mismatch_panic_names_lane_and_grid() {
+        let tag = Tag::grid(TagKind::UpdateC, 3, 1, 7, 2);
+        MsgData::Ctrl(1).into_mat_for(&tag);
+    }
+
+    #[test]
+    #[should_panic(expected = "grid col 1")]
+    fn msgdata_ctrl_mismatch_panic_names_grid() {
+        let tag = Tag::grid(TagKind::Checkpoint, 0, 0, 0, 1);
+        MsgData::mat(Matrix::eye(2)).into_ctrl_for(&tag);
     }
 }

@@ -1,0 +1,210 @@
+//! Integration: the 2-D block-cyclic process grid. Pins the layout
+//! contract (an explicit Pr x 1 grid is the 1-D path, to the bit, and a
+//! Pr x Pc grid reproduces the Pr x 1 factors exactly — the TSQR tree
+//! only depends on Pr), exercises grid-aware buddy recovery under
+//! single kills, correlated cross-column kills, and kills landing mid
+//! row-broadcast on both the sender and the receiver side, and checks
+//! that the lookahead pipeline and the plain algorithm compose with
+//! grid layouts.
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::coordinator::run_caqr_matrix;
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
+use ftcaqr::ft::Semantics;
+use ftcaqr::linalg::Matrix;
+use ftcaqr::trace::Trace;
+
+fn cfg(procs: usize, pr: usize, pc: usize) -> RunConfig {
+    RunConfig {
+        rows: 256,
+        cols: 64,
+        block: 16,
+        procs,
+        grid_rows: pr,
+        grid_cols: pc,
+        algorithm: Algorithm::FaultTolerant,
+        semantics: Semantics::Rebuild,
+        ..Default::default()
+    }
+}
+
+fn run_with(
+    c: &RunConfig,
+    a: &Matrix,
+    fault: std::sync::Arc<FaultPlan>,
+) -> anyhow::Result<ftcaqr::coordinator::CaqrOutcome> {
+    run_caqr_matrix(c.clone(), a.clone(), Backend::native(), fault, Trace::disabled())
+}
+
+#[test]
+fn explicit_px1_grid_is_bitwise_the_1d_path() {
+    // grid_rows/grid_cols (0, 0) is the auto procs x 1 layout — the
+    // pre-grid 1-D code path. Spelling it out as an explicit P x 1 grid
+    // must change nothing, to the bit, clean and under a kill.
+    let auto = cfg(4, 0, 0);
+    let explicit = cfg(4, 4, 1);
+    let a = Matrix::randn(auto.rows, auto.cols, 71);
+    for fault in [
+        FaultPlan::none(),
+        FaultPlan::schedule(vec![ScheduledKill::new(2, 1, 0, Phase::Update)]),
+    ] {
+        let base = run_with(&auto, &a, fault.clone()).unwrap();
+        let gridded = run_with(&explicit, &a, fault).unwrap();
+        assert_eq!(base.r, gridded.r);
+        assert_eq!(base.reduced, gridded.reduced);
+    }
+}
+
+#[test]
+fn cross_pc_factors_match_at_fixed_pr() {
+    // The TSQR reduction tree runs down a grid column of Pr ranks, and
+    // trailing-update kernel dispatch is pinned to the global trailing
+    // width — so widening the grid from 2 x 1 (2 procs) to 2 x 2
+    // (4 procs) redistributes the columns without perturbing a single
+    // flop. The factors must be bitwise identical.
+    let narrow = cfg(2, 2, 1);
+    let wide = cfg(4, 2, 2);
+    let a = Matrix::randn(narrow.rows, narrow.cols, 73);
+    let n = run_with(&narrow, &a, FaultPlan::none()).unwrap();
+    let w = run_with(&wide, &a, FaultPlan::none()).unwrap();
+    assert_eq!(n.r, w.r);
+    assert_eq!(n.reduced, w.reduced);
+}
+
+#[test]
+fn grid_2x2_single_kill_recovers_bitwise() {
+    // One rank dies mid-update on a 2 x 2 grid; its replacement is
+    // rebuilt from its single column-buddy and the result is bitwise
+    // the clean run.
+    let c = cfg(4, 2, 2);
+    let a = Matrix::randn(c.rows, c.cols, 79);
+    let clean = run_with(&c, &a, FaultPlan::none()).unwrap();
+    let failed = run_with(
+        &c,
+        &a,
+        FaultPlan::schedule(vec![ScheduledKill::new(3, 1, 0, Phase::Update)]),
+    )
+    .unwrap();
+    assert_eq!(failed.report.failures, 1);
+    assert_eq!(failed.report.recoveries, 1);
+    assert_eq!(clean.r, failed.r);
+    assert_eq!(clean.reduced, failed.reduced);
+}
+
+#[test]
+fn grid_2x2_kill_mid_row_broadcast_sender_side() {
+    // Panel 0 lives in grid column 0; rank 0 factors it and then
+    // broadcasts {Y, T} along its grid row. Kill rank 0 at the Bcast
+    // site — after TSQR completes, before the bundle is published. The
+    // off-column receiver (rank 1) must park on the missing bundle, the
+    // replacement's TSQR replay must republish it, and the run must
+    // finish bitwise identical to the clean one.
+    let c = cfg(4, 2, 2);
+    let a = Matrix::randn(c.rows, c.cols, 83);
+    let clean = run_with(&c, &a, FaultPlan::none()).unwrap();
+    let failed = run_with(
+        &c,
+        &a,
+        FaultPlan::schedule(vec![ScheduledKill::new(0, 0, 0, Phase::Bcast)]),
+    )
+    .unwrap();
+    assert_eq!(failed.report.failures, 1);
+    assert_eq!(failed.report.recoveries, 1);
+    assert_eq!(clean.r, failed.r);
+    assert_eq!(clean.reduced, failed.reduced);
+}
+
+#[test]
+fn grid_2x2_kill_mid_row_broadcast_receiver_side() {
+    // The dual: an off-panel-column rank dies at its own Bcast site
+    // while waiting for the factor bundle. Its replacement re-enters
+    // the wait, pulls the (by now retained) bundle, and completes.
+    let c = cfg(4, 2, 2);
+    let a = Matrix::randn(c.rows, c.cols, 89);
+    let clean = run_with(&c, &a, FaultPlan::none()).unwrap();
+    let failed = run_with(
+        &c,
+        &a,
+        FaultPlan::schedule(vec![ScheduledKill::new(1, 0, 0, Phase::Bcast)]),
+    )
+    .unwrap();
+    assert_eq!(failed.report.failures, 1);
+    assert_eq!(failed.report.recoveries, 1);
+    assert_eq!(clean.r, failed.r);
+    assert_eq!(clean.reduced, failed.reduced);
+}
+
+#[test]
+fn grid_4x4_survives_correlated_multi_failure() {
+    // A 4 x 4 grid under a compound plan: two independent kills in
+    // different panels/phases plus a correlated same-instant crash of
+    // two ranks in the SAME grid row. Row neighbors are never buddy
+    // pairs — retention runs down grid columns — so every loss still
+    // has one surviving copy and the run must complete with a clean
+    // Gram residual.
+    let procs = 16;
+    let c = RunConfig {
+        rows: 256,
+        cols: 64,
+        block: 16,
+        procs,
+        grid_rows: 4,
+        grid_cols: 4,
+        algorithm: Algorithm::FaultTolerant,
+        semantics: Semantics::Rebuild,
+        ..Default::default()
+    };
+    let a = Matrix::randn(c.rows, c.cols, 97);
+    let clean = run_with(&c, &a, FaultPlan::none()).unwrap();
+    let mut kills = vec![
+        ScheduledKill::new(10, 0, 0, Phase::Update),
+        ScheduledKill::new(3, 2, 0, Phase::Bcast),
+    ];
+    // Ranks 6 = (1,2) and 7 = (1,3) both own trailing blocks of panel 1
+    // (grid columns 2 and 3 hold global blocks 2 and 3), so both are in
+    // their update phase when the correlated crash lands.
+    kills.extend(ftcaqr::fault::parse_kill_pair("6,7@1:0:update", 0).unwrap());
+    let failed = run_with(&c, &a, FaultPlan::schedule(kills)).unwrap();
+    assert_eq!(failed.report.failures, 4);
+    assert_eq!(failed.report.recoveries, 4);
+    assert_eq!(clean.r, failed.r);
+    assert_eq!(clean.reduced, failed.reduced);
+    let res = failed.residual.expect("verify on");
+    assert!(res < 1e-3, "residual {res}");
+}
+
+#[test]
+fn lookahead_composes_with_grid() {
+    // The lookahead pipeline's bitwise contract must hold per grid
+    // shape: on a 2 x 2 grid, L = 2 with a mid-run kill reproduces the
+    // lockstep factors exactly.
+    let mut lockstep = cfg(4, 2, 2);
+    lockstep.lookahead = 0;
+    let mut deep = lockstep.clone();
+    deep.lookahead = 2;
+    let a = Matrix::randn(lockstep.rows, lockstep.cols, 101);
+    let fault = || FaultPlan::schedule(vec![ScheduledKill::new(2, 1, 0, Phase::Update)]);
+    let l0 = run_with(&lockstep, &a, fault()).unwrap();
+    let l2 = run_with(&deep, &a, fault()).unwrap();
+    assert_eq!(l0.r, l2.r);
+    assert_eq!(l0.reduced, l2.reduced);
+}
+
+#[test]
+fn plain_algorithm_runs_on_2d_grid() {
+    // The non-FT baseline uses real row-broadcast messages instead of
+    // the retention store; it must produce a valid factorization on a
+    // 2-D grid and match its own 1-D layout bitwise.
+    let mut narrow = cfg(2, 2, 1);
+    narrow.algorithm = Algorithm::Plain;
+    let mut wide = cfg(4, 2, 2);
+    wide.algorithm = Algorithm::Plain;
+    let a = Matrix::randn(narrow.rows, narrow.cols, 103);
+    let n = run_with(&narrow, &a, FaultPlan::none()).unwrap();
+    let w = run_with(&wide, &a, FaultPlan::none()).unwrap();
+    assert_eq!(n.r, w.r);
+    assert_eq!(n.reduced, w.reduced);
+    let res = w.residual.expect("verify on");
+    assert!(res < 1e-3, "residual {res}");
+}
