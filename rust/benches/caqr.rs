@@ -17,7 +17,11 @@ use ftcaqr::linalg::Matrix;
 use ftcaqr::runtime::Engine;
 use ftcaqr::trace::Trace;
 
-fn bench_backend(name: &str, be: impl Fn() -> Arc<Backend>) {
+/// Per shape: plain vs FT (failure-free FT overhead % on the simulated
+/// makespan) and, on the FT config, tracing on vs off (wall-clock cost
+/// of recording spans). Gates the observability contract: tracing must
+/// leave both the factors and the simulated makespan bitwise unchanged.
+fn bench_backend(name: &str, be: impl Fn() -> Arc<Backend>, sink: &mut common::JsonSink) {
     println!(
         "{:>8} {:>5} {:>11} | {:>12} {:>12} {:>14}",
         "backend", "P", "matrix", "wall (ms)", "cp (us)", "host GFLOP/s"
@@ -28,20 +32,28 @@ fn bench_backend(name: &str, be: impl Fn() -> Arc<Backend>) {
         &[(4, 512, 128), (8, 1024, 256), (8, 1024, 512)]
     };
     for &(procs, rows, cols) in shapes {
-        for alg in [Algorithm::Plain, Algorithm::FaultTolerant] {
-            let cfg = RunConfig {
-                rows,
-                cols,
-                block: 32,
-                procs,
-                algorithm: alg,
-                verify: false,
-                ..Default::default()
-            };
+        let mk_cfg = |alg| RunConfig {
+            rows,
+            cols,
+            block: 32,
+            procs,
+            algorithm: alg,
+            verify: false,
+            ..Default::default()
+        };
+        let mut cp = [0.0f64; 2]; // [plain, ft] simulated makespan
+        let mut ft_wall = 0.0f64;
+        let mut ft_r: Option<Matrix> = None;
+        for (i, alg) in [Algorithm::Plain, Algorithm::FaultTolerant].into_iter().enumerate() {
             let backend = be();
             let (out, wall) = common::wall(|| {
-                run_caqr(cfg, backend, FaultPlan::none(), Trace::disabled()).unwrap()
+                run_caqr(mk_cfg(alg), backend, FaultPlan::none(), Trace::disabled()).unwrap()
             });
+            cp[i] = out.report.critical_path;
+            if alg == Algorithm::FaultTolerant {
+                ft_wall = wall;
+                ft_r = Some(out.r);
+            }
             println!(
                 "{:>8} {procs:>5} {:>11} | {:>12.2} {:>12.3} {:>14.2}",
                 format!("{name}/{alg:?}").chars().take(8).collect::<String>(),
@@ -51,6 +63,43 @@ fn bench_backend(name: &str, be: impl Fn() -> Arc<Backend>) {
                 out.backend_flops as f64 / 1e9 / wall,
             );
         }
+        // Same FT run with span recording enabled: observability must be
+        // invisible to both the numerics and the simulated clock.
+        let trace = Trace::new();
+        let backend = be();
+        let (traced, traced_wall) = common::wall(|| {
+            run_caqr(mk_cfg(Algorithm::FaultTolerant), backend, FaultPlan::none(), trace).unwrap()
+        });
+        assert_eq!(
+            ft_r.as_ref().unwrap(),
+            &traced.r,
+            "tracing changed the factors ({rows}x{cols} P={procs} {name})"
+        );
+        assert_eq!(
+            cp[1], traced.report.critical_path,
+            "tracing changed the simulated makespan ({rows}x{cols} P={procs} {name})"
+        );
+        let ft_overhead_pct = (cp[1] / cp[0] - 1.0) * 100.0;
+        let trace_overhead_pct = (traced_wall / ft_wall - 1.0) * 100.0;
+        println!(
+            "{:>8} {procs:>5} {:>11} | FT overhead {ft_overhead_pct:+.2}% (makespan), \
+             tracing {trace_overhead_pct:+.2}% (wall)",
+            format!("{name}/ovh").chars().take(8).collect::<String>(),
+            format!("{rows}x{cols}"),
+        );
+        sink.rec(&[
+            ("bench", JsonVal::S("caqr_overhead")),
+            ("backend", JsonVal::S(name)),
+            ("rows", JsonVal::I(rows as i64)),
+            ("cols", JsonVal::I(cols as i64)),
+            ("procs", JsonVal::I(procs as i64)),
+            ("plain_makespan_s", JsonVal::F(cp[0])),
+            ("ft_makespan_s", JsonVal::F(cp[1])),
+            ("ft_overhead_pct", JsonVal::F(ft_overhead_pct)),
+            ("ft_wall_s", JsonVal::F(ft_wall)),
+            ("traced_wall_s", JsonVal::F(traced_wall)),
+            ("trace_wall_overhead_pct", JsonVal::F(trace_overhead_pct)),
+        ]);
     }
 }
 
@@ -254,8 +303,9 @@ fn bench_grid(sink: &mut common::JsonSink) {
 }
 
 fn main() {
+    let mut sink = common::JsonSink::new();
     common::header("E6: end-to-end CAQR (native backend)");
-    bench_backend("nat", Backend::native);
+    bench_backend("nat", Backend::native, &mut sink);
 
     if common::artifacts_present() {
         common::header("E6: end-to-end CAQR (XLA backend, AOT JAX/Pallas artifacts)");
@@ -263,7 +313,7 @@ fn main() {
             std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
         )
         .unwrap();
-        bench_backend("xla", move || Backend::xla(engine.clone()));
+        bench_backend("xla", move || Backend::xla(engine.clone()), &mut sink);
     } else {
         println!("(artifacts/ missing — skipping XLA rows; run `make artifacts`)");
     }
@@ -283,7 +333,6 @@ fn main() {
     });
     common::row("caqr/ft/P8", med, mean, sd, "");
 
-    let mut sink = common::JsonSink::new();
     bench_lookahead(&mut sink);
     bench_grid(&mut sink);
     sink.finish("caqr");

@@ -35,6 +35,7 @@ use crate::config::RunConfig;
 use crate::coordinator::run_caqr;
 use crate::fault::{FaultPlan, FaultSpec, Hazard, ScheduledKill, StochasticSpec};
 use crate::metrics::json::{JsonSink, JsonVal};
+use crate::metrics::Report;
 use crate::service::seed_for;
 use crate::trace::Trace;
 
@@ -144,6 +145,18 @@ pub struct TrialResult {
     pub failures: u64,
     /// Recoveries completed (0 when it died).
     pub recoveries: u64,
+    /// Failure detections (revival claims) in the trial.
+    pub detects: u64,
+    /// Summed time-to-detect over the trial's detections, seconds.
+    pub detect_s: f64,
+    /// REBUILD replacements that finished replaying.
+    pub rebuilds: u64,
+    /// Summed time-to-rebuild over the trial's rebuilds, seconds.
+    pub rebuild_s: f64,
+    /// Retention-store bytes high-water for the trial.
+    pub store_peak_bytes: u64,
+    /// Checkpoint payload bytes exchanged in the trial.
+    pub checkpoint_bytes: u64,
     /// Why the trial did not survive, when it didn't.
     pub error: Option<String>,
 }
@@ -190,6 +203,24 @@ pub struct CellResult {
     pub expected_makespan: f64,
     /// The cell's failure-free reference makespan.
     pub clean_makespan: f64,
+    /// Expected-vs-clean makespan overhead, percent (NaN if no
+    /// survivors): the cost of the cell's failures plus recoveries on
+    /// top of the failure-free reference.
+    pub overhead_pct: f64,
+    /// Failure detections across surviving trials.
+    pub detects: u64,
+    /// Mean time-to-detect across surviving trials, seconds (NaN if no
+    /// detections).
+    pub detect_s_mean: f64,
+    /// REBUILD replacements completed across surviving trials.
+    pub rebuilds: u64,
+    /// Mean time-to-rebuild across surviving trials, seconds (NaN if no
+    /// rebuilds).
+    pub rebuild_s_mean: f64,
+    /// Max retention-store high-water over surviving trials, bytes.
+    pub store_peak_bytes: u64,
+    /// Total checkpoint payload bytes over surviving trials.
+    pub checkpoint_bytes: u64,
 }
 
 /// Everything a campaign produced.
@@ -282,28 +313,33 @@ fn run_indexed<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F
         .collect()
 }
 
+/// One trial's measured outcome: survival, makespan, the run's full
+/// metrics [`Report`], and the reason it died when it did.
+struct TrialRun {
+    survived: bool,
+    makespan: f64,
+    report: Report,
+    error: Option<String>,
+}
+
 /// Run one seeded trial under a pre-materialized kill schedule.
-fn run_trial(
-    cfg: RunConfig,
-    kills: Vec<ScheduledKill>,
-) -> (bool, f64, u64, u64, Option<String>) {
+fn run_trial(cfg: RunConfig, kills: Vec<ScheduledKill>) -> TrialRun {
     let fault = FaultPlan::new(FaultSpec::Schedule { kills });
     match run_caqr(cfg, Backend::native(), fault, Trace::disabled()) {
         Ok(out) => {
             let makespan = out.report.critical_path;
-            let (failures, recoveries) = (out.report.failures, out.report.recoveries);
-            match out.residual {
-                Some(r) if r >= RESIDUAL_TOL => (
-                    false,
-                    makespan,
-                    failures,
-                    recoveries,
-                    Some(format!("bad residual {r:e}")),
-                ),
-                _ => (true, makespan, failures, recoveries, None),
-            }
+            let (survived, error) = match out.residual {
+                Some(r) if r >= RESIDUAL_TOL => (false, Some(format!("bad residual {r:e}"))),
+                _ => (true, None),
+            };
+            TrialRun { survived, makespan, report: out.report, error }
         }
-        Err(e) => (false, f64::NAN, 0, 0, Some(format!("{e:#}"))),
+        Err(e) => TrialRun {
+            survived: false,
+            makespan: f64::NAN,
+            report: Report::default(),
+            error: Some(format!("{e:#}")),
+        },
     }
 }
 
@@ -396,9 +432,9 @@ pub fn run_campaign(c: &CampaignConfig) -> Result<CampaignOutcome> {
     let keys: Vec<(usize, usize)> = baseline_keys.into_iter().collect();
     let measured: Vec<f64> = run_indexed(keys.len(), jobs, |i| {
         let (procs, interval) = keys[i];
-        let (_, makespan, _, _, err) = run_trial(cell_cfg(c, procs, interval), Vec::new());
-        debug_assert!(err.is_none(), "failure-free baseline died: {err:?}");
-        makespan
+        let run = run_trial(cell_cfg(c, procs, interval), Vec::new());
+        debug_assert!(run.error.is_none(), "failure-free baseline died: {:?}", run.error);
+        run.makespan
     });
     let clean0: BTreeMap<usize, f64> = keys
         .iter()
@@ -426,8 +462,7 @@ pub fn run_campaign(c: &CampaignConfig) -> Result<CampaignOutcome> {
             let (matrix_seed, fault_seed) = (*matrix_seed, *fault_seed);
             let mut cfg = cell_cfg(c, pair.procs, cell.interval);
             cfg.seed = matrix_seed;
-            let (survived, makespan, failures, recoveries, error) =
-                run_trial(cfg, kills.clone());
+            let run = run_trial(cfg, kills.clone());
             TrialResult {
                 mtbf_panels: pair.mtbf,
                 procs: pair.procs,
@@ -437,11 +472,17 @@ pub fn run_campaign(c: &CampaignConfig) -> Result<CampaignOutcome> {
                 matrix_seed,
                 fault_seed,
                 kills: kills.clone(),
-                survived,
-                makespan,
-                failures,
-                recoveries,
-                error,
+                survived: run.survived,
+                makespan: run.makespan,
+                failures: run.report.failures,
+                recoveries: run.report.recoveries,
+                detects: run.report.detects,
+                detect_s: run.report.detect_s_total,
+                rebuilds: run.report.rebuilds,
+                rebuild_s: run.report.rebuild_s_total,
+                store_peak_bytes: run.report.store_peak_bytes,
+                checkpoint_bytes: run.report.checkpoint_bytes,
+                error: run.error,
             }
         });
 
@@ -456,6 +497,16 @@ pub fn run_campaign(c: &CampaignConfig) -> Result<CampaignOutcome> {
         } else {
             survivors.iter().map(|t| t.makespan).sum::<f64>() / survivors.len() as f64
         };
+        let clean_makespan = baseline_by_key[&(pair.procs, cell.interval)];
+        let overhead_pct = if expected_makespan.is_finite() && clean_makespan > 0.0 {
+            (expected_makespan / clean_makespan - 1.0) * 100.0
+        } else {
+            f64::NAN
+        };
+        let detects: u64 = survivors.iter().map(|t| t.detects).sum();
+        let detect_s: f64 = survivors.iter().map(|t| t.detect_s).sum();
+        let rebuilds: u64 = survivors.iter().map(|t| t.rebuilds).sum();
+        let rebuild_s: f64 = survivors.iter().map(|t| t.rebuild_s).sum();
         cell_results.push(CellResult {
             mtbf_panels: pair.mtbf,
             procs: pair.procs,
@@ -467,7 +518,14 @@ pub fn run_campaign(c: &CampaignConfig) -> Result<CampaignOutcome> {
             failures: survivors.iter().map(|t| t.failures).sum(),
             recoveries: survivors.iter().map(|t| t.recoveries).sum(),
             expected_makespan,
-            clean_makespan: baseline_by_key[&(pair.procs, cell.interval)],
+            clean_makespan,
+            overhead_pct,
+            detects,
+            detect_s_mean: if detects == 0 { f64::NAN } else { detect_s / detects as f64 },
+            rebuilds,
+            rebuild_s_mean: if rebuilds == 0 { f64::NAN } else { rebuild_s / rebuilds as f64 },
+            store_peak_bytes: survivors.iter().map(|t| t.store_peak_bytes).max().unwrap_or(0),
+            checkpoint_bytes: survivors.iter().map(|t| t.checkpoint_bytes).sum(),
         });
     }
 
@@ -504,7 +562,7 @@ impl CampaignOutcome {
     pub fn emit(&self, c: &CampaignConfig, sink: &mut JsonSink) {
         sink.rec(&[
             ("record", JsonVal::S("meta")),
-            ("schema", JsonVal::I(1)),
+            ("schema", JsonVal::I(2)),
             ("seed", JsonVal::S(&c.seed.to_string())),
             ("hazard", JsonVal::S(&c.hazard.label())),
             ("node_width", JsonVal::I(c.node_width as i64)),
@@ -543,6 +601,13 @@ impl CampaignOutcome {
                 ("recoveries", JsonVal::I(cell.recoveries as i64)),
                 ("expected_makespan", JsonVal::F(cell.expected_makespan)),
                 ("clean_makespan", JsonVal::F(cell.clean_makespan)),
+                ("overhead_pct", JsonVal::F(cell.overhead_pct)),
+                ("detects", JsonVal::I(cell.detects as i64)),
+                ("detect_s_mean", JsonVal::F(cell.detect_s_mean)),
+                ("rebuilds", JsonVal::I(cell.rebuilds as i64)),
+                ("rebuild_s_mean", JsonVal::F(cell.rebuild_s_mean)),
+                ("store_peak_bytes", JsonVal::I(cell.store_peak_bytes as i64)),
+                ("checkpoint_bytes", JsonVal::I(cell.checkpoint_bytes as i64)),
             ]);
         }
         for t in &self.trials {
@@ -562,6 +627,12 @@ impl CampaignOutcome {
                 ("makespan", JsonVal::F(t.makespan)),
                 ("failures", JsonVal::I(t.failures as i64)),
                 ("recoveries", JsonVal::I(t.recoveries as i64)),
+                ("detects", JsonVal::I(t.detects as i64)),
+                ("detect_s", JsonVal::F(t.detect_s)),
+                ("rebuilds", JsonVal::I(t.rebuilds as i64)),
+                ("rebuild_s", JsonVal::F(t.rebuild_s)),
+                ("store_peak_bytes", JsonVal::I(t.store_peak_bytes as i64)),
+                ("checkpoint_bytes", JsonVal::I(t.checkpoint_bytes as i64)),
                 ("error", JsonVal::S(&err)),
             ]);
         }

@@ -42,11 +42,11 @@ use crate::config::{Algorithm, RunConfig};
 use crate::fault::{FailSite, FaultPlan, Phase};
 use crate::ft::Fail;
 use crate::linalg::{gram_residual, Matrix};
-use crate::metrics::Report;
+use crate::metrics::{PhasePath, Report};
 use crate::sim::{
     CostModel, MsgData, RankCtx, RankTask, Spawner, Stragglers, Tag, TagKind, TaskPoll, World,
 };
-use crate::trace::Trace;
+use crate::trace::{Span, SpanKind, Trace};
 
 use super::grid::Grid;
 use super::panel::{geometry, PanelGeom};
@@ -146,6 +146,8 @@ pub(crate) struct TsqrPhase {
     merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
     s: usize,
     wait: TsqrWait,
+    /// Clock at phase entry — the begin timestamp of the PanelTsqr span.
+    t0: f64,
 }
 
 enum TsqrWait {
@@ -172,6 +174,8 @@ pub(crate) struct SegRun {
     cp: Matrix,
     s: usize,
     wait: UpdateWait,
+    /// Clock at segment entry — the begin timestamp of its span.
+    t0: f64,
 }
 
 enum UpdateWait {
@@ -213,18 +217,20 @@ enum BcastWait {
     Plain { sender: usize, tag: Tag },
 }
 
-/// Pipeline stage of one in-flight panel on one rank.
+/// Pipeline stage of one in-flight panel on one rank. The `f64` riding
+/// with the waiting stages is the stage-entry clock — the begin
+/// timestamp of the span emitted when the stage completes.
 enum Stage {
     /// Panel factorization tree in progress (panel grid column only).
     Tsqr(TsqrPhase),
     /// Waiting for the panel column's factors along the grid row
     /// (off-panel-column ranks with local trailing blocks).
-    Bcast(BcastWait),
+    Bcast(BcastWait, f64),
     /// Trailing update draining segment by segment.
     Update(UpdatePhase),
     /// Diskless-checkpoint exchange in flight (always the oldest unit —
     /// checkpoints are admission barriers).
-    Checkpoint(FtOp),
+    Checkpoint(FtOp, f64),
     /// All of this panel's work on this rank is done.
     Complete,
 }
@@ -247,8 +253,8 @@ impl Unit {
     /// (`Pc = 1`: the identity, bitwise the 1-D gate).
     fn covers_done(&self, jblock: usize, grid: Grid, b: usize) -> bool {
         match &self.stage {
-            Stage::Complete | Stage::Checkpoint(_) => true,
-            Stage::Tsqr(_) | Stage::Bcast(_) => false,
+            Stage::Complete | Stage::Checkpoint(..) => true,
+            Stage::Tsqr(_) | Stage::Bcast(..) => false,
             Stage::Update(up) => {
                 up.covered_end >= grid.blocks_before(self.g.gcol, jblock + 1) * b
             }
@@ -344,6 +350,9 @@ pub(crate) struct Ranker {
     next_k: usize,
     /// Completion latch (drive must not run after finish).
     done: bool,
+    /// A REBUILD replacement's first-poll clock — the begin timestamp of
+    /// its RecoveryReplay span and the origin of its rebuild latency.
+    replay_t0: Option<f64>,
 }
 
 impl RankTask for Ranker {
@@ -378,6 +387,7 @@ impl Ranker {
             units: std::collections::VecDeque::new(),
             next_k: 0,
             done: false,
+            replay_t0: None,
         }
     }
 
@@ -389,6 +399,53 @@ impl Ranker {
         Grid::from_cfg(&self.shared.cfg)
     }
 
+    /// Record one completed span ending at the current clock and charge
+    /// its duration to the matching per-phase busy-time bucket. The span
+    /// write is one lock-free ring push (nothing when tracing is off);
+    /// the phase charge is one atomic CAS — neither touches the
+    /// simulated clock, so tracing cannot perturb the schedule.
+    pub(crate) fn emit_span(
+        &self,
+        ctx: &RankCtx,
+        kind: SpanKind,
+        t0: f64,
+        panel: usize,
+        lane: usize,
+        value: f64,
+    ) {
+        let t1 = ctx.clock;
+        let phase = match kind {
+            SpanKind::PanelTsqr => Some(PhasePath::Tsqr),
+            SpanKind::BcastFactors => Some(PhasePath::Bcast),
+            SpanKind::UpdateSegment => Some(PhasePath::Update),
+            SpanKind::CheckpointWrite => Some(PhasePath::Checkpoint),
+            SpanKind::RecoveryDetect | SpanKind::RecoveryFetch => Some(PhasePath::Recovery),
+            // The replay span covers the replacement's whole life — its
+            // replayed TSQR/update work already lands in those buckets,
+            // and its wall time is the rebuild latency metric.
+            SpanKind::RecoveryReplay => None,
+        };
+        if let Some(p) = phase {
+            ctx.metrics.record_phase(p, (t1 - t0).max(0.0));
+        }
+        if self.shared.trace.is_enabled() {
+            let (gr, gc) = self.grid().coords(ctx.rank);
+            self.shared.trace.span(Span {
+                kind,
+                t0,
+                t1,
+                rank: ctx.rank,
+                inc: ctx.incarnation(),
+                panel,
+                lane,
+                gr,
+                gc,
+                recovery: self.resume || kind.is_recovery(),
+                value,
+            });
+        }
+    }
+
     /// Run the dataflow engine forward as far as possible: retire
     /// completed panels, admit new ones while the pipeline has room, and
     /// advance every in-flight unit (oldest first) until a full pass
@@ -396,6 +453,9 @@ impl Ranker {
     /// parked (every runnable sub-machine is waiting on a message).
     fn drive(&mut self, ctx: &mut RankCtx, sp: &Spawner) -> Result<bool, Fail> {
         assert!(!self.done, "drive called after completion");
+        if self.resume && self.replay_t0.is_none() {
+            self.replay_t0 = Some(ctx.clock);
+        }
         loop {
             let mut progressed = false;
             self.retire_front();
@@ -504,13 +564,23 @@ impl Ranker {
                 Stepped::Parked => Stage::Tsqr(ph),
                 Stepped::Finished => {
                     moved = true;
+                    self.emit_span(
+                        ctx,
+                        SpanKind::PanelTsqr,
+                        ph.t0,
+                        g.k,
+                        0,
+                        tree::steps(g.q) as f64,
+                    );
                     self.after_tsqr(ctx, ph)?
                 }
             },
-            Stage::Bcast(wait) => match self.step_bcast(g, wait, ctx, sp)? {
-                BcastStep::Parked(w) => Stage::Bcast(w),
+            Stage::Bcast(wait, t0) => match self.step_bcast(g, wait, ctx, sp)? {
+                BcastStep::Parked(w) => Stage::Bcast(w, t0),
                 BcastStep::Got(mats) => {
                     moved = true;
+                    // Receiver side: value 1 (the sender publish is 0).
+                    self.emit_span(ctx, SpanKind::BcastFactors, t0, g.k, 0, 1.0);
                     self.begin_update_from_bcast(g, mats)
                 }
             },
@@ -522,15 +592,15 @@ impl Ranker {
                     Stage::Update(up)
                 }
             }
-            Stage::Checkpoint(mut op) => {
+            Stage::Checkpoint(mut op, t0) => {
                 if i != 0 {
                     // Older panels are still unpopped; the checkpoint
                     // pairs within a quiesced pipeline — wait for the
                     // front to retire (next engine pass).
-                    Stage::Checkpoint(op)
+                    Stage::Checkpoint(op, t0)
                 } else {
                     match self.poll_ft(&mut op, ctx, sp)? {
-                        None => Stage::Checkpoint(op),
+                        None => Stage::Checkpoint(op, t0),
                         Some(_peer_copy) => {
                             moved = true;
                             // Runtime metadata: lets a replacement of a
@@ -538,6 +608,8 @@ impl Ranker {
                             // it instead of re-pairing with a partner
                             // that has moved on.
                             self.shared.store.note_checkpoint(ctx.rank, g.k);
+                            let bytes = op.payload_nbytes();
+                            ctx.metrics.record_checkpoint(bytes);
                             self.shared.trace.emit(
                                 ctx.clock,
                                 ctx.rank,
@@ -545,6 +617,14 @@ impl Ranker {
                                 0,
                                 "checkpoint",
                                 op.peer() as f64,
+                            );
+                            self.emit_span(
+                                ctx,
+                                SpanKind::CheckpointWrite,
+                                t0,
+                                g.k,
+                                0,
+                                bytes as f64,
                             );
                             Stage::Complete
                         }
@@ -560,7 +640,29 @@ impl Ranker {
     fn finish(&mut self, ctx: &mut RankCtx) {
         if self.resume {
             ctx.metrics.record_recovery();
-            self.shared.trace.emit(ctx.clock, ctx.rank, 0, 0, "recovery_done", 0.0);
+            // Attributed completion: the last panel this replacement
+            // worked (panel field), its incarnation (step field), and
+            // the spawn-to-finish replay time as the rebuild latency.
+            let t0 = self.replay_t0.unwrap_or(ctx.clock);
+            let rebuild_s = (ctx.clock - t0).max(0.0);
+            ctx.metrics.record_rebuild(rebuild_s);
+            let panel = self.next_k.saturating_sub(1);
+            self.shared.trace.emit(
+                ctx.clock,
+                ctx.rank,
+                panel,
+                ctx.incarnation() as usize,
+                "recovery_done",
+                rebuild_s,
+            );
+            self.emit_span(
+                ctx,
+                SpanKind::RecoveryReplay,
+                t0,
+                panel,
+                0,
+                ctx.incarnation() as f64,
+            );
         }
         crate::simlog!("[r{}] done", ctx.rank);
         // The task is done with its block — move it out instead of
@@ -575,6 +677,7 @@ impl Ranker {
     /// `g.panel_lcol` of the compact block-cyclic storage.
     fn begin_tsqr(&self, ctx: &mut RankCtx, g: PanelGeom) -> TsqrPhase {
         debug_assert!(g.in_panel_col);
+        let t0 = ctx.clock;
         let b = self.cfg().block;
         let m_local = self.cfg().local_rows();
         let apanel =
@@ -594,6 +697,7 @@ impl Ranker {
             merges: vec![None; nsteps],
             s: 0,
             wait: TsqrWait::Enter,
+            t0,
         }
     }
 
@@ -822,7 +926,10 @@ impl Ranker {
         // the same update tree. (`Pc = 1`: full_trail == n_trail, no
         // broadcast — bitwise and metrics identical to the 1-D path.)
         if g.full_trail > g.n_trail {
+            let bt0 = ctx.clock;
             self.bcast_factors(ctx, &g, &ph)?;
+            // Sender side: value 0 (the receiver pull is 1).
+            self.emit_span(ctx, SpanKind::BcastFactors, bt0, g.k, 0, 0.0);
         }
 
         Ok(if g.n_trail > 0 {
@@ -907,7 +1014,7 @@ impl Ranker {
                 tag: Tag::grid(TagKind::BcastFactors, g.k, 0, 0, g.panel_gcol as u32),
             },
         };
-        Ok(Stage::Bcast(wait))
+        Ok(Stage::Bcast(wait, ctx.clock))
     }
 
     /// Poll the broadcast wait: a store pull (FT) or a plain receive.
@@ -1005,7 +1112,7 @@ impl Ranker {
         // One snapshot copy into an Arc; the exchange's retransmit buffer
         // and the routed envelope share it instead of re-copying.
         let op = FtOp::new(partner, tag, MsgData::mat(self.local.clone()));
-        Stage::Checkpoint(op)
+        Stage::Checkpoint(op, ctx.clock)
     }
 
     /// Drain the panel's trailing update segment by segment: each segment
@@ -1039,6 +1146,7 @@ impl Ranker {
                 }
                 // Segment prologue: leaf reflectors onto its columns,
                 // then extract the top-b rows for the tree.
+                let t0 = ctx.clock;
                 let m_local = self.cfg().local_rows();
                 let mut cseg = self
                     .local
@@ -1057,7 +1165,8 @@ impl Ranker {
                     .set_block_view(g.start, col0, cseg.view(0, 0, g.active_m, ncols));
                 let cp = self.local.block(g.start, col0, b, ncols);
                 up.todo.pop_front();
-                up.cur = Some(SegRun { col0, ncols, lane, cp, s: 0, wait: UpdateWait::Enter });
+                up.cur =
+                    Some(SegRun { col0, ncols, lane, cp, s: 0, wait: UpdateWait::Enter, t0 });
                 *moved = true;
             }
             let merges = &up.merges;
@@ -1067,6 +1176,14 @@ impl Ranker {
                 Stepped::Finished => {
                     let seg = up.cur.take().expect("segment in flight");
                     self.local.set_block(g.start, seg.col0, &seg.cp);
+                    self.emit_span(
+                        ctx,
+                        SpanKind::UpdateSegment,
+                        seg.t0,
+                        g.k,
+                        seg.lane as usize,
+                        seg.ncols as f64,
+                    );
                     up.covered_end = seg.col0 + seg.ncols;
                     *moved = true;
                 }
@@ -1320,6 +1437,17 @@ impl Ranker {
     }
 }
 
+/// The crash flight recorder: the last few records per rank, appended
+/// to fatal error reports (unrecoverable / stalled / panicked runs)
+/// when tracing is on.
+fn flight_dump(shared: &Shared) -> String {
+    if shared.trace.is_enabled() {
+        format!("\n{}", shared.trace.flight_recorder(8))
+    } else {
+        String::new()
+    }
+}
+
 /// Outcome of a replay lookup in the buddy store (see
 /// [`Ranker::fetch_retained`]).
 pub(crate) enum Fetch {
@@ -1432,6 +1560,9 @@ impl CaqrJob {
             Stragglers::new(cfg.stragglers.clone()),
         );
         let flops0 = backend.flops();
+        // Size the per-rank trace rings up front so the hot path never
+        // takes the grow lock (no-op when tracing is disabled).
+        trace.ensure_ranks(cfg.procs);
         let shared = Arc::new(Shared {
             cfg: cfg.clone(),
             backend,
@@ -1482,7 +1613,8 @@ impl CaqrJob {
         if let Some(p) = shared.poisoned() {
             anyhow::bail!(
                 "run unrecoverable: {p} (both copies of a step's redundancy lost; \
-                 other failures: {failures:?})"
+                 other failures: {failures:?}){}",
+                flight_dump(shared)
             );
         }
 
@@ -1492,7 +1624,8 @@ impl CaqrJob {
             let missing: Vec<usize> =
                 (0..cfg.procs).filter(|r| !results.contains_key(r)).collect();
             anyhow::bail!(
-                "run did not complete: missing ranks {missing:?}, failures: {failures:?}"
+                "run did not complete: missing ranks {missing:?}, failures: {failures:?}{}",
+                flight_dump(shared)
             );
         }
 
@@ -1523,6 +1656,9 @@ impl CaqrJob {
         };
         let residual = cfg.verify.then(|| gram_residual(a, &r));
 
+        // Fold the retention-store high-water into the metrics so every
+        // report consumer (service, campaign, Prometheus) sees it.
+        world.metrics.set_store_peak(shared.store.peak_bytes());
         Ok(CaqrOutcome {
             reduced,
             r,

@@ -33,6 +33,7 @@ use crate::fault::{FailSite, Phase};
 use crate::ft::{Fail, Semantics};
 use crate::linalg::Matrix;
 use crate::sim::{ExchangeOp, MsgData, RankCtx, Spawner, Tag, TagKind};
+use crate::trace::SpanKind;
 
 use super::caqr::{Fetch, Ranker};
 use super::grid::Grid;
@@ -58,6 +59,11 @@ impl FtOp {
 
     pub(crate) fn peer(&self) -> usize {
         self.peer
+    }
+
+    /// Payload size in bytes (checkpoint byte accounting).
+    pub(crate) fn payload_nbytes(&self) -> usize {
+        self.payload.nbytes()
     }
 }
 
@@ -86,11 +92,13 @@ impl Ranker {
             }
         }
         // Now make the deaths visible (mirrors `RankCtx::maybe_fail`).
-        ctx.metrics.record_failure();
+        // The kill clock is recorded so the eventual detector's claim can
+        // be turned into a time-to-detect latency.
+        ctx.metrics.record_failure_at(ctx.rank, ctx.clock);
         router.kill(ctx.rank);
         for other in collateral {
             if other != ctx.rank && router.is_alive(other) {
-                ctx.metrics.record_failure();
+                ctx.metrics.record_failure_at(other, ctx.clock);
                 router.kill(other);
             }
         }
@@ -112,7 +120,13 @@ impl Ranker {
                 match ctx.begin_exchange(op.peer, op.tag, op.payload.clone()) {
                     Ok(x) => op.inner = Some(x),
                     Err(Fail::RankFailed { rank }) => {
-                        if self.on_peer_failure(ctx, sp, rank)? {
+                        if self.on_peer_failure_at(
+                            ctx,
+                            sp,
+                            rank,
+                            op.tag.panel as usize,
+                            op.tag.step as usize,
+                        )? {
                             continue;
                         }
                         return Ok(None);
@@ -134,7 +148,13 @@ impl Ranker {
                         op.tag
                     );
                     op.inner = None;
-                    if self.on_peer_failure(ctx, sp, rank)? {
+                    if self.on_peer_failure_at(
+                        ctx,
+                        sp,
+                        rank,
+                        op.tag.panel as usize,
+                        op.tag.step as usize,
+                    )? {
                         continue;
                     }
                     return Ok(None);
@@ -189,11 +209,15 @@ impl Ranker {
     /// `Ok(true)` = the peer is alive again (either already rebuilt or
     /// revived by us) — retry the operation now; `Ok(false)` = another
     /// detector is rebuilding — park until its Revive notice arrives.
-    pub(crate) fn on_peer_failure(
+    /// `panel`/`step` attribute the operation that tripped the detection
+    /// (the exchange tag, or the replay site a fetch was serving).
+    pub(crate) fn on_peer_failure_at(
         &self,
         ctx: &mut RankCtx,
         sp: &Spawner,
         dead: usize,
+        panel: usize,
+        step: usize,
     ) -> Result<bool, Fail> {
         if self.shared.poisoned().is_some() {
             // An unrecoverable failure elsewhere: join the abort cascade
@@ -224,12 +248,25 @@ impl Ranker {
                         ctx.rank,
                         inc_dead + 1
                     );
+                    // Detection latency: detector's claim clock minus the
+                    // recorded kill clock for `dead`.
+                    ctx.metrics.record_detect(dead, ctx.clock);
                     self.shared.trace.emit(
                         ctx.clock,
                         ctx.rank,
-                        0,
-                        0,
+                        panel,
+                        step,
                         "recovery_start",
+                        dead as f64,
+                    );
+                    // Point span: detection has no duration on the
+                    // logical clock, but it anchors the recovery track.
+                    self.emit_span(
+                        ctx,
+                        SpanKind::RecoveryDetect,
+                        ctx.clock,
+                        panel,
+                        0,
                         dead as f64,
                     );
                     // The dead process's memory is gone (and stays gone:
@@ -291,7 +328,7 @@ impl Ranker {
         gcol: u32,
     ) -> Result<Fetch, Fail> {
         if let Some(ret) = self.shared.store.get(buddy, panel, phase, step, lane) {
-            self.charge_fetch(ctx, buddy, panel, phase, step, &ret);
+            self.charge_fetch(ctx, buddy, panel, phase, step, lane, &ret);
             return Ok(Fetch::Hit(ret));
         }
         if self.shared.store.has_completed(ctx.rank, panel, phase, step, lane) {
@@ -331,13 +368,13 @@ impl Ranker {
             if !self.shared.world.router().is_alive(buddy) {
                 // Become the buddy's detector so its replay can start;
                 // either way we park and re-check on the next wakeup.
-                let _revived_now = self.on_peer_failure(ctx, sp, buddy)?;
+                let _revived_now = self.on_peer_failure_at(ctx, sp, buddy, panel, step)?;
             }
             self.shared.watch_store(ctx.rank);
             // Close the insert/watch race: the buddy may have retained
             // between our miss and the registration.
             if let Some(ret) = self.shared.store.get(buddy, panel, phase, step, lane) {
-                self.charge_fetch(ctx, buddy, panel, phase, step, &ret);
+                self.charge_fetch(ctx, buddy, panel, phase, step, lane, &ret);
                 return Ok(Fetch::Hit(ret));
             }
             crate::simlog!(
@@ -353,6 +390,7 @@ impl Ranker {
         Ok(Fetch::Live)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn charge_fetch(
         &self,
         ctx: &mut RankCtx,
@@ -360,8 +398,10 @@ impl Ranker {
         panel: usize,
         phase: Phase,
         step: usize,
+        lane: u32,
         ret: &Retained,
     ) {
+        let t0 = ctx.clock;
         let bytes = ret.nbytes();
         ctx.charge_local_recv(bytes);
         self.shared.trace.emit(
@@ -372,6 +412,7 @@ impl Ranker {
             "recovery_fetch",
             buddy as f64,
         );
+        self.emit_span(ctx, SpanKind::RecoveryFetch, t0, panel, lane as usize, buddy as f64);
         crate::simlog!("[r{}] replay hit ({buddy},{panel},{phase:?},{step})", ctx.rank);
     }
 
@@ -463,7 +504,7 @@ impl Ranker {
         if !self.shared.world.router().is_alive(sender) {
             // Become the sender's detector so its replay can start;
             // either way we park and re-check on the next wakeup.
-            let _revived_now = self.on_peer_failure(ctx, sp, sender)?;
+            let _revived_now = self.on_peer_failure_at(ctx, sp, sender, panel, 0)?;
         }
         self.shared.watch_store(ctx.rank);
         // Close the insert/watch race: the sender may have published

@@ -81,10 +81,11 @@ USAGE:
               [--kill-pair a,b@panel:step[:phase]]...
               [--straggler rank:factor]...
               [--checkpoint-every K|auto] [--lookahead L] [--seed S]
-              [--trace-out trace.json]
+              [--trace-out trace.json] [--metrics-out metrics.prom]
   ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W] [--par T]
               [--mode ft|plain] [--seed S]
   ftcaqr serve --jobs FILE [--workers W] [--max-ranks R] [--batch K]
+              [--metrics-out metrics.prom]
   ftcaqr campaign [--rows N] [--cols N] [--block B] [--grid PrxPc]
               [--procs P1,P2,...] [--mtbf M1,M2,...]
               [--checkpoint K1,K2,auto,...] [--hazard poisson|weibull]
@@ -118,6 +119,13 @@ double-failure fails alone; its neighbors complete.
 --straggler rank:factor multiplies that rank's compute charges (slow,
 not dead — no recovery fires). --checkpoint-every auto picks the
 interval from the failure rate the fault plan implies.
+
+--trace-out writes the run's span trace as Chrome trace_event JSON
+(open in Perfetto / chrome://tracing; one track per rank, recovery
+spans flagged). --metrics-out writes a Prometheus text snapshot of the
+run's metrics; under serve it is rewritten after every completed job
+and at exit, so scraping the file follows the service totals.
+Same seed + --workers 1 reproduce the trace export byte-for-byte.
 
 campaign sweeps an MTBF-driven stochastic failure process (per-rank, or
 correlated per-node with --node-width > 1) across P and checkpoint
@@ -201,8 +209,13 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         println!("VERIFIED");
     }
     if let Some(p) = flags.get("trace-out") {
-        std::fs::write(p, trace.to_json())?;
-        println!("trace written to {p}");
+        std::fs::write(p, trace.to_perfetto())?;
+        println!("trace written to {p} ({} spans dropped)", trace.dropped());
+    }
+    if let Some(p) = flags.get("metrics-out") {
+        let text = ftcaqr::metrics::prom::render(&out.report, &[("job", "run")]);
+        std::fs::write(p, text)?;
+        println!("metrics snapshot written to {p}");
     }
     Ok(())
 }
@@ -255,12 +268,18 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         specs.len(),
         svc.workers()
     );
+    let metrics_out = flags.get("metrics-out").map(str::to_string);
     let t0 = std::time::Instant::now();
     // One burst enqueue: lets the batched lane pack same-shape TSQR jobs.
     let handles = svc.submit_all(specs)?;
     let mut failed = 0usize;
     for h in handles {
         let o = h.wait();
+        // Periodic snapshot: rewritten as each job completes, so a
+        // scraper tailing the file follows the service totals live.
+        if let Some(p) = &metrics_out {
+            std::fs::write(p, svc.metrics_text())?;
+        }
         match &o.output {
             Ok(JobOutput::Caqr(out)) => {
                 let verdict = match out.residual {
@@ -300,6 +319,10 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         totals.report
     );
     anyhow::ensure!(failed == totals.jobs_failed as usize, "outcome accounting mismatch");
+    if let Some(p) = &metrics_out {
+        std::fs::write(p, svc.metrics_text())?;
+        println!("metrics snapshot written to {p}");
+    }
     Ok(())
 }
 

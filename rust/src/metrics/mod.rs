@@ -3,11 +3,68 @@
 //! Everything the benchmark harness prints — message counts, bytes moved,
 //! flops, the dual-channel critical-path estimate and wallclock — flows
 //! through one [`Metrics`] instance shared by every simulated rank.
+//!
+//! Beyond the raw counters, [`Report`] carries the paper's headline
+//! observability numbers as first-class fields: the failure-free
+//! FT-vs-plain overhead %, per-failure time-to-detect / time-to-rebuild,
+//! the retention-store and checkpoint bytes high-water, the scheduler's
+//! park/stall accounting, and a per-phase split of busy time. See
+//! [`prom`] for the Prometheus text-exposition rendering.
 
 pub mod json;
+pub mod prom;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Lock-free add for an `f64` stored as bits in an [`AtomicU64`] (the
+/// per-phase busy-time accumulators sit on the stage-completion path).
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+fn load_f64(cell: &AtomicU64) -> f64 {
+    f64::from_bits(cell.load(Ordering::Relaxed))
+}
+
+/// Which busy-time bucket a completed stage belongs to (the per-phase
+/// critical-path split in [`Report`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhasePath {
+    /// Panel TSQR: leaf QR + merge tree.
+    Tsqr,
+    /// Row-broadcast of panel factors.
+    Bcast,
+    /// Trailing-matrix update segments.
+    Update,
+    /// Pairwise checkpoint exchanges.
+    Checkpoint,
+    /// Failure handling: detect, fetch, replay.
+    Recovery,
+}
+
+/// Per-failure latency accounting: kill clocks are recorded when a kill
+/// fires and matched (per dead rank, FIFO) when a survivor claims the
+/// revival, yielding time-to-detect; time-to-rebuild is reported by the
+/// replacement when it finishes replaying.
+#[derive(Debug, Default)]
+struct RecoveryTiming {
+    /// Outstanding kill clocks, `(dead rank, kill clock)`.
+    kill_at: Vec<(usize, f64)>,
+    detect_total: f64,
+    detect_max: f64,
+    detects: u64,
+    rebuild_total: f64,
+    rebuild_max: f64,
+    rebuilds: u64,
+}
 
 /// Lock-free counters, cheap enough for the per-message hot path.
 #[derive(Debug, Default)]
@@ -24,6 +81,26 @@ pub struct Metrics {
     pub recoveries: AtomicU64,
     /// Failures injected.
     pub failures: AtomicU64,
+    /// Task parks (scheduler: a poll returned Pending with no wakeup
+    /// pending — each is one blocked-on-a-peer episode).
+    pub parks: AtomicU64,
+    /// Tasks failed by the scheduler's stall detector.
+    pub stalls: AtomicU64,
+    /// Checkpoint exchanges completed.
+    pub checkpoints: AtomicU64,
+    /// Payload bytes written by checkpoint exchanges.
+    pub checkpoint_bytes: AtomicU64,
+    /// Retention-store bytes high-water (max-merged gauge).
+    pub store_peak_bytes: AtomicU64,
+    /// Per-failure detect/rebuild latency accounting (off the hot path:
+    /// touched only when a kill fires or a recovery completes).
+    timing: Mutex<RecoveryTiming>,
+    /// Per-phase busy seconds, summed over ranks (f64 bits).
+    phase_tsqr: AtomicU64,
+    phase_bcast: AtomicU64,
+    phase_update: AtomicU64,
+    phase_checkpoint: AtomicU64,
+    phase_recovery: AtomicU64,
     /// Final logical clock per rank (the dual-channel cost model).
     clocks: Mutex<Vec<f64>>,
     /// Per-rank (compute seconds, communication seconds) split of the
@@ -33,6 +110,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// A fresh instance sized for `ranks` simulated processes.
     pub fn new(ranks: usize) -> Arc<Self> {
         Arc::new(Self {
             clocks: Mutex::new(vec![0.0; ranks]),
@@ -41,6 +119,7 @@ impl Metrics {
         })
     }
 
+    /// One one-way message of `bytes` payload.
     pub fn record_message(&self, bytes: usize) {
         self.messages.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
@@ -54,16 +133,90 @@ impl Metrics {
         self.bytes.fetch_add(bytes_out as u64, Ordering::Relaxed);
     }
 
+    /// Flops issued by the backend.
     pub fn record_flops(&self, f: u64) {
         self.flops.fetch_add(f, Ordering::Relaxed);
     }
 
+    /// One injected failure (no kill-clock attribution).
     pub fn record_failure(&self) {
         self.failures.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One injected failure of `rank` at logical time `clock`; the kill
+    /// clock is held until [`Metrics::record_detect`] claims it.
+    pub fn record_failure_at(&self, rank: usize, clock: f64) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        self.timing.lock().unwrap().kill_at.push((rank, clock));
+    }
+
+    /// A survivor claimed the revival of `dead` at logical time `clock`:
+    /// record time-to-detect against the oldest outstanding kill of that
+    /// rank. Returns the detect latency (0 when the kill clock was not
+    /// recorded — e.g. a failure injected without attribution).
+    pub fn record_detect(&self, dead: usize, clock: f64) -> f64 {
+        let mut g = self.timing.lock().unwrap();
+        let latency = match g.kill_at.iter().position(|&(r, _)| r == dead) {
+            Some(i) => {
+                let (_, killed) = g.kill_at.remove(i);
+                // Clocks are per-rank and only loosely ordered; clamp the
+                // skew so a detector that is logically "behind" the victim
+                // never records a negative latency.
+                (clock - killed).max(0.0)
+            }
+            None => 0.0,
+        };
+        g.detect_total += latency;
+        g.detect_max = g.detect_max.max(latency);
+        g.detects += 1;
+        latency
+    }
+
+    /// One completed recovery.
     pub fn record_recovery(&self) {
         self.recoveries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A REBUILD replacement finished `secs` after it was spawned:
+    /// record time-to-rebuild.
+    pub fn record_rebuild(&self, secs: f64) {
+        let mut g = self.timing.lock().unwrap();
+        g.rebuild_total += secs;
+        g.rebuild_max = g.rebuild_max.max(secs);
+        g.rebuilds += 1;
+    }
+
+    /// One scheduler park (task blocked waiting for a peer event).
+    pub fn record_park(&self) {
+        self.parks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One task failed by the stall detector.
+    pub fn record_stall(&self) {
+        self.stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One completed checkpoint exchange of `bytes` payload.
+    pub fn record_checkpoint(&self, bytes: usize) {
+        self.checkpoints.fetch_add(1, Ordering::Relaxed);
+        self.checkpoint_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Max-merge the retention-store bytes high-water.
+    pub fn set_store_peak(&self, bytes: u64) {
+        self.store_peak_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    /// Add `secs` of busy time to `phase`'s bucket.
+    pub fn record_phase(&self, phase: PhasePath, secs: f64) {
+        let cell = match phase {
+            PhasePath::Tsqr => &self.phase_tsqr,
+            PhasePath::Bcast => &self.phase_bcast,
+            PhasePath::Update => &self.phase_update,
+            PhasePath::Checkpoint => &self.phase_checkpoint,
+            PhasePath::Recovery => &self.phase_recovery,
+        };
+        add_f64(cell, secs);
     }
 
     /// Publish a rank's final logical clock.
@@ -91,6 +244,7 @@ impl Metrics {
         self.clocks.lock().unwrap().iter().cloned().fold(0.0, f64::max)
     }
 
+    /// Immutable snapshot of every counter and derived metric.
     pub fn snapshot(&self) -> Report {
         let (compute_path, comm_path) = {
             let t = self.times.lock().unwrap();
@@ -99,6 +253,7 @@ impl Metrics {
                 t.iter().map(|p| p.1).fold(0.0, f64::max),
             )
         };
+        let timing = self.timing.lock().unwrap();
         Report {
             messages: self.messages.load(Ordering::Relaxed),
             exchanges: self.exchanges.load(Ordering::Relaxed),
@@ -106,6 +261,23 @@ impl Metrics {
             flops: self.flops.load(Ordering::Relaxed),
             recoveries: self.recoveries.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
+            parks: self.parks.load(Ordering::Relaxed),
+            stalls: self.stalls.load(Ordering::Relaxed),
+            checkpoints: self.checkpoints.load(Ordering::Relaxed),
+            checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
+            store_peak_bytes: self.store_peak_bytes.load(Ordering::Relaxed),
+            detects: timing.detects,
+            detect_s_total: timing.detect_total,
+            detect_s_max: timing.detect_max,
+            rebuilds: timing.rebuilds,
+            rebuild_s_total: timing.rebuild_total,
+            rebuild_s_max: timing.rebuild_max,
+            tsqr_s: load_f64(&self.phase_tsqr),
+            bcast_s: load_f64(&self.phase_bcast),
+            update_s: load_f64(&self.phase_update),
+            checkpoint_s: load_f64(&self.phase_checkpoint),
+            recovery_s: load_f64(&self.phase_recovery),
+            overhead_pct: 0.0,
             critical_path: self.critical_path(),
             compute_path,
             comm_path,
@@ -114,6 +286,13 @@ impl Metrics {
 }
 
 /// Immutable snapshot for printing / serialization.
+///
+/// Field algebra (see [`Report::absorb`] / [`Report::since`]):
+/// *counters* (message/byte/flop/failure counts, the detect/rebuild
+/// totals and counts, per-phase seconds) add in `absorb` and subtract in
+/// `since`; *gauges* (`critical_path` and friends, the `*_max` latency
+/// fields, `store_peak_bytes`) max-merge in `absorb` and are copied from
+/// `self` in `since`; `overhead_pct` is last-set-wins.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Report {
     /// One-way messages sent.
@@ -128,6 +307,42 @@ pub struct Report {
     pub recoveries: u64,
     /// Failures injected.
     pub failures: u64,
+    /// Scheduler task parks (blocked-on-a-peer episodes).
+    pub parks: u64,
+    /// Tasks failed by the scheduler's stall detector.
+    pub stalls: u64,
+    /// Checkpoint exchanges completed.
+    pub checkpoints: u64,
+    /// Payload bytes written by checkpoint exchanges.
+    pub checkpoint_bytes: u64,
+    /// Retention-store bytes high-water (gauge).
+    pub store_peak_bytes: u64,
+    /// Failure detections (revival claims) recorded.
+    pub detects: u64,
+    /// Summed time-to-detect over all detections, seconds.
+    pub detect_s_total: f64,
+    /// Worst single time-to-detect, seconds (gauge).
+    pub detect_s_max: f64,
+    /// REBUILD replacements that finished replaying.
+    pub rebuilds: u64,
+    /// Summed time-to-rebuild over all rebuilds, seconds.
+    pub rebuild_s_total: f64,
+    /// Worst single time-to-rebuild, seconds (gauge).
+    pub rebuild_s_max: f64,
+    /// Busy seconds in panel TSQR, summed over ranks.
+    pub tsqr_s: f64,
+    /// Busy seconds in factor row-broadcast, summed over ranks.
+    pub bcast_s: f64,
+    /// Busy seconds in trailing-update segments, summed over ranks.
+    pub update_s: f64,
+    /// Busy seconds in checkpoint exchanges, summed over ranks.
+    pub checkpoint_s: f64,
+    /// Busy seconds in failure handling, summed over ranks.
+    pub recovery_s: f64,
+    /// Failure-free FT-vs-plain critical-path overhead, percent — set by
+    /// contexts that measured a plain baseline (benches, campaign cells);
+    /// 0 when no baseline exists (gauge, last-set-wins).
+    pub overhead_pct: f64,
     /// Max over ranks of the final logical clock, seconds.
     pub critical_path: f64,
     /// Max over ranks of the *compute* share of the logical clock,
@@ -145,7 +360,8 @@ impl Report {
     /// per-tenant [`Metrics`] stay isolated, and its *totals* row is the
     /// sum of every completed job's report. Counters add; the critical
     /// path of a set of concurrent jobs is the max over jobs (each job's
-    /// logical clock starts at zero in its own world).
+    /// logical clock starts at zero in its own world), as are the other
+    /// gauges; `overhead_pct` is last-set-wins.
     pub fn absorb(&mut self, other: &Report) {
         self.messages += other.messages;
         self.exchanges += other.exchanges;
@@ -153,12 +369,32 @@ impl Report {
         self.flops += other.flops;
         self.recoveries += other.recoveries;
         self.failures += other.failures;
+        self.parks += other.parks;
+        self.stalls += other.stalls;
+        self.checkpoints += other.checkpoints;
+        self.checkpoint_bytes += other.checkpoint_bytes;
+        self.store_peak_bytes = self.store_peak_bytes.max(other.store_peak_bytes);
+        self.detects += other.detects;
+        self.detect_s_total += other.detect_s_total;
+        self.detect_s_max = self.detect_s_max.max(other.detect_s_max);
+        self.rebuilds += other.rebuilds;
+        self.rebuild_s_total += other.rebuild_s_total;
+        self.rebuild_s_max = self.rebuild_s_max.max(other.rebuild_s_max);
+        self.tsqr_s += other.tsqr_s;
+        self.bcast_s += other.bcast_s;
+        self.update_s += other.update_s;
+        self.checkpoint_s += other.checkpoint_s;
+        self.recovery_s += other.recovery_s;
+        if other.overhead_pct != 0.0 {
+            self.overhead_pct = other.overhead_pct;
+        }
         self.critical_path = self.critical_path.max(other.critical_path);
         self.compute_path = self.compute_path.max(other.compute_path);
         self.comm_path = self.comm_path.max(other.comm_path);
     }
 
-    /// Difference against an earlier snapshot (for per-phase accounting).
+    /// Difference against an earlier snapshot (for per-phase
+    /// accounting): counters subtract, gauges are copied from `self`.
     pub fn since(&self, earlier: &Report) -> Report {
         Report {
             messages: self.messages - earlier.messages,
@@ -167,9 +403,46 @@ impl Report {
             flops: self.flops - earlier.flops,
             recoveries: self.recoveries - earlier.recoveries,
             failures: self.failures - earlier.failures,
+            parks: self.parks - earlier.parks,
+            stalls: self.stalls - earlier.stalls,
+            checkpoints: self.checkpoints - earlier.checkpoints,
+            checkpoint_bytes: self.checkpoint_bytes - earlier.checkpoint_bytes,
+            store_peak_bytes: self.store_peak_bytes,
+            detects: self.detects - earlier.detects,
+            detect_s_total: self.detect_s_total - earlier.detect_s_total,
+            detect_s_max: self.detect_s_max,
+            rebuilds: self.rebuilds - earlier.rebuilds,
+            rebuild_s_total: self.rebuild_s_total - earlier.rebuild_s_total,
+            rebuild_s_max: self.rebuild_s_max,
+            tsqr_s: self.tsqr_s - earlier.tsqr_s,
+            bcast_s: self.bcast_s - earlier.bcast_s,
+            update_s: self.update_s - earlier.update_s,
+            checkpoint_s: self.checkpoint_s - earlier.checkpoint_s,
+            recovery_s: self.recovery_s - earlier.recovery_s,
+            overhead_pct: self.overhead_pct,
             critical_path: self.critical_path,
             compute_path: self.compute_path,
             comm_path: self.comm_path,
+        }
+    }
+
+    /// Mean time-to-detect over the recorded failures, seconds (0 when
+    /// none were detected).
+    pub fn detect_mean_s(&self) -> f64 {
+        if self.detects == 0 {
+            0.0
+        } else {
+            self.detect_s_total / self.detects as f64
+        }
+    }
+
+    /// Mean time-to-rebuild over the completed rebuilds, seconds (0 when
+    /// none completed).
+    pub fn rebuild_mean_s(&self) -> f64 {
+        if self.rebuilds == 0 {
+            0.0
+        } else {
+            self.rebuild_s_total / self.rebuilds as f64
         }
     }
 }
@@ -189,7 +462,18 @@ impl std::fmt::Display for Report {
             self.critical_path,
             self.compute_path,
             self.comm_path
-        )
+        )?;
+        if self.detects > 0 || self.rebuilds > 0 {
+            write!(
+                f,
+                " detect={:.6}s/{} rebuild={:.6}s/{}",
+                self.detect_mean_s(),
+                self.detects,
+                self.rebuild_mean_s(),
+                self.rebuilds
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -264,5 +548,51 @@ mod tests {
         let d = m.snapshot().since(&a);
         assert_eq!(d.messages, 1);
         assert_eq!(d.bytes, 20);
+    }
+
+    #[test]
+    fn detect_and_rebuild_latencies() {
+        let m = Metrics::new(4);
+        m.record_failure_at(2, 1.0);
+        m.record_failure_at(3, 2.0);
+        assert_eq!(m.record_detect(2, 1.5), 0.5);
+        // Skew clamp: a detector logically behind the victim reads 0.
+        assert_eq!(m.record_detect(3, 1.0), 0.0);
+        m.record_rebuild(0.25);
+        m.record_rebuild(0.75);
+        let r = m.snapshot();
+        assert_eq!(r.failures, 2);
+        assert_eq!(r.detects, 2);
+        assert_eq!(r.detect_s_total, 0.5);
+        assert_eq!(r.detect_s_max, 0.5);
+        assert_eq!(r.detect_mean_s(), 0.25);
+        assert_eq!(r.rebuilds, 2);
+        assert_eq!(r.rebuild_s_total, 1.0);
+        assert_eq!(r.rebuild_s_max, 0.75);
+        assert_eq!(r.rebuild_mean_s(), 0.5);
+    }
+
+    #[test]
+    fn phase_checkpoint_store_and_sched_counters() {
+        let m = Metrics::new(2);
+        m.record_phase(PhasePath::Tsqr, 1.0);
+        m.record_phase(PhasePath::Tsqr, 0.5);
+        m.record_phase(PhasePath::Recovery, 2.0);
+        m.record_checkpoint(100);
+        m.record_checkpoint(50);
+        m.set_store_peak(400);
+        m.set_store_peak(300); // max-merge: stays 400
+        m.record_park();
+        m.record_park();
+        m.record_stall();
+        let r = m.snapshot();
+        assert_eq!(r.tsqr_s, 1.5);
+        assert_eq!(r.recovery_s, 2.0);
+        assert_eq!(r.update_s, 0.0);
+        assert_eq!(r.checkpoints, 2);
+        assert_eq!(r.checkpoint_bytes, 150);
+        assert_eq!(r.store_peak_bytes, 400);
+        assert_eq!(r.parks, 2);
+        assert_eq!(r.stalls, 1);
     }
 }

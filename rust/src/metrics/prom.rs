@@ -1,0 +1,191 @@
+//! Prometheus text-exposition rendering of a [`Report`].
+//!
+//! Hand-rolled (offline build, no client library): [`render`] emits one
+//! `# HELP` / `# TYPE` header pair per metric followed by a single
+//! sample carrying the caller's label set, in a fixed metric order so
+//! the snapshot is deterministic and diffable. `ftcaqr run
+//! --metrics-out` writes one snapshot per run; `ftcaqr serve` rewrites
+//! its snapshot as jobs complete (see `Service::metrics_text`).
+
+use super::Report;
+
+/// Render a label set as `{k="v",...}` (empty string for no labels).
+/// Values are escaped per the text-exposition rules (backslash, quote,
+/// newline).
+pub fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body = labels
+        .iter()
+        .map(|(k, v)| {
+            let v = v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+            format!("{k}=\"{v}\"")
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("{{{body}}}")
+}
+
+/// One complete metric block: HELP, TYPE, and a single sample.
+pub fn sample(name: &str, kind: &str, help: &str, labels: &str, value: &str) -> String {
+    format!("# HELP {name} {help}\n# TYPE {name} {kind}\n{name}{labels} {value}\n")
+}
+
+/// Deterministic float rendering: finite values in `{:e}` form (valid
+/// Prometheus floats), non-finite as `NaN`.
+fn fmt_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        String::from("NaN")
+    }
+}
+
+/// Render `report` as a Prometheus text-exposition snapshot with the
+/// given label set on every sample (e.g. `[("job", "run")]` or a
+/// per-tenant label from the service).
+pub fn render(report: &Report, labels: &[(&str, &str)]) -> String {
+    let l = fmt_labels(labels);
+    let mut out = String::new();
+    let counters: &[(&str, &str, u64)] = &[
+        ("ftcaqr_messages_total", "One-way messages sent.", report.messages),
+        ("ftcaqr_exchanges_total", "Pairwise exchanges (sendrecv calls).", report.exchanges),
+        ("ftcaqr_bytes_total", "Payload bytes moved.", report.bytes),
+        ("ftcaqr_flops_total", "Flops issued by the backend.", report.flops),
+        ("ftcaqr_failures_total", "Failures injected.", report.failures),
+        ("ftcaqr_detects_total", "Failure detections (revival claims).", report.detects),
+        ("ftcaqr_recoveries_total", "Recovery events completed.", report.recoveries),
+        ("ftcaqr_rebuilds_total", "REBUILD replacements that finished.", report.rebuilds),
+        ("ftcaqr_checkpoints_total", "Checkpoint exchanges completed.", report.checkpoints),
+        (
+            "ftcaqr_checkpoint_bytes_total",
+            "Payload bytes written by checkpoints.",
+            report.checkpoint_bytes,
+        ),
+        ("ftcaqr_sched_parks_total", "Scheduler task parks.", report.parks),
+        ("ftcaqr_sched_stalls_total", "Tasks failed by the stall detector.", report.stalls),
+    ];
+    for &(name, help, v) in counters {
+        out.push_str(&sample(name, "counter", help, &l, &v.to_string()));
+    }
+    let gauges: &[(&str, &str, f64)] = &[
+        (
+            "ftcaqr_critical_path_seconds",
+            "Max over ranks of the final logical clock.",
+            report.critical_path,
+        ),
+        (
+            "ftcaqr_compute_path_seconds",
+            "Max over ranks of the compute share of the clock.",
+            report.compute_path,
+        ),
+        (
+            "ftcaqr_comm_path_seconds",
+            "Max over ranks of the communication share of the clock.",
+            report.comm_path,
+        ),
+        (
+            "ftcaqr_overhead_pct",
+            "Failure-free FT-vs-plain critical-path overhead, percent.",
+            report.overhead_pct,
+        ),
+        (
+            "ftcaqr_detect_seconds_total",
+            "Summed time-to-detect over all detections.",
+            report.detect_s_total,
+        ),
+        ("ftcaqr_detect_seconds_max", "Worst single time-to-detect.", report.detect_s_max),
+        (
+            "ftcaqr_detect_seconds_mean",
+            "Mean time-to-detect over all detections.",
+            report.detect_mean_s(),
+        ),
+        (
+            "ftcaqr_rebuild_seconds_total",
+            "Summed time-to-rebuild over all rebuilds.",
+            report.rebuild_s_total,
+        ),
+        ("ftcaqr_rebuild_seconds_max", "Worst single time-to-rebuild.", report.rebuild_s_max),
+        (
+            "ftcaqr_rebuild_seconds_mean",
+            "Mean time-to-rebuild over all rebuilds.",
+            report.rebuild_mean_s(),
+        ),
+        (
+            "ftcaqr_store_peak_bytes",
+            "Retention-store bytes high-water.",
+            report.store_peak_bytes as f64,
+        ),
+    ];
+    for &(name, help, v) in gauges {
+        out.push_str(&sample(name, "gauge", help, &l, &fmt_f(v)));
+    }
+    // Per-phase busy time as one metric with a phase label.
+    out.push_str("# HELP ftcaqr_phase_seconds_total Busy seconds per phase, summed over ranks.\n");
+    out.push_str("# TYPE ftcaqr_phase_seconds_total counter\n");
+    let phases: &[(&str, f64)] = &[
+        ("tsqr", report.tsqr_s),
+        ("bcast", report.bcast_s),
+        ("update", report.update_s),
+        ("checkpoint", report.checkpoint_s),
+        ("recovery", report.recovery_s),
+    ];
+    for &(phase, v) in phases {
+        let mut with_phase: Vec<(&str, &str)> = labels.to_vec();
+        with_phase.push(("phase", phase));
+        out.push_str(&format!(
+            "ftcaqr_phase_seconds_total{} {}\n",
+            fmt_labels(&with_phase),
+            fmt_f(v)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_render_and_escape() {
+        assert_eq!(fmt_labels(&[]), "");
+        assert_eq!(fmt_labels(&[("job", "run")]), "{job=\"run\"}");
+        assert_eq!(fmt_labels(&[("a", "x\"y")]), "{a=\"x\\\"y\"}");
+    }
+
+    #[test]
+    fn render_contains_every_metric_family() {
+        let r = Report {
+            messages: 7,
+            failures: 1,
+            detects: 1,
+            detect_s_total: 0.5,
+            rebuilds: 1,
+            rebuild_s_total: 0.25,
+            store_peak_bytes: 1024,
+            checkpoint_bytes: 2048,
+            overhead_pct: 3.5,
+            tsqr_s: 1.0,
+            ..Default::default()
+        };
+        let text = render(&r, &[("tenant", "t0")]);
+        for name in [
+            "ftcaqr_messages_total",
+            "ftcaqr_failures_total",
+            "ftcaqr_detect_seconds_total",
+            "ftcaqr_detect_seconds_mean",
+            "ftcaqr_rebuild_seconds_total",
+            "ftcaqr_store_peak_bytes",
+            "ftcaqr_checkpoint_bytes_total",
+            "ftcaqr_overhead_pct",
+            "ftcaqr_phase_seconds_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {name}")), "missing {name}:\n{text}");
+        }
+        assert!(text.contains("ftcaqr_messages_total{tenant=\"t0\"} 7"));
+        assert!(text.contains("{tenant=\"t0\",phase=\"tsqr\"} 1e0"));
+        // Deterministic: same report renders byte-identically.
+        assert_eq!(text, render(&r, &[("tenant", "t0")]));
+    }
+}

@@ -359,6 +359,55 @@ impl Service {
             inflight_ranks: q.inflight_ranks,
         }
     }
+
+    /// Prometheus text-exposition snapshot of the whole service: the
+    /// aggregated per-job report (labelled `scope="service"`) plus job
+    /// counters and queue-occupancy gauges. `ftcaqr serve` rewrites its
+    /// `--metrics-out` file from this after every completed job, so a
+    /// scrape-by-file integration always sees a consistent snapshot.
+    pub fn metrics_text(&self) -> String {
+        use crate::metrics::prom::{fmt_labels, render, sample};
+        let t = self.totals();
+        let qs = self.queue_stats();
+        let l = fmt_labels(&[("scope", "service")]);
+        let mut out = render(&t.report, &[("scope", "service")]);
+        out.push_str(&sample(
+            "ftcaqr_jobs_ok_total",
+            "counter",
+            "Jobs completed successfully.",
+            &l,
+            &t.jobs_ok.to_string(),
+        ));
+        out.push_str(&sample(
+            "ftcaqr_jobs_failed_total",
+            "counter",
+            "Jobs that failed (poisoned, stalled, invalid).",
+            &l,
+            &t.jobs_failed.to_string(),
+        ));
+        out.push_str(&sample(
+            "ftcaqr_queue_pending",
+            "gauge",
+            "Jobs waiting for admission.",
+            &l,
+            &qs.pending.to_string(),
+        ));
+        out.push_str(&sample(
+            "ftcaqr_inflight_jobs",
+            "gauge",
+            "Jobs currently running on the pool.",
+            &l,
+            &qs.inflight_jobs.to_string(),
+        ));
+        out.push_str(&sample(
+            "ftcaqr_inflight_ranks",
+            "gauge",
+            "Simulated ranks currently in flight.",
+            &l,
+            &qs.inflight_ranks.to_string(),
+        ));
+        out
+    }
 }
 
 impl Inner {
@@ -483,7 +532,6 @@ impl Inner {
         let inner = Arc::downgrade(self);
         let world_arg = world.clone();
         self.pool.submit(&world_arg, tasks, move |results| {
-            let report = world.metrics.snapshot();
             let poisoned = shared.poisoned();
             let output =
                 match CaqrJob::finalize(&cfg, &a, &shared, &world, results, flops0, t0) {
@@ -492,6 +540,9 @@ impl Inner {
                         Err(JobError { fail: poisoned, message: format!("{e:#}") })
                     }
                 };
+            // Snapshot after finalize: that's where the retention-store
+            // high-water is folded into the job's metrics.
+            let report = world.metrics.snapshot();
             let (ok, failed) = if output.is_ok() { (1, 0) } else { (0, 1) };
             // Order matters: totals and the admission budget must be
             // settled before the outcome is delivered (a waiter may read
@@ -902,5 +953,9 @@ mod tests {
         assert_eq!(t.jobs_failed, 0);
         assert!(t.report.messages + t.report.exchanges > 0);
         assert_eq!(svc.queue_stats(), QueueStats { pending: 0, inflight_jobs: 0, inflight_ranks: 0 });
+        let text = svc.metrics_text();
+        assert!(text.contains("ftcaqr_jobs_ok_total{scope=\"service\"} 2"), "{text}");
+        assert!(text.contains("ftcaqr_queue_pending{scope=\"service\"} 0"), "{text}");
+        assert!(text.contains("ftcaqr_messages_total{scope=\"service\"}"), "{text}");
     }
 }

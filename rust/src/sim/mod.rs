@@ -299,11 +299,11 @@ impl RankCtx {
     pub fn maybe_fail(&mut self, site: FailSite) -> Result<(), Fail> {
         let inc = self.router.incarnation(self.rank);
         if self.fault.should_fail_inc(self.rank, inc, site) {
-            self.metrics.record_failure();
+            self.metrics.record_failure_at(self.rank, self.clock);
             self.router.kill(self.rank);
             for other in self.fault.collateral_of(self.rank, site) {
                 if other != self.rank && self.router.is_alive(other) {
-                    self.metrics.record_failure();
+                    self.metrics.record_failure_at(other, self.clock);
                     self.router.kill(other);
                 }
             }

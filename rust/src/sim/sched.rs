@@ -151,6 +151,9 @@ impl JobState {
     fn stall_remaining(&mut self) {
         for slot in self.slots.iter_mut() {
             if !matches!(slot.run, RunState::Done) {
+                if let Some((ctx, _)) = &slot.cell {
+                    ctx.metrics.record_stall();
+                }
                 slot.cell = None; // drop ctx -> publish final clock
                 slot.run = RunState::Done;
                 slot.result = Some(Err(Fail::Stalled));
@@ -421,6 +424,11 @@ fn worker_loop(core: &Arc<Core>) {
                     }
                     PollOutcome::Parked(ctx, task) => {
                         let dirty = matches!(js.slots[id].run, RunState::Running { dirty: true });
+                        if !dirty {
+                            // A true park (no wakeup raced the poll): the
+                            // task now waits on a message.
+                            ctx.metrics.record_park();
+                        }
                         js.slots[id].cell = Some((ctx, task));
                         if dirty {
                             js.slots[id].run = RunState::Queued;

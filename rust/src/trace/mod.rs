@@ -1,13 +1,35 @@
-//! Structured event trace: every tree step, failure, and recovery is
-//! recorded with its logical timestamp so the bench harness can emit the
+//! Span-based tracing: every tree step, failure, and recovery is
+//! recorded with its logical timestamps so runs can be profiled and the
 //! per-step series behind the paper's figures (e.g. Fig 2's redundancy
-//! doubling) as JSON/CSV.
+//! doubling) exported as JSON.
+//!
+//! The subsystem has two record types — typed [`Span`]s (begin/end on
+//! the logical clock, attributed by rank x incarnation x panel x lane x
+//! grid) and legacy flat [`TraceEvent`]s — both landing in bounded
+//! per-rank lock-free ring buffers ([`span::RankRing`]): the hot path
+//! never takes a global mutex, [`Trace::disabled`] is a single branch,
+//! and overflow drops the oldest records while counting the drops.
+//! Exporters: [`Trace::to_perfetto`] (Chrome `trace_event` JSON, one
+//! track per rank, recovery spans flagged by category) and the legacy
+//! [`Trace::to_json`] flat-event dump. [`Trace::flight_recorder`]
+//! renders the last-N records per rank for crash reports.
+//!
+//! Spans are a pure function of the seeded run: the export walks ranks
+//! in order and each ring in emission order, so same seed means a
+//! byte-identical export.
 
-use std::sync::Arc;
+pub mod span;
 
-use std::sync::Mutex;
+use std::sync::{Arc, RwLock};
 
-/// One trace record.
+use span::RankRing;
+pub use span::{Record, Span, SpanKind};
+
+/// Ring capacity (records per rank) for [`Trace::new`].
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// One legacy flat trace record (kept as a compatibility view; new
+/// instrumentation should emit typed [`Span`]s).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceEvent {
     /// Logical time (dual-channel cost model seconds).
@@ -25,32 +47,101 @@ pub struct TraceEvent {
     pub value: f64,
 }
 
-/// Append-only shared trace.
-#[derive(Default)]
+/// Shared trace: per-rank bounded ring buffers behind an `Arc`.
+///
+/// The rank -> ring map is an `RwLock<Vec<_>>` taken for *read* on the
+/// hot path (uncontended: it is only taken for write when a new rank
+/// first records, which [`Trace::ensure_ranks`] front-loads to job
+/// prepare time). Each ring itself is lock-free.
 pub struct Trace {
-    events: Mutex<Vec<TraceEvent>>,
+    rings: RwLock<Vec<Arc<RankRing>>>,
+    capacity: usize,
     enabled: bool,
 }
 
+impl Default for Trace {
+    /// A disabled trace (matches the pre-span `#[derive(Default)]`,
+    /// where the default `enabled` was `false`).
+    fn default() -> Self {
+        Self { rings: RwLock::new(Vec::new()), capacity: DEFAULT_RING_CAPACITY, enabled: false }
+    }
+}
+
 impl Trace {
-    /// An enabled trace.
+    /// An enabled trace with [`DEFAULT_RING_CAPACITY`] records per rank.
     pub fn new() -> Arc<Self> {
-        Arc::new(Self { events: Mutex::new(Vec::new()), enabled: true })
+        Self::with_capacity(DEFAULT_RING_CAPACITY)
     }
 
-    /// A disabled trace (hot paths skip the lock entirely).
+    /// An enabled trace holding at most `capacity` records per rank
+    /// (oldest dropped beyond that, see [`Trace::dropped`]).
+    pub fn with_capacity(capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            rings: RwLock::new(Vec::new()),
+            capacity: capacity.max(1),
+            enabled: true,
+        })
+    }
+
+    /// A disabled trace: every record call is a single branch, no
+    /// allocation, no lock.
     pub fn disabled() -> Arc<Self> {
-        Arc::new(Self { events: Mutex::new(Vec::new()), enabled: false })
+        Arc::new(Self::default())
     }
 
-    /// Append one event (no-op when the trace is disabled).
-    #[inline]
-    pub fn record(&self, ev: TraceEvent) {
-        if self.enabled {
-            self.events.lock().unwrap().push(ev);
+    /// True when recording (i.e. not [`Trace::disabled`]).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Pre-size the rank -> ring map so the recording hot path never
+    /// takes the map's write lock. Called at job prepare time; a rank
+    /// beyond the pre-sized range still works (the map grows lazily).
+    pub fn ensure_ranks(&self, ranks: usize) {
+        if !self.enabled {
+            return;
+        }
+        let mut g = self.rings.write().unwrap();
+        while g.len() < ranks {
+            let ring = Arc::new(RankRing::new(self.capacity));
+            g.push(ring);
         }
     }
 
+    /// The rank's ring, growing the map if needed.
+    fn ring(&self, rank: usize) -> Arc<RankRing> {
+        {
+            let g = self.rings.read().unwrap();
+            if let Some(r) = g.get(rank) {
+                return r.clone();
+            }
+        }
+        let mut g = self.rings.write().unwrap();
+        while g.len() <= rank {
+            let ring = Arc::new(RankRing::new(self.capacity));
+            g.push(ring);
+        }
+        g[rank].clone()
+    }
+
+    /// Record one completed span (no-op when disabled).
+    #[inline]
+    pub fn span(&self, s: Span) {
+        if self.enabled {
+            self.ring(s.rank).push(Record::Span(s));
+        }
+    }
+
+    /// Append one legacy event (no-op when the trace is disabled).
+    #[inline]
+    pub fn record(&self, ev: TraceEvent) {
+        if self.enabled {
+            self.ring(ev.rank).push(Record::Event(ev));
+        }
+    }
+
+    /// Legacy flat-event emit, routed into the emitting rank's ring.
+    #[inline]
     pub fn emit(
         &self,
         t: f64,
@@ -63,29 +154,67 @@ impl Trace {
         self.record(TraceEvent { t, rank, panel, step, kind, value });
     }
 
-    /// Number of recorded events.
-    pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+    /// All records currently held, rank-major (rank 0's ring oldest
+    /// first, then rank 1's, ...).
+    fn records(&self) -> Vec<Record> {
+        let rings: Vec<Arc<RankRing>> = self.rings.read().unwrap().clone();
+        rings.iter().flat_map(|r| r.snapshot()).collect()
     }
 
-    /// True when nothing has been recorded.
+    /// Per-rank snapshots: `(rank, records, dropped)` for every rank
+    /// that has a ring, in rank order.
+    fn per_rank(&self) -> Vec<(usize, Vec<Record>, u64)> {
+        let rings: Vec<Arc<RankRing>> = self.rings.read().unwrap().clone();
+        rings.iter().enumerate().map(|(i, r)| (i, r.snapshot(), r.dropped())).collect()
+    }
+
+    /// Number of records currently held (drops excluded).
+    pub fn len(&self) -> usize {
+        self.rings.read().unwrap().iter().map(|r| r.snapshot().len()).sum()
+    }
+
+    /// True when nothing is held.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// All events of one kind, in insertion order.
+    /// Total records dropped across all ranks (ring overflow).
+    pub fn dropped(&self) -> u64 {
+        self.rings.read().unwrap().iter().map(|r| r.dropped()).sum()
+    }
+
+    /// All legacy events of one kind, rank-major then emission order
+    /// within a rank (a compatibility view over the rings).
     pub fn of_kind(&self, kind: &str) -> Vec<TraceEvent> {
-        self.events.lock().unwrap().iter().filter(|e| e.kind == kind).cloned().collect()
+        self.events().into_iter().filter(|e| e.kind == kind).collect()
     }
 
-    /// Full copy of the log.
+    /// All legacy events, rank-major (compatibility view).
     pub fn events(&self) -> Vec<TraceEvent> {
-        self.events.lock().unwrap().clone()
+        self.records()
+            .into_iter()
+            .filter_map(|r| match r {
+                Record::Event(e) => Some(e),
+                Record::Span(_) => None,
+            })
+            .collect()
     }
 
-    /// Serialize the whole trace to JSON (hand-rolled: offline build).
+    /// All typed spans, rank-major.
+    pub fn spans(&self) -> Vec<Span> {
+        self.records()
+            .into_iter()
+            .filter_map(|r| match r {
+                Record::Span(s) => Some(s),
+                Record::Event(_) => None,
+            })
+            .collect()
+    }
+
+    /// Serialize the legacy flat events to JSON (hand-rolled: offline
+    /// build). Spans are not included; see [`Trace::to_perfetto`].
     pub fn to_json(&self) -> String {
-        let evs = self.events.lock().unwrap();
+        let evs = self.events();
         let mut out = String::from("[\n");
         for (i, e) in evs.iter().enumerate() {
             out.push_str(&format!(
@@ -102,6 +231,137 @@ impl Trace {
         }
         out.push(']');
         out
+    }
+
+    /// Export as Chrome `trace_event` / Perfetto JSON: one track (tid)
+    /// per rank, `ph:"X"` duration events for spans (recovery spans
+    /// carry the `recovery` category and a `recovery: 1` arg), `ph:"i"`
+    /// instants for legacy events, and a `dropped_records` instant when
+    /// a ring overflowed. Timestamps are logical-clock microseconds.
+    ///
+    /// The walk is rank-major and each ring is in emission order, so the
+    /// output is a pure function of the seeded run (byte-identical
+    /// across same-seed runs).
+    pub fn to_perfetto(&self) -> String {
+        let mut out = String::from("{\"traceEvents\": [\n");
+        let mut first = true;
+        let mut push = |out: &mut String, line: String| {
+            if !std::mem::take(&mut first) {
+                out.push_str(",\n");
+            }
+            out.push_str("  ");
+            out.push_str(&line);
+        };
+        for (rank, records, dropped) in self.per_rank() {
+            push(
+                &mut out,
+                format!(
+                    "{{\"ph\": \"M\", \"pid\": 0, \"tid\": {rank}, \"name\": \"thread_name\", \
+                     \"args\": {{\"name\": \"rank {rank}\"}}}}"
+                ),
+            );
+            for rec in &records {
+                match rec {
+                    Record::Span(s) => push(
+                        &mut out,
+                        format!(
+                            "{{\"ph\": \"X\", \"pid\": 0, \"tid\": {}, \"name\": \"{}\", \
+                             \"cat\": \"{}\", \"ts\": {}, \"dur\": {}, \"args\": {{\
+                             \"inc\": {}, \"panel\": {}, \"lane\": {}, \"gr\": {}, \"gc\": {}, \
+                             \"recovery\": {}, \"value\": {}}}}}",
+                            s.rank,
+                            s.kind.name(),
+                            s.kind.category(),
+                            json_f(s.t0 * 1e6),
+                            json_f((s.t1 - s.t0) * 1e6),
+                            s.inc,
+                            s.panel,
+                            s.lane,
+                            s.gr,
+                            s.gc,
+                            u8::from(s.recovery),
+                            json_f(s.value),
+                        ),
+                    ),
+                    Record::Event(e) => push(
+                        &mut out,
+                        format!(
+                            "{{\"ph\": \"i\", \"pid\": 0, \"tid\": {}, \"name\": \"{}\", \
+                             \"cat\": \"event\", \"ts\": {}, \"s\": \"t\", \"args\": {{\
+                             \"panel\": {}, \"step\": {}, \"value\": {}}}}}",
+                            e.rank,
+                            e.kind,
+                            json_f(e.t * 1e6),
+                            e.panel,
+                            e.step,
+                            json_f(e.value),
+                        ),
+                    ),
+                }
+            }
+            if dropped > 0 {
+                push(
+                    &mut out,
+                    format!(
+                        "{{\"ph\": \"i\", \"pid\": 0, \"tid\": {rank}, \"name\": \
+                         \"dropped_records\", \"cat\": \"event\", \"ts\": 0e0, \"s\": \"t\", \
+                         \"args\": {{\"count\": {dropped}}}}}"
+                    ),
+                );
+            }
+        }
+        out.push_str("\n], \"displayTimeUnit\": \"ns\"}\n");
+        out
+    }
+
+    /// Render the last `last_n` records per rank as a compact text block
+    /// for crash reports (`Fail::Unrecoverable` / `Stalled` /
+    /// `TaskPanicked` error messages).
+    pub fn flight_recorder(&self, last_n: usize) -> String {
+        if !self.enabled {
+            return String::from("flight recorder: tracing disabled");
+        }
+        let mut out = format!("flight recorder (last {last_n} records/rank):");
+        for (rank, records, dropped) in self.per_rank() {
+            out.push_str(&format!("\n  r{rank}:"));
+            let start = records.len().saturating_sub(last_n);
+            if records.is_empty() {
+                out.push_str(" (no records)");
+            }
+            for rec in &records[start..] {
+                match rec {
+                    Record::Span(s) => out.push_str(&format!(
+                        " {}[p{} l{} i{} t{:.3e}..{:.3e}{}]",
+                        s.kind.name(),
+                        s.panel,
+                        s.lane,
+                        s.inc,
+                        s.t0,
+                        s.t1,
+                        if s.recovery { " R" } else { "" }
+                    )),
+                    Record::Event(e) => out.push_str(&format!(
+                        " {}(p{} s{} t{:.3e} v={})",
+                        e.kind, e.panel, e.step, e.t, e.value
+                    )),
+                }
+            }
+            if dropped > 0 {
+                out.push_str(&format!(" [+{dropped} dropped]"));
+            }
+        }
+        out
+    }
+}
+
+/// Deterministic float rendering for the Perfetto export: finite values
+/// in `{:e}` form (valid JSON numbers), non-finite as `null` — the same
+/// convention as the bench `JsonSink`.
+fn json_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        String::from("null")
     }
 }
 
@@ -124,7 +384,21 @@ mod tests {
     fn disabled_trace_records_nothing() {
         let t = Trace::disabled();
         t.emit(0.0, 0, 0, 0, "x", 0.0);
+        t.span(Span {
+            kind: SpanKind::PanelTsqr,
+            t0: 0.0,
+            t1: 1.0,
+            rank: 0,
+            inc: 0,
+            panel: 0,
+            lane: 0,
+            gr: 0,
+            gc: 0,
+            recovery: false,
+            value: 0.0,
+        });
         assert!(t.is_empty());
+        assert!(!t.is_enabled());
     }
 
     #[test]
@@ -137,5 +411,84 @@ mod tests {
         assert!(j.contains("\"kind\": \"tsqr_merge\""));
         // no trailing comma before the closing bracket
         assert!(!j.contains(",\n]"));
+    }
+
+    #[test]
+    fn spans_and_events_are_separated_by_view() {
+        let t = Trace::new();
+        t.emit(0.0, 1, 2, 3, "checkpoint", 1.0);
+        t.span(Span {
+            kind: SpanKind::UpdateSegment,
+            t0: 1.0,
+            t1: 2.0,
+            rank: 0,
+            inc: 0,
+            panel: 2,
+            lane: 1,
+            gr: 0,
+            gc: 0,
+            recovery: false,
+            value: 8.0,
+        });
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.events().len(), 1);
+        assert_eq!(t.spans().len(), 1);
+        assert_eq!(t.spans()[0].kind, SpanKind::UpdateSegment);
+    }
+
+    #[test]
+    fn ring_overflow_is_counted_and_drops_oldest() {
+        let t = Trace::with_capacity(4);
+        for i in 0..10 {
+            t.emit(i as f64, 0, i, 0, "e", 0.0);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        // Oldest dropped: the first surviving event is #6.
+        assert_eq!(t.events()[0].t, 6.0);
+        assert!(t.to_perfetto().contains("dropped_records"));
+    }
+
+    #[test]
+    fn perfetto_export_shape() {
+        let t = Trace::new();
+        t.ensure_ranks(2);
+        t.span(Span {
+            kind: SpanKind::RecoveryFetch,
+            t0: 1e-6,
+            t1: 3e-6,
+            rank: 1,
+            inc: 1,
+            panel: 4,
+            lane: 0,
+            gr: 1,
+            gc: 0,
+            recovery: true,
+            value: 0.0,
+        });
+        t.emit(2e-6, 0, 0, 0, "failure", 3.0);
+        let j = t.to_perfetto();
+        assert!(j.starts_with("{\"traceEvents\": ["));
+        assert!(j.trim_end().ends_with('}'));
+        assert!(j.contains("\"thread_name\""));
+        assert!(j.contains("\"rank 1\""));
+        assert!(j.contains("\"cat\": \"recovery\""));
+        assert!(j.contains("\"recovery\": 1"));
+        assert!(j.contains("\"ph\": \"i\""));
+        // Same content again is byte-identical (pure function of state).
+        assert_eq!(j, t.to_perfetto());
+    }
+
+    #[test]
+    fn flight_recorder_renders_last_records() {
+        let t = Trace::with_capacity(8);
+        for i in 0..5 {
+            t.emit(i as f64, 0, i, 0, "e", 0.0);
+        }
+        let fr = t.flight_recorder(2);
+        assert!(fr.contains("r0:"));
+        assert!(fr.contains("e(p4"));
+        assert!(!fr.contains("e(p0"), "only the last N records appear: {fr}");
+        assert!(Trace::disabled().flight_recorder(4).contains("disabled"));
     }
 }

@@ -1,0 +1,271 @@
+//! Typed spans and the per-rank lock-free ring buffers behind [`Trace`].
+//!
+//! A [`Span`] is one begin/end interval on the logical clock, attributed
+//! by rank x incarnation x panel x lane x grid coordinates. Spans (and
+//! legacy [`TraceEvent`]s, wrapped as [`Record::Event`]) are recorded
+//! into one bounded single-writer ring per rank: the hot path takes no
+//! global lock, memory is bounded by `capacity` records per rank, and
+//! overflow drops the *oldest* records while counting every drop, so a
+//! truncated trace is always detectable.
+//!
+//! Writer/reader protocol: the scheduler polls at most one task per rank
+//! at a time and REBUILD incarnations are sequential, so each ring has
+//! one effective writer; readers (exporters, the flight recorder, the
+//! compatibility views) run after the pool has quiesced. Both sides are
+//! nevertheless fully sound under arbitrary interleaving: every slot is
+//! guarded by a per-slot atomic claim, and a contended access skips the
+//! slot (counted as dropped) instead of racing.
+//!
+//! [`Trace`]: super::Trace
+//! [`TraceEvent`]: super::TraceEvent
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use super::TraceEvent;
+
+/// What a [`Span`] measures. Recovery kinds are flagged in the Perfetto
+/// export so failure handling stands out on the rank tracks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One panel's TSQR: leaf QR plus the pairwise merge tree.
+    PanelTsqr,
+    /// Row-broadcast of a panel's `{Y1, T}` factors across the grid row.
+    BcastFactors,
+    /// One trailing-update segment (a lane's columns) for one panel.
+    UpdateSegment,
+    /// Pairwise checkpoint exchange of the local trailing matrix.
+    CheckpointWrite,
+    /// Failure detection: a survivor claims the revival of a dead rank
+    /// (a point span — detection has no duration on the logical clock).
+    RecoveryDetect,
+    /// A replayed rank fetching retained data from its buddy.
+    RecoveryFetch,
+    /// A REBUILD replacement's whole life: spawn to finish.
+    RecoveryReplay,
+}
+
+impl SpanKind {
+    /// Stable lowercase name used by the exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::PanelTsqr => "panel_tsqr",
+            SpanKind::BcastFactors => "bcast_factors",
+            SpanKind::UpdateSegment => "update_segment",
+            SpanKind::CheckpointWrite => "checkpoint_write",
+            SpanKind::RecoveryDetect => "recovery_detect",
+            SpanKind::RecoveryFetch => "recovery_fetch",
+            SpanKind::RecoveryReplay => "recovery_replay",
+        }
+    }
+
+    /// True for the kinds that only occur while handling a failure.
+    pub fn is_recovery(self) -> bool {
+        matches!(
+            self,
+            SpanKind::RecoveryDetect | SpanKind::RecoveryFetch | SpanKind::RecoveryReplay
+        )
+    }
+
+    /// Perfetto category: the phase bucket for normal spans, `recovery`
+    /// for the failure-handling kinds.
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::PanelTsqr => "tsqr",
+            SpanKind::BcastFactors => "bcast",
+            SpanKind::UpdateSegment => "update",
+            SpanKind::CheckpointWrite => "checkpoint",
+            SpanKind::RecoveryDetect | SpanKind::RecoveryFetch | SpanKind::RecoveryReplay => {
+                "recovery"
+            }
+        }
+    }
+}
+
+/// One interval on a rank's logical clock, fully attributed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// What was measured.
+    pub kind: SpanKind,
+    /// Begin, logical seconds.
+    pub t0: f64,
+    /// End, logical seconds (`t0 == t1` for point spans).
+    pub t1: f64,
+    /// Emitting rank.
+    pub rank: usize,
+    /// The rank's incarnation (0 = original, bumped per REBUILD).
+    pub inc: u32,
+    /// CAQR panel index the span belongs to.
+    pub panel: usize,
+    /// Update lane (0 for non-update spans).
+    pub lane: usize,
+    /// Process-grid row of the emitting rank.
+    pub gr: usize,
+    /// Process-grid column of the emitting rank.
+    pub gc: usize,
+    /// True when the span is part of failure handling — either a
+    /// recovery kind, or a normal-kind span replayed by a REBUILD
+    /// replacement.
+    pub recovery: bool,
+    /// Kind-specific detail: dead rank for detect, buddy for fetch,
+    /// payload bytes for checkpoint, merge-step count for TSQR.
+    pub value: f64,
+}
+
+/// One ring-buffer record: a typed span or a legacy flat event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    /// A typed begin/end span.
+    Span(Span),
+    /// A legacy `Trace::emit` event, kept for the compatibility views.
+    Event(TraceEvent),
+}
+
+impl Record {
+    /// The record's (begin) timestamp, logical seconds.
+    pub fn t(&self) -> f64 {
+        match self {
+            Record::Span(s) => s.t0,
+            Record::Event(e) => e.t,
+        }
+    }
+}
+
+/// Slot states for the per-slot claim byte.
+const SLOT_FREE: u8 = 0;
+const SLOT_BUSY: u8 = 1;
+
+struct SlotCell {
+    /// Claim byte: [`SLOT_BUSY`] while one side holds exclusive access
+    /// to `rec`. Contenders skip rather than wait.
+    state: AtomicU8,
+    rec: UnsafeCell<Option<Record>>,
+}
+
+/// Bounded drop-oldest ring for one rank. Lock-free: a push is one
+/// relaxed `fetch_add` plus one per-slot claim, and never blocks.
+pub(crate) struct RankRing {
+    slots: Box<[SlotCell]>,
+    /// Total records ever pushed (monotone); `pushed - capacity` of them
+    /// (when positive) have been overwritten, i.e. dropped-oldest.
+    pushed: AtomicU64,
+    /// Records abandoned because the target slot was concurrently
+    /// claimed (requires a writer lapped by a whole ring — counted so a
+    /// lost record is never silent).
+    contended: AtomicU64,
+}
+
+// SAFETY: all access to each `SlotCell::rec` is mediated by its `state`
+// claim byte — a slot is read or written only between a successful
+// SLOT_FREE -> SLOT_BUSY compare-exchange (Acquire) and the matching
+// SLOT_BUSY -> SLOT_FREE store (Release), so no two threads ever touch
+// the same `UnsafeCell` concurrently and writes are published to the
+// next claimant.
+unsafe impl Sync for RankRing {}
+
+impl RankRing {
+    pub(crate) fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        let slots = (0..cap)
+            .map(|_| SlotCell { state: AtomicU8::new(SLOT_FREE), rec: UnsafeCell::new(None) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Self { slots, pushed: AtomicU64::new(0), contended: AtomicU64::new(0) }
+    }
+
+    /// Append one record, overwriting the oldest when full.
+    pub(crate) fn push(&self, rec: Record) {
+        let seq = self.pushed.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        if slot
+            .state
+            .compare_exchange(SLOT_FREE, SLOT_BUSY, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            // SAFETY: the claim byte grants exclusive access (see the
+            // `unsafe impl Sync` rationale above).
+            unsafe { *slot.rec.get() = Some(rec) };
+            slot.state.store(SLOT_FREE, Ordering::Release);
+        } else {
+            self.contended.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Records currently held, oldest first.
+    pub(crate) fn snapshot(&self) -> Vec<Record> {
+        let n = self.pushed.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let start = n.saturating_sub(cap);
+        let mut out = Vec::with_capacity((n - start) as usize);
+        for seq in start..n {
+            let slot = &self.slots[(seq % cap) as usize];
+            if slot
+                .state
+                .compare_exchange(SLOT_FREE, SLOT_BUSY, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                // SAFETY: the claim byte grants exclusive access.
+                let rec = unsafe { (*slot.rec.get()).clone() };
+                slot.state.store(SLOT_FREE, Ordering::Release);
+                if let Some(r) = rec {
+                    out.push(r);
+                }
+            }
+        }
+        out
+    }
+
+    /// Records dropped so far: overwritten-oldest plus claim conflicts.
+    pub(crate) fn dropped(&self) -> u64 {
+        let n = self.pushed.load(Ordering::Relaxed);
+        n.saturating_sub(self.slots.len() as u64) + self.contended.load(Ordering::Relaxed)
+    }
+
+    /// Total records ever pushed.
+    pub(crate) fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64) -> Record {
+        Record::Event(TraceEvent { t, rank: 0, panel: 0, step: 0, kind: "x", value: 0.0 })
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let r = RankRing::new(4);
+        for i in 0..10 {
+            r.push(ev(i as f64));
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4);
+        // Drop-oldest: records 0..6 gone, 6..10 retained in order.
+        assert_eq!(snap.iter().map(Record::t).collect::<Vec<_>>(), vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(r.pushed(), 10);
+    }
+
+    #[test]
+    fn ring_under_capacity_drops_nothing() {
+        let r = RankRing::new(8);
+        for i in 0..3 {
+            r.push(ev(i as f64));
+        }
+        assert_eq!(r.snapshot().len(), 3);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn span_kind_names_are_stable() {
+        assert_eq!(SpanKind::PanelTsqr.name(), "panel_tsqr");
+        assert_eq!(SpanKind::RecoveryReplay.name(), "recovery_replay");
+        assert!(SpanKind::RecoveryFetch.is_recovery());
+        assert!(!SpanKind::UpdateSegment.is_recovery());
+        assert_eq!(SpanKind::CheckpointWrite.category(), "checkpoint");
+        assert_eq!(SpanKind::RecoveryDetect.category(), "recovery");
+    }
+}
