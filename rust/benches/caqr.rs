@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use common::JsonVal;
 use ftcaqr::backend::Backend;
-use ftcaqr::config::{Algorithm, RunConfig};
+use ftcaqr::config::{Algorithm, BcastKind, RunConfig};
 use ftcaqr::coordinator::caqr::run_caqr;
 use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
 use ftcaqr::linalg::Matrix;
@@ -302,6 +302,125 @@ fn bench_grid(sink: &mut common::JsonSink) {
     }
 }
 
+/// Row-broadcast collective sweep: flat vs binomial vs segmented at
+/// Pr = 2, Pc in {4, 8, 16} (smoke: {4, 8}), on a bandwidth-dominated
+/// cost model (beta raised to 1e-9 so the root's serialized bundle
+/// transmissions dominate the comm path) and a wide matrix (two block
+/// columns per grid column) so most panels broadcast over every grid
+/// column. Gates the collective engine's contract from both sides: the
+/// schedule moves bytes, never operand values — factors bitwise
+/// identical across kinds, clean and under a mid-broadcast relay kill —
+/// while the tree shapes strictly cut the simulated communication
+/// critical path vs flat once Pc >= 8.
+fn bench_bcast(sink: &mut common::JsonSink) {
+    common::header("E6e: row-broadcast collective sweep (flat / binomial / segmented)");
+    let pcs: &[usize] = if common::smoke() { &[4, 8] } else { &[4, 8, 16] };
+    println!(
+        "{:>11} {:>5} {:>6} {:>10} | {:>12} {:>12} {:>8} {:>6} {:>10}",
+        "matrix", "P", "grid", "bcast", "makespan(us)", "comm(us)", "hops", "depth", "wall(ms)"
+    );
+    for &pc in pcs {
+        let (rows, block) = (256usize, 16usize);
+        let cols = block * pc * 2;
+        let procs = 2 * pc;
+        let mk = |kind| {
+            let mut c = RunConfig {
+                rows,
+                cols,
+                block,
+                procs,
+                grid_rows: 2,
+                grid_cols: pc,
+                algorithm: Algorithm::FaultTolerant,
+                bcast: kind,
+                // Below the leaf-Y matrix (128 x 16 f32 = 8 KiB): the
+                // segmented runs really split the bundle.
+                seg_bytes: 4096,
+                verify: false,
+                ..Default::default()
+            };
+            c.cost.beta = 1e-9;
+            c
+        };
+        let a = Matrix::randn(rows, cols, 7);
+        let mut flat_comm = 0.0f64;
+        let mut r0: Option<Matrix> = None;
+        for kind in [BcastKind::Flat, BcastKind::Binomial, BcastKind::Segmented] {
+            let (out, wall) = common::wall(|| {
+                ftcaqr::coordinator::run_caqr_matrix(
+                    mk(kind),
+                    a.clone(),
+                    Backend::native(),
+                    FaultPlan::none(),
+                    Trace::disabled(),
+                )
+                .unwrap()
+            });
+            match &r0 {
+                None => r0 = Some(out.reduced.clone()),
+                Some(base) => assert_eq!(
+                    base, &out.reduced,
+                    "{kind:?} changed the factors ({rows}x{cols} Pc={pc})"
+                ),
+            }
+            if kind == BcastKind::Flat {
+                flat_comm = out.report.comm_path;
+            } else if pc >= 8 {
+                assert!(
+                    out.report.comm_path < flat_comm,
+                    "{kind:?} comm path {:.3e}s not under flat's {:.3e}s at Pc={pc}",
+                    out.report.comm_path,
+                    flat_comm,
+                );
+            }
+            println!(
+                "{:>11} {procs:>5} {:>6} {:>10} | {:>12.3} {:>12.3} {:>8} {:>6} {:>10.2}",
+                format!("{rows}x{cols}"),
+                format!("2x{pc}"),
+                kind.to_string(),
+                out.report.critical_path * 1e6,
+                out.report.comm_path * 1e6,
+                out.report.bcast_hops,
+                out.report.bcast_depth,
+                wall * 1e3,
+            );
+            let ks = kind.to_string();
+            sink.rec(&[
+                ("bench", JsonVal::S("caqr_bcast")),
+                ("rows", JsonVal::I(rows as i64)),
+                ("cols", JsonVal::I(cols as i64)),
+                ("block", JsonVal::I(block as i64)),
+                ("procs", JsonVal::I(procs as i64)),
+                ("pc", JsonVal::I(pc as i64)),
+                ("bcast", JsonVal::S(&ks)),
+                ("makespan_s", JsonVal::F(out.report.critical_path)),
+                ("comm_path_s", JsonVal::F(out.report.comm_path)),
+                ("bcast_bytes", JsonVal::I(out.report.bcast_bytes as i64)),
+                ("bcast_hops", JsonVal::I(out.report.bcast_hops as i64)),
+                ("bcast_depth", JsonVal::I(out.report.bcast_depth as i64)),
+                ("messages", JsonVal::I(out.report.messages as i64)),
+                ("wall_s", JsonVal::F(wall)),
+            ]);
+        }
+        // The same contract under fire: rank 1 is the relay feeding
+        // virtual member 3 in panel 0's binomial tree; kill it at its
+        // Bcast site and the recovered run must still match bitwise.
+        let out = ftcaqr::coordinator::run_caqr_matrix(
+            mk(BcastKind::Binomial),
+            a.clone(),
+            Backend::native(),
+            FaultPlan::schedule(vec![ScheduledKill::new(1, 0, 0, Phase::Bcast)]),
+            Trace::disabled(),
+        )
+        .unwrap();
+        assert_eq!(
+            r0.as_ref().unwrap(),
+            &out.reduced,
+            "relay kill changed the factors ({rows}x{cols} Pc={pc})"
+        );
+    }
+}
+
 fn main() {
     let mut sink = common::JsonSink::new();
     common::header("E6: end-to-end CAQR (native backend)");
@@ -335,5 +454,6 @@ fn main() {
 
     bench_lookahead(&mut sink);
     bench_grid(&mut sink);
+    bench_bcast(&mut sink);
     sink.finish("caqr");
 }

@@ -236,13 +236,22 @@ pub struct CampaignOutcome {
 
 /// The run shape of one cell: the base config with the cell's procs and
 /// interval, faults cleared and the world forced single-worker.
+/// Does sweeping to `procs` force the base `--grid` back to the auto
+/// (`procs x 1`) shape? A fixed grid only fits its own process count.
+/// The fallback is recorded in the campaign's `meta` JSON record
+/// (`grid_reset_procs`) so a mismatched `--grid` is visible in the
+/// artifact rather than silently rewritten.
+fn grid_resets_at(c: &CampaignConfig, procs: usize) -> bool {
+    let mut cfg = c.base.clone();
+    cfg.procs = procs;
+    let (pr, pc) = cfg.grid_shape();
+    pr * pc != procs
+}
+
 fn cell_cfg(c: &CampaignConfig, procs: usize, interval: usize) -> RunConfig {
     let mut cfg = c.base.clone();
     cfg.procs = procs;
-    // A fixed grid shape from the base config only fits its own process
-    // count; when the sweep changes `procs`, fall back to the auto
-    // (`procs x 1`) grid so every cell stays valid.
-    if cfg.grid_shape().0 * cfg.grid_shape().1 != procs {
+    if grid_resets_at(c, procs) {
         cfg.grid_rows = 0;
         cfg.grid_cols = 0;
     }
@@ -560,9 +569,19 @@ impl CampaignOutcome {
     /// DESIGN.md): one `meta` record, then `baseline`, `cell` and
     /// `trial` records in deterministic order.
     pub fn emit(&self, c: &CampaignConfig, sink: &mut JsonSink) {
+        // Sweep procs values whose cells fell back to the auto grid
+        // because the base --grid does not fit them (see cell_cfg).
+        let grid_reset_procs = c
+            .procs
+            .iter()
+            .filter(|&&p| grid_resets_at(c, p))
+            .map(|p| p.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        let (gpr, gpc) = (c.base.grid_rows, c.base.grid_cols);
         sink.rec(&[
             ("record", JsonVal::S("meta")),
-            ("schema", JsonVal::I(2)),
+            ("schema", JsonVal::I(3)),
             ("seed", JsonVal::S(&c.seed.to_string())),
             ("hazard", JsonVal::S(&c.hazard.label())),
             ("node_width", JsonVal::I(c.node_width as i64)),
@@ -572,6 +591,8 @@ impl CampaignOutcome {
             ("cols", JsonVal::I(c.base.cols as i64)),
             ("block", JsonVal::I(c.base.block as i64)),
             ("check_tol", JsonVal::F(c.check_tol.unwrap_or(f64::NAN))),
+            ("base_grid", JsonVal::S(&format!("{gpr}x{gpc}"))),
+            ("grid_reset_procs", JsonVal::S(&grid_reset_procs)),
         ]);
         for b in &self.baselines {
             sink.rec(&[
@@ -703,6 +724,32 @@ mod tests {
         assert_eq!(a, b, "same seed must reproduce bit-identical JSON");
         assert!(a.contains("\"record\":\"meta\""));
         assert!(a.contains("\"record\":\"trial\""));
+    }
+
+    #[test]
+    fn meta_records_grid_resets() {
+        // Base grid 2x1 fits procs=2 but not procs=4: the sweep resets
+        // the mismatched cells to the auto grid and the meta record
+        // names the affected procs values instead of hiding the rewrite.
+        let mut c = tiny();
+        c.base.grid_rows = 2;
+        c.base.grid_cols = 1;
+        c.procs = vec![2, 4];
+        c.intervals = vec![IntervalChoice::Fixed(0)];
+        assert!(!grid_resets_at(&c, 2));
+        assert!(grid_resets_at(&c, 4));
+        let out = run_campaign(&c).unwrap();
+        let mut sink = JsonSink::new();
+        out.emit(&c, &mut sink);
+        let body = sink.body();
+        assert!(body.contains("\"schema\":3"), "{body}");
+        assert!(body.contains("\"base_grid\":\"2x1\""), "{body}");
+        assert!(body.contains("\"grid_reset_procs\":\"4\""), "{body}");
+        // A fitting (or auto) base grid records no resets.
+        let mut sink = JsonSink::new();
+        let c2 = tiny();
+        run_campaign(&c2).unwrap().emit(&c2, &mut sink);
+        assert!(sink.body().contains("\"grid_reset_procs\":\"\""));
     }
 
     #[test]

@@ -48,6 +48,48 @@ impl std::fmt::Display for Algorithm {
     }
 }
 
+/// Row-broadcast collective schedule (how the panel column's WY factors
+/// reach the other grid columns of its grid row — see
+/// `coordinator/collective.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BcastKind {
+    /// Pick per run: flat for tiny rows, segmented for large bundles,
+    /// binomial otherwise.
+    #[default]
+    Auto,
+    /// Root sends to every peer directly (the historical schedule).
+    Flat,
+    /// Binomial tree: `O(log Pc)` depth, relays forward.
+    Binomial,
+    /// Binomial tree with the bundle split into `seg_bytes` segments so
+    /// relay forwarding overlaps reception.
+    Segmented,
+}
+
+impl std::str::FromStr for BcastKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Self::Auto),
+            "flat" => Ok(Self::Flat),
+            "binomial" | "tree" => Ok(Self::Binomial),
+            "segmented" | "pipelined" => Ok(Self::Segmented),
+            other => Err(format!("unknown bcast schedule '{other}'")),
+        }
+    }
+}
+
+impl std::fmt::Display for BcastKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BcastKind::Auto => "auto",
+            BcastKind::Flat => "flat",
+            BcastKind::Binomial => "binomial",
+            BcastKind::Segmented => "segmented",
+        })
+    }
+}
+
 /// Compute-backend selection.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BackendKind {
@@ -123,6 +165,13 @@ pub struct RunConfig {
     /// panel's far-trailing update (factors stay bitwise identical on
     /// the native backend). Checkpoint boundaries act as barriers.
     pub lookahead: usize,
+    /// Row-broadcast collective schedule (2-D grids only; `Pc = 1` runs
+    /// never broadcast). The schedule moves bytes, never operand values:
+    /// factors are bitwise-identical across all kinds.
+    pub bcast: BcastKind,
+    /// Segment size in bytes for the pipelined-segmented broadcast
+    /// schedule (and the `Auto` large-bundle threshold).
+    pub seg_bytes: usize,
     /// RNG seed for the input matrix.
     pub seed: u64,
     /// Verify the factorization against the Gram identity after the run.
@@ -149,6 +198,8 @@ impl Default for RunConfig {
             checkpoint_auto: false,
             stragglers: Vec::new(),
             lookahead: 0,
+            bcast: BcastKind::Auto,
+            seg_bytes: 65536,
             seed: 0,
             verify: true,
         }
@@ -254,6 +305,10 @@ impl RunConfig {
             self.local_rows(),
             self.block
         );
+        ensure!(
+            self.seg_bytes >= 1,
+            "seg_bytes must be >= 1 (one segment per byte at the extreme)"
+        );
         for &(rank, factor) in &self.stragglers {
             ensure!(
                 rank < self.procs,
@@ -300,6 +355,8 @@ impl RunConfig {
                 }
                 "straggler" => c.stragglers.push(parse_straggler(v)?),
                 "lookahead" => c.lookahead = v.parse()?,
+                "bcast" => c.bcast = v.parse().map_err(anyhow::Error::msg)?,
+                "seg_bytes" => c.seg_bytes = v.parse()?,
                 "seed" => c.seed = v.parse()?,
                 "verify" => c.verify = v.parse()?,
                 "artifact_dir" => c.backend = BackendKind::Xla { artifact_dir: v.into() },
@@ -339,6 +396,8 @@ impl RunConfig {
             out.push_str(&format!("straggler = {rank}:{factor}\n"));
         }
         out.push_str(&format!("lookahead = {}\n", self.lookahead));
+        out.push_str(&format!("bcast = {}\n", self.bcast));
+        out.push_str(&format!("seg_bytes = {}\n", self.seg_bytes));
         out.push_str(&format!("seed = {}\n", self.seed));
         out.push_str(&format!("verify = {}\n", self.verify));
         if let BackendKind::Xla { artifact_dir } = &self.backend {
@@ -503,6 +562,27 @@ mod tests {
         // A 2x2 grid on the default shape is fine.
         let c = RunConfig { grid_rows: 2, grid_cols: 2, ..Default::default() };
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn bcast_defaults_to_auto_and_parses() {
+        let c = RunConfig::default();
+        assert_eq!(c.bcast, BcastKind::Auto);
+        assert_eq!(c.seg_bytes, 65536);
+        let c = RunConfig::from_kv(
+            "rows = 256\ncols = 64\nbcast = binomial\nseg_bytes = 4096\n",
+        )
+        .unwrap();
+        assert_eq!(c.bcast, BcastKind::Binomial);
+        assert_eq!(c.seg_bytes, 4096);
+        let c2 = RunConfig::from_kv(&c.to_kv()).unwrap();
+        assert_eq!(c2.bcast, BcastKind::Binomial);
+        assert_eq!(c2.seg_bytes, 4096);
+        assert_eq!("tree".parse::<BcastKind>().unwrap(), BcastKind::Binomial);
+        assert_eq!("pipelined".parse::<BcastKind>().unwrap(), BcastKind::Segmented);
+        assert!(RunConfig::from_kv("bcast = ring\n").is_err());
+        let bad = RunConfig { seg_bytes: 0, ..Default::default() };
+        assert!(bad.validate().is_err(), "zero seg_bytes rejected");
     }
 
     #[test]

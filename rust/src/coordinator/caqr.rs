@@ -48,6 +48,7 @@ use crate::sim::{
 };
 use crate::trace::{Span, SpanKind, Trace};
 
+use super::collective::BcastSched;
 use super::grid::Grid;
 use super::panel::{geometry, PanelGeom};
 use super::recovery::FtOp;
@@ -139,8 +140,8 @@ pub struct CaqrOutcome {
 /// bumps a refcount instead of deep-copying the buffer.
 pub(crate) struct TsqrPhase {
     g: PanelGeom,
-    leaf_y: Matrix,
-    leaf_t: Matrix,
+    leaf_y: Arc<Matrix>,
+    leaf_t: Arc<Matrix>,
     r: Arc<Matrix>,
     /// (Y1, T) per tree step where this rank is a reduce-tree member.
     merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
@@ -191,8 +192,8 @@ enum UpdateWait {
 /// releases the panel's *near* segment first, which is what unlocks the
 /// next panel's TSQR under lookahead.
 pub(crate) struct UpdatePhase {
-    leaf_y: Matrix,
-    leaf_t: Matrix,
+    leaf_y: Arc<Matrix>,
+    leaf_t: Arc<Matrix>,
     /// (Y1, T) per tree step where this rank is a reduce-tree member.
     merges: Vec<Option<(Arc<Matrix>, Arc<Matrix>)>>,
     /// Segments not yet started: (first column, width, lane), ascending.
@@ -209,12 +210,36 @@ pub(crate) struct UpdatePhase {
 /// `Pc = 1` every rank is in the panel column and this stage is never
 /// entered, keeping the 1-D path bitwise and metrics identical).
 enum BcastWait {
-    /// FT mode: pull from the sender's published store bundle (the
-    /// one-sided model of the row-broadcast; the receiver is charged
-    /// the bundle bytes on the hit).
-    Store { sender: usize },
-    /// Plain mode: a real row-broadcast message in flight.
-    Plain { sender: usize, tag: Tag },
+    /// FT mode: pull from the published store copy of the rank ahead of
+    /// us in the collective schedule ([`BcastSched`]) — the root for its
+    /// direct children, a republishing relay otherwise. The pull is
+    /// charged serialized behind the publisher's `ord` earlier readers,
+    /// segmented by `nseg`; `fallback_ord` is the conservative ordinal
+    /// against the *root's* copy when the relay's incarnation dies.
+    Store {
+        parent: usize,
+        root: usize,
+        ord: usize,
+        fallback_ord: usize,
+        nseg: usize,
+        /// Grid-row ranks that pull *our* republished copy.
+        children: Vec<usize>,
+    },
+    /// Plain mode: the bundle's segments in flight from the tree parent
+    /// (`tag.step` carries the segment index). Each segment is forwarded
+    /// to `children` the moment it lands — the pipelined relay — and
+    /// accumulated into `got` until all `nseg` segments (and `expect`
+    /// matrices) have arrived.
+    Plain {
+        sender: usize,
+        k: usize,
+        panel_gcol: u32,
+        seg: usize,
+        nseg: usize,
+        got: Vec<Arc<Matrix>>,
+        expect: usize,
+        children: Vec<usize>,
+    },
 }
 
 /// Pipeline stage of one in-flight panel on one rank. The `f64` riding
@@ -329,6 +354,24 @@ fn merge_slots(algorithm: Algorithm, idx: usize, q: usize) -> Vec<usize> {
         .collect()
 }
 
+/// Per-matrix byte sizes of a panel's row-broadcast bundle, in bundle
+/// order — a pure function of the run geometry (all grid-row members
+/// share `idx`/`q`), so the sender, every relay and every receiver
+/// derive the identical layout (and hence the identical
+/// [`BcastSched`] segment plan) without exchanging a header: leaf `Y`
+/// is the zero-padded panel block `(m_local, b)`, leaf `T` and every
+/// merge `(Y₁, T)` are `(b, b)`.
+fn bundle_sizes(cfg: &RunConfig, g: &PanelGeom) -> Vec<usize> {
+    let b = cfg.block;
+    let elt = std::mem::size_of::<f32>();
+    let mut sizes = vec![cfg.local_rows() * b * elt, b * b * elt];
+    for _ in merge_slots(cfg.algorithm, g.idx, g.q) {
+        sizes.push(b * b * elt);
+        sizes.push(b * b * elt);
+    }
+    sizes
+}
+
 /// One rank's resumable panel-loop body (original or REBUILD
 /// replacement): a lookahead dataflow engine over in-flight panel
 /// [`Unit`]s. With `RunConfig::lookahead = L`, up to `L + 1` panels are
@@ -397,6 +440,13 @@ impl Ranker {
 
     fn grid(&self) -> Grid {
         Grid::from_cfg(&self.shared.cfg)
+    }
+
+    /// The collective schedule for panel `g.k`'s row-broadcast — a pure
+    /// function of `(grid, panel, bundle geometry)`, so every rank in
+    /// the grid row plans the identical relay tree independently.
+    fn bcast_sched(&self, g: &PanelGeom) -> BcastSched {
+        BcastSched::plan(self.cfg(), &self.grid(), g.k, &bundle_sizes(self.cfg(), g))
     }
 
     /// Record one completed span ending at the current clock and charge
@@ -691,8 +741,10 @@ impl Ranker {
         let nsteps = tree::steps(g.q);
         TsqrPhase {
             g,
-            leaf_y: leaf.y,
-            leaf_t: leaf.t,
+            // Arc from birth: the update phase, the broadcast bundle and
+            // the store all share these buffers (publish = refcount bump).
+            leaf_y: Arc::new(leaf.y),
+            leaf_t: Arc::new(leaf.t),
             r: Arc::new(leaf.r),
             merges: vec![None; nsteps],
             s: 0,
@@ -963,35 +1015,51 @@ impl Ranker {
         self.maybe_fail(ctx, site)?;
         let slots = merge_slots(self.cfg().algorithm, g.idx, g.q);
         let mut mats: Vec<Arc<Matrix>> = Vec::with_capacity(2 + 2 * slots.len());
-        mats.push(Arc::new(ph.leaf_y.clone()));
-        mats.push(Arc::new(ph.leaf_t.clone()));
+        // Pure refcount bumps: the phase state, the store and every
+        // message payload share the factor buffers (no per-panel copy).
+        mats.push(ph.leaf_y.clone());
+        mats.push(ph.leaf_t.clone());
         for &s in &slots {
             let (y1, t) = ph.merges[s].clone().expect("merge slot filled (merge_slots)");
             mats.push(y1);
             mats.push(t);
         }
+        let sched = self.bcast_sched(g);
+        debug_assert_eq!(
+            mats.iter().map(|m| m.nbytes()).collect::<Vec<_>>(),
+            bundle_sizes(self.cfg(), g),
+            "bundle layout must be pure geometry (panel {})",
+            g.k
+        );
+        debug_assert_eq!(sched.root_gcol(), g.panel_gcol);
+        ctx.metrics.set_bcast_depth(sched.depth() as u64);
         match self.cfg().algorithm {
             Algorithm::FaultTolerant => {
                 crate::simlog!("[r{}] bcast publish panel {}", ctx.rank, g.k);
-                self.retain_bcast(ctx.rank, ctx.incarnation(), g.k, mats);
+                self.retain_bcast(ctx.rank, ctx.incarnation(), g.k, ctx.clock, mats);
             }
             Algorithm::Plain => {
-                // Real row messages to exactly the grid-row peers that
-                // own trailing blocks this panel (a peer with none never
-                // posts a receive).
+                // Real row messages along the schedule's tree edges —
+                // the root sends only to its own children (everyone else
+                // is served by a relay). Segment-major order: every
+                // child's segment `s` leaves before any child's `s + 1`,
+                // so relays start forwarding while the root is still
+                // serializing the bundle's tail.
                 let grid = self.grid();
                 let (grow, _) = grid.coords(ctx.rank);
-                let tag =
-                    Tag::grid(TagKind::BcastFactors, g.k, 0, 0, g.panel_gcol as u32);
-                for gc in 0..grid.cols() {
-                    if gc == g.panel_gcol {
-                        continue;
-                    }
-                    let peer = grid.rank_at(grow, gc);
-                    if geometry(self.cfg(), peer, g.k).n_trail > 0 {
-                        self.send_plain(ctx, peer, tag, MsgData::Mats(mats.clone()))?;
+                let mut off = 0usize;
+                for s in 0..sched.nseg() {
+                    let cnt = sched.seg_count(s);
+                    let seg_mats = &mats[off..off + cnt];
+                    off += cnt;
+                    let tag =
+                        Tag::grid(TagKind::BcastFactors, g.k, s, 0, g.panel_gcol as u32);
+                    for c in sched.children(0) {
+                        let peer = grid.rank_at(grow, sched.gcol(c));
+                        self.send_bcast_plain(ctx, peer, tag, seg_mats.to_vec())?;
                     }
                 }
+                debug_assert_eq!(off, mats.len(), "segments must cover the bundle");
             }
         }
         Ok(())
@@ -1006,18 +1074,45 @@ impl Ranker {
         debug_assert!(!g.in_panel_col && g.n_trail > 0);
         let site = FailSite { panel: g.k, step: 0, phase: Phase::Bcast };
         self.maybe_fail(ctx, site)?;
-        let sender = self.grid().rank_at(g.owner_row + g.idx, g.panel_gcol);
+        let sched = self.bcast_sched(&g);
+        let grid = self.grid();
+        let (grow, _) = grid.coords(ctx.rank);
+        let v = sched.vindex(g.gcol).expect("receiver is a schedule member");
+        let parent = grid.rank_at(grow, sched.gcol(sched.parent(v)));
+        let root = grid.rank_at(grow, sched.root_gcol());
+        let children: Vec<usize> = sched
+            .children(v)
+            .into_iter()
+            .map(|c| grid.rank_at(grow, sched.gcol(c)))
+            .collect();
+        let expect = 2 + 2 * merge_slots(self.cfg().algorithm, g.idx, g.q).len();
         let wait = match self.cfg().algorithm {
-            Algorithm::FaultTolerant => BcastWait::Store { sender },
+            Algorithm::FaultTolerant => BcastWait::Store {
+                parent,
+                root,
+                ord: sched.pull_ord(v),
+                fallback_ord: sched.fallback_ord(v),
+                nseg: sched.nseg(),
+                children,
+            },
             Algorithm::Plain => BcastWait::Plain {
-                sender,
-                tag: Tag::grid(TagKind::BcastFactors, g.k, 0, 0, g.panel_gcol as u32),
+                sender: parent,
+                k: g.k,
+                panel_gcol: g.panel_gcol as u32,
+                seg: 0,
+                nseg: sched.nseg(),
+                got: Vec::with_capacity(expect),
+                expect,
+                children,
             },
         };
         Ok(Stage::Bcast(wait, ctx.clock))
     }
 
-    /// Poll the broadcast wait: a store pull (FT) or a plain receive.
+    /// Poll the broadcast wait: a store pull (FT) or the plain segment
+    /// receives — in both modes a member with schedule children relays
+    /// the bundle onward (republish into the store / forward the
+    /// segments) before its own update begins.
     fn step_bcast(
         &self,
         g: PanelGeom,
@@ -1026,15 +1121,76 @@ impl Ranker {
         sp: &Spawner,
     ) -> Result<BcastStep, Fail> {
         match wait {
-            BcastWait::Store { sender } => match self.fetch_bcast(ctx, sp, sender, g.k)? {
-                Some(mats) => Ok(BcastStep::Got(mats)),
-                None => Ok(BcastStep::Parked(BcastWait::Store { sender })),
-            },
-            BcastWait::Plain { sender, tag } => {
-                match self.recv_plain_poll(ctx, sender, tag)? {
-                    Some(d) => Ok(BcastStep::Got(d.into_mats_for(&tag))),
-                    None => Ok(BcastStep::Parked(BcastWait::Plain { sender, tag })),
+            BcastWait::Store { parent, root, ord, fallback_ord, nseg, children } => {
+                match self.fetch_bcast(ctx, sp, parent, root, g.k, ord, fallback_ord, nseg)? {
+                    Some(mats) => {
+                        // Relay republish: our schedule children pull our
+                        // copy, not the root's. Incarnation-gated, so a
+                        // replaying replacement republishes harmlessly.
+                        if !children.is_empty() {
+                            self.retain_bcast(
+                                ctx.rank,
+                                ctx.incarnation(),
+                                g.k,
+                                ctx.clock,
+                                mats.clone(),
+                            );
+                        }
+                        Ok(BcastStep::Got(mats))
+                    }
+                    None => Ok(BcastStep::Parked(BcastWait::Store {
+                        parent,
+                        root,
+                        ord,
+                        fallback_ord,
+                        nseg,
+                        children,
+                    })),
                 }
+            }
+            BcastWait::Plain {
+                sender,
+                k,
+                panel_gcol,
+                mut seg,
+                nseg,
+                mut got,
+                expect,
+                children,
+            } => {
+                while seg < nseg {
+                    let tag = Tag::grid(TagKind::BcastFactors, k, seg, 0, panel_gcol);
+                    match self.recv_plain_poll(ctx, sender, tag)? {
+                        None => {
+                            return Ok(BcastStep::Parked(BcastWait::Plain {
+                                sender,
+                                k,
+                                panel_gcol,
+                                seg,
+                                nseg,
+                                got,
+                                expect,
+                                children,
+                            }))
+                        }
+                        Some(d) => {
+                            let mats = d.into_mats_for(&tag);
+                            // Pipelined relay: forward this segment to our
+                            // own children before waiting for the next.
+                            for &child in &children {
+                                self.send_bcast_plain(ctx, child, tag, mats.clone())?;
+                            }
+                            got.extend(mats);
+                            seg += 1;
+                        }
+                    }
+                }
+                assert_eq!(
+                    got.len(),
+                    expect,
+                    "bcast segments must reassemble the full bundle (panel {k})"
+                );
+                Ok(BcastStep::Got(got))
             }
         }
     }
@@ -1055,8 +1211,10 @@ impl Ranker {
             g.q
         );
         let mut it = mats.into_iter();
-        let leaf_y = it.next().expect("leaf Y").as_ref().clone();
-        let leaf_t = it.next().expect("leaf T").as_ref().clone();
+        // The received Arcs are used as-is: the update phase shares the
+        // routed (or store-published) buffers instead of deep-copying.
+        let leaf_y = it.next().expect("leaf Y");
+        let leaf_t = it.next().expect("leaf T");
         let mut merges = vec![None; nsteps];
         for s in slots {
             let y1 = it.next().expect("merge Y1");

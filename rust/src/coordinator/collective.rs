@@ -1,0 +1,366 @@
+//! Collective schedules for the row broadcast of WY panel factors.
+//!
+//! After a panel column finishes its TSQR, each of its grid rows must
+//! move the row's factor bundle `{leaf Y, leaf T, (Y₁, T) per merge
+//! step}` to every other grid column that still owns trailing columns.
+//! The historical schedule was *flat*: the root sends (or, in FT mode,
+//! publishes once and every receiver pulls) `Pc - 1` full copies, so the
+//! root's NIC serializes `O(Pc)` bundle transmissions and the critical
+//! path grows like `Pc·(α + Bβ)` — erasing the latency savings CAQR's
+//! communication-avoiding analysis (Demmel/Grigori/Hoemmen/Langou)
+//! counts on. A [`BcastSched`] plans the alternative shapes:
+//!
+//! * **Flat** — root to every peer directly (the historical schedule).
+//! * **Binomial** — relays forward: virtual member `v` (root = 0)
+//!   receives from `v` with its highest set bit cleared and forwards to
+//!   `v + 2^j` for every `2^j` above its own highest bit. Depth
+//!   `⌈log₂ n⌉`, so the root serializes only `⌈log₂ n⌉` sends.
+//! * **Segmented** — the binomial tree with the bundle split into
+//!   `seg_bytes`-sized segments, so a relay forwards segment `s` while
+//!   segment `s + 1` is still arriving (pipelined on the logical
+//!   clock).
+//!
+//! The schedule is a **pure function** of `(grid, root, panel,
+//! per-matrix sizes, config)` — deterministic and replayable. Both the
+//! sender and every receiver plan independently and must agree, which
+//! works because the bundle's matrix sizes are themselves pure geometry
+//! (see `caqr::bundle_sizes`). The schedule moves bytes, never operand
+//! values: factors are bitwise-identical across all kinds.
+//!
+//! Virtual numbering rotates with the root so the relay pattern shifts
+//! as panels cycle over grid columns: member `v` is the grid column at
+//! rotated distance `v` from the root, restricted to columns that still
+//! own trailing blocks at this panel.
+
+use crate::config::{BcastKind, RunConfig};
+
+use super::grid::Grid;
+
+/// One grid row's broadcast schedule for one panel (all grid rows share
+/// it: members are grid *columns*, and every row runs the same shape).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BcastSched {
+    /// Resolved schedule kind (never [`BcastKind::Auto`]).
+    kind: BcastKind,
+    /// Member grid columns in virtual order; `members[0]` is the root
+    /// (the panel's grid column), the rest ascend by rotated distance.
+    members: Vec<usize>,
+    /// Matrices per segment, in bundle order (`len()` = segment count;
+    /// flat/binomial schedules always use one segment).
+    seg_counts: Vec<usize>,
+}
+
+/// Greedy bundle split: walk the matrices in order, starting a new
+/// segment whenever adding the next matrix would push a non-empty
+/// segment past `seg_bytes`. Matrices are never split, so a single
+/// oversized matrix becomes its own segment. Returns per-segment matrix
+/// counts (at least one segment, even for an empty bundle).
+pub fn plan_segments(sizes: &[usize], seg_bytes: usize) -> Vec<usize> {
+    let mut counts = Vec::new();
+    let (mut cur, mut cur_bytes) = (0usize, 0usize);
+    for &sz in sizes {
+        if cur > 0 && cur_bytes + sz > seg_bytes {
+            counts.push(cur);
+            (cur, cur_bytes) = (0, 0);
+        }
+        cur += 1;
+        cur_bytes += sz;
+    }
+    if cur > 0 || counts.is_empty() {
+        counts.push(cur);
+    }
+    counts
+}
+
+/// Highest set bit of `v` (`v > 0`).
+fn highest_bit(v: usize) -> usize {
+    1usize << (usize::BITS - 1 - v.leading_zeros())
+}
+
+impl BcastSched {
+    /// Plan panel `k`'s row-broadcast schedule. `sizes` are the bundle's
+    /// per-matrix byte sizes in send order — pure geometry, so senders
+    /// and receivers plan identically without exchanging metadata.
+    pub fn plan(cfg: &RunConfig, grid: &Grid, k: usize, sizes: &[usize]) -> Self {
+        let pc = grid.cols();
+        let root = grid.col_owner(k);
+        let nblocks = cfg.panels();
+        // Members: the root plus every other grid column that still owns
+        // trailing blocks at panel k (matching the receivers' own
+        // `n_trail > 0` admission gate).
+        let mut rest: Vec<usize> = (0..pc)
+            .filter(|&gc| {
+                gc != root && grid.local_blocks(gc, nblocks) > grid.blocks_before(gc, k + 1)
+            })
+            .collect();
+        rest.sort_by_key(|&gc| (gc + pc - root) % pc);
+        let mut members = Vec::with_capacity(rest.len() + 1);
+        members.push(root);
+        members.extend(rest);
+
+        let bytes: usize = sizes.iter().sum();
+        let kind = match cfg.bcast {
+            BcastKind::Auto => {
+                if members.len() <= 2 {
+                    // One receiver (or none): every shape is one hop.
+                    BcastKind::Flat
+                } else if bytes > cfg.seg_bytes {
+                    BcastKind::Segmented
+                } else {
+                    BcastKind::Binomial
+                }
+            }
+            k => k,
+        };
+        let seg_counts = if kind == BcastKind::Segmented {
+            plan_segments(sizes, cfg.seg_bytes)
+        } else {
+            vec![sizes.len()]
+        };
+        Self { kind, members, seg_counts }
+    }
+
+    /// The resolved schedule kind (never `Auto`).
+    pub fn kind(&self) -> BcastKind {
+        self.kind
+    }
+
+    /// Member count (root included).
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when the schedule has no receivers.
+    pub fn is_empty(&self) -> bool {
+        self.members.len() <= 1
+    }
+
+    /// Segment count (1 for flat/binomial).
+    pub fn nseg(&self) -> usize {
+        self.seg_counts.len()
+    }
+
+    /// Matrices in segment `s` of the bundle.
+    pub fn seg_count(&self, s: usize) -> usize {
+        self.seg_counts[s]
+    }
+
+    /// The root's grid column.
+    pub fn root_gcol(&self) -> usize {
+        self.members[0]
+    }
+
+    /// Grid column of virtual member `v`.
+    pub fn gcol(&self, v: usize) -> usize {
+        self.members[v]
+    }
+
+    /// Virtual index of grid column `gcol`, when it is a member.
+    pub fn vindex(&self, gcol: usize) -> Option<usize> {
+        self.members.iter().position(|&g| g == gcol)
+    }
+
+    /// Virtual parent of member `v > 0`.
+    pub fn parent(&self, v: usize) -> usize {
+        debug_assert!(v > 0 && v < self.members.len());
+        match self.kind {
+            BcastKind::Flat => 0,
+            _ => v - highest_bit(v),
+        }
+    }
+
+    /// Virtual children of member `v`, in forwarding (ordinal) order.
+    pub fn children(&self, v: usize) -> Vec<usize> {
+        let n = self.members.len();
+        match self.kind {
+            BcastKind::Flat => {
+                if v == 0 {
+                    (1..n).collect()
+                } else {
+                    Vec::new()
+                }
+            }
+            _ => {
+                let mut out = Vec::new();
+                let mut j = if v == 0 { 1 } else { highest_bit(v) << 1 };
+                while v + j < n {
+                    out.push(v + j);
+                    j <<= 1;
+                }
+                out
+            }
+        }
+    }
+
+    /// `v`'s ordinal among its parent's children — the serialization
+    /// position its pull (or its parent's forward) waits behind.
+    pub fn pull_ord(&self, v: usize) -> usize {
+        self.children(self.parent(v))
+            .iter()
+            .position(|&c| c == v)
+            .expect("v is one of its parent's children")
+    }
+
+    /// Serialization ordinal when member `v` falls back to pulling the
+    /// *root's* published copy (its relay died): behind every earlier
+    /// virtual member in the worst case.
+    pub fn fallback_ord(&self, v: usize) -> usize {
+        debug_assert!(v > 0);
+        v - 1
+    }
+
+    /// Tree depth in hops (flat: 1; binomial: `max popcount` over the
+    /// member range = `⌈log₂ n⌉`).
+    pub fn depth(&self) -> usize {
+        let n = self.members.len();
+        match self.kind {
+            BcastKind::Flat => usize::from(n > 1),
+            _ => (0..n).map(|v| v.count_ones() as usize).max().unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pc: usize, bcast: BcastKind) -> RunConfig {
+        RunConfig {
+            rows: 256,
+            cols: 16 * pc * 2, // 2 panels per grid column
+            block: 16,
+            procs: 2 * pc,
+            grid_rows: 2,
+            grid_cols: pc,
+            bcast,
+            ..Default::default()
+        }
+    }
+
+    fn sched(pc: usize, k: usize, bcast: BcastKind) -> BcastSched {
+        let c = cfg(pc, bcast);
+        BcastSched::plan(&c, &Grid::from_cfg(&c), k, &[1024, 64])
+    }
+
+    #[test]
+    fn binomial_topology_eight_members() {
+        let s = sched(8, 0, BcastKind::Binomial);
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.kind(), BcastKind::Binomial);
+        assert_eq!(s.children(0), vec![1, 2, 4]);
+        assert_eq!(s.children(1), vec![3, 5]);
+        assert_eq!(s.children(2), vec![6]);
+        assert_eq!(s.children(3), vec![7]);
+        assert!(s.children(4).is_empty() && s.children(7).is_empty());
+        assert_eq!(s.parent(5), 1);
+        assert_eq!(s.parent(6), 2);
+        assert_eq!(s.parent(7), 3);
+        assert_eq!(s.pull_ord(1), 0);
+        assert_eq!(s.pull_ord(2), 1);
+        assert_eq!(s.pull_ord(4), 2);
+        assert_eq!(s.pull_ord(5), 1);
+        assert_eq!(s.depth(), 3);
+        assert_eq!(s.nseg(), 1);
+    }
+
+    #[test]
+    fn flat_topology() {
+        let s = sched(8, 0, BcastKind::Flat);
+        assert_eq!(s.children(0), (1..8).collect::<Vec<_>>());
+        for v in 1..8 {
+            assert_eq!(s.parent(v), 0);
+            assert_eq!(s.pull_ord(v), v - 1);
+            assert!(s.children(v).is_empty());
+        }
+        assert_eq!(s.depth(), 1);
+    }
+
+    #[test]
+    fn every_member_is_exactly_one_child() {
+        for kind in [BcastKind::Flat, BcastKind::Binomial] {
+            for pc in 1..=9 {
+                let s = sched(pc, 0, kind);
+                let n = s.len();
+                let mut seen = vec![0usize; n];
+                for v in 0..n {
+                    for c in s.children(v) {
+                        assert!(c > v, "children come after their relay");
+                        seen[c] += 1;
+                        assert_eq!(s.parent(c), v);
+                    }
+                }
+                assert_eq!(seen[0], 0, "root has no parent");
+                assert!(seen[1..].iter().all(|&c| c == 1), "{kind:?} pc={pc}: {seen:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn members_rotate_with_the_root() {
+        // Panel 1 on a 4-column grid roots at grid column 1; the rest
+        // follow in rotated order.
+        let s = sched(4, 1, BcastKind::Binomial);
+        assert_eq!(s.root_gcol(), 1);
+        assert_eq!(s.gcol(1), 2);
+        assert_eq!(s.vindex(3), Some(2));
+        assert_eq!(s.vindex(0), Some(3));
+        // Plans are pure functions: replanning gives the same schedule.
+        assert_eq!(s, sched(4, 1, BcastKind::Binomial));
+    }
+
+    #[test]
+    fn members_drop_retired_columns() {
+        // cols = 2*pc panels; by panel k = nblocks - 1 only the columns
+        // owning the last block remain.
+        let pc = 4;
+        let c = cfg(pc, BcastKind::Binomial);
+        let nblocks = c.panels();
+        let s = BcastSched::plan(&c, &Grid::from_cfg(&c), nblocks - 1, &[64]);
+        assert_eq!(s.len(), 1, "no trailing columns at the last panel");
+        assert!(s.is_empty());
+        let s = BcastSched::plan(&c, &Grid::from_cfg(&c), nblocks - 2, &[64]);
+        assert_eq!(s.len(), 2, "one trailing column at the next-to-last panel");
+    }
+
+    #[test]
+    fn auto_resolution() {
+        // <= 2 members: flat.
+        let s = sched(2, 0, BcastKind::Auto);
+        assert_eq!(s.kind(), BcastKind::Flat);
+        // Small bundle on a wide grid: binomial.
+        let s = sched(8, 0, BcastKind::Auto);
+        assert_eq!(s.kind(), BcastKind::Binomial);
+        // Large bundle: segmented.
+        let c = cfg(8, BcastKind::Auto);
+        let big = vec![c.seg_bytes / 2 + 1; 4];
+        let s = BcastSched::plan(&c, &Grid::from_cfg(&c), 0, &big);
+        assert_eq!(s.kind(), BcastKind::Segmented);
+        assert_eq!(s.nseg(), 4, "greedy split: one oversized half per segment");
+    }
+
+    #[test]
+    fn segment_partition_is_greedy_and_total() {
+        assert_eq!(plan_segments(&[10, 10, 10], 20), vec![2, 1]);
+        assert_eq!(plan_segments(&[30, 10, 10], 20), vec![1, 2]);
+        assert_eq!(plan_segments(&[10; 6], 100), vec![6]);
+        assert_eq!(plan_segments(&[10; 4], 10), vec![1, 1, 1, 1]);
+        assert_eq!(plan_segments(&[], 10), vec![0], "empty bundle still one segment");
+        // Counts always sum to the matrix count.
+        for seg in [1usize, 7, 64, 1 << 20] {
+            let sizes = [100, 3, 700, 64, 64, 9000, 1];
+            let counts = plan_segments(&sizes, seg);
+            assert_eq!(counts.iter().sum::<usize>(), sizes.len(), "seg_bytes={seg}");
+        }
+    }
+
+    #[test]
+    fn segmented_uses_binomial_topology() {
+        let c = cfg(8, BcastKind::Segmented);
+        let s = BcastSched::plan(&c, &Grid::from_cfg(&c), 0, &[1024, 64]);
+        assert_eq!(s.kind(), BcastKind::Segmented);
+        assert_eq!(s.children(0), vec![1, 2, 4]);
+        assert_eq!(s.depth(), 3);
+        assert_eq!(s.nseg(), 1, "bundle under seg_bytes: a single segment");
+        assert_eq!(s.seg_count(0), 2);
+    }
+}

@@ -10,8 +10,10 @@
 //! * §III-C Algorithms 1 & 2 + recovery     → [`caqr`], [`recovery`],
 //!   [`store`]
 //! * tree shapes shared by all of the above → [`tree`]
+//! * row-broadcast collective schedules     → [`collective`]
 
 pub mod caqr;
+pub mod collective;
 pub mod grid;
 pub mod panel;
 pub mod recovery;
@@ -20,6 +22,7 @@ pub mod tree;
 pub mod tsqr;
 
 pub use caqr::{run_caqr, run_caqr_matrix, run_caqr_simple, CaqrOutcome, Shared};
+pub use collective::BcastSched;
 pub use grid::Grid;
 pub use panel::{geometry, PanelGeom};
 pub use store::{RecoveryStore, Retained, RevivalGate};

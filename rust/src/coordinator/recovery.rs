@@ -205,6 +205,33 @@ impl Ranker {
         }
     }
 
+    /// Plain-mode broadcast-edge send: charges the sender's serialization
+    /// (`o + Bβ` per copy, [`crate::sim::CostModel::relay_send_time`]) so
+    /// a flat root honestly pays for every copy it fans out, and feeds the
+    /// collective counters. One tree edge = one hop.
+    pub(crate) fn send_bcast_plain(
+        &self,
+        ctx: &mut RankCtx,
+        dst: usize,
+        tag: Tag,
+        mats: Vec<Arc<Matrix>>,
+    ) -> Result<(), Fail> {
+        let data = MsgData::Mats(mats);
+        let bytes = data.nbytes();
+        match ctx.send_serialized(dst, tag, data) {
+            Ok(()) => {
+                ctx.metrics.record_bcast(bytes as u64, 1);
+                Ok(())
+            }
+            Err(Fail::RankFailed { .. })
+                if self.shared.cfg.semantics == Semantics::Abort =>
+            {
+                Err(Fail::Aborted)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
     /// Handle a detected peer failure according to the semantics.
     /// `Ok(true)` = the peer is alive again (either already rebuilt or
     /// revived by us) — retry the operation now; `Ok(false)` = another
@@ -482,65 +509,102 @@ impl Ranker {
         self.shared.notify_store_watchers();
     }
 
-    /// Pull the panel's row-broadcast factor bundle (FT mode, `Pc > 1`):
-    /// the same grid row's panel-column member published it after its
-    /// TSQR. `Ok(None)` parks the receiver — the sender either hasn't
-    /// published yet, or died and its replacement will republish during
-    /// its TSQR replay. There is no unrecoverable case here: unlike a
-    /// pair step's `{W, T, Y₁}`, the bundle is re-derivable from the
-    /// sender's own replay (whose step fetches have their own
+    /// Pull the panel's row-broadcast factor bundle (FT mode, `Pc > 1`)
+    /// from `parent` — the rank ahead of us in the collective schedule
+    /// ([`super::collective::BcastSched`]): the grid row's panel-column
+    /// member for the root's direct children, an intermediate relay that
+    /// republished the bundle otherwise. `ord` is this reader's
+    /// serialization ordinal behind the parent's other pullers; `nseg`
+    /// segments the charge so deep readers overlap with the publisher's
+    /// serialization ([`crate::sim::CostModel::bcast_pull_time`]).
+    ///
+    /// `Ok(None)` parks the receiver — the parent either hasn't published
+    /// yet, or died and its replacement will republish during its replay.
+    /// A *dead* parent additionally triggers the fallback-to-root
+    /// invariant: the root's copy (published before any relay could hold
+    /// one) serves the reader directly at the conservative flat ordinal
+    /// `fallback_ord`, so no receiver ever waits on a relay's replay once
+    /// the root's copy exists. There is no unrecoverable case here:
+    /// unlike a pair step's `{W, T, Y₁}`, the bundle is re-derivable from
+    /// the root's own replay (whose step fetches have their own
     /// unrecoverable check).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn fetch_bcast(
         &self,
         ctx: &mut RankCtx,
         sp: &Spawner,
-        sender: usize,
+        parent: usize,
+        root: usize,
         panel: usize,
+        ord: usize,
+        fallback_ord: usize,
+        nseg: usize,
     ) -> Result<Option<Vec<Arc<Matrix>>>, Fail> {
-        if let Some(mats) = self.shared.store.get_bcast(sender, panel) {
-            self.charge_bcast(ctx, sender, panel, &mats);
+        if let Some((ts, mats)) = self.shared.store.get_bcast(parent, panel) {
+            self.charge_bcast(ctx, parent, panel, ts, ord, nseg, &mats);
             return Ok(Some(mats));
         }
-        if !self.shared.world.router().is_alive(sender) {
-            // Become the sender's detector so its replay can start;
-            // either way we park and re-check on the next wakeup.
-            let _revived_now = self.on_peer_failure_at(ctx, sp, sender, panel, 0)?;
+        if !self.shared.world.router().is_alive(parent) {
+            // Become the parent's detector so its replay can start; the
+            // claim outcome doesn't gate the root fallback below — the
+            // root's copy is valid to read either way.
+            let _revived_now = self.on_peer_failure_at(ctx, sp, parent, panel, 0)?;
+            if parent != root {
+                if let Some((ts, mats)) = self.shared.store.get_bcast(root, panel) {
+                    crate::simlog!(
+                        "[r{}] bcast FALLBACK to root {root} (panel {panel}, relay {parent} dead)",
+                        ctx.rank
+                    );
+                    self.charge_bcast(ctx, root, panel, ts, fallback_ord, nseg, &mats);
+                    return Ok(Some(mats));
+                }
+            }
         }
         self.shared.watch_store(ctx.rank);
-        // Close the insert/watch race: the sender may have published
+        // Close the insert/watch race: the parent may have published
         // between our miss and the registration.
-        if let Some(mats) = self.shared.store.get_bcast(sender, panel) {
-            self.charge_bcast(ctx, sender, panel, &mats);
+        if let Some((ts, mats)) = self.shared.store.get_bcast(parent, panel) {
+            self.charge_bcast(ctx, parent, panel, ts, ord, nseg, &mats);
             return Ok(Some(mats));
         }
-        crate::simlog!("[r{}] bcast WAIT (panel {panel} from {sender})", ctx.rank);
+        crate::simlog!("[r{}] bcast WAIT (panel {panel} from {parent})", ctx.rank);
         Ok(None)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn charge_bcast(
         &self,
         ctx: &mut RankCtx,
-        sender: usize,
+        owner: usize,
         panel: usize,
+        publish_ts: f64,
+        ord: usize,
+        nseg: usize,
         mats: &[Arc<Matrix>],
     ) {
         let bytes: usize = mats.iter().map(|m| m.nbytes()).sum();
-        ctx.charge_local_recv(bytes);
-        self.shared.trace.emit(ctx.clock, ctx.rank, panel, 0, "bcast_fetch", sender as f64);
-        crate::simlog!("[r{}] bcast hit (panel {panel} from {sender})", ctx.rank);
+        ctx.charge_bcast_pull(publish_ts, ord, bytes, nseg);
+        ctx.metrics.record_bcast(bytes as u64, 1);
+        self.shared.trace.emit(ctx.clock, ctx.rank, panel, 0, "bcast_fetch", owner as f64);
+        crate::simlog!("[r{}] bcast hit (panel {panel} from {owner})", ctx.rank);
     }
 
     /// Publish the row-broadcast factor bundle for `panel` (FT mode; the
     /// one-sided counterpart of the plain mode's real row messages) and
-    /// wake any grid-row peers parked on it.
+    /// wake any grid-row peers parked on it. `ts` is the publisher's
+    /// clock at publication — readers' pull charges serialize behind it.
+    /// Both the root (after its TSQR) and the schedule's relay ranks (as
+    /// their own pull completes) publish, so a relay's children read the
+    /// relay's copy, not the root's.
     pub(crate) fn retain_bcast(
         &self,
         rank: usize,
         inc: u32,
         panel: usize,
+        ts: f64,
         mats: Vec<Arc<Matrix>>,
     ) {
-        self.shared.store.insert_bcast(rank, inc, panel, mats);
+        self.shared.store.insert_bcast(rank, inc, panel, ts, mats);
         self.shared.notify_store_watchers();
     }
 

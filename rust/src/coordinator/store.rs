@@ -104,10 +104,14 @@ pub struct RecoveryStore {
     /// Row-broadcast factor bundles, keyed `(publisher rank, panel)`:
     /// the panel grid column's `{leaf Y, leaf T, (Y₁, T) per merge step}`
     /// that the same grid row's other columns pull to run their update
-    /// trees (2-D grids only). Like `entries`, a bundle lives in its
-    /// publisher's memory and dies with it — receivers then park until
-    /// the replacement's TSQR replay republishes it.
-    bcast: Mutex<HashMap<(usize, usize), Vec<Arc<Matrix>>>>,
+    /// trees (2-D grids only). The value carries the publisher's logical
+    /// clock at publish time — the cost model serializes readers behind
+    /// it (see `CostModel::bcast_pull_time`). Under a tree schedule,
+    /// *relays* republish the bundle under their own key as they receive
+    /// it. Like `entries`, a bundle lives in its publisher's memory and
+    /// dies with it — receivers then fall back to the root's copy, or
+    /// park until a replacement's TSQR replay republishes.
+    bcast: Mutex<HashMap<(usize, usize), (f64, Vec<Arc<Matrix>>)>>,
 }
 
 /// Total order on one rank's sites *within one panel*, matching per-rank
@@ -171,10 +175,18 @@ impl RecoveryStore {
 
     /// Publish rank `owner`'s row-broadcast factor bundle for `panel`
     /// (the panel grid column's leaf + merge factors, pulled by the same
-    /// grid row's other columns). Incarnation-gated like
-    /// [`RecoveryStore::insert`]; also advances the publisher's frontier
-    /// past the `Phase::Bcast` site.
-    pub fn insert_bcast(&self, owner: usize, inc: u32, panel: usize, mats: Vec<Arc<Matrix>>) {
+    /// grid row's other columns). `ts` is the publisher's logical clock
+    /// at publish time — readers serialize behind it in the cost model.
+    /// Incarnation-gated like [`RecoveryStore::insert`]; also advances
+    /// the publisher's frontier past the `Phase::Bcast` site.
+    pub fn insert_bcast(
+        &self,
+        owner: usize,
+        inc: u32,
+        panel: usize,
+        ts: f64,
+        mats: Vec<Arc<Matrix>>,
+    ) {
         {
             // Lock order everywhere: accept_from before entries/bcast.
             let gate = self.accept_from.lock().unwrap();
@@ -182,7 +194,7 @@ impl RecoveryStore {
             if inc >= min {
                 let sz: u64 = mats.iter().map(|m| m.nbytes() as u64).sum();
                 let mut g = self.bcast.lock().unwrap();
-                if let Some(old) = g.insert((owner, panel), mats) {
+                if let Some((_, old)) = g.insert((owner, panel), (ts, mats)) {
                     let old_sz: u64 = old.iter().map(|m| m.nbytes() as u64).sum();
                     self.bytes.fetch_sub(old_sz, Ordering::Relaxed);
                 }
@@ -196,10 +208,10 @@ impl RecoveryStore {
         *e = (*e).max(idx);
     }
 
-    /// Read `owner`'s broadcast bundle for `panel`, if still retained.
-    /// Returns a clone of the `Arc` list; the caller charges the
-    /// simulated transfer.
-    pub fn get_bcast(&self, owner: usize, panel: usize) -> Option<Vec<Arc<Matrix>>> {
+    /// Read `owner`'s broadcast bundle for `panel`, if still retained:
+    /// `(publish clock, matrices)`. Returns a clone of the `Arc` list;
+    /// the caller charges the simulated transfer.
+    pub fn get_bcast(&self, owner: usize, panel: usize) -> Option<(f64, Vec<Arc<Matrix>>)> {
         let out = self.bcast.lock().unwrap().get(&(owner, panel)).cloned();
         if out.is_some() {
             self.reads.fetch_add(1, Ordering::Relaxed);
@@ -295,7 +307,7 @@ impl RecoveryStore {
         let dead: Vec<(usize, usize)> =
             g.keys().filter(|k| k.0 == owner).cloned().collect();
         for k in dead {
-            if let Some(old) = g.remove(&k) {
+            if let Some((_, old)) = g.remove(&k) {
                 let sz: u64 = old.iter().map(|m| m.nbytes() as u64).sum();
                 self.bytes.fetch_sub(sz, Ordering::Relaxed);
             }
@@ -332,7 +344,7 @@ impl RecoveryStore {
         let dead: Vec<(usize, usize)> =
             g.keys().filter(|k| k.1 < panel).cloned().collect();
         for k in dead {
-            if let Some(old) = g.remove(&k) {
+            if let Some((_, old)) = g.remove(&k) {
                 let sz: u64 = old.iter().map(|m| m.nbytes() as u64).sum();
                 self.bytes.fetch_sub(sz, Ordering::Relaxed);
             }
@@ -530,9 +542,10 @@ mod tests {
     fn bcast_bundle_roundtrip_and_death_wipe() {
         let s = RecoveryStore::new();
         assert!(s.get_bcast(1, 0).is_none());
-        s.insert_bcast(1, 0, 0, bundle());
-        let got = s.get_bcast(1, 0).expect("published bundle readable");
+        s.insert_bcast(1, 0, 0, 2.5, bundle());
+        let (ts, got) = s.get_bcast(1, 0).expect("published bundle readable");
         assert_eq!(got.len(), 2);
+        assert_eq!(ts, 2.5, "publish clock rides with the bundle");
         assert!(s.current_bytes() > 0);
         assert_eq!(s.reads(), 1);
         // The publish advances the frontier past the bcast site: after
@@ -546,17 +559,31 @@ mod tests {
         assert_eq!(s.current_bytes(), 0);
         // …and rejects a straggling republish from the dead incarnation,
         // while the replacement's republish lands.
-        s.insert_bcast(1, 0, 0, bundle());
+        s.insert_bcast(1, 0, 0, 3.0, bundle());
         assert!(s.get_bcast(1, 0).is_none(), "stale publish resurrected");
-        s.insert_bcast(1, 1, 0, bundle());
+        s.insert_bcast(1, 1, 0, 4.0, bundle());
         assert!(s.get_bcast(1, 0).is_some());
+    }
+
+    #[test]
+    fn bcast_republish_replaces_and_reaccounts() {
+        // A relay (or a replayed root) republishing under the same key
+        // replaces the bundle and its timestamp without double-counting
+        // the bytes.
+        let s = RecoveryStore::new();
+        s.insert_bcast(2, 0, 1, 1.0, bundle());
+        let one = s.current_bytes();
+        s.insert_bcast(2, 0, 1, 9.0, bundle());
+        assert_eq!(s.current_bytes(), one);
+        let (ts, _) = s.get_bcast(2, 1).unwrap();
+        assert_eq!(ts, 9.0, "latest publish clock wins");
     }
 
     #[test]
     fn bcast_bundles_retire_with_their_panel() {
         let s = RecoveryStore::new();
-        s.insert_bcast(0, 0, 0, bundle());
-        s.insert_bcast(0, 0, 2, bundle());
+        s.insert_bcast(0, 0, 0, 0.0, bundle());
+        s.insert_bcast(0, 0, 2, 0.0, bundle());
         let per = s.current_bytes() / 2;
         s.retire_before(1);
         assert!(s.get_bcast(0, 0).is_none());

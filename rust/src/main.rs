@@ -81,7 +81,9 @@ USAGE:
               [--kill-pair a,b@panel:step[:phase]]...
               [--straggler rank:factor]...
               [--checkpoint-every K|auto] [--lookahead L] [--seed S]
+              [--bcast auto|flat|binomial|segmented] [--seg-bytes N]
               [--trace-out trace.json] [--metrics-out metrics.prom]
+              [--factors-out FILE]
   ftcaqr tsqr [--rows N] [--block B] [--procs P] [--workers W] [--par T]
               [--mode ft|plain] [--seed S]
   ftcaqr serve --jobs FILE [--workers W] [--max-ranks R] [--batch K]
@@ -119,6 +121,15 @@ double-failure fails alone; its neighbors complete.
 --straggler rank:factor multiplies that rank's compute charges (slow,
 not dead — no recovery fires). --checkpoint-every auto picks the
 interval from the failure rate the fault plan implies.
+
+--bcast picks the row-broadcast collective schedule for the panel
+factors (Pc > 1 only): flat (root sends every copy), binomial (relay
+tree), segmented (binomial with the bundle split into --seg-bytes
+segments, pipelined through the relays). auto (default) picks by
+member count and bundle size. Factors are bitwise identical across
+all schedules — only the simulated communication time changes.
+--factors-out FILE writes the assembled reduced matrix as raw
+little-endian f32 bytes (cmp two runs to check factor identity).
 
 --trace-out writes the run's span trace as Chrome trace_event JSON
 (open in Perfetto / chrome://tracing; one track per rank, recovery
@@ -168,6 +179,10 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         cfg.stragglers.push(ftcaqr::sim::parse_straggler(&s)?);
     }
     cfg.lookahead = flags.num("lookahead", cfg.lookahead)?;
+    if let Some(b) = flags.get("bcast") {
+        cfg.bcast = b.parse().map_err(anyhow::Error::msg)?;
+    }
+    cfg.seg_bytes = flags.num("seg-bytes", cfg.seg_bytes)?;
     if let Some(a) = flags.get("algorithm") {
         cfg.algorithm = a.parse::<Algorithm>().map_err(anyhow::Error::msg)?;
     }
@@ -216,6 +231,17 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         let text = ftcaqr::metrics::prom::render(&out.report, &[("job", "run")]);
         std::fs::write(p, text)?;
         println!("metrics snapshot written to {p}");
+    }
+    if let Some(p) = flags.get("factors-out") {
+        // Raw little-endian f32 dump of the assembled reduced matrix —
+        // `cmp` two runs' files to check bitwise factor identity across
+        // --bcast schedules / lookahead depths / grid shapes.
+        let mut bytes = Vec::with_capacity(out.reduced.data().len() * 4);
+        for v in out.reduced.data() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(p, bytes)?;
+        println!("factors written to {p}");
     }
     Ok(())
 }

@@ -90,6 +90,14 @@ pub struct Metrics {
     pub checkpoints: AtomicU64,
     /// Payload bytes written by checkpoint exchanges.
     pub checkpoint_bytes: AtomicU64,
+    /// Payload bytes moved by factor row-broadcasts (each hop — tree-edge
+    /// send or store pull — counts its bytes once).
+    pub bcast_bytes: AtomicU64,
+    /// Factor row-broadcast hops: tree-edge sends plus store pulls.
+    pub bcast_hops: AtomicU64,
+    /// Deepest planned broadcast schedule, in hops (max-merged gauge;
+    /// flat = 1, binomial = ⌈log₂ members⌉).
+    pub bcast_depth: AtomicU64,
     /// Retention-store bytes high-water (max-merged gauge).
     pub store_peak_bytes: AtomicU64,
     /// Per-failure detect/rebuild latency accounting (off the hot path:
@@ -202,6 +210,18 @@ impl Metrics {
         self.checkpoint_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
+    /// `hops` broadcast hops moving `bytes` payload (a plain tree-edge
+    /// send or an FT store pull is one hop carrying its payload once).
+    pub fn record_bcast(&self, bytes: u64, hops: u64) {
+        self.bcast_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.bcast_hops.fetch_add(hops, Ordering::Relaxed);
+    }
+
+    /// Max-merge the deepest planned broadcast schedule.
+    pub fn set_bcast_depth(&self, depth: u64) {
+        self.bcast_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
     /// Max-merge the retention-store bytes high-water.
     pub fn set_store_peak(&self, bytes: u64) {
         self.store_peak_bytes.fetch_max(bytes, Ordering::Relaxed);
@@ -265,6 +285,9 @@ impl Metrics {
             stalls: self.stalls.load(Ordering::Relaxed),
             checkpoints: self.checkpoints.load(Ordering::Relaxed),
             checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
+            bcast_bytes: self.bcast_bytes.load(Ordering::Relaxed),
+            bcast_hops: self.bcast_hops.load(Ordering::Relaxed),
+            bcast_depth: self.bcast_depth.load(Ordering::Relaxed),
             store_peak_bytes: self.store_peak_bytes.load(Ordering::Relaxed),
             detects: timing.detects,
             detect_s_total: timing.detect_total,
@@ -315,6 +338,12 @@ pub struct Report {
     pub checkpoints: u64,
     /// Payload bytes written by checkpoint exchanges.
     pub checkpoint_bytes: u64,
+    /// Payload bytes moved by factor row-broadcast hops.
+    pub bcast_bytes: u64,
+    /// Factor row-broadcast hops (tree-edge sends + store pulls).
+    pub bcast_hops: u64,
+    /// Deepest planned broadcast schedule, in hops (gauge).
+    pub bcast_depth: u64,
     /// Retention-store bytes high-water (gauge).
     pub store_peak_bytes: u64,
     /// Failure detections (revival claims) recorded.
@@ -373,6 +402,9 @@ impl Report {
         self.stalls += other.stalls;
         self.checkpoints += other.checkpoints;
         self.checkpoint_bytes += other.checkpoint_bytes;
+        self.bcast_bytes += other.bcast_bytes;
+        self.bcast_hops += other.bcast_hops;
+        self.bcast_depth = self.bcast_depth.max(other.bcast_depth);
         self.store_peak_bytes = self.store_peak_bytes.max(other.store_peak_bytes);
         self.detects += other.detects;
         self.detect_s_total += other.detect_s_total;
@@ -407,6 +439,9 @@ impl Report {
             stalls: self.stalls - earlier.stalls,
             checkpoints: self.checkpoints - earlier.checkpoints,
             checkpoint_bytes: self.checkpoint_bytes - earlier.checkpoint_bytes,
+            bcast_bytes: self.bcast_bytes - earlier.bcast_bytes,
+            bcast_hops: self.bcast_hops - earlier.bcast_hops,
+            bcast_depth: self.bcast_depth,
             store_peak_bytes: self.store_peak_bytes,
             detects: self.detects - earlier.detects,
             detect_s_total: self.detect_s_total - earlier.detect_s_total,
@@ -594,5 +629,33 @@ mod tests {
         assert_eq!(r.store_peak_bytes, 400);
         assert_eq!(r.parks, 2);
         assert_eq!(r.stalls, 1);
+    }
+
+    #[test]
+    fn bcast_counters_add_and_depth_maxes() {
+        let m = Metrics::new(2);
+        m.record_bcast(1000, 1);
+        m.record_bcast(500, 2);
+        m.set_bcast_depth(3);
+        m.set_bcast_depth(1); // max-merge: stays 3
+        let r = m.snapshot();
+        assert_eq!(r.bcast_bytes, 1500);
+        assert_eq!(r.bcast_hops, 3);
+        assert_eq!(r.bcast_depth, 3);
+        // Counters add in absorb, the depth gauge maxes.
+        let mut total = Report::default();
+        total.absorb(&r);
+        let extra =
+            Report { bcast_bytes: 100, bcast_hops: 1, bcast_depth: 2, ..Default::default() };
+        total.absorb(&extra);
+        assert_eq!(total.bcast_bytes, 1600);
+        assert_eq!(total.bcast_hops, 4);
+        assert_eq!(total.bcast_depth, 3);
+        // Counters subtract in since; the depth gauge is copied.
+        m.record_bcast(200, 1);
+        let d = m.snapshot().since(&r);
+        assert_eq!(d.bcast_bytes, 200);
+        assert_eq!(d.bcast_hops, 1);
+        assert_eq!(d.bcast_depth, 3);
     }
 }

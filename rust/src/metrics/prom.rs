@@ -63,6 +63,16 @@ pub fn render(report: &Report, labels: &[(&str, &str)]) -> String {
             "Payload bytes written by checkpoints.",
             report.checkpoint_bytes,
         ),
+        (
+            "ftcaqr_bcast_bytes_total",
+            "Payload bytes moved by factor row-broadcast hops.",
+            report.bcast_bytes,
+        ),
+        (
+            "ftcaqr_bcast_hops_total",
+            "Factor row-broadcast hops (tree-edge sends + store pulls).",
+            report.bcast_hops,
+        ),
         ("ftcaqr_sched_parks_total", "Scheduler task parks.", report.parks),
         ("ftcaqr_sched_stalls_total", "Tasks failed by the stall detector.", report.stalls),
     ];
@@ -117,6 +127,11 @@ pub fn render(report: &Report, labels: &[(&str, &str)]) -> String {
             "Retention-store bytes high-water.",
             report.store_peak_bytes as f64,
         ),
+        (
+            "ftcaqr_bcast_depth",
+            "Deepest planned broadcast schedule, in hops.",
+            report.bcast_depth as f64,
+        ),
     ];
     for &(name, help, v) in gauges {
         out.push_str(&sample(name, "gauge", help, &l, &fmt_f(v)));
@@ -165,6 +180,9 @@ mod tests {
             rebuild_s_total: 0.25,
             store_peak_bytes: 1024,
             checkpoint_bytes: 2048,
+            bcast_bytes: 4096,
+            bcast_hops: 6,
+            bcast_depth: 3,
             overhead_pct: 3.5,
             tsqr_s: 1.0,
             ..Default::default()
@@ -178,12 +196,18 @@ mod tests {
             "ftcaqr_rebuild_seconds_total",
             "ftcaqr_store_peak_bytes",
             "ftcaqr_checkpoint_bytes_total",
+            "ftcaqr_bcast_bytes_total",
+            "ftcaqr_bcast_hops_total",
+            "ftcaqr_bcast_depth",
             "ftcaqr_overhead_pct",
             "ftcaqr_phase_seconds_total",
         ] {
             assert!(text.contains(&format!("# TYPE {name}")), "missing {name}:\n{text}");
         }
         assert!(text.contains("ftcaqr_messages_total{tenant=\"t0\"} 7"));
+        assert!(text.contains("ftcaqr_bcast_bytes_total{tenant=\"t0\"} 4096"));
+        assert!(text.contains("ftcaqr_bcast_hops_total{tenant=\"t0\"} 6"));
+        assert!(text.contains("ftcaqr_bcast_depth{tenant=\"t0\"} 3e0"));
         assert!(text.contains("{tenant=\"t0\",phase=\"tsqr\"} 1e0"));
         // Deterministic: same report renders byte-identically.
         assert_eq!(text, render(&r, &[("tenant", "t0")]));

@@ -741,6 +741,8 @@ pub fn parse_job_line(line: &str) -> Result<JobSpec> {
                         cfg.stragglers.push(crate::sim::parse_straggler(v)?)
                     }
                     "lookahead" => cfg.lookahead = v.parse()?,
+                    "bcast" => cfg.bcast = v.parse().map_err(anyhow::Error::msg)?,
+                    "seg-bytes" => cfg.seg_bytes = v.parse()?,
                     "par" => cfg.par = v.parse()?,
                     "algorithm" => {
                         cfg.algorithm = v.parse().map_err(anyhow::Error::msg)?
@@ -821,6 +823,18 @@ mod tests {
         let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
         assert_eq!(cfg.lookahead, 2);
         assert!(parse_job_line("caqr lookahead=deep").is_err());
+    }
+
+    #[test]
+    fn job_line_parses_bcast_schedule() {
+        let spec = parse_job_line(
+            "caqr rows=256 cols=64 block=16 procs=8 grid=2x4 bcast=binomial seg-bytes=4096",
+        )
+        .unwrap();
+        let JobSpec::Caqr { cfg, .. } = spec else { panic!("caqr expected") };
+        assert_eq!(cfg.bcast, crate::config::BcastKind::Binomial);
+        assert_eq!(cfg.seg_bytes, 4096);
+        assert!(parse_job_line("caqr bcast=ring").is_err());
     }
 
     #[test]

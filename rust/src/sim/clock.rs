@@ -77,6 +77,38 @@ impl CostModel {
         start + self.alpha + wire + self.o
     }
 
+    /// Sender-side clock update for a *relay* send: unlike the root of a
+    /// flat broadcast (which pays only `o` per posted send, modelling an
+    /// eager RDMA put), a tree relay must serialize the payload back out
+    /// of its own NIC before forwarding, so each forwarded copy costs
+    /// `o + B*beta` of sender time. This is what makes a flat root the
+    /// bottleneck at large `Pc` and a binomial tree `O(log Pc)` deep.
+    pub fn relay_send_time(&self, t_local: f64, bytes: usize) -> f64 {
+        t_local + self.o + bytes as f64 * self.beta
+    }
+
+    /// Receiver-side completion time of a *pull* from a published
+    /// broadcast bundle (the FT path, where receivers read the bundle
+    /// out of the publisher's retained memory). The publisher's NIC
+    /// serializes its readers: the `ord`-th reader (0-based, in schedule
+    /// order) waits behind `ord` earlier full copies. With `nseg > 1`
+    /// the copy is segmented and pipelined: the wire term becomes
+    /// `(nseg + ord) * (B/nseg) * beta`, so later readers wait one
+    /// *segment* per predecessor instead of one full copy — at `ord = 0`
+    /// segmentation changes nothing (`(nseg)*(B/nseg) = B`).
+    pub fn bcast_pull_time(
+        &self,
+        t_local: f64,
+        publish_ts: f64,
+        ord: usize,
+        bytes: usize,
+        nseg: usize,
+    ) -> f64 {
+        let nseg = nseg.max(1) as f64;
+        let seg = bytes as f64 / nseg;
+        (t_local + self.o).max(publish_ts + self.alpha + (nseg + ord as f64) * seg * self.beta)
+    }
+
     /// Compute-time for `flops` floating point operations.
     pub fn compute_time(&self, flops: u64) -> f64 {
         flops as f64 / self.flops_per_sec
@@ -173,6 +205,50 @@ mod tests {
         let ex = c.exchange_time(0.0, 0.0, b, b);
         let one = c.recv_time(0.0, 0.0, b);
         assert!((ex - one - c.o).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relay_send_charges_serialization() {
+        let c = CostModel::default();
+        let b = 1 << 20;
+        let t = c.relay_send_time(2.0, b);
+        assert!((t - (2.0 + c.o + b as f64 * c.beta)).abs() < 1e-15);
+        // A zero-byte relay still pays the per-send CPU overhead.
+        assert!((c.relay_send_time(0.0, 0) - c.o).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bcast_pull_serializes_readers() {
+        let c = CostModel::default();
+        let b = 1 << 20;
+        // Reader ord pays (ord + 1) full copies behind the publisher.
+        let t0 = c.bcast_pull_time(0.0, 1.0, 0, b, 1);
+        let t1 = c.bcast_pull_time(0.0, 1.0, 1, b, 1);
+        let copy = b as f64 * c.beta;
+        assert!((t0 - (1.0 + c.alpha + copy)).abs() < 1e-12);
+        assert!((t1 - t0 - copy).abs() < 1e-12, "each later reader waits one more copy");
+        // Receiver far ahead: bounded by its own clock + overhead.
+        let t = c.bcast_pull_time(5.0, 1.0, 0, b, 1);
+        assert!((t - (5.0 + c.o)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bcast_pull_segments_pipeline() {
+        let c = CostModel::default();
+        let b = 1 << 20;
+        // ord = 0: segmentation is free (nseg * B/nseg = B).
+        let whole = c.bcast_pull_time(0.0, 1.0, 0, b, 1);
+        let segged = c.bcast_pull_time(0.0, 1.0, 0, b, 8);
+        assert!((whole - segged).abs() < 1e-12);
+        // ord >= 1: a later reader waits one *segment* per predecessor
+        // instead of one full copy — strictly cheaper.
+        let whole1 = c.bcast_pull_time(0.0, 1.0, 3, b, 1);
+        let segged1 = c.bcast_pull_time(0.0, 1.0, 3, b, 8);
+        assert!(segged1 < whole1, "segged1={segged1} whole1={whole1}");
+        let seg = b as f64 / 8.0 * c.beta;
+        assert!((segged1 - segged - 3.0 * seg).abs() < 1e-12);
+        // nseg = 0 is clamped to 1 rather than dividing by zero.
+        assert!((c.bcast_pull_time(0.0, 1.0, 0, b, 0) - whole).abs() < 1e-12);
     }
 
     #[test]

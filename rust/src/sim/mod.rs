@@ -358,6 +358,36 @@ impl RankCtx {
         Ok(())
     }
 
+    /// One-way send that charges the *sender* full serialization time
+    /// (`o + B*beta`), modelling a tree relay pushing the payload back
+    /// out of its own NIC (see [`CostModel::relay_send_time`]). The
+    /// envelope's `send_ts` is the pre-serialization clock, so the
+    /// receiver's wire time overlaps the sender's charge rather than
+    /// stacking on top of it.
+    pub fn send_serialized(&mut self, dst: usize, tag: Tag, data: MsgData) -> Result<(), Fail> {
+        let bytes = self.push(dst, tag, data, false)?;
+        let t = self.cost.relay_send_time(self.clock, bytes);
+        self.advance_comm_to(t);
+        self.metrics.record_message(bytes);
+        Ok(())
+    }
+
+    /// Charge a pull of a published broadcast bundle: the `ord`-th
+    /// scheduled reader of a bundle published at `publish_ts`, split
+    /// into `nseg` pipelined segments (see
+    /// [`CostModel::bcast_pull_time`]). Accounted as one message.
+    pub fn charge_bcast_pull(
+        &mut self,
+        publish_ts: f64,
+        ord: usize,
+        bytes: usize,
+        nseg: usize,
+    ) {
+        let t = self.cost.bcast_pull_time(self.clock, publish_ts, ord, bytes, nseg);
+        self.advance_comm_to(t);
+        self.metrics.record_message(bytes);
+    }
+
     /// Selective receive: blocks until a message with `(src, tag)` is
     /// available, or `src` is known dead (ULFM detection).
     pub fn recv(&mut self, src: usize, tag: Tag) -> Result<MsgData, Fail> {

@@ -1,0 +1,198 @@
+//! Integration: the row-broadcast collective engine. Pins the central
+//! contract — a schedule moves bytes, never operand values, so the
+//! factors are bitwise identical across flat / binomial / segmented
+//! shapes in both the FT (store-pull) and plain (message) data paths,
+//! and the payload byte totals agree too (only logical-clock values and
+//! hop counters may differ). Also exercises the FT relay fault paths on
+//! a 2 x 4 grid: a relay dying mid-broadcast (its children fall back to
+//! the root's published copy) and the root itself dying before the
+//! bundle is published.
+
+use ftcaqr::backend::Backend;
+use ftcaqr::config::{Algorithm, BcastKind, RunConfig};
+use ftcaqr::coordinator::run_caqr_matrix;
+use ftcaqr::fault::{FaultPlan, Phase, ScheduledKill};
+use ftcaqr::ft::Semantics;
+use ftcaqr::linalg::Matrix;
+use ftcaqr::trace::Trace;
+
+/// 2 x 4 grid, 4 panels: panel 0 broadcasts over all four grid columns
+/// (binomial: root 0 relays through 1 -> 3 and 2). `seg_bytes = 4096`
+/// is below the leaf-Y matrix (128 x 16 f32 = 8 KiB), so a segmented
+/// run really splits the bundle.
+fn cfg(kind: BcastKind) -> RunConfig {
+    RunConfig {
+        rows: 256,
+        cols: 64,
+        block: 16,
+        procs: 8,
+        grid_rows: 2,
+        grid_cols: 4,
+        algorithm: Algorithm::FaultTolerant,
+        semantics: Semantics::Rebuild,
+        bcast: kind,
+        seg_bytes: 4096,
+        ..Default::default()
+    }
+}
+
+fn run_with(
+    c: &RunConfig,
+    a: &Matrix,
+    fault: std::sync::Arc<FaultPlan>,
+) -> ftcaqr::coordinator::CaqrOutcome {
+    run_caqr_matrix(c.clone(), a.clone(), Backend::native(), fault, Trace::disabled()).unwrap()
+}
+
+const KINDS: [BcastKind; 3] = [BcastKind::Flat, BcastKind::Binomial, BcastKind::Segmented];
+
+#[test]
+fn ft_schedules_are_bitwise_identical_and_byte_equal() {
+    // FT mode: every non-root member pulls the published bundle exactly
+    // once whatever the schedule, so message counts, payload bytes, and
+    // broadcast hop counts all match across kinds — the shapes differ
+    // only in *when* the logical clock says each pull completes.
+    let a = Matrix::randn(256, 64, 107);
+    let runs: Vec<_> = KINDS
+        .iter()
+        .map(|&k| run_with(&cfg(k), &a, FaultPlan::none()))
+        .collect();
+    let flat = &runs[0];
+    for other in &runs[1..] {
+        assert_eq!(flat.r, other.r);
+        assert_eq!(flat.reduced, other.reduced);
+        assert_eq!(flat.report.messages, other.report.messages);
+        assert_eq!(flat.report.bytes, other.report.bytes);
+        assert_eq!(flat.report.bcast_bytes, other.report.bcast_bytes);
+        assert_eq!(flat.report.bcast_hops, other.report.bcast_hops);
+    }
+    // Panel 0 has 4 member columns: flat is one hop deep, the binomial
+    // tree two (virtual member 3 = binary 11 is two relays down).
+    assert_eq!(runs[0].report.bcast_depth, 1);
+    assert_eq!(runs[1].report.bcast_depth, 2);
+    assert_eq!(runs[2].report.bcast_depth, 2);
+}
+
+#[test]
+fn plain_schedules_are_bitwise_identical_and_byte_equal() {
+    // Plain mode moves real messages along the tree edges. Every kind
+    // crosses members-1 edges per grid row carrying the full bundle, so
+    // payload bytes agree everywhere; segmentation splits each edge's
+    // bundle into multiple sends, so only the segmented run may have
+    // more messages (and more hops), never more bytes.
+    let a = Matrix::randn(256, 64, 109);
+    let mk = |k| {
+        let mut c = cfg(k);
+        c.algorithm = Algorithm::Plain;
+        c
+    };
+    let runs: Vec<_> = KINDS
+        .iter()
+        .map(|&k| run_with(&mk(k), &a, FaultPlan::none()))
+        .collect();
+    let (flat, binom, seg) = (&runs[0], &runs[1], &runs[2]);
+    for other in [binom, seg] {
+        assert_eq!(flat.r, other.r);
+        assert_eq!(flat.reduced, other.reduced);
+        assert_eq!(flat.report.bytes, other.report.bytes);
+        assert_eq!(flat.report.bcast_bytes, other.report.bcast_bytes);
+    }
+    assert_eq!(flat.report.messages, binom.report.messages);
+    assert_eq!(flat.report.bcast_hops, binom.report.bcast_hops);
+    assert!(
+        seg.report.bcast_hops > binom.report.bcast_hops,
+        "segmented pipelining must add hops: {} vs {}",
+        seg.report.bcast_hops,
+        binom.report.bcast_hops
+    );
+    let res = binom.residual.expect("verify on");
+    assert!(res < 1e-3, "residual {res}");
+}
+
+#[test]
+fn ft_faulted_runs_match_clean_under_every_schedule() {
+    // A receiver-side kill mid-broadcast (rank 5 = grid (1,1), a relay
+    // under the binomial shapes) must recover bitwise under every
+    // schedule kind, and all of them must agree with the clean run.
+    let a = Matrix::randn(256, 64, 113);
+    let clean = run_with(&cfg(BcastKind::Flat), &a, FaultPlan::none());
+    for kind in KINDS {
+        let failed = run_with(
+            &cfg(kind),
+            &a,
+            FaultPlan::schedule(vec![ScheduledKill::new(5, 0, 0, Phase::Bcast)]),
+        );
+        assert_eq!(failed.report.failures, 1, "{kind:?}");
+        assert_eq!(failed.report.recoveries, 1, "{kind:?}");
+        assert_eq!(clean.r, failed.r, "{kind:?}");
+        assert_eq!(clean.reduced, failed.reduced, "{kind:?}");
+    }
+}
+
+#[test]
+fn binomial_relay_death_falls_back_to_the_root() {
+    // Rank 1 = grid (0,1) is virtual member 1 of panel 0's broadcast —
+    // the relay that feeds member 3 (rank 3). Kill it at its Bcast site:
+    // rank 3 either falls back to the root's published copy (relay seen
+    // dead) or pulls the replacement's republished one; both paths carry
+    // the same bits, and the run must match the clean factors exactly.
+    let c = cfg(BcastKind::Binomial);
+    let a = Matrix::randn(c.rows, c.cols, 127);
+    let clean = run_with(&c, &a, FaultPlan::none());
+    let failed = run_with(
+        &c,
+        &a,
+        FaultPlan::schedule(vec![ScheduledKill::new(1, 0, 0, Phase::Bcast)]),
+    );
+    assert_eq!(failed.report.failures, 1);
+    assert_eq!(failed.report.recoveries, 1);
+    assert_eq!(clean.r, failed.r);
+    assert_eq!(clean.reduced, failed.reduced);
+}
+
+#[test]
+fn binomial_root_death_mid_broadcast_recovers() {
+    // The root of panel 0's broadcast (rank 0) dies after TSQR but
+    // before publishing the bundle. Its relays park on the missing
+    // store entry; the replacement replays TSQR, republishes, and the
+    // tree drains — bitwise identical to the clean run.
+    let c = cfg(BcastKind::Binomial);
+    let a = Matrix::randn(c.rows, c.cols, 131);
+    let clean = run_with(&c, &a, FaultPlan::none());
+    let failed = run_with(
+        &c,
+        &a,
+        FaultPlan::schedule(vec![ScheduledKill::new(0, 0, 0, Phase::Bcast)]),
+    );
+    assert_eq!(failed.report.failures, 1);
+    assert_eq!(failed.report.recoveries, 1);
+    assert_eq!(clean.r, failed.r);
+    assert_eq!(clean.reduced, failed.reduced);
+}
+
+#[test]
+fn binomial_beats_flat_on_comm_path_with_fat_links() {
+    // The headline claim, in miniature: with a bandwidth-dominated cost
+    // model (beta raised so a bundle transmission dwarfs alpha), the
+    // binomial schedule's O(log Pc) root serialization must strictly cut
+    // the simulated communication critical path vs the flat O(Pc) one —
+    // on the same matrix, with (per the tests above) identical factors.
+    // cols = 128 gives eight panels, so five of them broadcast over all
+    // four grid columns and the per-panel gap compounds.
+    let a = Matrix::randn(256, 128, 137);
+    let mk = |k| {
+        let mut c = cfg(k);
+        c.cols = 128;
+        c.cost.beta = 1e-9;
+        c
+    };
+    let flat = run_with(&mk(BcastKind::Flat), &a, FaultPlan::none());
+    let binom = run_with(&mk(BcastKind::Binomial), &a, FaultPlan::none());
+    assert_eq!(flat.reduced, binom.reduced);
+    assert!(
+        binom.report.comm_path < flat.report.comm_path,
+        "binomial {} !< flat {}",
+        binom.report.comm_path,
+        flat.report.comm_path
+    );
+}
